@@ -1,0 +1,80 @@
+"""Shared benchmark harness: fit a method, search, report MAP + AvgOps.
+
+Every figure benchmark emits CSV rows:
+    figure,dataset,method,code_bits,map,avg_ops,pass_rate,fit_s,search_us
+CPU-reduced sizes by default (--full for paper-scale); the *comparisons*
+(same code length, same quantizer size, same data) mirror the paper's
+protocol exactly.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ICQConfig
+from repro.core import (adc_search, fit, mean_average_precision,
+                        two_step_search)
+from repro.core.baselines import fit_pqn, fit_sq
+
+
+def code_bits(cfg: ICQConfig) -> int:
+    return int(cfg.num_codebooks * np.log2(cfg.codebook_size))
+
+
+def evaluate(model, xte, yte, ytr, topk: int = 50):
+    """(map, avg_ops, pass_rate, search_us_per_query)."""
+    emb = model.embed(xte)
+    t0 = time.time()
+    if model.mode == "icq":
+        res = two_step_search(emb, model.codes, model.C, model.structure,
+                              topk)
+    else:
+        res = adc_search(emb, model.codes, model.C, topk)
+    jax.block_until_ready(res.indices)
+    dt = (time.time() - t0) / len(xte) * 1e6
+    mapv = float(mean_average_precision(res.indices, ytr, yte))
+    return mapv, float(res.avg_ops), float(res.pass_rate), dt
+
+
+def fit_method(method: str, key, xtr, ytr, cfg, *, epochs: int,
+               num_classes: int = 10, img_hw=None, channels=None):
+    """method: icq | sq | pqn | icq_cnn."""
+    if method == "icq":
+        return fit(key, xtr, ytr, cfg, mode="icq", epochs=epochs,
+                   num_classes=num_classes)
+    if method == "icq_cnn":
+        return fit(key, xtr, ytr, cfg, mode="icq", embed_kind="cnn",
+                   epochs=epochs, num_classes=num_classes, img_hw=img_hw,
+                   channels=channels)
+    if method == "sq":
+        return fit_sq(key, xtr, ytr, cfg, epochs=epochs,
+                      num_classes=num_classes)
+    if method == "pqn":
+        return fit_pqn(key, xtr, ytr, cfg, epochs=epochs,
+                       num_classes=num_classes, img_hw=img_hw,
+                       channels=channels)
+    raise ValueError(method)
+
+
+def bench_row(figure, dataset, method, cfg, key, xtr, ytr, xte, yte, *,
+              epochs=4, img_hw=None, channels=None, num_classes=10):
+    t0 = time.time()
+    model = fit_method(method, key, xtr, ytr, cfg, epochs=epochs,
+                       img_hw=img_hw, channels=channels,
+                       num_classes=num_classes)
+    fit_s = time.time() - t0
+    mapv, ops, pr, us = evaluate(model, xte, yte, ytr)
+    row = dict(figure=figure, dataset=dataset, method=method,
+               code_bits=code_bits(cfg), map=round(mapv, 4),
+               avg_ops=round(ops, 3), pass_rate=round(pr, 4),
+               fit_s=round(fit_s, 1), search_us=round(us, 1))
+    print(",".join(str(v) for v in row.values()), flush=True)
+    return row
+
+
+def header():
+    print("figure,dataset,method,code_bits,map,avg_ops,pass_rate,"
+          "fit_s,search_us", flush=True)

@@ -1,0 +1,56 @@
+"""Figure 1: ICQ vs SQ(+PQ-style quantization) on the synthetic datasets
+(Table 1) — MAP and Average Ops per code length.
+
+Paper protocol: same code length and quantizer size per comparison;
+each point = one trained coding, Average Ops over the test queries.
+The SQ+PQ baseline is the shared joint trainer in mode="pq" with the
+linear embedding (supervised PQ), matching the paper's description.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import bench_row, header
+from repro.configs.base import ICQConfig
+from repro.core.train import fit
+from repro.data import make_table1_dataset
+
+
+def fit_sq_pq(key, xtr, ytr, cfg, *, epochs, **kw):
+    return fit(key, xtr, ytr, cfg, mode="pq", epochs=epochs)
+
+
+def run(full: bool = False, datasets=("dataset1", "dataset2", "dataset3")):
+    rows = []
+    n = 10000 if full else 3000
+    nq = 1000 if full else 150
+    epochs = 10 if full else 4
+    for ds in datasets:
+        xtr, ytr, xte, yte = make_table1_dataset(ds)
+        xtr, ytr, xte, yte = xtr[:n], ytr[:n], xte[:nq], yte[:nq]
+        for K in ((4, 8, 16) if full else (4, 8)):
+            cfg = ICQConfig(d=16, num_codebooks=K,
+                            codebook_size=256 if full else 32,
+                            num_fast=max(K // 4, 1))
+            key = jax.random.PRNGKey(K)
+            rows.append(bench_row("fig1", ds, "icq", cfg, key, xtr, ytr,
+                                  xte, yte, epochs=epochs))
+            # SQ+PQ baseline: same code length, same quantizer size
+            from benchmarks import common
+            import time
+            t0 = time.time()
+            m = fit_sq_pq(key, xtr, ytr, cfg, epochs=epochs)
+            mapv, ops, pr, us = common.evaluate(m, xte, yte, ytr)
+            row = dict(figure="fig1", dataset=ds, method="sq+pq",
+                       code_bits=common.code_bits(cfg), map=round(mapv, 4),
+                       avg_ops=round(ops, 3), pass_rate=round(pr, 4),
+                       fit_s=round(time.time() - t0, 1),
+                       search_us=round(us, 1))
+            print(",".join(str(v) for v in row.values()), flush=True)
+            rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    header()
+    run()

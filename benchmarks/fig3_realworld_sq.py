@@ -1,0 +1,40 @@
+"""Figure 3: ICQ vs SQ over (pseudo-)MNIST and CIFAR-10 across quantizer
+counts K — the K=2 degenerate case (no crude step possible) through
+K=16 where the paper's computation-cost gap peaks.
+
+Offline container note: real MNIST/CIFAR are not downloadable here; the
+structured stand-ins (repro.data.pseudo_real) match dim / classes /
+protocol, and every output row is labeled pseudo_*.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import bench_row, header
+from repro.configs.base import ICQConfig
+from repro.data import pseudo_cifar, pseudo_mnist
+
+
+def run(full: bool = False):
+    rows = []
+    n = 10000 if full else 2000
+    nq = 1000 if full else 150
+    epochs = 8 if full else 3
+    for name, gen in (("pseudo_mnist", pseudo_mnist),
+                      ("pseudo_cifar", pseudo_cifar)):
+        xtr, ytr, xte, yte = gen(n_train=n, n_test=nq)
+        for K in ((2, 4, 8, 16) if full else (2, 8)):
+            cfg = ICQConfig(d=16, num_codebooks=K,
+                            codebook_size=256 if full else 32,
+                            num_fast=max(K // 4, 1))
+            key = jax.random.PRNGKey(200 + K)
+            rows.append(bench_row("fig3", name, "icq", cfg, key, xtr, ytr,
+                                  xte, yte, epochs=epochs))
+            rows.append(bench_row("fig3", name, "sq", cfg, key, xtr, ytr,
+                                  xte, yte, epochs=epochs))
+    return rows
+
+
+if __name__ == "__main__":
+    header()
+    run()

@@ -1,0 +1,40 @@
+"""Figure 5: ICQ vs PQN, both with CNN embeddings, on (pseudo-)MNIST and
+CIFAR-10 — same code length per comparison.  (Paper: LeNet for MNIST,
+AlexNet for CIFAR; here one LeNet-class CNN sized per dataset — the
+comparison is embedding-matched, which is what the figure tests.)"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import bench_row, header
+from repro.configs.base import ICQConfig
+from repro.data import pseudo_cifar, pseudo_mnist
+
+
+def run(full: bool = False):
+    rows = []
+    n = 8000 if full else 1500
+    nq = 800 if full else 120
+    epochs = 6 if full else 2
+    for name, gen, hw, ch in (("pseudo_mnist", pseudo_mnist, 28, 1),
+                              ("pseudo_cifar", pseudo_cifar, 32, 3)):
+        xtr, ytr, xte, yte = gen(n_train=n, n_test=nq)
+        xtr = xtr.reshape(-1, hw, hw, ch)
+        xte = xte.reshape(-1, hw, hw, ch)
+        for K in ((4, 8, 16) if full else (8,)):
+            cfg = ICQConfig(d=16, num_codebooks=K,
+                            codebook_size=256 if full else 32,
+                            num_fast=max(K // 4, 1))
+            key = jax.random.PRNGKey(400 + K)
+            rows.append(bench_row("fig5", name, "icq_cnn", cfg, key, xtr,
+                                  ytr, xte, yte, epochs=epochs, img_hw=hw,
+                                  channels=ch))
+            rows.append(bench_row("fig5", name, "pqn", cfg, key, xtr, ytr,
+                                  xte, yte, epochs=epochs, img_hw=hw,
+                                  channels=ch))
+    return rows
+
+
+if __name__ == "__main__":
+    header()
+    run()

@@ -1,0 +1,68 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (written by launch.dryrun) and emits the
+per-(arch x shape x mesh) three-term table:
+
+    compute  = HLO_FLOPs / (chip peak)          [trip-count-corrected]
+    memory   = HLO_bytes / (chip HBM bandwidth)
+    collect. = collective_bytes / (chip link bandwidth)
+
+plus the dominant term, MODEL_FLOPS/HLO_FLOPs (useful-compute ratio) and
+an MFU-upper-bound estimate  compute / max(all terms)  — what fraction
+of peak the cell could reach if perfectly overlapped.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirname: str):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r):
+    mfu_bound = (r["compute_term_s"]
+                 / max(r["compute_term_s"], r["memory_term_s"],
+                       r["collective_term_s"], 1e-30))
+    return (f"| {r['arch']:<20} | {r['shape']:<11} | {r['mesh']:<8} "
+            f"| {r.get('variant') or 'base':<9} "
+            f"| {r['compute_term_s']:9.3e} | {r['memory_term_s']:9.3e} "
+            f"| {r['collective_term_s']:9.3e} | {r['dominant']:<10} "
+            f"| {r['useful_flops_ratio']:5.2f} | {mfu_bound:5.2f} |")
+
+
+HEADER = ("| arch                 | shape       | mesh     | variant   "
+          "| compute s | memory s  | collect s | dominant   | useful "
+          "| MFU≤  |\n"
+          "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default=None, help="filter: 16x16 / 2x16x16")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if args.mesh:
+        recs = [r for r in recs if r["mesh"] == args.mesh]
+    recs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"],
+                             r.get("variant", "")))
+    print(HEADER)
+    for r in recs:
+        print(fmt_row(r))
+    if recs:
+        doms = {}
+        for r in recs:
+            doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+        print(f"\ncells: {len(recs)}  dominant-term histogram: {doms}")
+
+
+if __name__ == "__main__":
+    main()

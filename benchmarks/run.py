@@ -1,0 +1,78 @@
+"""Benchmark entry point: one section per paper figure + kernel
+microbenchmarks + the roofline table (if dry-run artifacts exist).
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig3]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import (beyond_ivf, fig1_synthetic_pq, fig2_synthetic_cq,
+                        fig3_realworld_sq, fig4_code_length, fig5_pqn,
+                        fig6_unseen)
+from benchmarks.common import header
+
+FIGURES = {
+    "fig1": fig1_synthetic_pq.run,
+    "fig2": fig2_synthetic_cq.run,
+    "fig3": fig3_realworld_sq.run,
+    "fig4": fig4_code_length.run,
+    "fig5": fig5_pqn.run,
+    "fig6": fig6_unseen.run,
+    "beyond_ivf": beyond_ivf.run,
+}
+
+
+def kernel_micro():
+    """Pallas-kernel microbenchmarks (interpret on CPU; wall time is NOT
+    TPU-indicative — correctness + call-overhead tracking only)."""
+    from repro.kernels import ops
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for name, fn, args in [
+        ("adc_64k_x8", ops.adc,
+         (jax.random.randint(key, (65536, 8), 0, 256),
+          jax.random.normal(key, (8, 256)))),
+        ("kmeans_16k_256", ops.kmeans_assign,
+         (jax.random.normal(key, (16384, 64)),
+          jax.random.normal(key, (256, 64)))),
+        ("flash_4x512", ops.flash_attention,
+         (jax.random.normal(key, (4, 512, 8, 64)),
+          jax.random.normal(key, (4, 512, 2, 64)),
+          jax.random.normal(key, (4, 512, 2, 64)))),
+    ]:
+        out = fn(*args)                      # compile
+        jax.block_until_ready(out)
+        t0 = time.time()
+        for _ in range(3):
+            jax.block_until_ready(fn(*args))
+        us = (time.time() - t0) / 3 * 1e6
+        print(f"kernel,{name},interpret,,,,,,{us:.0f}", flush=True)
+        rows.append((name, us))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (hours on CPU)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    header()
+    t0 = time.time()
+    for name, run_fn in FIGURES.items():
+        if args.only and name != args.only:
+            continue
+        run_fn(full=args.full)
+    if not args.only:
+        kernel_micro()
+    print(f"# total {time.time() - t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

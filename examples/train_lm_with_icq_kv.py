@@ -1,0 +1,92 @@
+"""Train a small LM with the framework's train step (grad accumulation,
+checkpointing) for a few hundred steps, then serve it with the ICQ-KV
+two-step quantized cache and compare against exact decode — the
+ICQ-as-LM-feature integration (DESIGN.md §4).
+
+    PYTHONPATH=src python examples/train_lm_with_icq_kv.py --steps 200
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.configs.base import ShapeSpec
+from repro.data.pipeline import TokenPipeline
+from repro.distributed import CheckpointManager
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import build_train_step
+from repro.quant import (ICQKVConfig, build_icq_kv_cache,
+                         icq_kv_decode_attention)
+from repro.quant.kv_cache import reference_decode_attention
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/lm_icq_kv_ckpt")
+    args = ap.parse_args()
+
+    cfg = smoke_config("tinyllama-1.1b")
+    mesh = make_host_mesh()
+    shape = ShapeSpec("ex", seq_len=args.seq_len,
+                      global_batch=args.global_batch, kind="train")
+    n_micro = 2
+    step_fn, model, opt, init_opt = build_train_step(cfg, n_micro=n_micro,
+                                                     mesh=mesh)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = init_opt(params)
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                         global_batch=args.global_batch)
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+
+    t0 = time.time()
+    for i in range(args.steps):
+        raw = pipe.batch(i)
+        batch = {k: v.reshape(n_micro, -1, args.seq_len)
+                 for k, v in raw.items()}
+        params, opt_state, mets = jit_step(params, opt_state, batch)
+        if i % 50 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={float(mets['loss']):.4f}")
+    ckpt.save(args.steps - 1, {"params": params})
+    print(f"trained {args.steps} steps in {time.time() - t0:.1f}s")
+
+    # ---- serve with ICQ-KV: quantized two-step attention at decode ----
+    b, S = 2, args.seq_len
+    raw = pipe.batch(999)
+    prompt = {"tokens": raw["tokens"][:b, :S]}
+    logits, caches = jax.jit(
+        lambda p, bt: model.prefill(p, bt, S + 8))(params, prompt)
+
+    # pull the raw K/V of layer segment 0 and rebuild as ICQ-KV
+    k_all = caches["seg0"]["k"]            # (L, b, S+8, kvh, dh)
+    v_all = caches["seg0"]["v"]
+    kvcfg = ICQKVConfig(d_fast=max(cfg.head_dim // 4, 4))
+    errs, exacts = [], []
+    for layer in range(k_all.shape[0]):
+        k = k_all[layer][:, :S]
+        v = v_all[layer][:, :S]
+        q = jax.random.normal(jax.random.PRNGKey(layer),
+                              (b, 1, cfg.num_heads, cfg.head_dim)) * 0.5
+        cache = build_icq_kv_cache(kvcfg, k, v, max_len=S)
+        approx = icq_kv_decode_attention(q, cache, kvcfg, S - 1,
+                                         top_c=max(S // 4, 8))
+        exact = reference_decode_attention(q, k, v, S - 1)
+        errs.append(float(jnp.abs(approx - exact).max()))
+        exacts.append(float(jnp.abs(exact).std()))
+    raw_bytes = S * cfg.num_kv_heads * cfg.head_dim * 2 * 2
+    icq_bytes = (S * cfg.num_kv_heads * kvcfg.d_fast * 2
+                 + (S // 4) * cfg.num_kv_heads * cfg.head_dim * 2)
+    print(f"ICQ-KV on trained caches: max err {max(errs):.4f} "
+          f"(|exact| std ~{np.mean(exacts):.3f}); "
+          f"decode HBM bytes {raw_bytes} -> {icq_bytes} "
+          f"({raw_bytes / icq_bytes:.1f}x reduction)")
+
+
+if __name__ == "__main__":
+    main()

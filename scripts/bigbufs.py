@@ -1,0 +1,26 @@
+"""Dump the largest result buffers of a cell's compiled HLO (debug tool)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+from collections import Counter
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import plan_cell, lower_cell
+from repro.launch.hlo_cost import parse_module, _shape_elems_bytes
+
+arch, shape_name, mp = sys.argv[1], sys.argv[2], sys.argv[3] == "multi"
+mesh = make_production_mesh(multi_pod=mp)
+plan = plan_cell(get_config(arch), SHAPES[shape_name], mesh)
+compiled = lower_cell(plan).compile()
+ma = compiled.memory_analysis()
+print(f"temp={ma.temp_size_in_bytes/1e9:.2f}GB args={ma.argument_size_in_bytes/1e9:.2f}GB")
+comps, shapes = parse_module(compiled.as_text())
+big = Counter()
+for cname, comp in comps.items():
+    for op in comp.ops:
+        _, b = _shape_elems_bytes(op.result_shape)
+        if b >= 100e6:
+            big[(cname[:36], op.opcode, op.result_shape[:64])] += 1
+for (cn, oc, sh), n in big.most_common(20):
+    _, b = _shape_elems_bytes(sh)
+    print(f"{n:3d}x {b/1e9:6.2f}GB {oc:20s} {sh:64s} {cn}")

@@ -1,0 +1,44 @@
+"""§Perf variant runner: lower+compile the hillclimb variants and write
+their artifacts next to the baselines (variant suffix in the filename).
+
+    PYTHONPATH=src python scripts/run_variants.py
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.launch.dryrun import run_cell
+
+RUNS = [
+    # (arch, shape, multi_pod, kwargs)
+    # 1. paper-technique cell: ICQ-KV two-step quantized decode
+    ("gemma-7b", "decode_32k", False, dict(variant="icq_kv")),
+    ("llama3-405b", "decode_32k", False, dict(variant="icq_kv")),
+    # 2. collective-bound cell: compressed cross-pod grad combine
+    ("deepseek-v2-236b", "train_4k", True, dict(icq_grad=True,
+                                                variant="icq_grad")),
+    ("internvl2-76b", "train_4k", True, dict(icq_grad=True,
+                                             variant="icq_grad")),
+    # 3. compute-term: triangular (diagonal-skipping) causal attention
+    ("gemma-7b", "prefill_32k", False, dict(attn_impl="triangular",
+                                            variant="triangular")),
+    ("internvl2-76b", "train_4k", False, dict(attn_impl="triangular",
+                                              variant="triangular")),
+]
+
+
+def main():
+    failures = []
+    for arch, shape, mp, kw in RUNS:
+        try:
+            run_cell(arch, shape, mp, **kw)
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            failures.append((arch, shape, kw.get("variant")))
+    if failures:
+        raise SystemExit(f"variant failures: {failures}")
+    print("all variants lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.configs.base import ArchConfig, ICQConfig, ShapeSpec
+from repro.configs.registry import get_config, list_archs, smoke_config
+from repro.configs.shapes import SHAPES, shapes_for, skipped_shapes_for
+
+__all__ = [
+    "ArchConfig", "ICQConfig", "ShapeSpec",
+    "get_config", "list_archs", "smoke_config",
+    "SHAPES", "shapes_for", "skipped_shapes_for",
+]

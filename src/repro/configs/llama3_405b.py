@@ -1,0 +1,24 @@
+"""llama3-405b [dense] — GQA kv=8, 128k vocab.  [arXiv:2407.21783; unverified]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama3-405b",
+    family="dense",
+    num_layers=126,
+    d_model=16384,
+    num_heads=128,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=53248,
+    vocab_size=128256,
+    activation="swiglu",
+    rope_theta=500000.0,
+    # bf16 Adam moments: quantized optimizer state so the 405B fits a
+    # v5e-256 pod (see DESIGN.md §6 memory budget).
+    optimizer_dtype="bfloat16",
+    grad_accum_dtype="bfloat16",  # 16 microbatches: ~2-bit loss, -9.5GB/dev
+    microbatch_size=1,
+    remat_block=14,    # sqrt-L remat: 126 saved carries -> 9+14
+    icq_kv=True,
+    icq_grad=True,
+)

@@ -1,0 +1,25 @@
+"""ICQ core — the paper's contribution as a composable JAX library.
+
+Layout:
+  prior.py      bimodal variance prior P(Lambda) + psi (eqs. 4, 5, 10)
+  variance.py   online Welford variance across batches (eq. 9)
+  codebooks.py  (K,m,d) codebooks, k-means / residual init, geometry
+  encode.py     PQ encode, ICM for additive codes, straight-through
+  losses.py     L^E / L^C / L^P / L^ICQ / CQ penalty (eqs. 3, 6)
+  icq.py        psi/xi, fast-set selection (eq. 8), margin sigma (eq. 11)
+  search.py     two-step search (eq. 2 -> eq. 1), ADC, MAP/recall
+  train.py      joint trainer (embedding + quantizers + prior), export
+  embed.py      linear / CNN embedding models
+  baselines/    PQ, OPQ, CQ, SQ, PQN
+"""
+from repro.core.train import ICQModel, fit, finalize
+from repro.core.icq import ICQStructure, build_structure
+from repro.core.search import (SearchResult, adc_search, exact_search,
+                               mean_average_precision, recall_at,
+                               two_step_search, two_step_search_compact)
+
+__all__ = [
+    "ICQModel", "fit", "finalize", "ICQStructure", "build_structure",
+    "SearchResult", "adc_search", "exact_search", "two_step_search",
+    "two_step_search_compact", "mean_average_precision", "recall_at",
+]

@@ -1,0 +1,20 @@
+"""Baselines the paper compares against (§2, §4).
+
+Unsupervised quantizers: PQ (Jegou et al.), OPQ (Ge et al. — learned
+rotation), CQ (Zhang et al. — constant inner-product additive codes).
+Supervised pipelines: SQ (Wang et al. — linear embedding + CQ, built on
+the shared joint trainer with the ICQ terms disabled) and PQN-style
+(Yu et al. — CNN embedding + soft-assign PQ with straight-through).
+
+All return ``core.train.ICQModel`` artifacts so every benchmark calls
+one search API.  DQN / DPQ appear in Fig. 4 as literature reference
+curves only (numbers from their papers); SQ and PQN are the implemented
+comparison systems, exactly as in the paper's own experiments.
+"""
+from repro.core.baselines.pq import fit_pq
+from repro.core.baselines.opq import fit_opq
+from repro.core.baselines.cq import fit_cq
+from repro.core.baselines.sq import fit_sq
+from repro.core.baselines.pqn import fit_pqn
+
+__all__ = ["fit_pq", "fit_opq", "fit_cq", "fit_sq", "fit_pqn"]

@@ -1,0 +1,14 @@
+"""Supervised Quantization (Wang et al. 2016): learned linear embedding
+jointly with CQ codebooks — the shared joint trainer with the ICQ-specific
+terms (L^P, L^ICQ) disabled.
+"""
+from __future__ import annotations
+
+from repro.core.train import ICQModel, fit
+
+
+def fit_sq(key, xs, ys, icq_cfg, *, num_classes: int = 10, epochs: int = 5,
+           batch_size: int = 256, lr: float = 1e-3) -> ICQModel:
+    return fit(key, xs, ys, icq_cfg, embed_kind="linear",
+               num_classes=num_classes, mode="cq", epochs=epochs,
+               batch_size=batch_size, lr=lr)

@@ -1,0 +1,97 @@
+"""Embedding models W for the quantization pipelines.
+
+- ``linear``: the SQ-style learned linear map R^{d_raw} -> R^d (Wang et
+  al. 2016) with an auxiliary classifier head for L^E.
+- ``cnn``: a LeNet-style convolutional embedder for image-shaped data
+  (the PQN comparison uses CNN embeddings; paper §4.2).  Built on
+  ``lax.conv_general_dilated`` — no external NN library.
+
+Both expose  init(key, ...) -> params  and  apply(params, x) -> emb,
+plus ``classify(params, emb)`` for the classification loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+
+# ---------------------------------------------------------------- linear ----
+
+def linear_init(key, d_raw: int, d: int, num_classes: int):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w": nn.dense_init(k1, d_raw, d),
+        "b": jnp.zeros((d,), jnp.float32),
+        "cls": nn.dense_init(k2, d, num_classes),
+    }
+
+
+def linear_apply(params, x):
+    return x @ params["w"] + params["b"]
+
+
+# ------------------------------------------------------------------- cnn ----
+
+def _conv_init(key, h, w, cin, cout):
+    fan_in = h * w * cin
+    return (jax.random.normal(key, (h, w, cin, cout), jnp.float32)
+            / jnp.sqrt(fan_in))
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_init(key, img_hw: int, channels: int, d: int, num_classes: int,
+             width: int = 32):
+    """LeNet-style: conv-pool-conv-pool-dense -> d-dim embedding."""
+    ks = jax.random.split(key, 5)
+    flat = (img_hw // 4) * (img_hw // 4) * (2 * width)
+    return {
+        "c1": _conv_init(ks[0], 5, 5, channels, width),
+        "b1": jnp.zeros((width,), jnp.float32),
+        "c2": _conv_init(ks[1], 5, 5, width, 2 * width),
+        "b2": jnp.zeros((2 * width,), jnp.float32),
+        "fc": nn.dense_init(ks[2], flat, d),
+        "fcb": jnp.zeros((d,), jnp.float32),
+        "cls": nn.dense_init(ks[3], d, num_classes),
+    }
+
+
+def cnn_apply(params, x):
+    """x: (n, H, W, C) float -> (n, d)."""
+    h = jax.nn.relu(_conv(x, params["c1"]) + params["b1"])
+    h = _pool(h)
+    h = jax.nn.relu(_conv(h, params["c2"]) + params["b2"])
+    h = _pool(h)
+    h = h.reshape(h.shape[0], -1)
+    return h @ params["fc"] + params["fcb"]
+
+
+def classify(params, emb):
+    return emb @ params["cls"]
+
+
+def build_embedder(kind: str, key, *, d_raw=None, d=16, num_classes=10,
+                   img_hw=None, channels=None):
+    """Factory.  kind: 'linear' | 'cnn' | 'identity'."""
+    if kind == "linear":
+        params = linear_init(key, d_raw, d, num_classes)
+        return params, linear_apply
+    if kind == "cnn":
+        params = cnn_init(key, img_hw, channels, d, num_classes)
+        return params, cnn_apply
+    if kind == "identity":
+        k2 = jax.random.fold_in(key, 1)
+        params = {"cls": nn.dense_init(k2, d, num_classes)}
+        return params, lambda p, x: x
+    raise ValueError(kind)

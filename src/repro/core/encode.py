@@ -1,0 +1,99 @@
+"""Encoding: map embeddings to discrete codes against the codebooks.
+
+PQ encode is independent per codebook (orthogonal supports).  Additive
+codes (CQ / ICQ) interact, so we use Iterated Conditional Modes (ICM):
+cyclically re-choose codebook k's codeword holding the others fixed.
+With the cross-Gram blocks G[j,k] = C_j C_k^T precomputed, the per-point
+objective for codebook k is
+
+    argmin_j  ||c_{k,j}||^2 - 2 x.c_{k,j} + 2 sum_{k'!=k} <c_{k',b_{k'}}, c_{k,j}>
+
+— a gather of Gram rows plus one (n,d)x(d,m) matmul: MXU-friendly, no
+data-dependent branching (DESIGN.md §3).
+
+``soft_assign`` is the differentiable (softmax) relaxation used during
+joint training, with straight-through hard codes for the forward pass.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codebooks as cb
+
+
+def encode_pq(x, C):
+    """Independent per-codebook nearest codeword (exact for orthogonal
+    supports).  x: (n,d), C: (K,m,d) -> (n,K) int32."""
+    # scores[k]: (n, m) = -2 x C_k^T + ||c||^2
+    sq = cb.codeword_sq_norms(C)                             # (K,m)
+    scores = -2.0 * jnp.einsum("nd,kmd->knm", x, C) + sq[:, None, :]
+    return jnp.argmin(scores, axis=-1).T.astype(jnp.int32)   # (n,K)
+
+
+def icm_encode(x, C, iters: int = 3, init_codes=None):
+    """ICM encoding for additive codebooks.  x: (n,d) -> codes (n,K).
+
+    Warm-started from the independent (PQ-style) assignment unless
+    ``init_codes`` given.  Each sweep visits codebooks in order; `iters`
+    full sweeps (paper uses a small constant, cfg.icm_iters).
+    """
+    n, d = x.shape
+    K, m, _ = C.shape
+    sq = cb.codeword_sq_norms(C)                             # (K,m)
+    xc = jnp.einsum("nd,kmd->knm", x, C)                     # (K,n,m)
+    G = cb.cross_gram(C)                                     # (K,K,m,m)
+    codes = encode_pq(x, C) if init_codes is None else init_codes
+
+    def sweep(codes, _):
+        def step(codes, k):
+            # interaction: sum over k'!=k of G[k', k][codes[:,k']]
+            # gather rows: G[kp,k] is (m,m); codes[:,kp] selects (n,m)
+            def one(kp):
+                return G[kp, k][codes[:, kp]]                # (n,m)
+            inter = jnp.sum(jax.vmap(one)(jnp.arange(K)), axis=0) - one(k)
+            scores = sq[k][None, :] - 2.0 * xc[k] + 2.0 * inter
+            new_k = jnp.argmin(scores, axis=-1).astype(jnp.int32)
+            return codes.at[:, k].set(new_k), None
+
+        codes, _ = jax.lax.scan(step, codes, jnp.arange(K))
+        return codes, None
+
+    codes, _ = jax.lax.scan(sweep, codes, jnp.arange(iters))
+    return codes
+
+
+def soft_assign(x, C, tau: float = 1.0):
+    """Differentiable assignment: softmax(-dist/tau) per codebook.
+
+    Returns (probs (K,n,m), hard codes (n,K)).  The straight-through
+    reconstruction is built in ``st_decode``.
+    """
+    sq = cb.codeword_sq_norms(C)
+    scores = -2.0 * jnp.einsum("nd,kmd->knm", x, C) + sq[:, None, :]
+    probs = jax.nn.softmax(-scores / tau, axis=-1)
+    hard = jnp.argmin(scores, axis=-1).T.astype(jnp.int32)
+    return probs, hard
+
+
+def st_decode(x, C, tau: float = 1.0):
+    """Straight-through decode: forward = hard reconstruction, backward =
+    soft (differentiable wrt both x and C).  Returns (xbar, codes)."""
+    probs, hard = soft_assign(x, C, tau)
+    soft_rec = jnp.einsum("knm,kmd->nd", probs, C)
+    hard_rec = cb.decode(C, hard)
+    xbar = soft_rec + jax.lax.stop_gradient(hard_rec - soft_rec)
+    return xbar, hard
+
+
+def pack_codes(codes, m: int):
+    """Compress int32 codes to the narrowest unsigned dtype that fits m."""
+    if m <= 256:
+        return codes.astype(jnp.uint8)
+    if m <= 65536:
+        return codes.astype(jnp.uint16)
+    return codes.astype(jnp.int32)
+
+
+def unpack_codes(codes):
+    return codes.astype(jnp.int32)

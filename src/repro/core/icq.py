@@ -1,0 +1,91 @@
+"""ICQ structural logic: the psi subspace, codebook clustering, and the
+fast-set selection (paper eqs. 5, 7, 8) plus the serving-time hard
+projection.
+
+During training the interleaving constraint is *soft* (L^ICQ); before
+serving we (a) decide the fast set K_fast by eq. 8 — a codebook is fast
+iff every codeword has more energy inside psi than outside — and
+(b) optionally hard-project codebooks onto their side of the split so
+the crude distance over the fast group is *exactly* the distance in psi
+(makes eq. 2's margin interpretation exact).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prior as prior_mod
+
+
+class ICQStructure(NamedTuple):
+    xi: jnp.ndarray          # (d,) bool — psi membership per dimension
+    fast_mask: jnp.ndarray   # (K,) bool — codebook in the fast group
+    sigma: jnp.ndarray       # scalar margin (eq. 11): variance mass outside psi
+
+
+def compute_xi(lam, theta, icq_cfg, *, min_dims: int = 1):
+    """xi from the learned prior (eq. 5/7); guarded so |psi| >= min_dims
+    and |psi| < d (degenerate splits would disable the two-step search)."""
+    xi = prior_mod.psi_mask(lam, theta, pi1=icq_cfg.pi1, pi2=icq_cfg.pi2,
+                            alpha2=icq_cfg.alpha2)
+    size = jnp.sum(xi)
+    fallback = prior_mod.psi_mask_topk(lam, min_dims)
+    xi = jnp.where((size < min_dims) | (size >= lam.shape[-1]), fallback, xi)
+    return xi
+
+
+def codebook_energies(C, xi):
+    """Per-codebook energy inside/outside psi.  Returns (in_e, out_e): (K, m)."""
+    xi = xi.astype(C.dtype)
+    in_e = jnp.sum(jnp.square(C) * xi[None, None, :], axis=-1)
+    out_e = jnp.sum(jnp.square(C) * (1.0 - xi)[None, None, :], axis=-1)
+    return in_e, out_e
+
+
+def fast_set(C, xi):
+    """Eq. 8: codebook k is fast iff every codeword has out-energy < in-energy."""
+    in_e, out_e = codebook_energies(C, xi)
+    return jnp.all(out_e < in_e, axis=-1)                    # (K,)
+
+
+def fast_set_topk(C, xi, num_fast: int):
+    """Deterministic fallback: the num_fast codebooks with the largest
+    in-psi energy fraction.  Guarantees |K_fast| = num_fast even when the
+    soft constraint hasn't fully separated the groups."""
+    in_e, out_e = codebook_energies(C, xi)
+    frac = jnp.sum(in_e, axis=-1) / (jnp.sum(in_e + out_e, axis=-1) + 1e-12)
+    order = jnp.argsort(-frac)
+    mask = jnp.zeros((C.shape[0],), bool).at[order[:num_fast]].set(True)
+    return mask
+
+
+def project_codebooks(C, xi, fast_mask):
+    """Hard interleave: zero fast codebooks outside psi and slow codebooks
+    inside psi.  After this, fast/slow groups are exactly orthogonal and
+    crude distances decompose (DESIGN.md §3)."""
+    xi = xi.astype(C.dtype)
+    keep = jnp.where(fast_mask[:, None], xi[None, :], (1.0 - xi)[None, :])
+    return C * keep[:, None, :]
+
+
+def margin_sigma(lam, xi, scale: float = 1.0):
+    """Eq. 11: sigma ~ sum of variances outside psi, scaled.
+
+    This bounds (in expectation) the crude-distance error from ignoring
+    the slow codebooks, and is the slack used in the eq. 2 comparison.
+    """
+    return scale * jnp.sum(lam * (1.0 - xi.astype(lam.dtype)))
+
+
+def build_structure(C, lam, theta, icq_cfg) -> ICQStructure:
+    """One-stop: xi from the prior, fast set (eq. 8 with top-k fallback),
+    margin sigma (eq. 11)."""
+    xi = compute_xi(lam, theta, icq_cfg,
+                    min_dims=max(1, icq_cfg.d // icq_cfg.num_codebooks))
+    mask = fast_set(C, xi)
+    want = icq_cfg.num_fast
+    mask = jnp.where(jnp.sum(mask) == want, mask, fast_set_topk(C, xi, want))
+    return ICQStructure(xi=xi, fast_mask=mask,
+                        sigma=margin_sigma(lam, xi, icq_cfg.margin_scale))

@@ -1,0 +1,76 @@
+"""The four loss terms of the ICQ objective (paper §3.1):
+
+    min_{W,C,Theta}  L^E + L^C + gamma1 * L^P + gamma2 * L^ICQ
+
+L^E  — embedding accuracy (classification CE or triplet);
+L^C  — quantization error (straight-through additive reconstruction),
+       plus the CQ constant-inner-product penalty when requested;
+L^P  — prior NLL over the variance vector (see core.prior);
+L^ICQ— the interleaving penalty (eq. 6): per codeword, the product of its
+       energy inside psi and outside psi must vanish, i.e. every codeword
+       commits to one side of the split.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encode as enc
+
+
+def classification_loss(logits, labels):
+    """Softmax cross-entropy.  logits: (n, classes), labels: (n,)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - ll)
+
+
+def triplet_loss(anchor, positive, negative, margin: float = 1.0):
+    """PQN-style triplet loss on embeddings (n, d)."""
+    d_ap = jnp.sum(jnp.square(anchor - positive), axis=-1)
+    d_an = jnp.sum(jnp.square(anchor - negative), axis=-1)
+    return jnp.mean(jnp.maximum(d_ap - d_an + margin, 0.0))
+
+
+def quantization_loss(x, C, tau: float = 1.0):
+    """L^C: mean ||x - xbar||^2 with straight-through decode — gradients
+    reach both the embeddings and the codebooks."""
+    xbar, codes = enc.st_decode(x, C, tau)
+    return jnp.mean(jnp.sum(jnp.square(x - xbar), axis=-1)), codes
+
+
+def cq_penalty(C, codes, eps_target=None):
+    """Composite-Quantization constraint: the cross-codebook inner-product
+    sum should be a *constant* over the dataset (Zhang et al. 2014) so
+    that ||q - xbar||^2 ranks identically to the LUT-sum distance.
+
+    Penalizes the batch variance of  s_i = sum_{j != k} <c_j,b_ij, c_k,b_ik>
+    around its (learned or running) mean; returns (penalty, batch mean).
+    """
+    sel = _selected(C, codes)                                # (n,K,d)
+    tot = jnp.sum(sel, axis=1)                               # (n,d)
+    sq_sum = jnp.sum(jnp.square(sel), axis=(1, 2))           # sum_k ||c_k||^2
+    cross = jnp.sum(jnp.square(tot), axis=-1) - sq_sum       # (n,)
+    mean = jnp.mean(cross) if eps_target is None else eps_target
+    return jnp.mean(jnp.square(cross - mean)), jnp.mean(cross)
+
+
+def _selected(C, codes):
+    """Gather selected codewords: (n, K, d)."""
+    K = C.shape[0]
+    return jnp.stack([C[k][codes[:, k]] for k in range(K)], axis=1)
+
+
+def icq_loss(C, xi):
+    """L^ICQ (eq. 6): sum over codewords of ||c o xi|| * ||c o (1-xi)||.
+
+    xi: (d,) in [0,1] (hard 0/1 at serving; a soft relaxation is allowed
+    during training — the paper treats this as a soft constraint).
+    Normalized per codeword by ||c|| so the penalty is scale-free.
+    """
+    xi = xi.astype(jnp.float32)
+    in_e = jnp.sqrt(jnp.sum(jnp.square(C) * xi[None, None, :], axis=-1) + 1e-12)
+    out_e = jnp.sqrt(jnp.sum(jnp.square(C) * (1.0 - xi)[None, None, :], axis=-1) + 1e-12)
+    norm = jnp.sum(jnp.square(C), axis=-1) + 1e-12
+    return jnp.mean(in_e * out_e / norm)

@@ -1,0 +1,94 @@
+"""Online per-dimension variance estimation (paper §3.2, eq. 9).
+
+The embeddings X change every step (W is being trained), so Lambda is
+estimated across batches with the paper's incremental update:
+
+    M_b = M_{b-1} + (m_b - M_{b-1}) / b
+    L_b = L_{b-1} + (l_b - L_{b-1}) / b + (1/b)(1 - 1/b)(m_b - M_{b-1})^2
+
+where (m_b, l_b) are the sample mean/variance of batch b.  This is exact
+for equal-sized batches; ``welford_merge`` is the count-weighted exact
+(Chan et al.) merge used when batch sizes differ (e.g. a ragged last
+batch or cross-host merges in the distributed pipeline).
+
+State is a small pytree — jit/scan-safe, checkpointable, and psum-able
+(counts and count-weighted sums are additive across data-parallel hosts).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def init_state(d: int) -> Dict:
+    return {
+        "mean": jnp.zeros((d,), jnp.float32),
+        "var": jnp.zeros((d,), jnp.float32),
+        "count": jnp.zeros((), jnp.float32),   # number of batches seen (paper's b)
+        "n": jnp.zeros((), jnp.float32),       # number of samples seen (exact merge)
+        "m2": jnp.zeros((d,), jnp.float32),    # sum of squared deviations (exact merge)
+    }
+
+
+def batch_moments(x):
+    """Sample mean/variance of one batch of embeddings x: (b, d)."""
+    x = x.astype(jnp.float32)
+    m = jnp.mean(x, axis=0)
+    v = jnp.var(x, axis=0)
+    return m, v
+
+
+def update(state: Dict, x) -> Dict:
+    """Paper eq. 9 — equal-weight incremental update with batch b's moments.
+
+    Also maintains the exact (n, m2) Welford accumulators so both
+    estimators are available; ``lambda_hat`` reads the paper's estimate.
+    """
+    m_b, l_b = batch_moments(x)
+    b = state["count"] + 1.0
+    inv_b = 1.0 / b
+    delta = m_b - state["mean"]
+    new_mean = state["mean"] + delta * inv_b
+    new_var = (state["var"] + (l_b - state["var"]) * inv_b
+               + inv_b * (1.0 - inv_b) * jnp.square(delta))
+
+    # exact count-weighted merge (Chan) in parallel
+    nb = jnp.asarray(x.shape[0], jnp.float32)
+    n = state["n"]
+    tot = n + nb
+    d_exact = m_b - _exact_mean(state)
+    m2 = state["m2"] + l_b * nb + jnp.square(d_exact) * n * nb / jnp.maximum(tot, 1.0)
+    exact_mean = _exact_mean(state) + d_exact * nb / jnp.maximum(tot, 1.0)
+
+    return {"mean": new_mean, "var": new_var, "count": b,
+            "n": tot, "m2": m2, "_exact_mean": exact_mean}
+
+
+def _exact_mean(state):
+    return state.get("_exact_mean", state["mean"] * 0.0)
+
+
+def welford_merge(a: Dict, b: Dict) -> Dict:
+    """Exact merge of two variance states (cross-host / cross-shard)."""
+    na, nb = a["n"], b["n"]
+    tot = jnp.maximum(na + nb, 1.0)
+    ma, mb = _exact_mean(a), _exact_mean(b)
+    delta = mb - ma
+    m2 = a["m2"] + b["m2"] + jnp.square(delta) * na * nb / tot
+    mean = ma + delta * nb / tot
+    count = a["count"] + b["count"]
+    var = m2 / tot
+    return {"mean": mean, "var": var, "count": count,
+            "n": na + nb, "m2": m2, "_exact_mean": mean}
+
+
+def lambda_hat(state: Dict):
+    """Current per-dimension variance estimate Lambda (paper's estimator)."""
+    return state["var"]
+
+
+def lambda_exact(state: Dict):
+    """Exact pooled variance from the (n, m2) accumulators."""
+    return state["m2"] / jnp.maximum(state["n"], 1.0)

@@ -1,0 +1,9 @@
+from repro.data.synthetic import (guyon_dataset, SYNTHETIC_DATASETS,
+                                  make_table1_dataset)
+from repro.data.pseudo_real import pseudo_mnist, pseudo_cifar
+from repro.data.pipeline import TokenPipeline, ArrayPipeline
+
+__all__ = [
+    "guyon_dataset", "SYNTHETIC_DATASETS", "make_table1_dataset",
+    "pseudo_mnist", "pseudo_cifar", "TokenPipeline", "ArrayPipeline",
+]

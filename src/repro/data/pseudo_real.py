@@ -1,0 +1,85 @@
+"""Structured stand-ins for MNIST / CIFAR-10 (offline container — the
+real downloads are unavailable; see DESIGN.md §6 Data note).
+
+``pseudo_mnist``: 10 classes of 28x28 grayscale "digits" built from
+per-class stroke templates (random walks) + elastic jitter + noise —
+matched dim (784), class count, and split sizes (60k/10k by default,
+reducible).
+
+``pseudo_cifar``: 10 classes of 32x32x3 textured patches — per-class
+color palette + oriented gratings + noise (3072-d), 50k/10k.
+
+Both have genuine within-class structure and between-class separation so
+supervised-retrieval MAP behaves qualitatively like the real datasets.
+Every benchmark that uses them labels the substitution.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def _stroke_template(rng, hw: int = 28, n_steps: int = 60):
+    canvas = np.zeros((hw, hw), np.float32)
+    pos = np.array([hw / 2, hw / 2]) + rng.uniform(-6, 6, 2)
+    vel = rng.uniform(-1.5, 1.5, 2)
+    for _ in range(n_steps):
+        vel = 0.8 * vel + rng.uniform(-1.0, 1.0, 2)
+        pos = np.clip(pos + vel, 2, hw - 3)
+        r, c = int(pos[0]), int(pos[1])
+        canvas[r - 1: r + 2, c - 1: c + 2] += 0.4
+    return np.clip(canvas, 0, 1)
+
+
+def pseudo_mnist(n_train: int = 10000, n_test: int = 2000, seed: int = 0
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """(x_train (n,784), y_train, x_test, y_test), values in [0,1]."""
+    rng = np.random.default_rng(seed)
+    hw = 28
+    templates = [_stroke_template(rng, hw) for _ in range(10)]
+
+    def sample(n):
+        y = rng.integers(0, 10, n).astype(np.int32)
+        xs = np.empty((n, hw * hw), np.float32)
+        for i in range(n):
+            t = templates[y[i]]
+            # elastic jitter: shift + small affine + noise
+            sr, sc = rng.integers(-2, 3, 2)
+            img = np.roll(np.roll(t, sr, 0), sc, 1)
+            img = img * rng.uniform(0.7, 1.2) + 0.08 * rng.standard_normal((hw, hw))
+            xs[i] = np.clip(img, 0, 1).ravel()
+        return xs, y
+
+    x_tr, y_tr = sample(n_train)
+    x_te, y_te = sample(n_test)
+    return x_tr, y_tr, x_te, y_te
+
+
+def pseudo_cifar(n_train: int = 10000, n_test: int = 2000, seed: int = 0
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """(x_train (n,3072), y_train, x_test, y_test), values in [0,1]."""
+    rng = np.random.default_rng(seed + 17)
+    hw = 32
+    yy, xx = np.meshgrid(np.arange(hw), np.arange(hw), indexing="ij")
+    palettes = rng.uniform(0.1, 0.9, size=(10, 3))
+    freqs = rng.uniform(0.15, 0.8, size=(10,))
+    angles = rng.uniform(0, np.pi, size=(10,))
+
+    def sample(n):
+        y = rng.integers(0, 10, n).astype(np.int32)
+        xs = np.empty((n, hw * hw * 3), np.float32)
+        for i in range(n):
+            c = y[i]
+            phase = rng.uniform(0, 2 * np.pi)
+            ang = angles[c] + rng.uniform(-0.2, 0.2)
+            grating = 0.5 + 0.5 * np.sin(
+                freqs[c] * (np.cos(ang) * xx + np.sin(ang) * yy) + phase)
+            img = grating[:, :, None] * palettes[c][None, None, :]
+            img = img + 0.1 * rng.standard_normal((hw, hw, 3))
+            xs[i] = np.clip(img, 0, 1).ravel()
+        return xs, y
+
+    x_tr, y_tr = sample(n_train)
+    x_te, y_te = sample(n_test)
+    return x_tr, y_tr, x_te, y_te

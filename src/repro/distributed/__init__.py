@@ -1,0 +1,15 @@
+"""Distributed runtime: sharding rules, checkpointing, fault tolerance,
+elastic re-meshing."""
+from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                        param_shardings, replicated)
+from repro.distributed.checkpoint import CheckpointManager
+from repro.distributed.fault_tolerance import (HeartbeatMonitor,
+                                               TrainSupervisor)
+from repro.distributed.elastic import (make_elastic_mesh, plan_mesh_shape,
+                                       reshard_state)
+
+__all__ = [
+    "batch_shardings", "cache_shardings", "param_shardings", "replicated",
+    "CheckpointManager", "HeartbeatMonitor", "TrainSupervisor",
+    "make_elastic_mesh", "plan_mesh_shape", "reshard_state",
+]

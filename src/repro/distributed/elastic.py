@@ -1,0 +1,65 @@
+"""Elastic re-meshing: shrink/grow the device mesh when hosts leave or
+join, preserving the logical sharding rules.
+
+Policy: keep the 'model' axis at the largest size that still divides the
+tensor-parallel dims (TP size is architecture-coupled: heads/d_ff must
+divide it), absorb all remaining devices into 'data' (FSDP/DP shrink is
+always safe), and drop stragglers to a power-of-two fleet so collectives
+stay balanced.  Parameters move to the new mesh by device_put with the
+re-derived NamedSharding — for a real fleet this is the
+restore-from-checkpoint path (distributed.fault_tolerance), for in-
+process shrink it is a resharding transfer.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed import sharding as shrules
+
+
+def _pow2_floor(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def plan_mesh_shape(num_devices: int, *, model_divisors: Sequence[int],
+                    max_model: int = 16) -> Tuple[int, int]:
+    """(data, model) for the surviving fleet.
+
+    ``model_divisors``: dims that the model axis must divide (num_kv_heads,
+    d_ff tiling, expert count ...).  Picks the largest power-of-two model
+    size <= max_model dividing all of them and the device count.
+    """
+    usable = _pow2_floor(num_devices)
+    model = _pow2_floor(max_model)
+    while model > 1:
+        if usable % model == 0 and all(d % model == 0 for d in model_divisors
+                                       if d > 0):
+            break
+        model //= 2
+    return usable // model, model
+
+
+def make_elastic_mesh(devices=None, *, model_divisors: Sequence[int] = (),
+                      max_model: int = 16) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    data, model = plan_mesh_shape(len(devices), model_divisors=model_divisors,
+                                  max_model=max_model)
+    import numpy as np
+    grid = np.asarray(devices[: data * model]).reshape(data, model)
+    return Mesh(grid, ("data", "model"))
+
+
+def reshard_state(state, old_mesh: Mesh, new_mesh: Mesh, cfg=None):
+    """Move a (params/opt) pytree onto ``new_mesh`` under the same logical
+    rules.  On a single controller this is a device_put; multi-controller
+    recovery goes through the checkpoint instead (same sharding specs)."""
+    shardings = shrules.param_shardings(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state),
+        new_mesh)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), state, shardings)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot-spots, each validated against a
+pure-jnp oracle (ref.py) via interpret=True on CPU:
+
+  adc.py              ADC LUT sum (one-hot matmul formulation, MXU)
+  two_step.py         fused crude ADC + eq. 2 margin test (ICQ phase 1)
+  kmeans.py           nearest-centroid assignment (codebook training/encode)
+  flash_attention.py  blockwise online-softmax causal attention
+
+ops.py — jit'd public wrappers (auto interpret off-TPU); ref.py — oracles.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: blockwise online-softmax (flash) causal attention.
+
+Grid (batch*heads, num_q_blocks, num_k_blocks) with the K dimension
+innermost; the output block plus the running (m, l) statistics are
+*revisited* across the K steps (TPU grids execute sequentially, so
+output aliasing doubles as the accumulator — no scratch juggling).
+Fully-masked blocks above the diagonal are skipped with ``pl.when``.
+
+Block shapes default to (128, head_dim) — MXU-aligned (128 lanes) with a
+VMEM working set of q/k/v/o blocks ~4 * 128 * dh * 4B (<= 256 KiB at
+dh=128), far under the ~16 MiB VMEM budget, leaving room for the
+compiler's double buffering of the streamed K/V tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                  *, scale: float, causal: bool, blk_q: int, blk_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # skip blocks entirely above the diagonal
+    run = (not causal) or (ki * blk_k <= qi * blk_q + blk_q - 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0]                              # (blk_q, dh)
+        k = k_ref[0]                              # (blk_k, dh)
+        v = v_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = qi * blk_q + jax.lax.broadcasted_iota(
+                jnp.int32, (blk_q, blk_k), 0)
+            k_pos = ki * blk_k + jax.lax.broadcasted_iota(
+                jnp.int32, (blk_q, blk_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_ref[0]                         # (blk_q,)
+        l_prev = l_ref[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        m_ref[0] = m_new
+        l_ref[0] = l_prev * corr + jnp.sum(p, axis=-1)
+        o_ref[0] = (o_ref[0] * corr[:, None]
+                    + jax.lax.dot_general(
+                        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+
+
+def _finalize(o, l):
+    return o / jnp.maximum(l, 1e-30)[..., None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "blk_q", "blk_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, blk_q: int = 128,
+                           blk_k: int = 128, interpret: bool = True):
+    """q: (bh, sq, dh), k/v: (bh, sk, dh) -> (bh, sq, dh).
+
+    GQA/MHA head folding happens in ops.py; this kernel sees flat bh.
+    """
+    bh, sq, dh = q.shape
+    sk = k.shape[1]
+    blk_q = min(blk_q, sq)
+    blk_k = min(blk_k, sk)
+    assert sq % blk_q == 0 and sk % blk_k == 0, (sq, blk_q, sk, blk_k)
+    grid = (bh, sq // blk_q, sk // blk_k)
+    scale = dh ** -0.5
+
+    o, m, l = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          blk_q=blk_q, blk_k=blk_k),
+        out_shape=(jax.ShapeDtypeStruct((bh, sq, dh), jnp.float32),
+                   jax.ShapeDtypeStruct((bh, sq), jnp.float32),
+                   jax.ShapeDtypeStruct((bh, sq), jnp.float32)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, blk_k, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, blk_k, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, blk_q, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, blk_q), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, blk_q), lambda b, i, j: (b, i)),
+        ),
+        interpret=interpret,
+    )(q, k, v)
+    return _finalize(o, l).astype(v.dtype)

@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: k-means assignment (nearest centroid).
+
+scores = -2 X C^T + ||c||^2 on the MXU, argmin over centroids on the
+VPU.  The centroid block (m, d) and its squared norms are pinned in VMEM
+across the grid (m <= 256, d <= 1024 -> <= 1 MiB); point tiles stream.
+This is the hot loop of codebook training (Lloyd iterations over the
+full dataset) and of PQ/ICM encoding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.adc import _largest_divisor
+
+
+def _kmeans_kernel(x_ref, cent_ref, csq_ref, ids_ref, dist_ref):
+    x = x_ref[...]                               # (blk_n, d)
+    cent = cent_ref[...]                         # (m, d)
+    csq = csq_ref[...]                           # (1, m)
+    scores = csq - 2.0 * jax.lax.dot_general(
+        x, cent, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (blk_n, m)
+    ids_ref[...] = jnp.argmin(scores, axis=-1).astype(jnp.int32)
+    xsq = jnp.sum(jnp.square(x.astype(jnp.float32)), axis=-1)
+    dist_ref[...] = jnp.min(scores, axis=-1) + xsq
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def kmeans_assign_pallas(x, cent, *, block_n: int = 1024,
+                         interpret: bool = True):
+    """x (n,d), cent (m,d) -> (ids (n,) int32, sq-dist (n,) f32)."""
+    n, d = x.shape
+    m = cent.shape[0]
+    if n % block_n != 0:
+        block_n = _largest_divisor(n, block_n)
+    csq = jnp.sum(jnp.square(cent.astype(jnp.float32)), axis=-1).reshape(1, m)
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _kmeans_kernel,
+        out_shape=(jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((n,), jnp.float32)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+        ],
+        out_specs=(pl.BlockSpec((block_n,), lambda i: (i,)),
+                   pl.BlockSpec((block_n,), lambda i: (i,))),
+        interpret=interpret,
+    )(x, cent, csq)

@@ -1,0 +1,62 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; TPU
+v5e is the compile target) and False on real TPU backends.  The GQA
+head-folding for flash attention lives here so the kernel stays MHA.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.adc import adc_pallas
+from repro.kernels.two_step import two_step_pallas
+from repro.kernels.kmeans import kmeans_assign_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def adc(codes, lut, *, block_n: int = 512, interpret=None):
+    """ADC LUT sum: codes (n,K) int32, lut (K,m) -> dists (n,) f32."""
+    it = _default_interpret() if interpret is None else interpret
+    return adc_pallas(codes, lut, block_n=block_n, interpret=it)
+
+
+def two_step(codes, lut, fast_mask, threshold, *, block_n: int = 512,
+             interpret=None):
+    """Fused crude ADC + eq. 2 margin test -> (crude, passed)."""
+    it = _default_interpret() if interpret is None else interpret
+    return two_step_pallas(codes, lut, fast_mask, threshold,
+                           block_n=block_n, interpret=it)
+
+
+def kmeans_assign(x, cent, *, block_n: int = 1024, interpret=None):
+    """Nearest-centroid assignment -> (ids, sq-dists)."""
+    it = _default_interpret() if interpret is None else interpret
+    return kmeans_assign_pallas(x, cent, block_n=block_n, interpret=it)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, blk_q: int = 128,
+                    blk_k: int = 128, interpret=None):
+    """Causal flash attention with GQA support.
+
+    q: (b, sq, H, dh); k/v: (b, sk, KVH, dh) -> (b, sq, H, dh).
+    Query heads are grouped with their KV head and folded into the
+    kernel's flat batch*heads axis.
+    """
+    it = _default_interpret() if interpret is None else interpret
+    b, sq, h, dh = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    # (b, s, kvh, g, dh) -> (b*kvh*g, s, dh); kv repeated across g
+    qf = q.reshape(b, sq, kvh, g, dh).transpose(0, 2, 3, 1, 4)
+    qf = qf.reshape(b * kvh * g, sq, dh)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3).reshape(b * kvh, sk, dh), g, axis=0)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3).reshape(b * kvh, sk, dh), g, axis=0)
+    of = flash_attention_pallas(qf, kf, vf, causal=causal, blk_q=blk_q,
+                                blk_k=blk_k, interpret=it)
+    o = of.reshape(b, kvh, g, sq, dh).transpose(0, 3, 1, 2, 4)
+    return o.reshape(b, sq, h, dh)

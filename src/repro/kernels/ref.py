@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert allclose)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adc_ref(codes, lut):
+    """codes (n,K) int32, lut (K,m) f32 -> (n,) f32."""
+    K = lut.shape[0]
+    parts = jnp.stack([lut[k][codes[:, k]] for k in range(K)], axis=1)
+    return jnp.sum(parts, axis=1).astype(jnp.float32)
+
+
+def two_step_ref(codes, lut, fast_mask, threshold):
+    """-> (crude (n,) f32, passed (n,) int32)."""
+    masked = lut * fast_mask[:, None].astype(lut.dtype)
+    crude = adc_ref(codes, masked)
+    return crude, (crude < threshold).astype(jnp.int32)
+
+
+def kmeans_assign_ref(x, cent):
+    """x (n,d), cent (m,d) -> (ids (n,) int32, sq-dist (n,) f32)."""
+    x32 = x.astype(jnp.float32)
+    c32 = cent.astype(jnp.float32)
+    scores = (-2.0 * x32 @ c32.T + jnp.sum(jnp.square(c32), -1)[None, :])
+    ids = jnp.argmin(scores, axis=-1).astype(jnp.int32)
+    dist = jnp.min(scores, axis=-1) + jnp.sum(jnp.square(x32), -1)
+    return ids, dist
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """q (bh,sq,dh), k/v (bh,sk,dh) -> (bh,sq,dh).  Plain softmax."""
+    sq, sk = q.shape[1], k.shape[1]
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(v.dtype)

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: fused ICQ phase-1 — crude ADC over the fast
+codebooks + the eq. 2 margin test, in one pass over the code tiles.
+
+Outputs both the crude distances and the pass mask so phase 2 (survivor
+compaction + full refine) reads a bitmap instead of recomputing.  The
+fast subset is selected with a (K,) 0/1 mask folded into the LUT (zeroed
+rows for slow codebooks) — branch-free, so the same kernel body serves
+any |K_fast| without recompilation.
+
+Threshold (t + sigma) arrives as a (1, 1) scalar tile broadcast to every
+grid step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.adc import _largest_divisor
+
+
+def _two_step_kernel(codes_ref, lut_ref, thr_ref, crude_ref, pass_ref,
+                     *, K: int, m: int):
+    codes = codes_ref[...]                      # (blk_n, K)
+    lut = lut_ref[...]                          # (K, m) — pre-masked to fast
+    thr = thr_ref[0, 0]
+    blk_n = codes.shape[0]
+    flat = codes + (jnp.arange(K, dtype=jnp.int32) * m)[None, :]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (blk_n, K * m), 1)
+    onehot = jnp.sum(
+        (iota[:, None, :] == flat[:, :, None]).astype(lut.dtype), axis=1)
+    crude = onehot @ lut.reshape(K * m)
+    crude_ref[...] = crude
+    pass_ref[...] = (crude < thr).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def two_step_pallas(codes, lut, fast_mask, threshold, *, block_n: int = 512,
+                    interpret: bool = True):
+    """codes (n,K) int32, lut (K,m) f32, fast_mask (K,) bool,
+    threshold scalar -> (crude (n,) f32, passed (n,) int32)."""
+    n, K = codes.shape
+    m = lut.shape[1]
+    if n % block_n != 0:
+        block_n = _largest_divisor(n, block_n)
+    grid = (n // block_n,)
+    masked_lut = lut * fast_mask[:, None].astype(lut.dtype)
+    thr = jnp.asarray(threshold, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_two_step_kernel, K=K, m=m),
+        out_shape=(jax.ShapeDtypeStruct((n,), jnp.float32),
+                   jax.ShapeDtypeStruct((n,), jnp.int32)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, K), lambda i: (i, 0)),
+            pl.BlockSpec((K, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=(pl.BlockSpec((block_n,), lambda i: (i,)),
+                   pl.BlockSpec((block_n,), lambda i: (i,))),
+        interpret=interpret,
+    )(codes.astype(jnp.int32), masked_lut.astype(jnp.float32), thr)

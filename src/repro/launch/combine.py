@@ -1,0 +1,83 @@
+"""Cross-pod gradient-combine programs (§Perf variant 'icq_grad').
+
+Deployment model: each pod runs its own GSPMD train-step program (the
+single-pod cells, already green); between steps the pods exchange
+gradients over the cross-pod links.  That exchange is lowered here as a
+standalone *fully-manual* shard_map program over the multi-pod mesh —
+fully manual because XLA's SPMD partitioner CHECK-fails on
+partial-manual (manual pod + auto data/model) at 512 devices (see
+EXPERIMENTS.md §Perf), and the combine is elementwise so nothing needs
+auto partitioning.
+
+Two variants over the same flattened gradient vector (params are
+pod-replicated / in-pod FSDP-sharded, so each device owns N/256
+elements):
+
+  fp32:  psum over 'pod'                      (baseline wire: 4 B/elem)
+  int8:  EF-quantize -> all_gather int8 over 'pod' -> dequant mean
+         (wire: ~1 B/elem + 1/256 scales)
+
+The dry-run artifacts record the collective bytes of each — the
+compression ratio on the scarce cross-pod links.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.steps import CellPlan
+from repro.quant.grad_compress import ef_quantize
+from repro.quant.int8 import dequantize_int8
+
+
+def _combine_int8(g, r):
+    q, s, r_new = ef_quantize(g, r)
+    qs = jax.lax.all_gather(q, "pod")                 # int8 on the wire
+    ss = jax.lax.all_gather(s, "pod")
+    mean = jnp.mean(dequantize_int8(qs, ss), axis=0)
+    return mean.astype(g.dtype), r_new
+
+
+def _combine_fp32(g, r):
+    return jax.lax.pmean(g, "pod"), r
+
+
+def plan_combine_cell(cfg, mesh, *, compressed: bool) -> CellPlan:
+    """One (n_params,) fp32 gradient vector, sharded over every device
+    within a pod and replicated across pods."""
+    n = cfg.param_count()
+    block = 256                                       # one int8 scale / block
+    n_dev_per_pod = mesh.shape["data"] * mesh.shape["model"]
+    rows = ((n // block + n_dev_per_pod - 1)
+            // n_dev_per_pod) * n_dev_per_pod
+    g = jax.ShapeDtypeStruct((rows, block), jnp.float32)
+    r = jax.ShapeDtypeStruct((rows, block), jnp.float32)
+    spec = P(("data", "model"), None)                 # pod-replicated
+    shard = NamedSharding(mesh, spec)
+    fn = jax.shard_map(
+        _combine_int8 if compressed else _combine_fp32,
+        mesh=mesh, in_specs=(spec, spec), out_specs=(spec, spec),
+        check_vma=False)   # outputs ARE pod-replicated (gather+mean / pmean)
+
+    class _Shape:                                     # minimal ShapeSpec-like
+        name = "grad_combine"
+        kind = "train"
+        seq_len = 0
+        global_batch = 0
+
+    return CellPlan(cfg=cfg, shape=_Shape(), mesh=mesh, kind="train",
+                    n_micro=1, fn=fn, args=(g, r),
+                    in_shardings=(shard, shard),
+                    out_shardings=(shard, shard), donate=(1,))
+
+
+def lower_combine(cfg, mesh, *, compressed: bool):
+    plan = plan_combine_cell(cfg, mesh, compressed=compressed)
+    jitted = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                     out_shardings=plan.out_shardings,
+                     donate_argnums=plan.donate)
+    with mesh:
+        return jitted.lower(*plan.args), plan

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Single pod: 16x16 = 256 chips (v5e pod), axes (data, model).
+Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model) — the 'pod'
+axis carries cross-pod data parallelism (DCI links), 'data' is in-pod
+FSDP/DP, 'model' is TP/EP.
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh for CPU smoke runs of the same launch code."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def dp_size(mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n

@@ -1,0 +1,362 @@
+"""Step builders + input specs for every (arch x shape) cell.
+
+``build_train_step``  — gradient accumulation over microbatches
+    (lax.scan), remat inside the model's layer scan, optimizer update,
+    optional ICQ-grad compressed cross-pod combine.
+``build_serve_fns``   — prefill (full forward + cache build) and
+    decode_step (one token against a seq_len cache).
+``input_specs``       — ShapeDtypeStruct stand-ins for every model input
+    of a cell: weak-type-correct, shardable, no device allocation.
+
+Microbatching: the pipeline delivers batches already shaped
+(n_micro, micro_batch, seq); the microbatch dim is scanned, the batch
+dim is sharded over (pod, data).  n_micro is derived from the arch's
+``microbatch_size`` (per-DP-shard rows) so every cell fits HBM:
+    n_micro = global_batch / (dp_size * microbatch_size).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shrules
+from repro.models import build_model
+from repro.quant.grad_compress import (compress_state_init,
+                                       compressed_cross_pod_mean)
+from repro.quant.kv_cache import ICQKVConfig
+from repro.train.optimizer import make_optimizer
+
+
+# ----------------------------------------------------------- geometry ----
+
+def num_microbatches(cfg, shape, dp: int) -> int:
+    per_shard = max(shape.global_batch // max(dp, 1), 1)
+    n_micro = max(per_shard // max(cfg.microbatch_size, 1), 1)
+    while shape.global_batch % n_micro:
+        n_micro -= 1
+    return max(n_micro, 1)
+
+
+def batch_struct(cfg, shape, n_micro: int, *, train: bool) -> Dict[str, Any]:
+    """ShapeDtypeStructs of one input batch (microbatch-major for train)."""
+    B = shape.global_batch
+    S = shape.seq_len
+    s_text = S - (cfg.num_vision_tokens if cfg.frontend == "vision_stub" else 0)
+
+    def shp(*dims):
+        return (n_micro,) + dims if train else dims
+
+    specs: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct(shp(B // n_micro if train else B, s_text),
+                                       jnp.int32),
+    }
+    if train:
+        specs["labels"] = specs["tokens"]
+    if cfg.frontend == "vision_stub":
+        specs["patch_emb"] = jax.ShapeDtypeStruct(
+            shp(B // n_micro if train else B, cfg.num_vision_tokens,
+                cfg.vision_dim), jnp.bfloat16)
+    if cfg.encdec:
+        specs["audio_emb"] = jax.ShapeDtypeStruct(
+            shp(B // n_micro if train else B, cfg.encoder_seq_len, cfg.d_model),
+            jnp.bfloat16)
+    return specs
+
+
+def batch_shardings(specs, mesh, *, train: bool):
+    """Batch dim -> (pod, data); the train microbatch axis (leading) is
+    scanned, not sharded; everything else replicated."""
+    ba = shrules.batch_axes(mesh)
+    axis = ba if len(ba) > 1 else ba[0]
+    batch_dim = 1 if train else 0
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        if nd <= batch_dim:
+            return NamedSharding(mesh, P())
+        spec = [None] * nd
+        spec[batch_dim] = shrules.maybe(axis, leaf.shape[batch_dim], mesh)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, specs)
+
+
+# -------------------------------------------------------------- train ----
+
+def tree_zeros(tree, dtype):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype), tree)
+
+
+def build_train_step(cfg, *, n_micro: int, multi_pod: bool = False,
+                     icq_grad: bool = False, attn_impl: str = "chunked",
+                     total_steps: int = 10000, mesh=None):
+    """Returns (train_step, model, opt).
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+    batch tensors are (n_micro, micro_B, ...); grads accumulate in fp32.
+    When ``icq_grad`` and ``multi_pod``: the cross-pod grad combine is
+    int8-compressed with error feedback (opt_state carries the residual).
+    """
+    model_mesh = mesh
+    if icq_grad and multi_pod and mesh is not None:
+        # inside the pod-manual shard_map region only (data, model) are
+        # GSPMD-auto; activation constraints must not name 'pod'
+        model_mesh = shrules.MeshView(mesh, hidden=("pod",))
+    model = build_model(cfg, attn_impl=attn_impl, mesh=model_mesh)
+    opt = make_optimizer(cfg, total_steps=total_steps)
+
+    def loss_fn(params, mb):
+        loss, aux = model.train_forward(params, mb)
+        return loss, aux
+
+    acc_dtype = jnp.dtype(cfg.grad_accum_dtype)
+
+    def grads_of(params, batch):
+        def micro(acc, mb):
+            gacc, lacc = acc
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            gacc = jax.tree.map(
+                lambda a, b: a + b.astype(acc_dtype), gacc, g)
+            return (gacc, lacc + loss), None
+        (gacc, lsum), _ = jax.lax.scan(
+            micro, (tree_zeros(params, acc_dtype),
+                    jnp.zeros((), jnp.float32)), batch)
+        scale = 1.0 / n_micro
+        return jax.tree.map(lambda g: (g * scale).astype(acc_dtype), gacc), \
+            lsum * scale
+
+    if icq_grad and multi_pod:
+        def train_step(params, opt_state, batch):
+            grads, loss = grads_of(params, batch)
+            grads, res = compressed_cross_pod_mean(
+                grads, opt_state["ef_residual"])
+            loss = jax.lax.pmean(loss, "pod")
+            new_params, new_opt, gnorm = _opt_update(opt, grads, opt_state,
+                                                     params)
+            new_opt = dict(new_opt, ef_residual=res)
+            return new_params, new_opt, {"loss": loss, "gnorm": gnorm}
+    else:
+        def train_step(params, opt_state, batch):
+            grads, loss = grads_of(params, batch)
+            new_params, new_opt, gnorm = _opt_update(opt, grads, opt_state,
+                                                     params)
+            return new_params, new_opt, {"loss": loss, "gnorm": gnorm}
+
+    def init_opt_state(params):
+        st = opt.init(params)
+        if icq_grad and multi_pod:
+            st = dict(st, ef_residual=compress_state_init(params))
+        return st
+
+    return train_step, model, opt, init_opt_state
+
+
+def _opt_update(opt, grads, opt_state, params):
+    inner = {k: v for k, v in opt_state.items() if k != "ef_residual"}
+    new_params, new_inner, gnorm = opt.update(grads, inner, params)
+    return new_params, new_inner, gnorm
+
+
+# ---------------------------------------------------------------- serve ----
+
+def build_serve_fns(cfg, *, attn_impl: str = "chunked", mesh=None):
+    """(prefill_fn, decode_fn, model).  prefill(params, batch, max_len);
+    decode(params, tokens, caches)."""
+    model = build_model(cfg, attn_impl=attn_impl, mesh=mesh)
+
+    def prefill_fn(params, batch, max_len: int):
+        return model.prefill(params, batch, max_len)
+
+    def decode_fn(params, tokens, caches):
+        return model.decode_step(params, tokens, caches)
+
+    return prefill_fn, decode_fn, model
+
+
+# ------------------------------------------------------------- lowering ----
+
+@dataclasses.dataclass
+class CellPlan:
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+    cfg: Any
+    shape: Any
+    mesh: Any
+    kind: str                    # train | prefill | decode
+    n_micro: int
+    fn: Any                      # the jittable step
+    args: Tuple                  # ShapeDtypeStruct pytrees
+    in_shardings: Tuple
+    out_shardings: Any
+    donate: Tuple[int, ...]
+
+
+def scale_config(cfg):
+    """Production dtype policy for pod-scale lowering: bf16 params +
+    bf16 compute (fp32 accumulation inside matmuls via
+    preferred_element_type; norms/softmax already compute in fp32)."""
+    return dataclasses.replace(cfg, param_dtype="bfloat16",
+                               compute_dtype="bfloat16")
+
+
+def plan_cell(cfg, shape, mesh, *, icq_grad: bool = False,
+              attn_impl: str = "chunked") -> CellPlan:
+    multi_pod = "pod" in mesh.axis_names
+    dp = shrules.axis_size(mesh, "data") * shrules.axis_size(mesh, "pod")
+    cfg = scale_config(cfg)
+
+    if shape.kind == "train":
+        n_micro = num_microbatches(cfg, shape, dp)
+        train_step, model, opt, init_opt = build_train_step(
+            cfg, n_micro=n_micro, multi_pod=multi_pod, icq_grad=icq_grad,
+            attn_impl=attn_impl, mesh=mesh)
+        params_sh = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        opt_sh = jax.eval_shape(init_opt, params_sh)
+        bspec = batch_struct(cfg, shape, n_micro, train=True)
+        # compressed cross-pod exchange implies pure DP across pods
+        # (pods only share int8 gradient payloads, so params must be
+        # pod-replicated); otherwise FSDP spans the pod axis too.
+        p_shard = shrules.param_shardings(
+            params_sh, mesh, fsdp_over_pod=not (icq_grad and multi_pod))
+        o_shard = opt_shardings(opt_sh, params_sh, p_shard, mesh)
+        b_shard = batch_shardings(bspec, mesh, train=True)
+        fn = train_step
+        metric_shard = {"loss": shrules.replicated(mesh),
+                        "gnorm": shrules.replicated(mesh)}
+        if icq_grad and multi_pod:
+            fn = wrap_pod_manual(train_step, mesh,
+                                 (p_shard, o_shard, b_shard),
+                                 (p_shard, o_shard, metric_shard))
+        return CellPlan(
+            cfg=cfg, shape=shape, mesh=mesh, kind="train", n_micro=n_micro,
+            fn=fn, args=(params_sh, opt_sh, bspec),
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate=(0, 1))
+
+    prefill_fn, decode_fn, model = build_serve_fns(cfg, attn_impl=attn_impl,
+                                                   mesh=mesh)
+    params_sh = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_shard = shrules.param_shardings(params_sh, mesh)
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.kind == "prefill":
+        bspec = batch_struct(cfg, shape, 1, train=False)
+        b_shard = batch_shardings(bspec, mesh, train=False)
+        fn = functools.partial(prefill_fn, max_len=S)
+        return CellPlan(
+            cfg=cfg, shape=shape, mesh=mesh, kind="prefill", n_micro=1,
+            fn=fn, args=(params_sh, bspec),
+            in_shardings=(p_shard, b_shard),
+            out_shardings=None, donate=())
+
+    # decode: one token against a seq_len cache
+    cache_sh = jax.eval_shape(
+        functools.partial(model.init_cache, B, S, jnp.bfloat16))
+    c_shard = shrules.cache_shardings(cache_sh, cfg, mesh)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    t_shard = batch_shardings(tok, mesh, train=False)
+    return CellPlan(
+        cfg=cfg, shape=shape, mesh=mesh, kind="decode", n_micro=1,
+        fn=decode_fn, args=(params_sh, tok, cache_sh),
+        in_shardings=(p_shard, t_shard, c_shard),
+        out_shardings=(None, c_shard), donate=(2,))
+
+
+def opt_shardings(opt_sh, params_sh, p_shard, mesh):
+    """Optimizer moments mirror the param shardings; scalars replicated;
+    ef_residual mirrors params."""
+    def like_params(sub):
+        return jax.tree.map(
+            lambda _, s: s, sub,
+            jax.tree.map(lambda s: s, p_shard))
+
+    out = {}
+    for k, v in opt_sh.items():
+        if k in ("m", "v", "ef_residual", "f"):
+            out[k] = jax.tree.map(lambda leaf, sh: sh, v, p_shard) \
+                if _same_struct(v, p_shard) else _fallback(v, mesh)
+        else:
+            out[k] = jax.tree.map(lambda _: shrules.replicated(mesh), v)
+    return out
+
+
+def _same_struct(a, b) -> bool:
+    return (jax.tree_util.tree_structure(a)
+            == jax.tree_util.tree_structure(b))
+
+
+def _fallback(tree, mesh):
+    return jax.tree.map(lambda _: shrules.replicated(mesh), tree)
+
+
+def pod_manual_spec(sharding):
+    """Project a NamedSharding's PartitionSpec onto the 'pod' axis only —
+    the in/out specs for a shard_map that is *manual over pod* and GSPMD-
+    auto over (data, model)."""
+    spec = sharding.spec
+    out = []
+    for entry in spec:
+        if entry == "pod":
+            out.append("pod")
+        elif isinstance(entry, tuple) and "pod" in entry:
+            out.append("pod")
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def wrap_pod_manual(fn, mesh, in_shardings, out_shardings):
+    """shard_map(fn) manual over the 'pod' axis so explicit cross-pod
+    collectives (jax.lax.all_gather(axis_name='pod') in the compressed
+    grad combine) are legal; data/model stay GSPMD-auto."""
+    in_specs = jax.tree.map(pod_manual_spec, in_shardings,
+                            is_leaf=lambda x: hasattr(x, "spec"))
+    out_specs = jax.tree.map(
+        pod_manual_spec, out_shardings,
+        is_leaf=lambda x: hasattr(x, "spec"))
+    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, axis_names={"pod"},
+                         check_vma=False)
+
+
+def plan_icq_kv_cell(cfg, shape, mesh, *, top_c_frac: float = 1 / 16,
+                     d_fast_frac: float = 1 / 4) -> CellPlan:
+    """Decode cell with the ICQ two-step quantized KV cache (the paper's
+    technique as the serving hot path) — §Perf variant 'icq_kv'."""
+    from repro.quant.serve_icq import (build_icq_decode,
+                                       icq_kv_cache_shardings,
+                                       supports_icq_kv)
+    cfg = scale_config(cfg)
+    assert supports_icq_kv(cfg), cfg.name
+    kv_cfg = ICQKVConfig(d_fast=max(int(cfg.head_dim * d_fast_frac), 16))
+    model = build_model(cfg, mesh=mesh)
+    decode_fn, init_cache = build_icq_decode(cfg, kv_cfg, mesh=mesh)
+    params_sh = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_shard = shrules.param_shardings(params_sh, mesh)
+    B, S = shape.global_batch, shape.seq_len
+    cache_sh = jax.eval_shape(functools.partial(init_cache, B, S))
+    c_shard = icq_kv_cache_shardings(cache_sh, cfg, mesh)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    t_shard = batch_shardings(tok, mesh, train=False)
+    top_c = max(int(S * top_c_frac), 128)
+    fn = functools.partial(decode_fn, top_c=top_c)
+    return CellPlan(
+        cfg=cfg, shape=shape, mesh=mesh, kind="decode", n_micro=1,
+        fn=fn, args=(params_sh, tok, cache_sh),
+        in_shardings=(p_shard, t_shard, c_shard),
+        out_shardings=(None, c_shard), donate=(2,))
+
+
+def lower_cell(plan: CellPlan):
+    """jit(...).lower(...) under the cell's mesh.  Returns the Lowered."""
+    jitted = jax.jit(plan.fn,
+                     in_shardings=plan.in_shardings,
+                     out_shardings=plan.out_shardings,
+                     donate_argnums=plan.donate)
+    with plan.mesh:
+        return jitted.lower(*plan.args)

@@ -1,0 +1,297 @@
+"""Attention layers: GQA with chunked online-softmax, sliding-window local
+attention, cross attention, and single-token decode with a KV cache.
+
+The chunked implementation is the pure-JAX (GSPMD-shardable) path used by
+train/prefill at every scale; the Pallas flash kernel in
+``repro.kernels.flash_attention`` is the TPU hot-path drop-in, selected via
+``attn_impl="pallas"`` (validated against the same oracle in tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, dtype="float32"):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {
+        "wq": nn.dense_init(ks[0], d, cfg.num_heads * cfg.head_dim, dtype),
+        "wk": nn.dense_init(ks[1], d, cfg.num_kv_heads * cfg.head_dim, dtype),
+        "wv": nn.dense_init(ks[2], d, cfg.num_kv_heads * cfg.head_dim, dtype),
+        "wo": nn.dense_init(ks[3], cfg.num_heads * cfg.head_dim, d, dtype),
+    }
+
+
+def _split_heads(x, n_heads, head_dim):
+    return x.reshape(*x.shape[:-1], n_heads, head_dim)
+
+
+def qkv_project(p, x, cfg, positions, rope: bool = True):
+    """Project + rope.  Returns q:(b,s,H,dh), k,v:(b,s,KVH,dh)."""
+    q = _split_heads(x @ p["wq"], cfg.num_heads, cfg.head_dim)
+    k = _split_heads(x @ p["wk"], cfg.num_kv_heads, cfg.head_dim)
+    v = _split_heads(x @ p["wv"], cfg.num_kv_heads, cfg.head_dim)
+    if rope:
+        q = nn.apply_rope(q, positions, cfg.rope_theta)
+        k = nn.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _gqa_scores(q, k, scale):
+    """q:(b,sq,H,dh) k:(b,sk,KVH,dh) -> scores (b,KVH,G,sq,sk) fp32."""
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, dh)
+    return jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _gqa_out(probs, v):
+    """probs:(b,KVH,G,sq,sk) v:(b,sk,KVH,dh) -> (b,sq,H,dh)."""
+    b, kvh, g, sq, sk = probs.shape
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, kvh * g, v.shape[-1])
+
+
+def chunked_attention(q, k, v, *, causal: bool, chunk: int,
+                      q_offset: int = 0, window: int = 0,
+                      kv_valid: int = 0):
+    """Online-softmax attention, O(chunk^2) live memory.
+
+    Double scan: outer over query chunks, inner over KV chunks, carrying
+    (running max, normalizer, accumulator).  ``window>0`` adds a sliding
+    band mask (local attention); ``kv_valid>0`` masks keys at positions
+    >= kv_valid (padded cross-attention).  All shapes static -> scan
+    compiles O(1) in sequence length.
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    dv = v.shape[-1]
+    g = h // kvh
+    scale = dh ** -0.5
+    qc = min(chunk, sq)
+    kc = min(chunk, sk)
+    nq, nk = sq // qc, sk // kc
+    assert sq % qc == 0 and sk % kc == 0, (sq, qc, sk, kc)
+
+    q = q.reshape(b, nq, qc, h, dh)
+    k = k.reshape(b, nk, kc, kvh, dh)
+    v = v.reshape(b, nk, kc, kvh, dv)
+
+    def q_step(_, qi):
+        qblk = q[:, qi]                                    # (b,qc,h,dh)
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
+
+        # checkpoint per KV chunk: the scan backward otherwise stacks the
+        # (qc, kc) prob tiles over BOTH scan levels — a full S x S fp32
+        # attention matrix per layer (flash-attention-style recompute).
+        @jax.checkpoint
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk = k[:, ki], v[:, ki]
+            k_pos = ki * kc + jnp.arange(kc)
+            s = _gqa_scores(qblk, kblk, scale)             # (b,kvh,g,qc,kc)
+            mask = jnp.ones((qc, kc), dtype=bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            if kv_valid:
+                mask &= (k_pos < kv_valid)[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vblk.dtype), vblk).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, qc, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]       # (b,kvh,g,qc,dv)
+        out = jnp.moveaxis(out, 3, 1).reshape(b, qc, h, dv)
+        return None, out.astype(v.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))   # (nq,b,qc,h,dv)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, dv)
+
+
+def triangular_chunked_attention(q, k, v, *, chunk: int, window: int = 0):
+    """Causal attention that SKIPS fully-masked (upper-triangle) chunk
+    pairs — the beyond-baseline FLOP-exact path (see EXPERIMENTS.md §Perf).
+
+    Enumerates the (qi, ki<=qi) pair list statically (optionally band-
+    limited for local attention) and scans over it, scatter-accumulating
+    per-query-chunk online-softmax state.  HLO FLOPs ≈ the true causal
+    half, vs 2x for the masked full scan.
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    dv = v.shape[-1]
+    g = h // kvh
+    scale = dh ** -0.5
+    qc = kc = min(chunk, sq, sk)
+    nq, nk = sq // qc, sk // kc
+    assert sq % qc == 0 and sk % kc == 0
+    offset = nk - nq  # prefix keys (q block i sees key blocks <= i+offset)
+
+    pairs = []
+    for qi in range(nq):
+        for ki in range(qi + offset + 1):
+            if window and (qi + offset - ki) * kc >= window + kc:
+                continue  # entire pair outside the sliding band
+            pairs.append((qi, ki))
+    pairs = jnp.asarray(pairs, jnp.int32)                  # (P,2)
+
+    q = q.reshape(b, nq, qc, h, dh)
+    k = k.reshape(b, nk, kc, kvh, dh)
+    v = v.reshape(b, nk, kc, kvh, dv)
+
+    def step(carry, pair):
+        m, l, acc = carry                                  # (b,kvh,g,nq,qc[,dh])
+        qi, ki = pair[0], pair[1]
+        qblk = jax.lax.dynamic_index_in_dim(q, qi, 1, keepdims=False)
+        kblk = jax.lax.dynamic_index_in_dim(k, ki, 1, keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(v, ki, 1, keepdims=False)
+        q_pos = (qi + 0) * qc + jnp.arange(qc) + (offset * kc)
+        k_pos = ki * kc + jnp.arange(kc)
+        s = _gqa_scores(qblk, kblk, scale)                 # (b,kvh,g,qc,kc)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        if window:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = jax.lax.dynamic_index_in_dim(m, qi, 3, keepdims=False)
+        l_prev = jax.lax.dynamic_index_in_dim(l, qi, 3, keepdims=False)
+        a_prev = jax.lax.dynamic_index_in_dim(acc, qi, 3, keepdims=False)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        a_new = a_prev * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(vblk.dtype), vblk).astype(jnp.float32)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 3)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, 3)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, qi, 3)
+        return (m, l, acc), None
+
+    m0 = jnp.full((b, kvh, g, nq, qc), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, nq, qc), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, nq, qc, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), pairs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]           # (b,kvh,g,nq,qc,dv)
+    out = jnp.moveaxis(out, (3, 4), (1, 2)).reshape(b, sq, kvh * g, dv)
+    return out.astype(v.dtype)
+
+
+def full_attention(q, k, v, *, causal: bool, q_offset: int = 0, window: int = 0,
+                   mask=None):
+    """Reference einsum attention (small seq / oracles / whisper encoder)."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    scale = dh ** -0.5
+    s = _gqa_scores(q, k, scale)
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(sk)
+    m = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    if mask is not None:
+        m &= mask
+    s = jnp.where(m, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v)
+
+
+def decode_attention(q, k_cache, v_cache, length_mask):
+    """Single-token decode.  q:(b,1,H,dh), caches:(b,S,KVH,dh),
+    length_mask:(b,S) bool (True = valid slot)."""
+    b, _, h, dh = q.shape
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    scale = dh ** -0.5
+    qg = q.reshape(b, kvh, g, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(length_mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, dh)
+
+
+def attention_apply(p, x, cfg, positions, *, causal=True, window=0,
+                    impl="chunked", rope=True):
+    """Full-sequence attention (train / prefill)."""
+    q, k, v = qkv_project(p, x, cfg, positions, rope=rope)
+    s = x.shape[1]
+    if impl == "full" or s <= cfg.attn_chunk:
+        out = full_attention(q, k, v, causal=causal, window=window)
+    elif impl == "triangular" and causal:
+        out = triangular_chunked_attention(q, k, v, chunk=cfg.attn_chunk,
+                                           window=window)
+    elif not causal and s % cfg.attn_chunk:
+        # ragged non-causal (whisper's 1500-frame encoder): pad + mask
+        sp = _pad_len(s, cfg.attn_chunk)
+        pad = ((0, 0), (0, sp - s), (0, 0), (0, 0))
+        out = chunked_attention(jnp.pad(q, pad), jnp.pad(k, pad),
+                                jnp.pad(v, pad), causal=False,
+                                chunk=cfg.attn_chunk, kv_valid=s)[:, :s]
+    else:
+        out = chunked_attention(q, k, v, causal=causal, chunk=cfg.attn_chunk,
+                                window=window)
+    return out.reshape(*x.shape[:-1], cfg.num_heads * cfg.head_dim) @ p["wo"]
+
+
+# ------------------------------------------------------ cross attention ----
+
+def cross_attn_init(key, cfg, dtype="float32"):
+    return attn_init(key, cfg, dtype)
+
+
+def cross_attention_apply(p, x, enc_out, cfg):
+    """Decoder cross-attention over encoder states (no rope, no mask).
+    Chunked when either side exceeds attn_chunk: the (sq, s_enc) prob
+    tensor at train time otherwise dominates decoder activation memory
+    (4096 x 1500 x heads per row on whisper)."""
+    b, s, _ = x.shape
+    q = _split_heads(x @ p["wq"], cfg.num_heads, cfg.head_dim)
+    k = _split_heads(enc_out @ p["wk"], cfg.num_kv_heads, cfg.head_dim)
+    v = _split_heads(enc_out @ p["wv"], cfg.num_kv_heads, cfg.head_dim)
+    sk = k.shape[1]
+    if max(s, sk) <= cfg.attn_chunk:
+        out = full_attention(q, k, v, causal=False)
+    else:
+        qc = _pad_len(s, cfg.attn_chunk)
+        kc = _pad_len(sk, cfg.attn_chunk)
+        qp = jnp.pad(q, ((0, 0), (0, qc - s), (0, 0), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, kc - sk), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, kc - sk), (0, 0), (0, 0)))
+        out = chunked_attention(qp, kp, vp, causal=False,
+                                chunk=cfg.attn_chunk, kv_valid=sk)
+        out = out[:, :s]
+    return out.reshape(b, s, cfg.num_heads * cfg.head_dim) @ p["wo"]
+
+
+def _pad_len(n: int, c: int) -> int:
+    return ((n + c - 1) // c) * c
+
+
+def cross_attention_decode(p, x, k_cache, v_cache, cfg):
+    """Decode-time cross-attention against the precomputed static cache."""
+    b = x.shape[0]
+    q = _split_heads(x @ p["wq"], cfg.num_heads, cfg.head_dim)
+    valid = jnp.ones(k_cache.shape[:2], dtype=bool)
+    out = decode_attention(q, k_cache, v_cache, valid)
+    return out.reshape(b, 1, cfg.num_heads * cfg.head_dim) @ p["wo"]

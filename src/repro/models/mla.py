@@ -1,0 +1,176 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+Train/prefill: queries through a low-rank bottleneck (q_lora), keys/values
+decompressed per-head from a shared kv_lora latent + a head-shared rope key.
+
+Decode: the *absorbed* formulation — W_uk folds into the query and W_uv
+into the output projection, so the KV cache is just the (kv_lora +
+rope_dim)-wide latent per token.  This is the memory-optimal serving path
+and the surface ICQ-KV quantizes (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.models.attention import NEG_INF, chunked_attention, full_attention
+
+
+def mla_init(key, cfg, dtype="float32"):
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    h = cfg.num_heads
+    qk_nope, qk_rope, v_dim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    p = {
+        "w_dkv": nn.dense_init(ks[0], d, cfg.kv_lora_rank + qk_rope, dtype),
+        "kv_norm": nn.rmsnorm_init(cfg.kv_lora_rank, dtype),
+        "w_uk": nn.dense_init(ks[1], cfg.kv_lora_rank, h * qk_nope, dtype),
+        "w_uv": nn.dense_init(ks[2], cfg.kv_lora_rank, h * v_dim, dtype),
+        "wo": nn.dense_init(ks[3], h * v_dim, d, dtype),
+    }
+    if cfg.q_lora_rank:
+        p["w_dq"] = nn.dense_init(ks[4], d, cfg.q_lora_rank, dtype)
+        p["q_norm"] = nn.rmsnorm_init(cfg.q_lora_rank, dtype)
+        p["w_uq"] = nn.dense_init(ks[5], cfg.q_lora_rank, h * (qk_nope + qk_rope), dtype)
+    else:
+        p["w_q"] = nn.dense_init(ks[5], d, h * (qk_nope + qk_rope), dtype)
+    return p
+
+
+def _queries(p, x, cfg, positions):
+    h = cfg.num_heads
+    qk_nope, qk_rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        cq = nn.rmsnorm(x @ p["w_dq"], p["q_norm"], cfg.norm_eps)
+        q = cq @ p["w_uq"]
+    else:
+        q = x @ p["w_q"]
+    q = q.reshape(*x.shape[:-1], h, qk_nope + qk_rope)
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    q_rope = nn.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent(p, x, cfg, positions):
+    ckv = x @ p["w_dkv"]                                    # (b,s,lora+rope)
+    latent = nn.rmsnorm(ckv[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = ckv[..., cfg.kv_lora_rank:][..., None, :]      # (b,s,1,rope)
+    k_rope = nn.apply_rope(k_rope, positions, cfg.rope_theta)[..., 0, :]
+    return latent, k_rope
+
+
+def mla_attention_apply(p, x, cfg, positions):
+    """Full-sequence causal MLA (train / prefill).
+
+    Short sequences take the dense path.  Long sequences use *lazy
+    decompression*: materializing the per-head K (b, s, h, d) from the
+    latent costs s*h*(dn+dr) bytes (3.2 GB/device at deepseek's 32k
+    prefill); the chunked path instead decompresses one KV block at a
+    time inside the online-softmax scan, so only (b, chunk, h, d) ever
+    exists — the latent itself is the resident sequence state.
+    """
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    qk_nope, qk_rope, v_dim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _queries(p, x, cfg, positions)
+    latent, k_rope = _latent(p, x, cfg, positions)
+    if s <= cfg.attn_chunk:
+        k_nope = (latent @ p["w_uk"]).reshape(b, s, h, qk_nope)
+        v = (latent @ p["w_uv"]).reshape(b, s, h, v_dim)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (b, s, h, qk_rope))], axis=-1)
+        out = full_attention(q, k, v, causal=True)
+    else:
+        out = mla_chunked_attention(p, q_nope, q_rope, latent, k_rope, cfg)
+    return out.reshape(b, s, h * v_dim) @ p["wo"]
+
+
+def mla_chunked_attention(p, q_nope, q_rope, latent, k_rope_seq, cfg):
+    """Online-softmax causal MLA with per-block latent decompression."""
+    b, s, h, dn = q_nope.shape
+    dr = q_rope.shape[-1]
+    dv = cfg.v_head_dim
+    scale = (dn + dr) ** -0.5
+    c = min(cfg.attn_chunk, s)
+    while s % c:
+        c -= 1
+    n = s // c
+    qn = q_nope.reshape(b, n, c, h, dn)
+    qr = q_rope.reshape(b, n, c, h, dr)
+    lat = latent.reshape(b, n, c, -1)
+    krs = k_rope_seq.reshape(b, n, c, dr)
+
+    def q_step(_, qi):
+        qn_blk, qr_blk = qn[:, qi], qr[:, qi]              # (b,c,h,·)
+        q_pos = qi * c + jnp.arange(c)
+
+        @jax.checkpoint
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            lat_blk = lat[:, ki]                           # (b,c,lora)
+            k_nope = (lat_blk @ p["w_uk"]).reshape(b, c, h, dn)
+            v_blk = (lat_blk @ p["w_uv"]).reshape(b, c, h, dv)
+            kr_blk = krs[:, ki]                            # (b,c,dr)
+            k_pos = ki * c + jnp.arange(c)
+            sc = (jnp.einsum("bqhd,bkhd->bhqk", qn_blk, k_nope,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bqhr,bkr->bhqk", qr_blk.astype(jnp.float32),
+                               kr_blk.astype(jnp.float32))) * scale
+            mask = q_pos[:, None] >= k_pos[None, :]
+            sc = jnp.where(mask, sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            pr = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(pr, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", pr.astype(v_blk.dtype), v_blk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, c), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, c), jnp.float32)
+        a0 = jnp.zeros((b, h, c, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(n))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]        # (b,h,c,dv)
+        return None, jnp.moveaxis(out, 1, 2).astype(latent.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(n))     # (n,b,c,h,dv)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h, dv)
+
+
+def mla_prefill_latent(p, x, cfg, positions):
+    """Latent + rope-key streams to seed the decode cache."""
+    return _latent(p, x, cfg, positions)
+
+
+def mla_decode_attention(p, x, latent_cache, k_rope_cache, cfg, positions,
+                         length_mask):
+    """Absorbed decode: scores in latent space, cache = latent + rope key.
+
+    latent_cache: (b,S,kv_lora); k_rope_cache: (b,S,rope); x: (b,1,d).
+    """
+    b = x.shape[0]
+    h = cfg.num_heads
+    qk_nope, qk_rope, v_dim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    lora = cfg.kv_lora_rank
+    q_nope, q_rope = _queries(p, x, cfg, positions)         # (b,1,h,·)
+    # absorb W_uk: q_lat[b,h,lora] = q_nope · W_uk(head slice)
+    w_uk = p["w_uk"].reshape(lora, h, qk_nope)
+    q_lat = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0], w_uk)
+    scores = (
+        jnp.einsum("bhl,bsl->bhs", q_lat, latent_cache,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32),
+                     k_rope_cache.astype(jnp.float32))
+    ) * (qk_nope + qk_rope) ** -0.5
+    scores = jnp.where(length_mask[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhs,bsl->bhl", probs.astype(latent_cache.dtype),
+                         latent_cache)
+    # absorb W_uv
+    w_uv = p["w_uv"].reshape(lora, h, v_dim)
+    out = jnp.einsum("bhl,lhv->bhv", out_lat, w_uv).reshape(b, 1, h * v_dim)
+    return out @ p["wo"]

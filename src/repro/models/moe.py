@@ -1,0 +1,157 @@
+"""Mixture-of-Experts layer with top-k routing and capacity-bounded
+sorted gather/scatter dispatch.
+
+Dispatch design (DESIGN.md §6): the classic one-hot einsum dispatch costs
+2·T·(T·k·cf)·D FLOPs — quadratic in tokens and larger than the expert
+GEMMs themselves for DeepSeek-scale expert counts.  We instead compute
+(expert, slot) -> token indices with a sort + exclusive-cumsum, gather
+tokens to an (E, C, D) buffer, run batched expert GEMMs (shardable over
+the expert axis = EP), and scatter-add the combine.  FLOPs are then the
+true active-expert FLOPs; the gathers are bytes, not FLOPs.  Under GSPMD
+the gather/scatter lower to the EP all-to-all/all-gather pattern.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+
+def moe_init(key, cfg, dtype="float32"):
+    ks = jax.random.split(key, 5)
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    p = {
+        "router": nn.dense_init(ks[0], d, e, "float32"),   # router kept fp32
+        "we_gate": jax.vmap(lambda k: nn.dense_init(k, d, f, dtype))(
+            jax.random.split(ks[1], e)),
+        "we_up": jax.vmap(lambda k: nn.dense_init(k, d, f, dtype))(
+            jax.random.split(ks[2], e)),
+        "we_down": jax.vmap(lambda k: nn.dense_init(k, f, d, dtype))(
+            jax.random.split(ks[3], e)),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = nn.mlp_init(ks[4], d, cfg.num_shared_experts * f,
+                                  "swiglu", dtype)
+    return p
+
+
+def router_topk(logits, k: int):
+    """Softmax-then-topk (DeepSeek-style), gates renormalized over top-k."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, ids = jax.lax.top_k(probs, k)                   # (T,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, ids, probs
+
+
+def load_balance_loss(probs, ids, num_experts: int):
+    """Switch-transformer aux loss: E * sum_e f_e * P_e."""
+    T = probs.shape[0]
+    counts = jnp.zeros((num_experts,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    f = counts / jnp.maximum(T * ids.shape[-1], 1)
+    P = probs.mean(axis=0)
+    return num_experts * jnp.sum(f * P)
+
+
+def _dispatch_indices(ids, num_experts: int, capacity: int):
+    """token->slot assignment.  Returns (token_idx (E*C,), valid (E*C,),
+    slot_of_flat (T*k,), kept (T*k,)) — all int32/bool, static shapes."""
+    Tk = ids.size
+    fid = ids.reshape(-1)                                  # (T*k,)
+    order = jnp.argsort(fid)                               # stable enough: ties by index
+    fid_sorted = fid[order]
+    # rank within expert group
+    group_sizes = jnp.zeros((num_experts,), jnp.int32).at[fid].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(group_sizes)[:-1]])
+    rank = jnp.arange(Tk, dtype=jnp.int32) - starts[fid_sorted]
+    kept_sorted = rank < capacity
+    slot_sorted = jnp.where(kept_sorted, fid_sorted * capacity + rank, Tk + capacity * num_experts)
+    # scatter source token (flat tk index) into slots
+    token_of_slot = jnp.full((num_experts * capacity + Tk + 1,), -1, jnp.int32)
+    token_of_slot = token_of_slot.at[jnp.where(kept_sorted, slot_sorted, num_experts * capacity + Tk)].set(order)
+    token_of_slot = token_of_slot[: num_experts * capacity]
+    valid = token_of_slot >= 0
+    return token_of_slot, valid
+
+
+def moe_apply(p, x, cfg):
+    """x: (..., d) -> (out (..., d), aux_loss scalar).
+
+    Long sequences are processed in token chunks (lax.scan): capacity
+    scales with the *chunk*, so the (E, C, d) dispatch buffers stay
+    O(chunk) instead of O(tokens) — at deepseek's 32k prefill the
+    unchunked buffers were 5 GB/device x several copies (EXPERIMENTS.md
+    §Perf).  Per-chunk capacity also localizes overflow drops.
+    """
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    xt_all = x.reshape(-1, d)
+    T_all = xt_all.shape[0]
+    chunk = getattr(cfg, "moe_token_chunk", 16384) or T_all
+    if T_all > chunk:
+        c = chunk
+        while T_all % c:
+            c -= 1
+        nc = T_all // c
+
+        def body(carry, xc):
+            out, aux = _moe_apply_flat(p, xc, cfg)
+            return None, (out, aux)
+
+        _, (outs, auxes) = jax.lax.scan(
+            body, None, xt_all.reshape(nc, c, d))
+        return outs.reshape(orig_shape), jnp.mean(auxes)
+    out, aux = _moe_apply_flat(p, xt_all, cfg)
+    return out.reshape(orig_shape), aux
+
+
+def _moe_apply_flat(p, xt, cfg):
+    """One dispatch round over xt: (T, d) -> ((T, d), aux)."""
+    d = xt.shape[-1]
+    T = xt.shape[0]
+    k = cfg.experts_per_token
+    E = cfg.num_experts
+    C = max(int(T * k * cfg.capacity_factor / E), 4)
+
+    logits = xt.astype(jnp.float32) @ p["router"]
+    gates, ids, probs = router_topk(logits, k)
+    aux = load_balance_loss(probs, ids, E) * cfg.router_aux_weight
+
+    tok_of_slot, valid = _dispatch_indices(ids, E, C)      # (E*C,)
+    src_token = jnp.where(valid, tok_of_slot // k, 0)
+    gate_of_slot = jnp.where(
+        valid, gates.reshape(-1)[jnp.clip(tok_of_slot, 0)], 0.0)
+
+    xe = xt[src_token].reshape(E, C, d)                    # gather -> (E,C,d)
+    xe = xe * valid.reshape(E, C, 1).astype(xe.dtype)
+    h = nn.gated_act(cfg.activation if cfg.activation != "gelu" else "swiglu",
+                     jnp.einsum("ecd,edf->ecf", xe, p["we_gate"]),
+                     jnp.einsum("ecd,edf->ecf", xe, p["we_up"]))
+    ye = jnp.einsum("ecf,efd->ecd", h, p["we_down"])        # (E,C,d)
+    ye = (ye.reshape(E * C, d) * gate_of_slot[:, None].astype(ye.dtype))
+    out = jnp.zeros((T, d), ye.dtype).at[src_token].add(
+        jnp.where(valid[:, None], ye, 0))
+
+    if cfg.num_shared_experts:
+        out = out + nn.mlp_apply(p["shared"], xt, "swiglu")
+    return out, aux
+
+
+def moe_apply_dense_reference(p, x, cfg):
+    """Oracle: every expert on every token, weighted by (top-k) gates.
+    Exact when capacity is unbounded; used by tests only."""
+    orig_shape = x.shape
+    xt = x.reshape(-1, orig_shape[-1])
+    logits = xt.astype(jnp.float32) @ p["router"]
+    gates, ids, _ = router_topk(logits, cfg.experts_per_token)
+    full_gates = jnp.zeros((xt.shape[0], cfg.num_experts), jnp.float32)
+    full_gates = jax.vmap(lambda g, i, r: r.at[i].set(g))(gates, ids, full_gates)
+    h = nn.gated_act("swiglu",
+                     jnp.einsum("td,edf->tef", xt, p["we_gate"]),
+                     jnp.einsum("td,edf->tef", xt, p["we_up"]))
+    ye = jnp.einsum("tef,efd->ted", h, p["we_down"])
+    out = jnp.einsum("ted,te->td", ye, full_gates.astype(ye.dtype))
+    if cfg.num_shared_experts:
+        out = out + nn.mlp_apply(p["shared"], xt, "swiglu")
+    return out.reshape(orig_shape)

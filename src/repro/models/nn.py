@@ -1,0 +1,166 @@
+"""Minimal pure-pytree module primitives (no flax in this environment).
+
+Params are nested dicts of jnp arrays.  ``*_init`` builds params,
+matching ``apply``-style functions consume them.  All functions are
+jit/scan/vmap-safe and dtype-explicit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dtype(name):
+    return jnp.dtype(name)
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype="float32", scale: float | None = None):
+    """Lecun-normal dense kernel (no bias); shape (in, out)."""
+    s = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), dtype=jnp.float32) * s).astype(dtype)
+
+
+def bias_init(out_dim: int, dtype="float32"):
+    return jnp.zeros((out_dim,), dtype=dtype)
+
+
+def embedding_init(key, vocab: int, d: int, dtype="float32"):
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype="float32"):
+    return jnp.ones((d,), dtype=dtype)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype="float32"):
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(x, p, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------- RoPE ----
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(head_dim, theta))           # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs        # (..., s, hd/2)
+    angles = angles[..., None, :]                                    # (..., s, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------- activations ----
+
+def gated_act(kind: str, gate, up):
+    if kind == "swiglu":
+        return jax.nn.silu(gate) * up
+    if kind == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------------- MLP ----
+
+def mlp_init(key, d_model: int, d_ff: int, activation: str, dtype="float32"):
+    ks = jax.random.split(key, 3)
+    if activation in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+            "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+            "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+        }
+    return {  # plain gelu MLP (whisper)
+        "w_up": dense_init(ks[0], d_model, d_ff, dtype),
+        "b_up": bias_init(d_ff, dtype),
+        "w_down": dense_init(ks[1], d_ff, d_model, dtype),
+        "b_down": bias_init(d_model, dtype),
+    }
+
+
+def mlp_apply(p, x, activation: str):
+    if activation in ("swiglu", "geglu"):
+        h = gated_act(activation, x @ p["w_gate"], x @ p["w_up"])
+        return h @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"], approximate=True)
+    return h @ p["w_down"] + p["b_down"]
+
+
+def cross_entropy(logits, labels, z_loss: float = 1e-4):
+    """Mean token CE with optional z-loss; logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return jnp.mean(loss)
+
+
+def chunked_cross_entropy_head(x, w_head, labels, mask=None, *,
+                               chunk: int = 2048, z_loss: float = 1e-4,
+                               vocab_real: int = 0):
+    """Fused head-projection + CE, scanned over *sequence* chunks.
+
+    The full-vocab logits buffer ((tokens, V) fp32) dominates training
+    temp memory at 32k-256k vocabs; chunking bounds it to (b, chunk, V)
+    and ``jax.checkpoint`` re-materializes each chunk's logits in the
+    backward instead of keeping them alive.  Chunking along the sequence
+    dim (not flattened tokens) keeps the batch dim — and its (pod, data)
+    sharding — intact, so GSPMD never reshards the activations.
+
+    x: (b, s, d); labels: (b, s); mask: (b, s) float/bool or None.
+    Returns mean CE over masked tokens.
+    """
+    b, s, d = x.shape
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    nc = s // c
+    xc = jnp.moveaxis(x.reshape(b, nc, c, d), 1, 0)          # (nc,b,c,d)
+    lc = jnp.moveaxis(labels.reshape(b, nc, c), 1, 0)        # (nc,b,c)
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    mc = jnp.moveaxis(mask.astype(jnp.float32).reshape(b, nc, c), 1, 0)
+
+    @jax.checkpoint
+    def one(xb, lb, mb):
+        logits = (xb @ w_head).astype(jnp.float32)           # (b,c,V)
+        if vocab_real and vocab_real < logits.shape[-1]:
+            pad_mask = jnp.arange(logits.shape[-1]) < vocab_real
+            logits = jnp.where(pad_mask, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        loss = lse - ll
+        if z_loss:
+            loss = loss + z_loss * jnp.square(lse)
+        return jnp.sum(loss * mb)
+
+    def body(acc, inp):
+        xb, lb, mb = inp
+        return acc + one(xb, lb, mb), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc, mc))
+    return total / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,115 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The linear recurrence h_t = a_t * h_{t-1} + b_t is evaluated with
+``jax.lax.associative_scan`` (parallel prefix) for train/prefill — TPU-
+friendly log-depth — and as an O(1) update at decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+_C = 8.0  # Griffin's fixed recurrence-sharpness constant
+
+
+def _block_diag_init(key, width: int, num_blocks: int, dtype):
+    bw = width // num_blocks
+    k1, k2 = jax.random.split(key)
+    return {
+        "w": (jax.random.normal(k1, (num_blocks, bw, bw), jnp.float32)
+              / jnp.sqrt(bw)).astype(dtype),
+        "b": jnp.zeros((num_blocks, bw), dtype),
+    }
+
+
+def _block_diag_apply(p, x):
+    nb, bw, _ = p["w"].shape
+    xb = x.reshape(*x.shape[:-1], nb, bw)
+    return (jnp.einsum("...ni,nio->...no", xb, p["w"]) + p["b"]).reshape(x.shape)
+
+
+def rglru_init(key, cfg, dtype="float32"):
+    ks = jax.random.split(key, 6)
+    d, w = cfg.d_model, cfg.lru_width
+    nb = cfg.num_heads
+    # Lambda init so that a = sigmoid(L)^c lands in [0.9, 0.999]
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1 / _C) / (1 - u ** (1 / _C)))
+    return {
+        "w_x": nn.dense_init(ks[1], d, w, dtype),          # recurrent branch
+        "w_gate_branch": nn.dense_init(ks[2], d, w, dtype),  # gelu branch
+        "conv_w": (jax.random.normal(ks[3], (4, w), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "rg": _block_diag_init(ks[4], w, nb, dtype),       # recurrence gate
+        "ig": _block_diag_init(ks[5], w, nb, dtype),       # input gate
+        "lambda": lam,
+        "w_out": nn.dense_init(jax.random.fold_in(key, 7), w, d, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    return sum(pad[:, i: i + x.shape[1], :] * w[i] for i in range(width)) + b
+
+
+def _rglru_core(p, x, h0=None):
+    """x: (b,l,w) post-conv recurrent-branch input -> (y, h_last)."""
+    r = jax.nn.sigmoid(_block_diag_apply(p["rg"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag_apply(p["ig"], x).astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(p["lambda"])          # (b,l,w) <= 0
+    a = jnp.exp(log_a)
+    gated_x = i * x.astype(jnp.float32)
+    b_t = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+    if h0 is not None:
+        # fold h0 in as a virtual first step: handled by caller at decode
+        pass
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b_t), axis=1)
+    if h0 is not None:
+        hh = hh + aa * h0[:, None, :]
+    return hh.astype(x.dtype), hh[:, -1].astype(x.dtype)
+
+
+def rglru_block_apply(p, x, cfg, *, h0=None, conv_state=None,
+                      return_state: bool = False):
+    """Full Griffin recurrent block (train / prefill)."""
+    rec = x @ p["w_x"]
+    rec = _causal_conv(rec, p["conv_w"], p["conv_b"])
+    y, h_last = _rglru_core(p, rec, h0=h0)
+    gate = jax.nn.gelu(x @ p["w_gate_branch"], approximate=True)
+    out = (y * gate) @ p["w_out"]
+    if return_state:
+        return out, h_last
+    return out
+
+
+def rglru_init_cache(cfg, batch: int, dtype):
+    return {
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, 3, cfg.lru_width), dtype),
+    }
+
+
+def rglru_decode_step(p, x, cache, cfg):
+    """x: (b,1,d) -> (out (b,1,d), new cache)."""
+    b = x.shape[0]
+    rec_new = x[:, 0] @ p["w_x"]                            # (b,w)
+    win = jnp.concatenate([cache["conv"], rec_new[:, None]], axis=1)
+    rec = jnp.einsum("bwc,wc->bc", win, p["conv_w"]) + p["conv_b"]
+    r = jax.nn.sigmoid(_block_diag_apply(p["rg"], rec).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag_apply(p["ig"], rec).astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(p["lambda"])
+    a = jnp.exp(log_a)
+    b_t = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * rec.astype(jnp.float32))
+    h = a * cache["h"] + b_t
+    gate = jax.nn.gelu(x[:, 0] @ p["w_gate_branch"], approximate=True)
+    out = ((h.astype(x.dtype) * gate) @ p["w_out"])[:, None]
+    return out, {"h": h, "conv": jnp.concatenate([cache["conv"][:, 1:], rec_new[:, None]], axis=1)}

@@ -1,0 +1,173 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Train/prefill uses the chunked SSD algorithm: intra-chunk quadratic
+(attention-like with a decay mask) + inter-chunk linear recurrence over
+chunk states via ``lax.scan`` — O(L·Q) compute, O(1) HLO in depth/length.
+Decode is the O(1) recurrent update on a cached (heads, head_dim, state)
+tensor; there is no KV cache, so ICQ-KV is inapplicable (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+
+def ssm_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    conv_dim = d_in + 2 * cfg.ssm_state
+    return d_in, nheads, conv_dim
+
+
+def ssm_init(key, cfg, dtype="float32"):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    d_in, nheads, conv_dim = ssm_dims(cfg)
+    n = cfg.ssm_state
+    return {
+        # fused in-proj: [z (d_in), x (d_in), B (n), C (n), dt (nheads)]
+        "w_in": nn.dense_init(ks[0], d, 2 * d_in + 2 * n + nheads, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_dim),
+                                     dtype=jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "D": jnp.ones((nheads,), dtype),
+        "norm": nn.rmsnorm_init(d_in, dtype),
+        "w_out": nn.dense_init(ks[2], d_in, d, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Per-channel causal conv1d.  x:(b,l,c), w:(width,c)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + x.shape[1], :] * w[i] for i in range(width))
+    return out + b
+
+
+def _segsum(dA):
+    """Stable 'segment sum' for the intra-chunk decay mask.
+    dA: (..., cl) -> (..., cl, cl) lower-tri cumulative sums."""
+    cl = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]              # sum_{k+1..q}
+    mask = jnp.tril(jnp.ones((cl, cl), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int, h0=None):
+    """SSD scan.  x:(b,l,h,p) dt:(b,l,h) A:(h,) B,C:(b,l,n) D:(h,).
+    Returns (y:(b,l,h,p), final state:(b,h,p,n))."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    Q = min(chunk, l)
+    while l % Q:            # ragged lengths: largest divisor <= chunk
+        Q -= 1
+    nc = l // Q
+    xr = x.reshape(b, nc, Q, h, p)
+    dtr = dt.reshape(b, nc, Q, h)
+    Br = B.reshape(b, nc, Q, n)
+    Cr = C.reshape(b, nc, Q, n)
+    dA = dtr * A                                            # (b,nc,Q,h) <= 0
+    dAh = jnp.moveaxis(dA, -1, -2)                          # (b,nc,h,Q)
+    xdt = xr * dtr[..., None]                               # dt-weighted input
+
+    # ---- intra-chunk (quadratic within chunk, like masked attention) ----
+    Lmask = jnp.exp(_segsum(dAh))                           # (b,nc,h,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cr, Br)          # (b,nc,Q,Q)
+    y_intra = jnp.einsum("bcqk,bchqk,bckhp->bcqhp", scores, Lmask,
+                         jnp.moveaxis(xdt, 3, 3))
+    # note: xdt is (b,nc,Q,h,p); einsum treats axes (b,c,k,h,p)
+
+    # ---- chunk states:  S_c = sum_k exp(cum_last - cum_k) B_k x_k^T ----
+    cum = jnp.cumsum(dAh, axis=-1)                          # (b,nc,h,Q)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)             # (b,nc,h,Q)
+    S = jnp.einsum("bchq,bcqn,bcqhp->bchpn", decay_to_end, Br, xdt)
+
+    # ---- inter-chunk recurrence over chunk states ----
+    chunk_decay = jnp.exp(cum[..., -1])                     # (b,nc,h)
+
+    def scan_fn(carry, inp):
+        S_c, dec = inp                                      # (b,h,p,n),(b,h)
+        prev = carry
+        new = prev * dec[..., None, None] + S_c
+        return new, prev                                    # emit state *entering* chunk
+
+    init = h0 if h0 is not None else jnp.zeros((b, h, p, n), x.dtype)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(S, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)           # (b,nc,h,p,n)
+
+    # ---- inter-chunk contribution ----
+    state_decay = jnp.exp(cum)                              # decay from chunk start
+    y_inter = jnp.einsum("bcqn,bchq,bchpn->bcqhp", Cr, state_decay, prev_states)
+
+    y = (y_intra + y_inter).reshape(b, l, h, p) + x * D[None, None, :, None]
+    return y, final
+
+
+def ssm_block_apply(p, x, cfg, *, h0=None, return_state=False):
+    """Full Mamba-2 block: in-proj, conv, SSD, gated norm, out-proj."""
+    b, l, _ = x.shape
+    d_in, nheads, conv_dim = ssm_dims(cfg)
+    n = cfg.ssm_state
+    zxbcdt = x @ p["w_in"]
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in: d_in + d_in + 2 * n]
+    dt_raw = zxbcdt[..., -nheads:]
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :d_in].reshape(b, l, nheads, cfg.ssm_head_dim)
+    B = xbc[..., d_in: d_in + n]
+    C = xbc[..., d_in + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, hT = ssd_chunked(xs, dt.astype(xs.dtype), A.astype(xs.dtype), B, C,
+                        p["D"], cfg.ssm_chunk, h0=h0)
+    y = y.reshape(b, l, d_in)
+    y = nn.rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["w_out"]
+    if return_state:
+        return out, hT
+    return out
+
+
+def ssm_init_cache(cfg, batch: int, dtype):
+    d_in, nheads, conv_dim = ssm_dims(cfg)
+    return {
+        "state": jnp.zeros((batch, nheads, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+    }
+
+
+def ssm_decode_step(p, x, cache, cfg):
+    """One-token recurrent update.  x: (b,1,d)."""
+    b = x.shape[0]
+    d_in, nheads, conv_dim = ssm_dims(cfg)
+    n = cfg.ssm_state
+    zxbcdt = x[:, 0] @ p["w_in"]
+    z = zxbcdt[..., :d_in]
+    xbc_new = zxbcdt[..., d_in: d_in + d_in + 2 * n]
+    dt_raw = zxbcdt[..., -nheads:]
+    # conv over cached window + current
+    win = jnp.concatenate([cache["conv"], xbc_new[:, None, :]], axis=1)
+    w = p["conv_w"]
+    xbc = jax.nn.silu(jnp.einsum("bwc,wc->bc", win, w) + p["conv_b"])
+    xs = xbc[..., :d_in].reshape(b, nheads, cfg.ssm_head_dim)
+    B = xbc[..., d_in: d_in + n]
+    C = xbc[..., d_in + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A).astype(xs.dtype)                   # (b,h)
+    upd = jnp.einsum("bhp,bn->bhpn", xs * dt[..., None].astype(xs.dtype), B)
+    state = cache["state"] * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, C) + xs * p["D"][None, :, None]
+    y = y.reshape(b, d_in)
+    y = nn.rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y @ p["w_out"])[:, None, :]
+    new_cache = {"state": state,
+                 "conv": jnp.concatenate([cache["conv"][:, 1:], xbc_new[:, None]], axis=1)}
+    return out, new_cache

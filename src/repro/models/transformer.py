@@ -1,0 +1,662 @@
+"""Unified model assembly for all assigned architectures.
+
+One scaffold covers: dense decoder LMs (gemma/llama/tinyllama/granite),
+MoE (+first-k-dense) stacks (moonshot), MLA+MoE (deepseek-v2), SSM
+(mamba2), hybrid RG-LRU/local-attention groups (recurrentgemma), the
+Whisper encoder-decoder, and the InternVL vision-stub VLM.
+
+Layers are *stacked* (params carry a leading layer axis) and applied with
+``lax.scan`` so HLO size is O(1) in depth — required to compile
+llama3-405b's 126 layers on the CPU dry-run host.  ``cfg.remat`` wraps the
+scan body in ``jax.checkpoint`` for training.
+
+Three entry points per model (built by ``build_model``):
+  train_forward(params, batch)          -> (loss, aux)
+  prefill(params, batch)                -> (last-token logits, cache)
+  decode_step(params, tokens, cache)    -> (logits, new cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import nn
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+
+
+# =================================================================
+# per-layer init / apply, switched on `kind`
+# =================================================================
+
+def _norm_init(cfg, dtype):
+    if cfg.norm_type == "layernorm":
+        return nn.layernorm_init(cfg.d_model, dtype)
+    return nn.rmsnorm_init(cfg.d_model, dtype)
+
+
+def _norm_apply(cfg, p, x):
+    if cfg.norm_type == "layernorm":
+        return nn.layernorm(x, p, cfg.norm_eps)
+    return nn.rmsnorm(x, p, cfg.norm_eps)
+
+
+def layer_init(key, cfg, dtype, kind: str):
+    """kind: dense | moe | mla_moe | mla_dense | ssm | rglru | local | enc | dec"""
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {}
+    if kind == "ssm":
+        p["norm1"] = _norm_init(cfg, dtype)
+        p["mixer"] = ssm_mod.ssm_init(ks[0], cfg, dtype)
+        return p
+    p["norm1"] = _norm_init(cfg, dtype)
+    p["norm2"] = _norm_init(cfg, dtype)
+    if kind in ("dense", "moe", "local", "enc", "dec"):
+        p["attn"] = attn.attn_init(ks[0], cfg, dtype)
+    elif kind in ("mla_moe", "mla_dense"):
+        p["attn"] = mla_mod.mla_init(ks[0], cfg, dtype)
+    elif kind == "rglru":
+        p["mixer"] = rglru_mod.rglru_init(ks[0], cfg, dtype)
+    if kind == "dec":
+        p["norm_cross"] = _norm_init(cfg, dtype)
+        p["cross"] = attn.cross_attn_init(ks[1], cfg, dtype)
+    if kind in ("moe", "mla_moe"):
+        p["ffn"] = moe_mod.moe_init(ks[2], cfg, dtype)
+    elif kind in ("mla_dense",):
+        p["ffn"] = nn.mlp_init(ks[2], cfg.d_model, cfg.dense_d_ff or cfg.d_ff,
+                               cfg.activation, dtype)
+    elif kind == "dense_first":
+        p["attn"] = (mla_mod.mla_init(ks[0], cfg, dtype) if cfg.mla
+                     else attn.attn_init(ks[0], cfg, dtype))
+        p["ffn"] = nn.mlp_init(ks[2], cfg.d_model, cfg.dense_d_ff or cfg.d_ff,
+                               cfg.activation, dtype)
+    else:
+        p["ffn"] = nn.mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.activation, dtype)
+    return p
+
+
+def layer_apply(p, x, cfg, positions, kind: str, *, enc_out=None,
+                attn_impl="chunked"):
+    """Full-sequence layer (train / prefill compute).  Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        return x + ssm_mod.ssm_block_apply(p["mixer"], _norm_apply(cfg, p["norm1"], x), cfg), aux
+    h = _norm_apply(cfg, p["norm1"], x)
+    if kind == "rglru":
+        x = x + rglru_mod.rglru_block_apply(p["mixer"], h, cfg)
+    elif kind == "local":
+        x = x + attn.attention_apply(p["attn"], h, cfg, positions, causal=True,
+                                     window=cfg.local_window, impl=attn_impl)
+    elif kind in ("mla_moe", "mla_dense", "mla_first"):
+        x = x + mla_mod.mla_attention_apply(p["attn"], h, cfg, positions)
+    elif kind == "enc":
+        # full (non-chunked) encoder attention: measured better than the
+        # chunked variant at 1500 frames (padding to 2048 + scan overhead
+        # outweigh the avoided S^2 tensor; EXPERIMENTS.md §Perf, refuted)
+        x = x + attn.attention_apply(p["attn"], h, cfg, positions, causal=False,
+                                     impl="full", rope=not cfg.learned_pos_emb)
+    else:
+        x = x + attn.attention_apply(p["attn"], h, cfg, positions, causal=True,
+                                     impl=attn_impl, rope=not cfg.learned_pos_emb)
+    if kind == "dec":
+        x = x + attn.cross_attention_apply(
+            p["cross"], _norm_apply(cfg, p["norm_cross"], x), enc_out, cfg)
+    h2 = _norm_apply(cfg, p["norm2"], x)
+    if kind in ("moe", "mla_moe"):
+        y, aux = moe_mod.moe_apply(p["ffn"], h2, cfg)
+        x = x + y
+    else:
+        x = x + nn.mlp_apply(p["ffn"], h2, cfg.activation)
+    return x, aux
+
+
+# ------------------------------------------------------------ caches ----
+
+def layer_init_cache(cfg, kind: str, batch: int, max_len: int, dtype):
+    if kind == "ssm":
+        return ssm_mod.ssm_init_cache(cfg, batch, dtype)
+    if kind == "rglru":
+        return rglru_mod.rglru_init_cache(cfg, batch, dtype)
+    if kind in ("mla_moe", "mla_dense"):
+        return {
+            "latent": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+        }
+    S = min(max_len, cfg.local_window) if kind == "local" else max_len
+    c = {
+        "k": jnp.zeros((batch, S, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, S, cfg.num_kv_heads, cfg.head_dim), dtype),
+    }
+    if kind == "local":
+        c["k_pos"] = jnp.full((batch, S), -1, jnp.int32)
+    if kind == "dec":
+        c["ck"] = jnp.zeros((batch, cfg.encoder_seq_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+        c["cv"] = jnp.zeros((batch, cfg.encoder_seq_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+    return c
+
+
+def layer_prefill(p, x, cfg, positions, kind: str, max_len: int, *,
+                  enc_out=None, attn_impl="chunked"):
+    """Layer fwd that also emits its decode cache.  Returns (x, cache)."""
+    b, s, _ = x.shape
+    dtype = x.dtype
+    if kind == "ssm":
+        h = _norm_apply(cfg, p["norm1"], x)
+        out, state = ssm_mod.ssm_block_apply(p["mixer"], h, cfg, return_state=True)
+        cache = ssm_mod.ssm_init_cache(cfg, b, dtype)
+        cache["state"] = state
+        # conv tail: reconstruct last (width-1) pre-conv activations
+        zx = h @ p["mixer"]["w_in"]
+        d_in, _, _ = ssm_mod.ssm_dims(cfg)
+        xbc = zx[..., d_in: 2 * d_in + 2 * cfg.ssm_state]
+        cache["conv"] = xbc[:, -(cfg.ssm_conv_width - 1):, :]
+        return x + out, cache
+    if kind == "rglru":
+        h = _norm_apply(cfg, p["norm1"], x)
+        mixed, h_last = rglru_mod.rglru_block_apply(p["mixer"], h, cfg, return_state=True)
+        rec = h @ p["mixer"]["w_x"]
+        cache = {"h": h_last.astype(jnp.float32), "conv": rec[:, -3:, :]}
+        out = x + mixed
+        h2 = _norm_apply(cfg, p["norm2"], out)
+        out = out + nn.mlp_apply(p["ffn"], h2, cfg.activation)
+        return out, cache
+
+    h = _norm_apply(cfg, p["norm1"], x)
+    if kind in ("mla_moe", "mla_dense"):
+        latent, k_rope = mla_mod.mla_prefill_latent(p["attn"], h, cfg, positions)
+        cache = {"latent": _pad_to(latent, max_len, 1),
+                 "k_rope": _pad_to(k_rope, max_len, 1)}
+        x = x + mla_mod.mla_attention_apply(p["attn"], h, cfg, positions)
+    else:
+        q, k, v = attn.qkv_project(p["attn"], h, cfg, positions,
+                                   rope=not cfg.learned_pos_emb)
+        if kind == "local":
+            o = attn.chunked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk,
+                                       window=cfg.local_window)
+            # ring buffer: token at absolute pos i lives in slot i % W, so
+            # subsequent decode writes at (pos % W) stay consistent.
+            W = min(max_len, cfg.local_window)
+            t = min(s, W)
+            slots = (jnp.arange(s - t, s) % W)              # static values
+            kbuf = jnp.zeros((b, W) + k.shape[2:], k.dtype).at[:, slots].set(k[:, -t:])
+            vbuf = jnp.zeros((b, W) + v.shape[2:], v.dtype).at[:, slots].set(v[:, -t:])
+            pbuf = jnp.full((b, W), -1, jnp.int32).at[:, slots].set(
+                jnp.broadcast_to(positions[-t:][None], (b, t)).astype(jnp.int32))
+            cache = {"k": kbuf, "v": vbuf, "k_pos": pbuf}
+        else:
+            if s <= cfg.attn_chunk:
+                o = attn.full_attention(q, k, v, causal=True)
+            elif attn_impl == "triangular":
+                o = attn.triangular_chunked_attention(q, k, v,
+                                                      chunk=cfg.attn_chunk)
+            else:
+                o = attn.chunked_attention(q, k, v, causal=True,
+                                           chunk=cfg.attn_chunk)
+            cache = {"k": _pad_to(k, max_len, 1), "v": _pad_to(v, max_len, 1)}
+        x = x + o.reshape(b, s, cfg.num_heads * cfg.head_dim) @ p["attn"]["wo"]
+    if kind == "dec":
+        ck = enc_out @ p["cross"]["wk"]
+        cv = enc_out @ p["cross"]["wv"]
+        cache["ck"] = ck.reshape(b, -1, cfg.num_kv_heads, cfg.head_dim)
+        cache["cv"] = cv.reshape(b, -1, cfg.num_kv_heads, cfg.head_dim)
+        x = x + attn.cross_attention_apply(
+            p["cross"], _norm_apply(cfg, p["norm_cross"], x), enc_out, cfg)
+    h2 = _norm_apply(cfg, p["norm2"], x)
+    if kind in ("moe", "mla_moe"):
+        y, _ = moe_mod.moe_apply(p["ffn"], h2, cfg)
+        x = x + y
+    else:
+        x = x + nn.mlp_apply(p["ffn"], h2, cfg.activation)
+    return x, cache
+
+
+def layer_decode(p, x, cfg, cache, pos, kind: str):
+    """One-token layer step.  x: (b,1,d); pos: scalar int32 (write index)."""
+    aux = None
+    if kind == "ssm":
+        h = _norm_apply(cfg, p["norm1"], x)
+        out, new_cache = ssm_mod.ssm_decode_step(p["mixer"], h, cache, cfg)
+        return x + out, new_cache
+    h = _norm_apply(cfg, p["norm1"], x)
+    if kind == "rglru":
+        mixed, new_cache = rglru_mod.rglru_decode_step(p["mixer"], h, cache, cfg)
+        x = x + mixed
+        h2 = _norm_apply(cfg, p["norm2"], x)
+        x = x + nn.mlp_apply(p["ffn"], h2, cfg.activation)
+        return x, new_cache
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    if kind in ("mla_moe", "mla_dense"):
+        latent, k_rope = mla_mod.mla_prefill_latent(p["attn"], h, cfg, positions)
+        lat_c = jax.lax.dynamic_update_slice(cache["latent"], latent.astype(cache["latent"].dtype), (0, pos, 0))
+        kr_c = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, pos, 0))
+        new_cache = {"latent": lat_c, "k_rope": kr_c}
+        S = lat_c.shape[1]
+        mask = jnp.arange(S)[None, :] <= pos
+        x = x + mla_mod.mla_decode_attention(p["attn"], h, lat_c, kr_c, cfg,
+                                             positions, mask)
+    else:
+        q, k, v = attn.qkv_project(p["attn"], h, cfg, positions,
+                                   rope=not cfg.learned_pos_emb)
+        if kind == "local":
+            W = cache["k"].shape[1]
+            slot = pos % W
+            kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            kp = jax.lax.dynamic_update_slice(
+                cache["k_pos"], jnp.full((b, 1), pos, jnp.int32), (0, slot))
+            new_cache = {"k": kc, "v": vc, "k_pos": kp}
+            mask = (kp >= 0) & (kp > pos - cfg.local_window) & (kp <= pos)
+        else:
+            kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+            new_cache = dict(cache, k=kc, v=vc)
+            S = kc.shape[1]
+            mask = jnp.broadcast_to(jnp.arange(S)[None, :] <= pos, (b, S))
+        o = attn.decode_attention(q, kc, vc, mask)
+        x = x + o.reshape(b, 1, cfg.num_heads * cfg.head_dim) @ p["attn"]["wo"]
+    if kind == "dec":
+        x = x + attn.cross_attention_decode(
+            p["cross"], _norm_apply(cfg, p["norm_cross"], x), cache["ck"], cache["cv"], cfg)
+        new_cache["ck"], new_cache["cv"] = cache["ck"], cache["cv"]
+    h2 = _norm_apply(cfg, p["norm2"], x)
+    if kind in ("moe", "mla_moe"):
+        y, _ = moe_mod.moe_apply(p["ffn"], h2, cfg)
+        x = x + y
+    else:
+        x = x + nn.mlp_apply(p["ffn"], h2, cfg.activation)
+    return x, new_cache
+
+
+def _pad_to(x, target: int, axis: int):
+    pad = target - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# =================================================================
+# stacks
+# =================================================================
+
+def _stacked_init(key, cfg, dtype, kind: str, n: int):
+    return jax.vmap(lambda k: layer_init(k, cfg, dtype, kind))(jax.random.split(key, n))
+
+
+def _act_constraint(x, cfg, mesh):
+    """Pin the residual-stream sharding between layers.
+
+    Batch ALWAYS shards over (pod, data): without the constraint GSPMD
+    happily propagates the embedding table's d-over-data spec into the
+    activations and replicates batch — catastrophic for activation
+    memory (observed: 40 GB/dev on tinyllama before this pin).
+
+    With ``cfg.seq_shard_acts`` additionally shard the *sequence* dim
+    over 'model' (Megatron sequence parallelism): bounds the remat-saved
+    layer inputs to 1/TP; GSPMD inserts the all-gather at the attention
+    boundary.  No-op when no mesh is threaded or dims don't divide."""
+    if mesh is None or x.ndim != 3:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.distributed import sharding as shrules
+    ba = shrules.batch_axes(mesh)
+    baxis = ba if len(ba) > 1 else ba[0]
+    b, s, _ = x.shape
+    seq = (shrules.maybe("model", s, mesh) if cfg.seq_shard_acts else None)
+    spec = P(shrules.maybe(baxis, b, mesh), seq, None)
+    phys = getattr(mesh, "base", mesh)     # MeshView -> physical mesh
+    return jax.lax.with_sharding_constraint(x, NamedSharding(phys, spec))
+
+
+def _scan_layers(params_stacked, x, cfg, positions, kind, *, enc_out=None,
+                 attn_impl="chunked", mesh=None):
+    def body(carry, lp):
+        h, aux = carry
+        h, a = layer_apply(lp, h, cfg, positions, kind, enc_out=enc_out,
+                           attn_impl=attn_impl)
+        h = _act_constraint(h, cfg, mesh)
+        return (h, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x = _act_constraint(x, cfg, mesh)
+    carry0 = (x, jnp.zeros((), jnp.float32))
+
+    G = getattr(cfg, "remat_block", 0)
+    L = jax.tree.leaves(params_stacked)[0].shape[0]
+    if cfg.remat and G and L % G == 0 and L // G > 1:
+        # two-level (sqrt-L) remat: outer scan over L/G blocks saves one
+        # carry per *block*; the inner per-layer checkpoints are
+        # re-materialized during the block's backward.  Saved residuals
+        # drop from L x act to (L/G + G) x act — required to fit the
+        # 126-layer llama3-405b (DESIGN.md §5.5).
+        blocked = jax.tree.map(
+            lambda p: p.reshape((L // G, G) + p.shape[1:]), params_stacked)
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def block_body(carry, bp):
+            out, _ = jax.lax.scan(body, carry, bp)
+            return out, None
+
+        (x, aux), _ = jax.lax.scan(block_body, carry0, blocked)
+        return x, aux
+
+    (x, aux), _ = jax.lax.scan(body, carry0, params_stacked)
+    return x, aux
+
+
+def _scan_prefill(params_stacked, x, cfg, positions, kind, max_len, *,
+                  enc_out=None, attn_impl="chunked", mesh=None):
+    def body(h, lp):
+        h, cache = layer_prefill(lp, h, cfg, positions, kind, max_len,
+                                 enc_out=enc_out, attn_impl=attn_impl)
+        return _act_constraint(h, cfg, mesh), cache
+    return jax.lax.scan(body, _act_constraint(x, cfg, mesh), params_stacked)
+
+
+def _scan_decode(params_stacked, x, cfg, caches_stacked, pos, kind):
+    """Decode layer scan with the stacked caches as the scan CARRY.
+
+    As scan xs/ys the caches double-buffer (ys are fresh allocations —
+    +8.6 GB/device on llama3 decode_32k); while-loop carries update in
+    place, and jit-level donation of the cache argument reuses the input
+    buffer for the carry, so the cache exists exactly once.
+    """
+    L = jax.tree.leaves(params_stacked)[0].shape[0]
+
+    def body(carry, inp):
+        h, caches = carry
+        li, lp = inp
+        c = jax.tree.map(
+            lambda buf: jax.lax.dynamic_index_in_dim(buf, li, 0,
+                                                     keepdims=False), caches)
+        h, nc = layer_decode(lp, h, cfg, c, pos, kind)
+        caches = jax.tree.map(
+            lambda buf, n: jax.lax.dynamic_update_index_in_dim(
+                buf, n.astype(buf.dtype), li, 0), caches, nc)
+        return (h, caches), None
+
+    (x, caches), _ = jax.lax.scan(
+        body, (x, caches_stacked),
+        (jnp.arange(L, dtype=jnp.int32), params_stacked))
+    return x, caches
+
+
+# =================================================================
+# model builder
+# =================================================================
+
+@dataclasses.dataclass
+class ModelFns:
+    cfg: Any
+    init: Any
+    train_forward: Any
+    prefill: Any
+    decode_step: Any
+    init_cache: Any
+
+
+def _layer_plan(cfg):
+    """Returns list of (kind, count) segments, in order."""
+    if cfg.ssm:
+        return [("ssm", cfg.num_layers)]
+    if cfg.hybrid:
+        return [("hybrid", cfg.num_layers)]          # handled specially
+    if cfg.encdec:
+        return [("dec", cfg.num_layers)]             # encoder handled separately
+    if cfg.num_experts:
+        kind = "mla_moe" if cfg.mla else "moe"
+        segs = []
+        if cfg.first_k_dense:
+            segs.append(("mla_dense" if cfg.mla else "dense_first", cfg.first_k_dense))
+        segs.append((kind, cfg.num_layers - cfg.first_k_dense))
+        return segs
+    if cfg.mla:
+        return [("mla_dense", cfg.num_layers)]
+    return [("dense", cfg.num_layers)]
+
+
+def build_model(cfg, *, attn_impl: str = "chunked", mesh=None) -> ModelFns:
+    dtype = cfg.param_dtype
+    emb_scale = float(cfg.d_model) ** 0.5 if cfg.tie_embeddings else 1.0
+
+    hybrid_pattern = cfg.block_pattern if cfg.hybrid else ()
+    gs = len(hybrid_pattern) or 1
+    n_groups = cfg.num_layers // gs if cfg.hybrid else 0
+    tail = tuple(hybrid_pattern[: cfg.num_layers % gs]) if cfg.hybrid else ()
+
+    # -------------------------------------------------------- init ----
+    def init(key):
+        ks = jax.random.split(key, 12)
+        params: Dict[str, Any] = {
+            # padded vocab rows so the vocab dim shards over "model" even
+            # for indivisible tokenizer sizes; logits are masked/sliced
+            # back to the true vocab everywhere they surface.
+            "embed": nn.embedding_init(ks[0], cfg.padded_vocab, cfg.d_model,
+                                       dtype),
+            "final_norm": _norm_init(cfg, dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = nn.dense_init(ks[1], cfg.d_model,
+                                           cfg.padded_vocab, dtype)
+        if cfg.frontend == "vision_stub":
+            params["vis_proj"] = nn.dense_init(ks[2], cfg.vision_dim, cfg.d_model, dtype)
+        if cfg.encdec:
+            params["enc_layers"] = _stacked_init(ks[3], cfg, dtype, "enc", cfg.encoder_layers)
+            params["enc_norm"] = _norm_init(cfg, dtype)
+            if cfg.learned_pos_emb:
+                params["enc_pos"] = nn.embedding_init(ks[4], cfg.encoder_seq_len, cfg.d_model, dtype)
+        if cfg.learned_pos_emb:
+            params["dec_pos"] = nn.embedding_init(ks[5], _max_pos(cfg), cfg.d_model, dtype)
+        if cfg.hybrid:
+            group = {}
+            for i, k in enumerate(hybrid_pattern):
+                group[f"b{i}"] = _stacked_init(jax.random.fold_in(ks[6], i), cfg, dtype, k, n_groups)
+            params["groups"] = group
+            for i, k in enumerate(tail):
+                params[f"tail{i}"] = layer_init(jax.random.fold_in(ks[7], i), cfg, dtype, k)
+        else:
+            for si, (kind, n) in enumerate(_layer_plan(cfg)):
+                params[f"seg{si}"] = _stacked_init(
+                    jax.random.fold_in(ks[8], si), cfg, dtype, kind, n)
+        return params
+
+    # ------------------------------------------------- embedding ----
+    def _embed_tokens(params, tokens):
+        x = params["embed"][tokens].astype(cfg.compute_dtype)
+        return x * jnp.asarray(emb_scale, x.dtype)
+
+    def _inputs_train(params, batch):
+        tokens = batch["tokens"]
+        x = _embed_tokens(params, tokens)
+        loss_mask = jnp.ones(tokens.shape, bool)
+        if cfg.frontend == "vision_stub":
+            vis = batch["patch_emb"].astype(cfg.compute_dtype) @ params["vis_proj"]
+            x = jnp.concatenate([vis, x], axis=1)
+            loss_mask = jnp.concatenate(
+                [jnp.zeros(vis.shape[:2], bool), loss_mask], axis=1)
+        if cfg.learned_pos_emb:
+            x = x + params["dec_pos"][: x.shape[1]][None].astype(x.dtype)
+        positions = jnp.arange(x.shape[1])
+        return x, positions, loss_mask
+
+    def _encode(params, batch):
+        a = batch["audio_emb"].astype(cfg.compute_dtype)
+        if cfg.learned_pos_emb:
+            a = a + params["enc_pos"][: a.shape[1]][None].astype(a.dtype)
+        pos = jnp.arange(a.shape[1])
+        h, _ = _scan_layers(params["enc_layers"], a, cfg, pos, "enc")
+        return _norm_apply(cfg, params["enc_norm"], h)
+
+    def _logits(params, x):
+        x = _norm_apply(cfg, params["final_norm"], x)
+        logits = (x @ params["embed"].T.astype(x.dtype)
+                  if cfg.tie_embeddings else x @ params["head"])
+        return logits[..., : cfg.vocab_size]
+
+    def _backbone_train(params, x, positions):
+        aux = jnp.zeros((), jnp.float32)
+        enc_out = None
+        if cfg.encdec:
+            return None  # handled in train_forward
+        if cfg.hybrid:
+            x, aux = _hybrid_apply(params, x, positions)
+            return x, aux
+        for si, (kind, n) in enumerate(_layer_plan(cfg)):
+            x, a = _scan_layers(params[f"seg{si}"], x, cfg, positions,
+                                kind, attn_impl=attn_impl, mesh=mesh)
+            aux = aux + a
+        return x, aux
+
+    def _hybrid_apply(params, x, positions):
+        def group_body(carry, gp):
+            h, aux = carry
+            for i, k in enumerate(hybrid_pattern):
+                h, a = layer_apply(gp[f"b{i}"], h, cfg, positions, k,
+                                   attn_impl=attn_impl)
+                aux = aux + a
+            return (_act_constraint(h, cfg, mesh), aux), None
+        if cfg.remat:
+            group_body = jax.checkpoint(group_body, prevent_cse=False)
+        (x, aux), _ = jax.lax.scan(group_body, (x, jnp.zeros((), jnp.float32)),
+                                   params["groups"])
+        for i, k in enumerate(tail):
+            x, a = layer_apply(params[f"tail{i}"], x, cfg, positions, k,
+                               attn_impl=attn_impl)
+            aux = aux + a
+        return x, aux
+
+    # ----------------------------------------------------- train ----
+    def train_forward(params, batch):
+        if cfg.encdec:
+            enc_out = _encode(params, batch)
+            x, positions, loss_mask = _inputs_train(params, batch)
+            x, aux = _scan_layers(params["seg0"], x, cfg, positions, "dec",
+                                  enc_out=enc_out, attn_impl=attn_impl,
+                                  mesh=mesh)
+        else:
+            x, positions, loss_mask = _inputs_train(params, batch)
+            x, aux = _backbone_train(params, x, positions)
+        labels = batch["labels"]
+        if cfg.frontend == "vision_stub":
+            # loss over text positions only
+            x = x[:, cfg.num_vision_tokens:, :]
+        x = _norm_apply(cfg, params["final_norm"], x)
+        if cfg.ce_chunk:
+            w = (params["embed"].T.astype(x.dtype) if cfg.tie_embeddings
+                 else params["head"])
+            # next-token shift without slicing (keeps seq length chunkable
+            # and the batch sharding untouched): mask the final position.
+            s = labels.shape[1]
+            labels_next = jnp.concatenate(
+                [labels[:, 1:], jnp.zeros_like(labels[:, :1])], axis=1)
+            pos_mask = jnp.broadcast_to(
+                (jnp.arange(s) < s - 1)[None, :], labels.shape)
+            loss = nn.chunked_cross_entropy_head(
+                x, w, labels_next, pos_mask, chunk=cfg.ce_chunk,
+                vocab_real=cfg.vocab_size)
+        else:
+            logits = (x @ (params["embed"].T.astype(x.dtype)
+                           if cfg.tie_embeddings else params["head"]))
+            logits = logits[..., : cfg.vocab_size]
+            loss = nn.cross_entropy(logits[:, :-1], labels[:, 1:])
+        return loss + aux, {"ce": loss, "aux": aux}
+
+    # --------------------------------------------------- serving ----
+    def init_cache(batch_size: int, max_len: int, dtype_=None):
+        dt = dtype_ or cfg.compute_dtype
+        caches: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+        if cfg.hybrid:
+            g = {}
+            for i, k in enumerate(hybrid_pattern):
+                one = layer_init_cache(cfg, k, batch_size, max_len, dt)
+                g[f"b{i}"] = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape).copy(), one)
+            caches["groups"] = g
+            for i, k in enumerate(tail):
+                caches[f"tail{i}"] = layer_init_cache(cfg, k, batch_size, max_len, dt)
+            return caches
+        for si, (kind, n) in enumerate(_layer_plan(cfg)):
+            one = layer_init_cache(cfg, kind, batch_size, max_len, dt)
+            caches[f"seg{si}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy(), one)
+        return caches
+
+    def prefill(params, batch, max_len: int):
+        if cfg.encdec:
+            enc_out = _encode(params, batch)
+        else:
+            enc_out = None
+        x, positions, _ = _inputs_train(params, batch)
+        caches: Dict[str, Any] = {"pos": jnp.asarray(x.shape[1], jnp.int32)}
+        if cfg.hybrid:
+            g = {}
+
+            def gbody(h, gp):
+                out_caches = {}
+                for i, k in enumerate(hybrid_pattern):
+                    h, c = layer_prefill(gp[f"b{i}"], h, cfg, positions, k, max_len,
+                                         attn_impl=attn_impl)
+                    out_caches[f"b{i}"] = c
+                return h, out_caches
+            x, g = jax.lax.scan(gbody, x, params["groups"])
+            caches["groups"] = g
+            for i, k in enumerate(tail):
+                x, c = layer_prefill(params[f"tail{i}"], x, cfg, positions, k, max_len,
+                                     attn_impl=attn_impl)
+                caches[f"tail{i}"] = c
+        else:
+            for si, (kind, n) in enumerate(_layer_plan(cfg)):
+                x, c = _scan_prefill(params[f"seg{si}"], x, cfg, positions,
+                                     kind, max_len, enc_out=enc_out,
+                                     attn_impl=attn_impl, mesh=mesh)
+                caches[f"seg{si}"] = c
+        logits = _logits(params, x[:, -1:, :])
+        return logits, caches
+
+    def decode_step(params, tokens, caches):
+        """tokens: (b,1) int32. Returns (logits (b,1,V), new caches)."""
+        pos = caches["pos"]
+        x = _embed_tokens(params, tokens)
+        if cfg.learned_pos_emb:
+            x = x + params["dec_pos"][pos][None, None].astype(x.dtype)
+        new_caches: Dict[str, Any] = {"pos": pos + 1}
+        if cfg.hybrid:
+            g = {}
+
+            def gbody(h, inp):
+                gp, gc = inp
+                ncs = {}
+                for i, k in enumerate(hybrid_pattern):
+                    h, nc = layer_decode(gp[f"b{i}"], h, cfg, gc[f"b{i}"], pos, k)
+                    ncs[f"b{i}"] = nc
+                return h, ncs
+            x, g = jax.lax.scan(gbody, x, (params["groups"], caches["groups"]))
+            new_caches["groups"] = g
+            for i, k in enumerate(tail):
+                x, nc = layer_decode(params[f"tail{i}"], x, cfg, caches[f"tail{i}"], pos, k)
+                new_caches[f"tail{i}"] = nc
+        else:
+            for si, (kind, n) in enumerate(_layer_plan(cfg)):
+                x, nc = _scan_decode(params[f"seg{si}"], x, cfg, caches[f"seg{si}"],
+                                     pos, kind)
+                new_caches[f"seg{si}"] = nc
+        logits = _logits(params, x)
+        return logits, new_caches
+
+    return ModelFns(cfg=cfg, init=init, train_forward=train_forward,
+                    prefill=prefill, decode_step=decode_step,
+                    init_cache=init_cache)
+
+
+def _max_pos(cfg):
+    return 65536 if not cfg.encdec else 32768

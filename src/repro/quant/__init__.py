@@ -1,0 +1,22 @@
+"""ICQ x LM integration (DESIGN.md §4): the paper's two-step / composite
+quantization machinery applied inside the LM serving and training stack.
+
+  int8.py          blockwise int8 quantize/dequantize primitives
+  kv_cache.py      ICQ-KV: interleaved-subspace quantized KV cache with
+                   crude-first two-step attention at decode
+  grad_compress.py cross-pod gradient compression with error feedback
+"""
+from repro.quant.int8 import quantize_int8, dequantize_int8
+from repro.quant.kv_cache import (ICQKVConfig, build_icq_kv_cache,
+                                  icq_kv_append, icq_kv_decode_attention,
+                                  init_icq_kv_cache)
+from repro.quant.grad_compress import (compress_state_init,
+                                       compressed_cross_pod_mean,
+                                       ef_quantize)
+
+__all__ = [
+    "quantize_int8", "dequantize_int8",
+    "ICQKVConfig", "build_icq_kv_cache", "icq_kv_append",
+    "icq_kv_decode_attention", "init_icq_kv_cache",
+    "compress_state_init", "compressed_cross_pod_mean", "ef_quantize",
+]

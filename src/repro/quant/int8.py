@@ -1,0 +1,21 @@
+"""Symmetric int8 quantization with per-slice scales.
+
+Scales are computed over the trailing axis (one scale per row/token/head
+slice) — the layout every consumer here uses, chosen so dequantize is a
+broadcast multiply that fuses into the following matmul.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_int8(x, axis: int = -1):
+    """x -> (q int8, scale f32 with ``axis`` reduced to size 1)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)

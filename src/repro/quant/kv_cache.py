@@ -1,0 +1,231 @@
+"""ICQ-KV: the paper's interleaved two-step machinery applied to the
+decode-time KV cache (DESIGN.md §4).
+
+Mapping of the paper's pieces onto attention:
+  - psi (high-variance subspace)  ->  the d_fast key dimensions with the
+    largest per-dimension key variance, found *per kv-head* from the
+    prefill keys (the online-Welford estimate, eq. 9).  The dims are
+    interleaved in head_dim; a per-head permutation gathers them to the
+    front **once at cache-write time**, so the crude scorer reads a
+    contiguous (S, d_fast) tile — the TPU-native equivalent of ICQ's
+    interleaved supports (no scatter/gather at score time).
+  - crude comparison (eq. 2)      ->  q_fast . k_fast over all S cached
+    keys (bf16, d_fast of head_dim dims).
+  - margin + refinement (eq. 1)   ->  static ``top_c`` survivors by crude
+    score are gathered, dequantized (int8 full-width codes), and scored
+    exactly; softmax + value mix run over the survivors only.  A static
+    cap replaces the data-dependent threshold (TPU shapes must be
+    static) — the same dial as core.search.two_step_search_compact.
+
+Decode-time HBM traffic per kv-head drops from  S * dh * 2B (bf16 K) +
+S * dh * 2B (V)  to  S * d_fast * 2B (crude)  +  c * 2 * dh * 1B
+(survivor K+V int8):  ~6.4x at d_fast = dh/4, c = S/16 — the memory-
+roofline win measured in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.int8 import dequantize_int8, quantize_int8
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class ICQKVConfig:
+    d_fast: int = 64             # |psi| dims per head used for crude scores
+    top_c_frac: float = 1 / 16   # survivor fraction of the cache length
+    min_top_c: int = 128
+
+
+def _variance_perm(k):
+    """Per-head permutation sorting head_dim by descending key variance.
+
+    k: (b, s, kvh, dh) -> perm (kvh, dh) int32.  Variance pooled over
+    (batch, positions) — the eq. 9 estimate at prefill time.
+    """
+    var = jnp.var(k.astype(jnp.float32), axis=(0, 1))        # (kvh, dh)
+    return jnp.argsort(-var, axis=-1).astype(jnp.int32)
+
+
+def _apply_perm(x, perm):
+    """Gather head_dim by per-head perm.  x: (b,s,kvh,dh), perm: (kvh,dh)."""
+    return jnp.take_along_axis(x, perm[None, None, :, :], axis=-1)
+
+
+def init_icq_kv_cache(cfg_kv: ICQKVConfig, batch: int, max_len: int,
+                      kvh: int, dh: int, dtype=jnp.bfloat16) -> Dict:
+    return {
+        "perm": jnp.tile(jnp.arange(dh, dtype=jnp.int32)[None], (kvh, 1)),
+        "k_fast": jnp.zeros((batch, max_len, kvh, cfg_kv.d_fast), dtype),
+        "kq": jnp.zeros((batch, max_len, kvh, dh), jnp.int8),
+        "ks": jnp.zeros((batch, max_len, kvh, 1), jnp.float32),
+        "vq": jnp.zeros((batch, max_len, kvh, dh), jnp.int8),
+        "vs": jnp.zeros((batch, max_len, kvh, 1), jnp.float32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def build_icq_kv_cache(cfg_kv: ICQKVConfig, k, v, max_len: int,
+                       dtype=jnp.bfloat16) -> Dict:
+    """Quantize prefill K/V into an ICQ-KV cache.  k/v: (b,s,kvh,dh)."""
+    b, s, kvh, dh = k.shape
+    perm = _variance_perm(k)
+    k_rot = _apply_perm(k, perm)
+    kq, ks = quantize_int8(k_rot)
+    vq, vs = quantize_int8(v)
+    k_fast = k_rot[..., : cfg_kv.d_fast].astype(dtype)
+
+    def pad(x):
+        return jnp.pad(x, [(0, 0), (0, max_len - s)] + [(0, 0)] * (x.ndim - 2))
+
+    return {"perm": perm, "k_fast": pad(k_fast),
+            "kq": pad(kq), "ks": pad(ks), "vq": pad(vq), "vs": pad(vs),
+            "len": jnp.asarray(s, jnp.int32)}
+
+
+def icq_kv_append(cache: Dict, cfg_kv: ICQKVConfig, k_new, v_new, pos) -> Dict:
+    """Append one decode step's K/V.  k_new/v_new: (b,1,kvh,dh)."""
+    k_rot = _apply_perm(k_new, cache["perm"])
+    kq, ks = quantize_int8(k_rot)
+    vq, vs = quantize_int8(v_new)
+    upd = lambda buf, val: jax.lax.dynamic_update_slice(
+        buf, val.astype(buf.dtype), (0, pos) + (0,) * (buf.ndim - 2))
+    return dict(
+        cache,
+        k_fast=upd(cache["k_fast"], k_rot[..., : cfg_kv.d_fast]),
+        kq=upd(cache["kq"], kq), ks=upd(cache["ks"], ks),
+        vq=upd(cache["vq"], vq), vs=upd(cache["vs"], vs),
+        len=jnp.maximum(cache["len"], pos + 1))
+
+
+def icq_kv_decode_attention(q, cache: Dict, cfg_kv: ICQKVConfig, pos,
+                            top_c: int):
+    """Two-step decode attention.  q: (b, 1, H, dh) -> (b, 1, H, dh).
+
+    Phase 1: crude scores over all S from the d_fast high-variance dims.
+    Phase 2: exact scores + softmax over the static top_c survivors.
+    """
+    b, _, h, dh = q.shape
+    S = cache["kq"].shape[1]
+    kvh = cache["kq"].shape[2]
+    g = h // kvh
+    scale = dh ** -0.5
+    valid = jnp.arange(S)[None, :] <= pos                    # (1,S)
+
+    qg = q[:, 0].reshape(b, kvh, g, dh)                      # head h -> kv h//g
+    q_rot = jnp.take_along_axis(qg, cache["perm"][None, :, None, :], axis=-1)
+    q_fast = q_rot[..., : cfg_kv.d_fast]
+
+    # ---- phase 1: crude scores (b,kvh,g,S) ----
+    crude = jnp.einsum("bkgf,bskf->bkgs",
+                       q_fast.astype(jnp.float32),
+                       cache["k_fast"][:, :S].astype(jnp.float32)) * scale
+    crude = jnp.where(valid[:, None, None, :], crude, NEG_INF)
+    _, cand = jax.lax.top_k(crude, top_c)                    # (b,kvh,g,c)
+
+    # ---- phase 2: gather survivors, dequantize, exact attention ----
+    # gather along S:  kq (b,S,kvh,dh) -> (b,kvh,g,c,dh)
+    def gather(buf):
+        bf = buf.transpose(0, 2, 1, 3)                       # (b,kvh,S,·)
+        bf = jnp.broadcast_to(bf[:, :, None], (b, kvh, g) + bf.shape[2:])
+        return jnp.take_along_axis(
+            bf, cand[..., None], axis=3)                     # (b,kvh,g,c,·)
+
+    k_sel = dequantize_int8(gather(cache["kq"]), gather(cache["ks"]))
+    v_sel = dequantize_int8(gather(cache["vq"]), gather(cache["vs"]))
+    s = jnp.einsum("bkgd,bkgcd->bkgc", q_rot.astype(jnp.float32), k_sel) * scale
+    cand_valid = jnp.take_along_axis(
+        jnp.broadcast_to(valid[:, None, None, :], crude.shape), cand, axis=3)
+    s = jnp.where(cand_valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bkgcd->bkgd", p, v_sel)           # (b,kvh,g,dh)
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+def reference_decode_attention(q, k, v, pos):
+    """Oracle: exact attention over the raw (unquantized) cache."""
+    b, _, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = dh ** -0.5
+    S = k.shape[1]
+    qg = q.reshape(b, kvh, g, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = jnp.where((jnp.arange(S)[None, None, None, :] <= pos), s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+# ------------------------------------------------------- context-parallel --
+
+def icq_kv_attention_partial(q, cache: Dict, cfg_kv: ICQKVConfig, pos,
+                             top_c_local: int, *, shard_offset=0):
+    """Shard-local two-step attention over a position-sharded cache slice.
+
+    Each shard scores its own S_local positions crude-first, refines its
+    local ``top_c_local`` survivors, and returns *unnormalized* softmax
+    partials (m, l, o) — combined across shards by
+    ``combine_attention_partials``.  This keeps the top-k and the
+    survivor gather entirely shard-local: the only cross-shard traffic
+    is the (b, kvh, g[, dh]) partial stats, vs the full-cache gathers
+    GSPMD emits for the global formulation (llama3-405b decode_32k:
+    57.6 s -> ~0 collective term; EXPERIMENTS.md §Perf Cell A).
+    """
+    b, _, h, dh = q.shape
+    S_local = cache["kq"].shape[1]
+    kvh = cache["kq"].shape[2]
+    g = h // kvh
+    scale = dh ** -0.5
+    local_pos = shard_offset + jnp.arange(S_local)
+    valid = local_pos[None, :] <= pos                        # (1,S_local)
+
+    qg = q[:, 0].reshape(b, kvh, g, dh)
+    q_rot = jnp.take_along_axis(qg, cache["perm"][None, :, None, :], axis=-1)
+    q_fast = q_rot[..., : cfg_kv.d_fast]
+
+    crude = jnp.einsum("bkgf,bskf->bkgs", q_fast.astype(jnp.float32),
+                       cache["k_fast"].astype(jnp.float32)) * scale
+    crude = jnp.where(valid[:, None, None, :], crude, NEG_INF)
+    _, cand = jax.lax.top_k(crude, top_c_local)              # (b,kvh,g,c)
+
+    def gather(buf):
+        bf = buf.transpose(0, 2, 1, 3)
+        bf = jnp.broadcast_to(bf[:, :, None], (b, kvh, g) + bf.shape[2:])
+        return jnp.take_along_axis(bf, cand[..., None], axis=3)
+
+    k_sel = dequantize_int8(gather(cache["kq"]), gather(cache["ks"]))
+    v_sel = dequantize_int8(gather(cache["vq"]), gather(cache["vs"]))
+    s = jnp.einsum("bkgd,bkgcd->bkgc", q_rot.astype(jnp.float32), k_sel) * scale
+    cand_valid = jnp.take_along_axis(
+        jnp.broadcast_to(valid[:, None, None, :], crude.shape), cand, axis=3)
+    s = jnp.where(cand_valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                  # (b,kvh,g)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgc,bkgcd->bkgd", p, v_sel)             # unnormalized
+    return m, l, o
+
+
+def combine_attention_partials(m, l, o, axis_name: str):
+    """Merge per-shard (m, l, o) softmax partials across ``axis_name``."""
+    m_g = jax.lax.pmax(m, axis_name)
+    corr = jnp.exp(m - m_g)
+    l_g = jax.lax.psum(l * corr, axis_name)
+    o_g = jax.lax.psum(o * corr[..., None], axis_name)
+    return o_g / jnp.maximum(l_g, 1e-30)[..., None]
+
+
+def combine_partials_local(ms, ls, os_):
+    """Host-side reference combine over stacked shard partials (tests)."""
+    m_g = jnp.max(ms, axis=0)
+    corr = jnp.exp(ms - m_g[None])
+    l_g = jnp.sum(ls * corr, axis=0)
+    o_g = jnp.sum(os_ * corr[..., None], axis=0)
+    return o_g / jnp.maximum(l_g, 1e-30)[..., None]

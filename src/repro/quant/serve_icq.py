@@ -1,0 +1,127 @@
+"""ICQ-KV decode step for dense-attention LMs — the paper's two-step
+technique as the serving hot path (§Perf hillclimb "decode memory").
+
+A drop-in replacement for the baseline ``decode_step`` of dense-family
+archs: each layer's KV cache is stored as the interleaved quantized form
+(per-head variance-permuted d_fast bf16 crude slab + int8 full-width
+codes, repro.quant.kv_cache) and attention runs crude-first over d_fast
+dims, refining only the static ``top_c`` survivors.
+
+Decode-time HBM traffic per layer drops from  S*(dh*2)*2B (bf16 K+V)
+to  S*d_fast*2B + top_c*2*dh*1B  (~3.6x at d_fast=dh/4, top_c=S/16);
+the dry-run memory/roofline deltas are recorded in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.models.transformer import _norm_apply
+from repro.quant.kv_cache import (ICQKVConfig, icq_kv_append,
+                                  icq_kv_decode_attention,
+                                  init_icq_kv_cache)
+
+
+def supports_icq_kv(cfg) -> bool:
+    """Dense decoder-only GQA archs (uniform layer plan)."""
+    return (not cfg.ssm and not cfg.hybrid and not cfg.encdec
+            and not cfg.mla and cfg.num_experts == 0
+            and cfg.frontend == "none")
+
+
+def build_icq_decode(cfg, kv_cfg: ICQKVConfig, *, mesh=None):
+    """Returns (decode_fn, init_cache_fn) mirroring ModelFns' signatures.
+
+    decode_fn(params, tokens, caches) -> (logits, new_caches); caches are
+    the stacked ICQ-KV pytree per layer + the scalar position.
+    """
+    emb_scale = float(cfg.d_model) ** 0.5 if cfg.tie_embeddings else 1.0
+
+    def init_cache(batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict:
+        one = init_icq_kv_cache(kv_cfg, batch, max_len, cfg.num_kv_heads,
+                                cfg.head_dim, dtype)
+        L = cfg.num_layers
+        return {
+            "pos": jnp.zeros((), jnp.int32),
+            "layers": jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (L,) + a.shape).copy(),
+                one),
+        }
+
+    def layer_decode(lp, x, cache, pos, top_c):
+        h = _norm_apply(cfg, lp["norm1"], x)
+        b = x.shape[0]
+        positions = jnp.full((b, 1), pos, jnp.int32)
+        from repro.models.attention import qkv_project
+        q, k, v = qkv_project(lp["attn"], h, cfg, positions)
+        cache = icq_kv_append(cache, kv_cfg, k, v, pos)
+        o = icq_kv_decode_attention(q, cache, kv_cfg, pos, top_c)
+        x = x + o.reshape(b, 1, cfg.num_heads * cfg.head_dim) @ lp["attn"]["wo"]
+        h2 = _norm_apply(cfg, lp["norm2"], x)
+        x = x + nn.mlp_apply(lp["ffn"], h2, cfg.activation)
+        return x, cache
+
+    def decode_step(params, tokens, caches, *, top_c: int):
+        pos = caches["pos"]
+        x = params["embed"][tokens].astype(cfg.compute_dtype)
+        x = x * jnp.asarray(emb_scale, x.dtype)
+        L = cfg.num_layers
+
+        def body(carry, inp):
+            h, layer_caches = carry
+            li, lp = inp
+            c = jax.tree.map(
+                lambda buf: jax.lax.dynamic_index_in_dim(
+                    buf, li, 0, keepdims=False), layer_caches)
+            h, nc = layer_decode(lp, h, c, pos, top_c)
+            layer_caches = jax.tree.map(
+                lambda buf, n: jax.lax.dynamic_update_index_in_dim(
+                    buf, n.astype(buf.dtype), li, 0), layer_caches, nc)
+            return (h, layer_caches), None
+
+        (x, layers), _ = jax.lax.scan(
+            body, (x, caches["layers"]),
+            (jnp.arange(L, dtype=jnp.int32), params["seg0"]))
+        x = _norm_apply(cfg, params["final_norm"], x)
+        logits = (x @ params["embed"].T.astype(x.dtype)
+                  if cfg.tie_embeddings else x @ params["head"])
+        return logits[..., : cfg.vocab_size], dict(pos=pos + 1, layers=layers)
+
+    return decode_step, init_cache
+
+
+def icq_kv_cache_shardings(cache_sh, cfg, mesh):
+    """Shard the quantized cache: batch over data; heads over model when
+    they divide, else positions over model (mirrors the baseline rules)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.distributed import sharding as shrules
+
+    msize = shrules.axis_size(mesh, "model")
+    heads_ok = cfg.num_kv_heads % max(msize, 1) == 0 and \
+        cfg.num_kv_heads >= msize
+
+    def one(path, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        nd = len(leaf.shape)
+        last = name.rsplit("/", 1)[-1]
+        if last == "pos" or nd <= 1:
+            return NamedSharding(mesh, P())
+        if last == "perm":                       # (L, kvh, dh)
+            return NamedSharding(mesh, P(
+                None, shrules.maybe("model", leaf.shape[1], mesh)
+                if heads_ok else None, None))
+        # (L, b, S, kvh, ...) buffers
+        spec = [None] * nd
+        spec[1] = shrules.maybe(("data",), leaf.shape[1], mesh)
+        if heads_ok and nd >= 4:
+            spec[3] = shrules.maybe("model", leaf.shape[3], mesh)
+        elif nd >= 3:
+            spec[2] = shrules.maybe("model", leaf.shape[2], mesh)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_sh)

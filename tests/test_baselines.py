@@ -1,0 +1,68 @@
+"""Baseline quantizers: structural invariants + end-to-end MAP sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ICQConfig
+from repro.core import adc_search, mean_average_precision
+from repro.core import codebooks as cb
+from repro.core import encode as enc
+from repro.core.baselines import fit_cq, fit_opq, fit_pq, fit_pqn, fit_sq
+from repro.data import make_table1_dataset
+
+CFG = ICQConfig(d=16, num_codebooks=4, codebook_size=16, num_fast=2)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    xtr, ytr, xte, yte = make_table1_dataset("dataset3")
+    return xtr[:1500], ytr[:1500], xte[:80], yte[:80]
+
+
+def test_pq_supports_disjoint(key, ds):
+    xtr, *_ = ds
+    m = fit_pq(key, np.asarray(xtr[:, :16]), CFG)
+    sup = np.asarray(jnp.any(jnp.abs(m.C) > 0, axis=1))   # (K, d)
+    assert (sup.sum(0) <= 1).all()
+
+
+def test_opq_rotation_orthogonal(key, ds):
+    xtr, *_ = ds
+    m = fit_opq(key, np.asarray(xtr[:, :16]), CFG, rounds=3)
+    R = np.asarray(m.embed_params["R"])
+    np.testing.assert_allclose(R @ R.T, np.eye(16), atol=1e-4)
+
+
+def test_opq_not_worse_than_pq(key, ds):
+    xtr, *_ = ds
+    x = np.asarray(xtr[:, :16])
+    mp = fit_pq(key, x, CFG)
+    mo = fit_opq(key, x, CFG, rounds=5)
+    ep = float(cb.quantization_mse(jnp.asarray(x), mp.C, mp.codes))
+    xr = mo.embed(jnp.asarray(x))
+    eo = float(cb.quantization_mse(xr, mo.C, mo.codes))
+    assert eo <= ep * 1.05
+
+
+def test_cq_reduces_cq_penalty(key, ds):
+    from repro.core import losses
+    xtr, *_ = ds
+    x = np.asarray(xtr[:500, :16])
+    m = fit_cq(key, x, CFG, rounds=3, grad_steps=25)
+    pen, _ = losses.cq_penalty(m.C, m.codes)
+    C0 = cb.init_residual(key, jnp.asarray(x), 4, 16, iters=5)
+    codes0 = enc.icm_encode(jnp.asarray(x), C0, 2)
+    pen0, _ = losses.cq_penalty(C0, codes0)
+    assert float(pen) < float(pen0)
+
+
+def test_sq_and_pqn_reach_usable_map(key, ds):
+    xtr, ytr, xte, yte = ds
+    for fit_fn in (fit_sq, fit_pqn):
+        m = (fit_fn(key, xtr, ytr, CFG, epochs=3)
+             if fit_fn is fit_sq else
+             fit_fn(key, xtr, ytr, CFG, epochs=3))
+        r = adc_search(m.embed(xte), m.codes, m.C, 20)
+        mapv = float(mean_average_precision(r.indices, ytr, yte))
+        assert mapv > 0.5, fit_fn.__name__

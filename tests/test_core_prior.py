@@ -1,0 +1,85 @@
+"""Unit + property tests for the variance prior (paper §3.1, §3.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import prior as P
+
+PI1, PI2, A2 = 0.9, 0.1, -10.0
+
+
+def test_skewnormal_integrates_to_one():
+    xs = np.linspace(-30, 30, 200001)
+    pdf = np.exp(np.asarray(P.skewnormal_logpdf(jnp.asarray(xs), 1.0, 0.7, A2)))
+    area = np.trapezoid(pdf, xs)
+    assert abs(area - 1.0) < 1e-3
+
+
+def test_skewnormal_negative_alpha_mass_below_mu():
+    xs = np.linspace(-20, 20, 100001)
+    pdf = np.exp(np.asarray(P.skewnormal_logpdf(jnp.asarray(xs), 2.0, 1.0, A2)))
+    below = np.trapezoid(pdf[xs <= 2.0], xs[xs <= 2.0])
+    assert below > 0.95      # alpha<0 skews mass below the location
+
+
+def test_logcdf_matches_naive_in_bulk():
+    x = jnp.linspace(-5, 5, 101)
+    naive = jnp.log(0.5 * jax.lax.erfc(-x / jnp.sqrt(2.0)))
+    assert jnp.max(jnp.abs(P.normal_logcdf(x) - naive)) < 1e-5
+
+
+def test_nll_gradients_finite_in_tails():
+    """The erfc-based logcdf NaNs here — regression for the fix."""
+    theta = P.init_theta(sigma1=0.1, sigma2=0.5, mu2=1.0)
+    lam = jnp.asarray([0.0, 1e-3, 5.0, 50.0, 500.0])
+    g = jax.grad(lambda th: P.nll(lam, th, pi1=PI1, pi2=PI2, alpha2=A2))(theta)
+    assert all(bool(jnp.isfinite(v)) for v in jax.tree.leaves(g))
+    glam = jax.grad(lambda l: P.nll(l, theta, pi1=PI1, pi2=PI2, alpha2=A2))(lam)
+    assert bool(jnp.all(jnp.isfinite(glam)))
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.floats(0.05, 5.0), st.floats(0.05, 5.0), st.floats(0.1, 20.0),
+       st.integers(0, 1000))
+def test_psi_mask_elementwise_equivariant(s1, s2, mu2, seed):
+    """Property: the psi decision is per-dimension (equal lambdas get equal
+    membership; permuting lambda permutes xi)."""
+    theta = P.init_theta(sigma1=s1, sigma2=s2, mu2=mu2)
+    rng = np.random.default_rng(seed)
+    lam = jnp.asarray(rng.uniform(0, 2 * mu2, 16))
+    xi = np.asarray(P.psi_mask(lam, theta, pi1=PI1, pi2=PI2, alpha2=A2))
+    perm = rng.permutation(16)
+    xi_p = np.asarray(P.psi_mask(lam[perm], theta, pi1=PI1, pi2=PI2,
+                                 alpha2=A2))
+    np.testing.assert_array_equal(xi[perm], xi_p)
+
+
+def test_psi_mask_upper_set_when_modes_separated():
+    """In the post-training regime (narrow major mode at 0, minor mode far
+    out) membership is an upper set: higher variance => in psi.  (With
+    overlapping modes the minor-mode window is an interval, not a ray —
+    that regime is handled by the top-k fallback in icq.compute_xi.)"""
+    theta = P.init_theta(sigma1=0.2, sigma2=1.5, mu2=6.0)
+    lam = jnp.linspace(0.0, 7.0, 64)
+    xi = np.asarray(P.psi_mask(lam, theta, pi1=PI1, pi2=PI2, alpha2=A2))
+    assert xi.any() and (~xi).any()
+    first = int(np.argmax(xi))
+    assert xi[first:].all() and not xi[:first].any()
+
+
+def test_psi_topk_fallback():
+    lam = jnp.asarray([0.1, 5.0, 0.2, 3.0])
+    xi = np.asarray(P.psi_mask_topk(lam, 2))
+    assert list(xi) == [False, True, False, True]
+
+
+def test_robustness_term_keeps_minor_mode(key):
+    """Eq. 10: without the -log P(SN) term, emptying the minor mode is a
+    feasible minimum; with it the NLL blows up as all lam leave the mode."""
+    theta = P.init_theta(sigma1=1.0, sigma2=0.5, mu2=8.0)
+    lam_far = jnp.full((16,), 0.5)     # all in major mode
+    lam_near = lam_far.at[0].set(8.0)  # one dim in the minor mode
+    assert float(P.nll(lam_near, theta, pi1=PI1, pi2=PI2, alpha2=A2)) < \
+        float(P.nll(lam_far, theta, pi1=PI1, pi2=PI2, alpha2=A2))

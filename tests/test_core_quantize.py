@@ -1,0 +1,134 @@
+"""Codebooks, encoding (ICM), and the ICQ structural invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ICQConfig
+from repro.core import codebooks as cb
+from repro.core import encode as enc
+from repro.core import icq as icq_mod
+from repro.core import losses
+
+
+@pytest.fixture(scope="module")
+def data(key):
+    x = jax.random.normal(key, (512, 16)) * jnp.linspace(0.2, 3.0, 16)
+    return x
+
+
+def test_kmeans_reduces_distortion(key, data):
+    cent, ids = cb.kmeans(key, data, 16, iters=1)
+    d1 = float(jnp.mean(jnp.sum(jnp.square(data - cent[ids]), -1)))
+    cent, ids = cb.kmeans(key, data, 16, iters=20)
+    d2 = float(jnp.mean(jnp.sum(jnp.square(data - cent[ids]), -1)))
+    assert d2 <= d1 + 1e-6
+
+
+def test_kmeans_no_empty_clusters(key, data):
+    cent, ids = cb.kmeans(key, data, 32, iters=15)
+    counts = np.bincount(np.asarray(ids), minlength=32)
+    assert (counts > 0).all()
+
+
+def test_pq_init_orthogonal_supports(key, data):
+    C = cb.init_pq(key, data, 4, 8)
+    for k in range(4):
+        sup = np.asarray(jnp.any(jnp.abs(C[k]) > 0, axis=0))
+        assert sup[k * 4: (k + 1) * 4].all() and sup.sum() == 4
+
+
+def test_pq_encode_matches_bruteforce(key, data):
+    C = cb.init_pq(key, data, 4, 8)
+    codes = enc.encode_pq(data, C)
+    # brute force over all codewords per codebook
+    for k in range(4):
+        d = jnp.sum(jnp.square(data[:, None, :] - C[k][None]), -1)
+        np.testing.assert_array_equal(np.asarray(codes[:, k]),
+                                      np.asarray(jnp.argmin(d, -1)))
+
+
+def test_icm_never_increases_reconstruction_error(key, data):
+    C = cb.init_residual(key, data, 4, 16, iters=5)
+    codes0 = enc.encode_pq(data, C)               # independent warm start
+    e0 = float(cb.quantization_mse(data, C, codes0))
+    codes1 = enc.icm_encode(data, C, iters=1, init_codes=codes0)
+    e1 = float(cb.quantization_mse(data, C, codes1))
+    codes3 = enc.icm_encode(data, C, iters=3, init_codes=codes0)
+    e3 = float(cb.quantization_mse(data, C, codes3))
+    assert e1 <= e0 + 1e-5 and e3 <= e1 + 1e-5
+
+
+def test_residual_init_beats_random(key, data):
+    Cr = cb.init_residual(key, data, 4, 16, iters=10)
+    Crand = jax.random.normal(key, Cr.shape) * 0.5
+    er = float(cb.quantization_mse(data, Cr, enc.icm_encode(data, Cr, 2)))
+    ern = float(cb.quantization_mse(data, Crand, enc.icm_encode(data, Crand, 2)))
+    assert er < ern
+
+
+def test_st_decode_gradients_flow(key, data):
+    C = cb.init_residual(key, data, 4, 8, iters=3)
+
+    def loss(C, x):
+        xbar, _ = enc.st_decode(x, C)
+        return jnp.mean(jnp.sum(jnp.square(x - xbar), -1))
+
+    gC = jax.grad(loss)(C, data)
+    gx = jax.grad(loss, argnums=1)(C, data)
+    assert float(jnp.abs(gC).max()) > 0 and float(jnp.abs(gx).max()) > 0
+    assert bool(jnp.all(jnp.isfinite(gC)))
+
+
+def test_pack_codes_roundtrip(key):
+    codes = jax.random.randint(key, (64, 8), 0, 256)
+    packed = enc.pack_codes(codes, 256)
+    assert packed.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(enc.unpack_codes(packed)),
+                                  np.asarray(codes))
+
+
+# ----------------------------------------------------------- ICQ invariants
+
+def test_projection_enforces_exact_orthogonality(key, data):
+    cfg = ICQConfig(d=16, num_codebooks=4, codebook_size=8, num_fast=2)
+    C = cb.init_residual(key, data, 4, 8, iters=3)
+    xi = jnp.asarray([1] * 5 + [0] * 11, bool)
+    fast = jnp.asarray([True, True, False, False])
+    Cp = icq_mod.project_codebooks(C, xi, fast)
+    # eq. 6 exactly zero after projection
+    assert float(losses.icq_loss(Cp, xi)) < 1e-4  # eps floor inside sqrt
+    # fast codewords live in psi, slow in the complement
+    in_e, out_e = icq_mod.codebook_energies(Cp, xi)
+    assert float(out_e[:2].max()) == 0.0 and float(in_e[2:].max()) == 0.0
+
+
+def test_fast_set_selection_eq8(key):
+    xi = jnp.asarray([1, 1, 0, 0], bool)
+    C = jnp.zeros((2, 3, 4))
+    C = C.at[0, :, :2].set(1.0)        # codebook 0 inside psi
+    C = C.at[1, :, 2:].set(1.0)        # codebook 1 outside
+    mask = np.asarray(icq_mod.fast_set(C, xi))
+    assert list(mask) == [True, False]
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(1, 15))
+def test_margin_sigma_monotone_in_psi(psi_size):
+    """Property: growing psi can only shrink the margin (eq. 11)."""
+    lam = jnp.asarray(np.random.default_rng(0).uniform(0.1, 2.0, 16))
+    order = jnp.argsort(-lam)
+    xi_small = jnp.zeros(16, bool).at[order[:psi_size]].set(True)
+    xi_big = jnp.zeros(16, bool).at[order[: psi_size + 1]].set(True)
+    assert float(icq_mod.margin_sigma(lam, xi_big)) <= \
+        float(icq_mod.margin_sigma(lam, xi_small)) + 1e-6
+
+
+def test_cq_penalty_zero_for_orthogonal_codebooks(key, data):
+    C = cb.init_pq(key, data, 4, 8)    # disjoint supports -> cross terms 0
+    codes = enc.encode_pq(data, C)
+    pen, mean = losses.cq_penalty(C, codes)
+    assert abs(float(mean)) < 1e-4 and float(pen) < 1e-6

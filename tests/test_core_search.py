@@ -1,0 +1,133 @@
+"""Two-step search (paper §3.4): correctness vs one-step ADC, pruning
+accounting, and the end-to-end joint-training invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ICQConfig
+from repro.core import (adc_search, exact_search, fit,
+                        mean_average_precision, recall_at, two_step_search,
+                        two_step_search_compact)
+from repro.core import codebooks as cb
+from repro.core import encode as enc
+from repro.core import icq as icq_mod
+from repro.core import search as srch
+from repro.data import make_table1_dataset
+
+
+@pytest.fixture(scope="module")
+def model():
+    xtr, ytr, xte, yte = make_table1_dataset("dataset3")
+    xtr, ytr, xte, yte = xtr[:2000], ytr[:2000], xte[:100], yte[:100]
+    cfg = ICQConfig(d=16, num_codebooks=8, codebook_size=32, num_fast=2)
+    m = fit(jax.random.PRNGKey(0), xtr, ytr, cfg, mode="icq", epochs=4,
+            batch_size=256)
+    return m, xtr, ytr, xte, yte
+
+
+def test_lut_sum_equals_decode_distance(key):
+    """ADC identity: ||q-xbar||^2 = ||q||^2 + LUT-sum + cross-terms; for
+    orthogonal (PQ) codebooks the cross terms vanish exactly."""
+    x = jax.random.normal(key, (128, 16))
+    C = cb.init_pq(key, x, 4, 8)
+    codes = enc.encode_pq(x, C)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (16,))
+    lut = srch.build_lut(q, C)
+    lhs = srch.lut_sum(lut, codes) + jnp.sum(jnp.square(q))
+    xbar = cb.decode(C, codes)
+    rhs = jnp.sum(jnp.square(q[None] - xbar), -1)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-4)
+
+
+def test_exact_search_is_exact(key):
+    x = jax.random.normal(key, (200, 8))
+    q = jax.random.normal(jax.random.fold_in(key, 1), (5, 8))
+    idx, dist = exact_search(q, x, 10)
+    d2 = np.sum((np.asarray(q)[:, None] - np.asarray(x)[None]) ** 2, -1)
+    np.testing.assert_array_equal(np.sort(np.asarray(idx), -1),
+                                  np.sort(np.argsort(d2, -1)[:, :10], -1))
+
+
+def test_two_step_never_worse_map_than_its_pruning(model):
+    m, xtr, ytr, xte, yte = model
+    emb_te, emb_tr = m.embed(xte), m.embed(xtr)
+    r2 = two_step_search(emb_te, m.codes, m.C, m.structure, topk=20)
+    r1 = adc_search(emb_te, m.codes, m.C, topk=20)
+    map2 = float(mean_average_precision(r2.indices, ytr, yte))
+    map1 = float(mean_average_precision(r1.indices, ytr, yte))
+    assert map2 >= map1 - 0.02          # pruning may cost at most epsilon
+    assert float(r2.avg_ops) < float(r1.avg_ops)   # and must be faster
+
+
+def test_two_step_ops_accounting(model):
+    m, xtr, ytr, xte, yte = model
+    r2 = two_step_search(m.embed(xte), m.codes, m.C, m.structure, topk=20)
+    K = m.C.shape[0]
+    kf = float(jnp.sum(m.structure.fast_mask))
+    expected = kf + float(r2.pass_rate) * (K - kf)
+    assert abs(float(r2.avg_ops) - expected) < 1e-5
+    assert 0.0 <= float(r2.pass_rate) <= 1.0
+
+
+def test_infinite_margin_recovers_adc(model):
+    """sigma -> inf disables pruning: two-step == one-step ADC exactly."""
+    m, xtr, ytr, xte, yte = model
+    s = icq_mod.ICQStructure(xi=m.structure.xi,
+                             fast_mask=m.structure.fast_mask,
+                             sigma=jnp.asarray(1e30))
+    emb = m.embed(xte)
+    r2 = two_step_search(emb, m.codes, m.C, s, topk=20)
+    r1 = adc_search(emb, m.codes, m.C, topk=20)
+    np.testing.assert_array_equal(np.asarray(r2.indices),
+                                  np.asarray(r1.indices))
+    assert float(r2.pass_rate) == 1.0
+
+
+def test_compact_matches_dense_when_cap_sufficient(model):
+    m, xtr, ytr, xte, yte = model
+    emb = m.embed(xte)
+    r_dense = two_step_search(emb, m.codes, m.C, m.structure, topk=10)
+    r_comp = two_step_search_compact(emb, m.codes, m.C, m.structure,
+                                     topk=10, refine_cap=m.codes.shape[0])
+    np.testing.assert_array_equal(np.asarray(r_dense.indices),
+                                  np.asarray(r_comp.indices))
+
+
+def test_map_metric_sane():
+    ids = jnp.asarray([[0, 1, 2]])
+    db = jnp.asarray([5, 5, 7])
+    q = jnp.asarray([5])
+    m = float(mean_average_precision(ids, db, q))
+    assert abs(m - 1.0) < 1e-6          # both relevant docs ranked first
+    q2 = jnp.asarray([7])
+    m2 = float(mean_average_precision(ids, db, q2))
+    assert m2 == pytest.approx(1 / 3)
+
+
+def test_fitted_structure_invariants(model):
+    m, *_ = model
+    assert int(m.structure.xi.sum()) >= 1
+    assert int(m.structure.fast_mask.sum()) == m.icq_cfg.num_fast
+    assert float(m.structure.sigma) >= 0
+    # projection happened: eq. 6 is exactly satisfied on the exported C
+    from repro.core import losses
+    assert float(losses.icq_loss(m.C, m.structure.xi)) < 1e-4
+
+
+def test_ivf_icq_composition(model):
+    """Beyond-paper: IVF coarse partitioning composed with the two-step —
+    ops must drop further at no MAP loss vs plain ICQ (the production
+    ANN deployment shape)."""
+    from repro.core.ivf import build_ivf, ivf_two_step_search
+    m, xtr, ytr, xte, yte = model
+    emb_db, emb_q = m.embed(xtr), m.embed(xte)
+    ivf = build_ivf(jax.random.PRNGKey(1), emb_db, n_lists=32)
+    assert ivf.imbalance < 10.0
+    r_icq = two_step_search(emb_q, m.codes, m.C, m.structure, 20)
+    r_ivf = ivf_two_step_search(emb_q, m.codes, m.C, m.structure, ivf,
+                                20, n_probe=8)
+    map_icq = float(mean_average_precision(r_icq.indices, ytr, yte))
+    map_ivf = float(mean_average_precision(r_ivf.indices, ytr, yte))
+    assert map_ivf >= map_icq - 0.03
+    assert float(r_ivf.avg_ops) < float(r_icq.avg_ops)
