@@ -24,15 +24,20 @@ def code_bits(cfg: ICQConfig) -> int:
     return int(cfg.num_codebooks * np.log2(cfg.codebook_size))
 
 
-def evaluate(model, xte, yte, ytr, topk: int = 50):
-    """(map, avg_ops, pass_rate, search_us_per_query)."""
+def evaluate(model, xte, yte, ytr, topk: int = 50, backend: str = "jnp"):
+    """(map, avg_ops, pass_rate, search_us_per_query).
+
+    ``backend`` selects the batched search engine ("jnp" | "pallas" |
+    "auto" — core.search dispatch); the whole query batch goes through
+    one vectorized call.
+    """
     emb = model.embed(xte)
     t0 = time.time()
     if model.mode == "icq":
         res = two_step_search(emb, model.codes, model.C, model.structure,
-                              topk)
+                              topk, backend=backend)
     else:
-        res = adc_search(emb, model.codes, model.C, topk)
+        res = adc_search(emb, model.codes, model.C, topk, backend=backend)
     jax.block_until_ready(res.indices)
     dt = (time.time() - t0) / len(xte) * 1e6
     mapv = float(mean_average_precision(res.indices, ytr, yte))

@@ -1,11 +1,15 @@
 """Benchmark entry point: one section per paper figure + kernel
-microbenchmarks + the roofline table (if dry-run artifacts exist).
+microbenchmarks + the batched-search engine benchmark (emits
+``BENCH_search.json`` for cross-PR perf tracking) + the roofline table
+(if dry-run artifacts exist).
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig3]
+    PYTHONPATH=src python -m benchmarks.run --only search   # just the JSON
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -16,6 +20,77 @@ from benchmarks import (beyond_ivf, fig1_synthetic_pq, fig2_synthetic_cq,
                         fig6_unseen)
 from benchmarks.common import header
 
+
+def search_bench(full: bool = False, *, out_path: str = "BENCH_search.json",
+                 n: int = 100_000, nq: int = 64, K: int = 8, m: int = 256,
+                 num_fast: int = 2, topk: int = 50, d: int = 16,
+                 repeats: int = 3, pallas_n: int = 4096, pallas_nq: int = 8):
+    """Batched two-step engine vs the per-query ``lax.map`` baseline on a
+    synthetic index (n points, nq-query batches), written to
+    ``out_path`` so the perf trajectory is machine-readable across PRs.
+
+    The pallas row runs interpret mode (CPU container) at a reduced size
+    — it tracks correctness/call overhead, not TPU latency.
+    """
+    from repro.core.search import two_step_search
+    from repro.data.synthetic import make_synthetic_index
+    from repro.kernels.ref import two_step_search_looped
+
+    if full:
+        n, nq = max(n, 1_000_000), max(nq, 256)
+    key = jax.random.PRNGKey(0)
+    codes, C, structure = make_synthetic_index(key, n, d=d, K=K, m=m,
+                                               num_fast=num_fast)
+    queries = jax.random.normal(jax.random.fold_in(key, 2), (nq, d))
+
+    def timed(fn, *args, **kw):
+        res = fn(*args, **kw)                        # compile + warm
+        jax.block_until_ready(res.indices)
+        t0 = time.time()
+        for _ in range(repeats):
+            jax.block_until_ready(fn(*args, **kw).indices)
+        return res, (time.time() - t0) / repeats
+
+    rows = []
+    res_l, dt_l = timed(jax.jit(
+        lambda q: two_step_search_looped(q, codes, C, structure, topk)),
+        queries)
+    rows.append(dict(backend="lax_map", n=n, nq=nq,
+                     search_us=round(dt_l / nq * 1e6, 2),
+                     avg_ops=round(float(res_l.avg_ops), 4),
+                     pass_rate=round(float(res_l.pass_rate), 4)))
+    res_b, dt_b = timed(jax.jit(
+        lambda q: two_step_search(q, codes, C, structure, topk,
+                                  backend="jnp")), queries)
+    rows.append(dict(backend="jnp", n=n, nq=nq,
+                     search_us=round(dt_b / nq * 1e6, 2),
+                     avg_ops=round(float(res_b.avg_ops), 4),
+                     pass_rate=round(float(res_b.pass_rate), 4)))
+    # pallas interpret: reduced size, correctness/overhead tracking only
+    codes_s, queries_s = codes[:pallas_n], queries[:pallas_nq]
+    res_p, dt_p = timed(
+        lambda q: two_step_search(q, codes_s, C, structure, topk,
+                                  backend="pallas", interpret=True),
+        queries_s)
+    rows.append(dict(backend="pallas_interpret", n=pallas_n, nq=pallas_nq,
+                     search_us=round(dt_p / pallas_nq * 1e6, 2),
+                     avg_ops=round(float(res_p.avg_ops), 4),
+                     pass_rate=round(float(res_p.pass_rate), 4)))
+
+    out = dict(topk=topk, K=K, m=m, num_fast=num_fast, d=d,
+               rows=rows,
+               speedup_batched_vs_laxmap=round(dt_l / dt_b, 3))
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+    for r in rows:
+        print(f"search,{r['backend']},n={r['n']},nq={r['nq']},,"
+              f"{r['avg_ops']},{r['pass_rate']},,{r['search_us']}",
+              flush=True)
+    print(f"# batched-vs-laxmap speedup {out['speedup_batched_vs_laxmap']}x"
+          f" -> {out_path}", flush=True)
+    return out
+
+
 FIGURES = {
     "fig1": fig1_synthetic_pq.run,
     "fig2": fig2_synthetic_cq.run,
@@ -24,6 +99,7 @@ FIGURES = {
     "fig5": fig5_pqn.run,
     "fig6": fig6_unseen.run,
     "beyond_ivf": beyond_ivf.run,
+    "search": search_bench,
 }
 
 

@@ -1,53 +1,31 @@
-"""Retrieval serving with the Pallas kernels: crude scan (fused two_step
-kernel) + survivor refinement (adc kernel), batched over queries — the
-TPU execution shape of the paper's search (DESIGN.md §3).
+"""Retrieval serving with the batched two-step engine: the whole query
+batch goes through one fused dispatch (quant.serve_icq.build_ann_engine
+-> core.search two-step, DESIGN.md §3.5) instead of a per-query loop.
 
-On CPU the kernels run in interpret mode (slow but bit-faithful); on a
-TPU backend the same code hits the MXU.
+backend="jnp" is the vectorized reference; backend="pallas" runs the
+(query-tile x point-tile) fused kernels — interpret mode on CPU (slow
+but bit-faithful), the MXU path on a TPU backend.
 
     PYTHONPATH=src python examples/serve_retrieval.py --queries 32
+    PYTHONPATH=src python examples/serve_retrieval.py --backend pallas
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ICQConfig
 from repro.core import fit, mean_average_precision
-from repro.core.search import build_lut
 from repro.data import make_table1_dataset
-from repro.kernels import ops
-
-
-def serve_query(q_emb, model, topk=50, refine_cap=256):
-    """One query through the kernel path: two_step -> compact -> adc."""
-    lut = build_lut(q_emb, model.C)                       # (K, m)
-    fast = model.structure.fast_mask
-    # bootstrap threshold from the crude top-k (host-side, tiny)
-    crude_boot = ops.adc(model.codes,
-                         lut * fast[:, None].astype(lut.dtype))
-    cand = jax.lax.top_k(-crude_boot, topk)[1]
-    full_cand = ops.adc(model.codes[cand], lut)
-    far = cand[jnp.argmax(full_cand)]
-    thr = crude_boot[far] + model.structure.sigma
-    # fused crude + margin test (phase 1)
-    crude, passed = ops.two_step(model.codes, lut, fast, thr)
-    # compact survivors (static cap), refine with full codes (phase 2)
-    masked = jnp.where(passed > 0, crude, jnp.inf)
-    surv = jax.lax.top_k(-masked, refine_cap)[1]
-    full = ops.adc(model.codes[surv], lut)
-    full = jnp.where(jnp.isfinite(-jax.lax.top_k(-masked, refine_cap)[0]),
-                     full, jnp.inf)
-    order = jax.lax.top_k(-full, topk)[1]
-    return surv[order], float(jnp.mean((passed > 0).astype(jnp.float32)))
+from repro.quant.serve_icq import build_ann_engine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--queries", type=int, default=32)
     ap.add_argument("--topk", type=int, default=50)
+    ap.add_argument("--backend", default="jnp",
+                    choices=["auto", "jnp", "pallas"])
     args = ap.parse_args()
 
     xtr, ytr, xte, yte = make_table1_dataset("dataset3")
@@ -56,22 +34,23 @@ def main():
     print("fitting index...")
     model = fit(jax.random.PRNGKey(0), xtr, ytr, cfg, mode="icq", epochs=5)
 
+    engine = build_ann_engine(model.codes, model.C, model.structure,
+                              topk=args.topk, backend=args.backend)
     nq = args.queries
     emb_q = model.embed(xte[:nq])
+    res = engine(emb_q)                            # compile + warm
+    jax.block_until_ready(res.indices)
     t0 = time.time()
-    ids, pass_rates = [], []
-    for i in range(nq):
-        idx, pr = serve_query(emb_q[i], model, topk=args.topk)
-        ids.append(np.asarray(idx))
-        pass_rates.append(pr)
+    res = engine(emb_q)
+    jax.block_until_ready(res.indices)
     dt = time.time() - t0
-    ids = np.stack(ids)
-    mapv = float(mean_average_precision(jnp.asarray(ids), ytr, yte[:nq]))
-    K, kf = cfg.num_codebooks, cfg.num_fast
-    ops_avg = kf + np.mean(pass_rates) * (K - kf)
-    print(f"{nq} queries in {dt:.2f}s ({dt / nq * 1e3:.1f} ms/q interpret)")
-    print(f"MAP={mapv:.4f}  pass_rate={np.mean(pass_rates):.3f}  "
-          f"avg_ops={ops_avg:.2f}/{K}")
+
+    mapv = float(mean_average_precision(res.indices, ytr, yte[:nq]))
+    K = cfg.num_codebooks
+    print(f"{nq} queries in {dt * 1e3:.1f} ms "
+          f"({dt / nq * 1e3:.2f} ms/q, backend={args.backend})")
+    print(f"MAP={mapv:.4f}  pass_rate={float(res.pass_rate):.3f}  "
+          f"avg_ops={float(res.avg_ops):.2f}/{K}")
 
 
 if __name__ == "__main__":

@@ -57,5 +57,6 @@ def fit_cq(key, xs, icq_cfg, *, rounds: int = 10, grad_steps: int = 50,
         fast_mask=jnp.ones((C.shape[0],), bool),
         sigma=jnp.zeros(()))
     return ICQModel(icq_cfg=icq_cfg, embed_params=embed_params,
-                    embed_apply=apply_fn, C=C, codes=codes,
+                    embed_apply=apply_fn, C=C,
+                    codes=enc.pack_codes(codes, icq_cfg.codebook_size),
                     structure=structure, lam=jnp.var(emb, axis=0), mode="cq")

@@ -34,7 +34,7 @@ def fit_opq(key, xs, icq_cfg, *, rounds: int = 8, kmeans_iters: int = 10,
         u, s, vt = jnp.linalg.svd(emb.T @ xbar, full_matrices=False)
         R = u @ vt
     xr = emb @ R
-    codes = enc.encode_pq(xr, C)
+    codes = enc.pack_codes(enc.encode_pq(xr, C), icq_cfg.codebook_size)
 
     ep = {"base": embed_params, "R": R}
 

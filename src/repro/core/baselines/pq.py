@@ -21,7 +21,7 @@ def fit_pq(key, xs, icq_cfg, *, kmeans_iters: int = 25,
     emb = apply_fn(embed_params, xs)
     C = cb.init_pq(key, emb, icq_cfg.num_codebooks, icq_cfg.codebook_size,
                    kmeans_iters)
-    codes = enc.encode_pq(emb, C)
+    codes = enc.pack_codes(enc.encode_pq(emb, C), icq_cfg.codebook_size)
     d = emb.shape[-1]
     structure = icq_mod.ICQStructure(
         xi=jnp.ones((d,), bool),

@@ -73,3 +73,26 @@ def make_table1_dataset(name: str):
                          spec["n_classes"], seed=spec["seed"])
     nt = spec["n_train"]
     return X[:nt], y[:nt], X[nt:], y[nt:]
+
+
+def make_synthetic_index(key, n: int, d: int = 16, K: int = 8, m: int = 256,
+                         num_fast: int = 2, sigma: float = 0.5):
+    """Random packed ICQ index + structure for serving/benchmark smoke
+    paths (launch/serve.py --ann, benchmarks/run.py search).
+
+    Returns (codes (n,K) packed via encode.pack_codes — uint8 for
+    m <= 256, C (K,m,d) f32, ICQStructure).  One shared fixture so the
+    benchmark and the serving demo cannot diverge.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.encode import pack_codes
+    from repro.core.icq import ICQStructure
+
+    C = jax.random.normal(key, (K, m, d)) * (1.0 / np.sqrt(K))
+    codes = pack_codes(
+        jax.random.randint(jax.random.fold_in(key, 1), (n, K), 0, m), m)
+    fast = jnp.zeros((K,), bool).at[:num_fast].set(True)
+    structure = ICQStructure(xi=jnp.ones((d,), bool), fast_mask=fast,
+                             sigma=jnp.asarray(sigma))
+    return codes, C, structure

@@ -3,6 +3,9 @@ pure-jnp oracle (ref.py) via interpret=True on CPU:
 
   adc.py              ADC LUT sum (one-hot matmul formulation, MXU)
   two_step.py         fused crude ADC + eq. 2 margin test (ICQ phase 1)
+  batched_search.py   batched fused two-step engine: (query-tile x
+                      point-tile) grid, LUT tiles pinned in VMEM, codes
+                      streamed once per query tile, in-kernel top-k merge
   kmeans.py           nearest-centroid assignment (codebook training/encode)
   flash_attention.py  blockwise online-softmax causal attention
 

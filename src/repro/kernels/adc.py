@@ -20,21 +20,34 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def flat_onehot(codes, K: int, m: int, dtype):
+    """(blk_n, K) int codes -> (blk_n, K*m) one-hot over the flattened
+    LUT, with exactly K ones per row.
+
+    Built from a *single* iota compare against the flattened codes: column
+    j of the output matches iff codes[i, j // m] == j % m.  Peak
+    intermediate is O(blk_n * K * m) — the size of the result — instead of
+    the O(blk_n * K * K*m) boolean the K-way broadcast-then-sum
+    formulation materializes.
+    """
+    blk_n = codes.shape[0]
+    flat = codes + (jnp.arange(K, dtype=jnp.int32) * m)[None, :]   # (blk,K)
+    flat_rep = jnp.broadcast_to(flat[:, :, None],
+                                (blk_n, K, m)).reshape(blk_n, K * m)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (blk_n, K * m), 1)
+    return (flat_rep == iota).astype(dtype)
+
+
 def _adc_kernel(codes_ref, lut_ref, out_ref, *, K: int, m: int):
     codes = codes_ref[...]                      # (blk_n, K) int32
     lut = lut_ref[...]                          # (K, m) f32
-    blk_n = codes.shape[0]
-    # one-hot over the flattened (K*m) table: codes_flat[i,k] = k*m + codes
-    flat = codes + (jnp.arange(K, dtype=jnp.int32) * m)[None, :]
-    iota = jax.lax.broadcasted_iota(jnp.int32, (blk_n, K * m), 1)
-    onehot = (iota[:, None, :] == flat[:, :, None]).astype(lut.dtype)  # (blk,K,K*m)
-    onehot = jnp.sum(onehot, axis=1)            # (blk_n, K*m) — K ones per row
+    onehot = flat_onehot(codes, K, m, lut.dtype)     # (blk_n, K*m)
     out_ref[...] = onehot @ lut.reshape(K * m)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def adc_pallas(codes, lut, *, block_n: int = 512, interpret: bool = True):
-    """codes: (n, K) int32; lut: (K, m) float32 -> dists (n,) float32."""
+    """codes: (n, K) int; lut: (K, m) float32 -> dists (n,) float32."""
     n, K = codes.shape
     m = lut.shape[1]
     if n % block_n != 0:

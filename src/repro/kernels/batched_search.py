@@ -1,0 +1,209 @@
+"""Pallas TPU kernels: batched fused two-step search (DESIGN.md §3.5).
+
+The serving-shaped hot path: a (query-tile x point-tile) grid where a
+tile of per-query flattened LUTs (blk_q, K*m) is pinned in VMEM for the
+whole inner sweep over point tiles, and each codes tile (blk_n, K)
+streamed HBM->VMEM is reused by *all* blk_q queries in the tile — vs the
+per-query formulation that re-streams the entire codes array once per
+query.  Distances come from a one-hot(codes) x LUT^T matmul on the MXU:
+(blk_n, K*m) @ (K*m, blk_q) -> a (blk_q, blk_n) distance tile per grid
+step.
+
+Two kernels:
+
+  crude_topk   phase 1 — crude (fast-masked) LUT sums for every point,
+               plus an in-kernel running top-k of the crude distances
+               (the eq. 2 threshold bootstrap candidates), merged across
+               point tiles in VMEM.
+  refine_topk  phase 2 — fused eq. 2 threshold test (crude < t + sigma),
+               slow-codebook LUT sum for survivors, and an in-kernel
+               top-k merge of the full distances.  Pruned points never
+               enter the ranking.
+
+The running top-k merge sorts the concatenated (running, tile) pair with
+a two-key ``lax.sort`` on (distance, global index), which reproduces
+``jax.lax.top_k``'s lowest-index-wins tie-breaking *globally* — returned
+indices are bit-identical to a monolithic top-k over the full distance
+row, including the all-ties +inf tail when fewer than ``topk`` points
+survive the margin test.
+
+Both kernels accept arbitrary (non-divisible) n and nq: inputs are
+zero-padded up to the tile grid and pad columns are masked to +inf
+before the merge (the dense crude matrix is simply sliced).
+
+Codes enter in their *stored* packed dtype (uint8 for m <= 256) and are
+widened to int32 per-tile inside the kernel — the HBM->VMEM stream
+carries 1 byte/entry, which is the 4x traffic saving the packing is for.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.adc import flat_onehot
+
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _merge_topk(vals_ref, idx_ref, tile_vals, tile_idx, topk: int):
+    """Merge a (blk_q, blk_n) tile into the running (blk_q, topk) lists.
+
+    Two-key ascending sort on (distance, global index) == global
+    ``top_k(-dist)`` ordering with its lowest-index tie-break.
+    """
+    merged_v = jnp.concatenate([vals_ref[...], tile_vals], axis=1)
+    merged_i = jnp.concatenate([idx_ref[...], tile_idx], axis=1)
+    sv, si = jax.lax.sort((merged_v, merged_i), dimension=1, num_keys=2)
+    vals_ref[...] = sv[:, :topk]
+    idx_ref[...] = si[:, :topk]
+
+
+def _init_topk(vals_ref, idx_ref):
+    vals_ref[...] = jnp.full(vals_ref.shape, jnp.inf, jnp.float32)
+    idx_ref[...] = jnp.full(idx_ref.shape, _I32_MAX, jnp.int32)
+
+
+def _crude_topk_kernel(codes_ref, lut_ref, *refs,
+                       K: int, m: int, topk: int, n: int, blk_n: int,
+                       want_crude: bool):
+    ni = pl.program_id(1)
+    codes = codes_ref[...].astype(jnp.int32)     # widen packed codes per-tile
+    lut = lut_ref[...]                           # (blk_q, K*m) f32, fast-masked
+    blk_q = lut.shape[0]
+    onehot = flat_onehot(codes, K, m, lut.dtype)      # (blk_n, K*m)
+    crude = jax.lax.dot_general(                      # (blk_q, blk_n) on MXU
+        lut, onehot, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    if want_crude:
+        crude_ref, vals_ref, idx_ref = refs
+        crude_ref[...] = crude
+    else:
+        vals_ref, idx_ref = refs
+
+    gidx = ni * blk_n + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_n), 1)
+    masked = jnp.where(gidx < n, crude, jnp.inf)      # hide pad columns
+
+    @pl.when(ni == 0)
+    def _():
+        _init_topk(vals_ref, idx_ref)
+
+    _merge_topk(vals_ref, idx_ref, masked, gidx, topk)
+
+
+def _refine_topk_kernel(codes_ref, lut_ref, crude_ref, thr_ref,
+                        vals_ref, idx_ref,
+                        *, K: int, m: int, topk: int, n: int, blk_n: int):
+    ni = pl.program_id(1)
+    codes = codes_ref[...].astype(jnp.int32)     # widen packed codes per-tile
+    lut = lut_ref[...]                           # (blk_q, K*m) f32, slow-masked
+    crude = crude_ref[...]                       # (blk_q, blk_n) f32
+    thr = thr_ref[...]                           # (blk_q, 1) f32 = t + sigma
+    blk_q = lut.shape[0]
+    onehot = flat_onehot(codes, K, m, lut.dtype)
+    slow = jax.lax.dot_general(
+        lut, onehot, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    full = crude + slow                               # eq. 1 refinement
+
+    gidx = ni * blk_n + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_n), 1)
+    passed = (crude < thr) & (gidx < n)               # eq. 2 margin test
+    ranked = jnp.where(passed, full, jnp.inf)
+
+    @pl.when(ni == 0)
+    def _():
+        _init_topk(vals_ref, idx_ref)
+
+    _merge_topk(vals_ref, idx_ref, ranked, gidx, topk)
+
+
+def _pad_to(x, rows):
+    return x if x.shape[0] == rows else jnp.pad(
+        x, [(0, rows - x.shape[0])] + [(0, 0)] * (x.ndim - 1))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("topk", "block_q", "block_n", "interpret",
+                                    "want_crude"))
+def crude_topk_pallas(codes, lut_flat, *, topk: int, block_q: int = 64,
+                      block_n: int = 512, interpret: bool = True,
+                      want_crude: bool = True):
+    """Phase 1.  codes (n, K) int (packed dtypes welcome — widened
+    per-tile in-kernel), lut_flat (nq, K*m) f32 (fast-masked, flattened)
+    -> (crude (nq, n) f32, cand_vals (nq, topk) f32,
+    cand_idx (nq, topk) i32); ``want_crude=False`` skips writing the
+    dense (nq, n) crude matrix to HBM (one-step ADC only needs the
+    top-k) and returns crude=None."""
+    n, K = codes.shape
+    nq, Km = lut_flat.shape
+    m = Km // K
+    n_pad = pl.cdiv(n, block_n) * block_n
+    nq_pad = pl.cdiv(nq, block_q) * block_q
+    grid = (nq_pad // block_q, n_pad // block_n)
+    topk_shapes = (jax.ShapeDtypeStruct((nq_pad, topk), jnp.float32),
+                   jax.ShapeDtypeStruct((nq_pad, topk), jnp.int32))
+    topk_specs = (pl.BlockSpec((block_q, topk), lambda qi, ni: (qi, 0)),
+                  pl.BlockSpec((block_q, topk), lambda qi, ni: (qi, 0)))
+    crude_shape = (jax.ShapeDtypeStruct((nq_pad, n_pad), jnp.float32),)
+    crude_spec = (pl.BlockSpec((block_q, block_n), lambda qi, ni: (qi, ni)),)
+    outs = pl.pallas_call(
+        functools.partial(_crude_topk_kernel, K=K, m=m, topk=topk, n=n,
+                          blk_n=block_n, want_crude=want_crude),
+        out_shape=(crude_shape if want_crude else ()) + topk_shapes,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, K), lambda qi, ni: (ni, 0)),
+            pl.BlockSpec((block_q, Km), lambda qi, ni: (qi, 0)),  # pinned
+        ],
+        out_specs=(crude_spec if want_crude else ()) + topk_specs,
+        interpret=interpret,
+    )(_pad_to(codes, n_pad), _pad_to(lut_flat.astype(jnp.float32), nq_pad))
+    if want_crude:
+        crude, vals, idx = outs
+        return crude[:nq, :n], vals[:nq], idx[:nq]
+    vals, idx = outs
+    return None, vals[:nq], idx[:nq]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("topk", "block_q", "block_n", "interpret"))
+def refine_topk_pallas(codes, lut_flat, crude, thresholds, *, topk: int,
+                       block_q: int = 64, block_n: int = 512,
+                       interpret: bool = True):
+    """Phase 2.  codes (n, K) int (packed dtypes welcome), lut_flat
+    (nq, K*m) f32 (slow-masked), crude (nq, n) f32 from phase 1,
+    thresholds (nq,) f32 = t + sigma ->
+    (dist (nq, topk) f32, idx (nq, topk) i32); pruned rows rank +inf."""
+    n, K = codes.shape
+    nq, Km = lut_flat.shape
+    m = Km // K
+    n_pad = pl.cdiv(n, block_n) * block_n
+    nq_pad = pl.cdiv(nq, block_q) * block_q
+    grid = (nq_pad // block_q, n_pad // block_n)
+    # pad crude with +inf so pad columns can never pass the margin test
+    crude_p = jnp.full((nq_pad, n_pad), jnp.inf, jnp.float32)
+    crude_p = jax.lax.dynamic_update_slice(
+        crude_p, crude.astype(jnp.float32), (0, 0))
+    thr = _pad_to(jnp.asarray(thresholds, jnp.float32)[:, None], nq_pad)
+    vals, idx = pl.pallas_call(
+        functools.partial(_refine_topk_kernel, K=K, m=m, topk=topk, n=n,
+                          blk_n=block_n),
+        out_shape=(jax.ShapeDtypeStruct((nq_pad, topk), jnp.float32),
+                   jax.ShapeDtypeStruct((nq_pad, topk), jnp.int32)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, K), lambda qi, ni: (ni, 0)),
+            pl.BlockSpec((block_q, Km), lambda qi, ni: (qi, 0)),  # pinned
+            pl.BlockSpec((block_q, block_n), lambda qi, ni: (qi, ni)),
+            pl.BlockSpec((block_q, 1), lambda qi, ni: (qi, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_q, topk), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((block_q, topk), lambda qi, ni: (qi, 0)),
+        ),
+        interpret=interpret,
+    )(_pad_to(codes, n_pad),
+      _pad_to(lut_flat.astype(jnp.float32), nq_pad), crude_p, thr)
+    return vals[:nq], idx[:nq]

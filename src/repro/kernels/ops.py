@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.adc import adc_pallas
+from repro.kernels.batched_search import crude_topk_pallas, refine_topk_pallas
 from repro.kernels.two_step import two_step_pallas
 from repro.kernels.kmeans import kmeans_assign_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -31,6 +32,35 @@ def two_step(codes, lut, fast_mask, threshold, *, block_n: int = 512,
     it = _default_interpret() if interpret is None else interpret
     return two_step_pallas(codes, lut, fast_mask, threshold,
                            block_n=block_n, interpret=it)
+
+
+def batched_crude_topk(codes, lut_flat, topk: int, *, block_q: int = 64,
+                       block_n: int = 512, interpret=None,
+                       want_crude: bool = True):
+    """Batched phase 1: crude LUT sums for every (query, point) pair plus
+    the in-kernel running top-k of crude distances.
+
+    codes (n, K) int (packed ok), lut_flat (nq, K*m) f32 (fast-masked,
+    flattened) -> (crude (nq, n) | None, cand_vals (nq, topk),
+    cand_idx (nq, topk)); ``want_crude=False`` skips the dense matrix.
+    """
+    it = _default_interpret() if interpret is None else interpret
+    return crude_topk_pallas(codes, lut_flat, topk=topk, block_q=block_q,
+                             block_n=block_n, interpret=it,
+                             want_crude=want_crude)
+
+
+def batched_refine_topk(codes, lut_flat, crude, thresholds, topk: int, *,
+                        block_q: int = 64, block_n: int = 512,
+                        interpret=None):
+    """Batched phase 2: fused eq. 2 test + slow-codebook sum + top-k merge.
+
+    codes (n, K) int, lut_flat (nq, K*m) f32 (slow-masked), crude (nq, n),
+    thresholds (nq,) -> (dist (nq, topk), idx (nq, topk)).
+    """
+    it = _default_interpret() if interpret is None else interpret
+    return refine_topk_pallas(codes, lut_flat, crude, thresholds, topk=topk,
+                              block_q=block_q, block_n=block_n, interpret=it)
 
 
 def kmeans_assign(x, cent, *, block_n: int = 1024, interpret=None):

@@ -19,6 +19,46 @@ def two_step_ref(codes, lut, fast_mask, threshold):
     return crude, (crude < threshold).astype(jnp.int32)
 
 
+def batched_crude_ref(codes, luts, fast_mask=None):
+    """codes (n,K) int, luts (nq,K,m) f32 -> crude (nq,n) f32 by per-query
+    gather-sum (the pre-batching formulation)."""
+    if fast_mask is not None:
+        luts = luts * fast_mask[None, :, None].astype(luts.dtype)
+    return jnp.stack([adc_ref(codes, luts[i]) for i in range(luts.shape[0])])
+
+
+def two_step_search_looped(queries, codes, C, structure, topk: int):
+    """The pre-batching per-query ``lax.map`` two-step search — kept as
+    the numerical oracle for the vectorized engine and as the latency
+    baseline in ``benchmarks/run.py search``.  Returns
+    core.search.SearchResult."""
+    from repro.core import search as srch
+
+    K = C.shape[0]
+    codes = codes.astype(jnp.int32)
+    fast = structure.fast_mask
+    sigma = structure.sigma
+    kf = jnp.sum(fast.astype(jnp.float32))
+
+    def one(q):
+        lut = srch.build_lut(q, C)                           # (K,m)
+        crude = srch.lut_sum(lut, codes, fast)               # (n,)
+        neg_c, cand = jax.lax.top_k(-crude, topk)
+        full_cand = srch.lut_sum(lut, codes[cand])           # (topk,)
+        far = jnp.argmax(full_cand)
+        t = crude[cand[far]]
+        passed = crude < t + sigma                           # eq. 2
+        slow_sum = srch.lut_sum(lut, codes, ~fast)
+        ranked = jnp.where(passed, crude + slow_sum, jnp.inf)
+        neg, idx = jax.lax.top_k(-ranked, topk)
+        return idx, -neg, jnp.mean(passed.astype(jnp.float32))
+
+    idx, dist, pr = jax.lax.map(one, queries)
+    pass_rate = jnp.mean(pr)
+    avg_ops = kf + pass_rate * (K - kf)
+    return srch.SearchResult(idx, dist, avg_ops, pass_rate)
+
+
 def kmeans_assign_ref(x, cent):
     """x (n,d), cent (m,d) -> (ids (n,) int32, sq-dist (n,) f32)."""
     x32 = x.astype(jnp.float32)

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.adc import _largest_divisor
+from repro.kernels.adc import _largest_divisor, flat_onehot
 
 
 def _two_step_kernel(codes_ref, lut_ref, thr_ref, crude_ref, pass_ref,
@@ -26,11 +26,7 @@ def _two_step_kernel(codes_ref, lut_ref, thr_ref, crude_ref, pass_ref,
     codes = codes_ref[...]                      # (blk_n, K)
     lut = lut_ref[...]                          # (K, m) — pre-masked to fast
     thr = thr_ref[0, 0]
-    blk_n = codes.shape[0]
-    flat = codes + (jnp.arange(K, dtype=jnp.int32) * m)[None, :]
-    iota = jax.lax.broadcasted_iota(jnp.int32, (blk_n, K * m), 1)
-    onehot = jnp.sum(
-        (iota[:, None, :] == flat[:, :, None]).astype(lut.dtype), axis=1)
+    onehot = flat_onehot(codes, K, m, lut.dtype)     # (blk_n, K*m)
     crude = onehot @ lut.reshape(K * m)
     crude_ref[...] = crude
     pass_ref[...] = (crude < thr).astype(jnp.int32)

@@ -8,6 +8,14 @@ reports the achieved cache-byte reduction.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --smoke --prompt-len 32 --decode-steps 8 --batch 2
+
+``--ann`` serves the batched two-step ANN engine instead (no LM): a
+synthetic packed-uint8 index is built and query batches stream through
+``quant.serve_icq.build_ann_engine`` (DESIGN.md §3.5), reporting
+per-query latency, pass rate, and Average Ops:
+
+    PYTHONPATH=src python -m repro.launch.serve --ann --ann-n 100000 \
+        --ann-queries 64 --ann-backend jnp
 """
 from __future__ import annotations
 
@@ -22,15 +30,56 @@ from repro.configs import get_config, smoke_config
 from repro.launch.steps import build_serve_fns
 
 
+def serve_ann(n: int, nq: int, backend: str, *, d: int = 16, K: int = 8,
+              m: int = 256, num_fast: int = 2, topk: int = 50,
+              batches: int = 3):
+    """Synthetic ANN serving loop through the batched two-step engine."""
+    from repro.data.synthetic import make_synthetic_index
+    from repro.quant.serve_icq import build_ann_engine
+
+    key = jax.random.PRNGKey(0)
+    codes, C, structure = make_synthetic_index(key, n, d=d, K=K, m=m,
+                                               num_fast=num_fast)
+    engine = build_ann_engine(codes, C, structure, topk=topk,
+                              backend=backend)
+
+    qkey = jax.random.fold_in(key, 2)
+    queries = jax.random.normal(qkey, (nq, d))
+    res = engine(queries)                      # compile + warm
+    jax.block_until_ready(res.indices)
+    t0 = time.time()
+    for i in range(batches):
+        q = jax.random.normal(jax.random.fold_in(qkey, i), (nq, d))
+        res = engine(q)
+        jax.block_until_ready(res.indices)
+    dt = (time.time() - t0) / batches
+    print(f"ann: n={n} nq={nq} topk={topk} backend={backend}: "
+          f"{dt * 1e6 / nq:.1f} us/query "
+          f"(batch {dt * 1e3:.1f} ms), pass_rate={float(res.pass_rate):.3f}, "
+          f"avg_ops={float(res.avg_ops):.2f}/{K}")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--decode-steps", type=int, default=8)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--icq-kv", action="store_true")
+    ap.add_argument("--ann", action="store_true",
+                    help="serve the batched two-step ANN engine (no LM)")
+    ap.add_argument("--ann-n", type=int, default=100_000)
+    ap.add_argument("--ann-queries", type=int, default=64)
+    ap.add_argument("--ann-backend", default="auto",
+                    choices=["auto", "jnp", "pallas"])
     args = ap.parse_args()
+
+    if args.ann:
+        serve_ann(args.ann_n, args.ann_queries, args.ann_backend)
+        return
+    if args.arch is None:
+        ap.error("--arch is required unless --ann is given")
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     prefill_fn, decode_fn, model = build_serve_fns(cfg)

@@ -1,5 +1,13 @@
-"""ICQ-KV decode step for dense-attention LMs — the paper's two-step
-technique as the serving hot path (§Perf hillclimb "decode memory").
+"""ICQ serving hot paths: the batched ANN search engine entry point and
+the ICQ-KV decode step for dense-attention LMs (§Perf hillclimb "decode
+memory").
+
+``build_ann_engine`` wraps ``core.search.two_step_search``'s batched
+dispatch (DESIGN.md §3.5) into a jitted query-batch server — the
+retrieval analogue of ``build_icq_decode`` below: codes stay resident
+(packed uint8), each call takes an (nq, d) embedding batch and returns
+a SearchResult.  Used by ``launch/serve.py --ann`` and
+``examples/serve_retrieval.py``.
 
 A drop-in replacement for the baseline ``decode_step`` of dense-family
 archs: each layer's KV cache is stored as the interleaved quantized form
@@ -24,6 +32,30 @@ from repro.models.transformer import _norm_apply
 from repro.quant.kv_cache import (ICQKVConfig, icq_kv_append,
                                   icq_kv_decode_attention,
                                   init_icq_kv_cache)
+
+
+def build_ann_engine(codes, C, structure, *, topk: int = 50,
+                     backend: str = "auto", block_q: int = 64,
+                     block_n: int = 512, query_chunk=None):
+    """Batched ANN serving entry: returns jitted
+    ``serve(queries (nq, d)) -> core.search.SearchResult``.
+
+    ``codes`` stay device-resident across calls (packed uint8; widened
+    at the kernel boundary).  ``backend`` follows the core dispatch:
+    "pallas" fused kernels on TPU, vectorized jnp elsewhere.
+    """
+    from repro.core import search as srch
+
+    codes = jax.device_put(codes)
+    C = jax.device_put(C)
+
+    @jax.jit
+    def serve(queries):
+        return srch.two_step_search(
+            queries, codes, C, structure, topk, backend=backend,
+            block_q=block_q, block_n=block_n, query_chunk=query_chunk)
+
+    return serve
 
 
 def supports_icq_kv(cfg) -> bool:

@@ -29,6 +29,47 @@ def test_two_step_sweep(key, n, K, m, kf):
     np.testing.assert_array_equal(np.asarray(passed), np.asarray(p0))
 
 
+@pytest.mark.parametrize("n,nq,K,m,topk", [
+    (300, 5, 4, 16, 8),        # non-divisible n and nq
+    (1024, 8, 8, 32, 10),      # divisible
+    (999, 3, 2, 64, 7),        # tiny K, odd n
+])
+def test_batched_crude_topk_sweep(key, n, nq, K, m, topk):
+    codes = jax.random.randint(key, (n, K), 0, m)
+    luts = jax.random.normal(jax.random.fold_in(key, 1), (nq, K, m))
+    crude, vals, idx = ops.batched_crude_topk(
+        codes, luts.reshape(nq, K * m), topk, block_q=2, block_n=128,
+        interpret=True)
+    crude0 = ref.batched_crude_ref(codes, luts)
+    np.testing.assert_allclose(np.asarray(crude), np.asarray(crude0),
+                               atol=1e-4)
+    neg, idx0 = jax.lax.top_k(-crude0, topk)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx0))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(-neg), atol=1e-4)
+
+
+@pytest.mark.parametrize("n,nq,K,m,topk,q_thr", [
+    (300, 5, 4, 16, 8, 0.3),
+    (999, 4, 8, 32, 10, 0.005),  # harsh threshold: fewer passers than topk
+])
+def test_batched_refine_topk_sweep(key, n, nq, K, m, topk, q_thr):
+    """Fused eq. 2 test + slow sum + in-kernel top-k merge vs the
+    monolithic oracle — exact index parity incl. the +inf pruned tail."""
+    codes = jax.random.randint(key, (n, K), 0, m)
+    luts = jax.random.normal(jax.random.fold_in(key, 1), (nq, K, m))
+    crude0 = ref.batched_crude_ref(codes, luts)
+    slow_luts = luts * 0.5
+    thr = jnp.quantile(crude0, q_thr, axis=1)
+    dist, idx = ops.batched_refine_topk(
+        codes, slow_luts.reshape(nq, K * m), crude0, thr, topk,
+        block_q=2, block_n=128, interpret=True)
+    full0 = crude0 + ref.batched_crude_ref(codes, slow_luts)
+    ranked0 = jnp.where(crude0 < thr[:, None], full0, jnp.inf)
+    neg, idx0 = jax.lax.top_k(-ranked0, topk)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx0))
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(-neg), atol=1e-4)
+
+
 @pytest.mark.parametrize("n,d,m", [(128, 8, 4), (3000, 48, 96),
                                    (1024, 128, 256)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
