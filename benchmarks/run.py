@@ -1,10 +1,12 @@
 """Benchmark entry point: one section per paper figure + kernel
 microbenchmarks + the batched-search engine benchmark (emits
-``BENCH_search.json`` for cross-PR perf tracking) + the roofline table
+``BENCH_search.json``) + the batched-IVF engine benchmark (emits
+``BENCH_ivf.json``) for cross-PR perf tracking + the roofline table
 (if dry-run artifacts exist).
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig3]
     PYTHONPATH=src python -m benchmarks.run --only search   # just the JSON
+    PYTHONPATH=src python -m benchmarks.run --only ivf      # BENCH_ivf.json
 """
 from __future__ import annotations
 
@@ -91,6 +93,130 @@ def search_bench(full: bool = False, *, out_path: str = "BENCH_search.json",
     return out
 
 
+def ivf_bench(full: bool = False, *, out_path: str = "BENCH_ivf.json",
+              n: int = 100_000, nq: int = 64, K: int = 8, m: int = 256,
+              num_fast: int = 2, topk: int = 50, d: int = 16,
+              n_lists: int = 256, probes=(4, 8, 16), repeats: int = 9,
+              query_chunk: int = 32, pallas_n_probe: int = 4,
+              pallas_nq: int = 8):
+    """Batched IVF engine vs the per-query ``lax.map`` IVF baseline
+    (and the flat two-step engine) on a synthetic index, written to
+    ``out_path`` for cross-PR perf tracking.
+
+    Reports us/query and recall@10 (vs exact L2 over the reconstructed
+    database) per n_probe and per shard count.  Shard rows require >1
+    visible device (CPU: XLA_FLAGS=--xla_force_host_platform_device_
+    count=N); with one device only shards=1 is recorded.
+    """
+    from repro.core import codebooks as cb
+    from repro.core.search import adc_search, recall_at, two_step_search
+    from repro.data.synthetic import make_synthetic_index
+    from repro.index import (IVFTwoStep, build_ivf, ivf_list_codes,
+                             ivf_two_step_search)
+    from repro.kernels.ref import ivf_two_step_search_looped
+
+    if full:
+        n, nq = max(n, 1_000_000), max(nq, 256)
+    key = jax.random.PRNGKey(0)
+    codes, C, structure = make_synthetic_index(key, n, d=d, K=K, m=m,
+                                               num_fast=num_fast)
+    emb_db = cb.decode(C, codes)                 # reconstructed db points
+    queries = jax.random.normal(jax.random.fold_in(key, 2), (nq, d))
+    ivf = build_ivf(jax.random.fold_in(key, 3), emb_db, n_lists)
+    slab = ivf_list_codes(ivf, codes)
+    # recall@10 vs the *full quantized ADC ranking* — isolates the IVF
+    # pruning + eq. 2 loss from quantization error (random synthetic
+    # codes make exact-L2 recall meaningless for engine comparisons)
+    gt = adc_search(queries, codes, C, 10, backend="jnp",
+                    query_chunk=32).indices
+
+    def timed(fn, *args, **kw):
+        # min-of-repeats: this container is cpu-share throttled and
+        # mean/median of few wall times swing 2-3x between runs; the
+        # minimum tracks the interference-free cost
+        res = fn(*args, **kw)                    # compile + warm
+        jax.block_until_ready(res.indices)
+        ts = []
+        for _ in range(repeats):
+            t0 = time.time()
+            jax.block_until_ready(fn(*args, **kw).indices)
+            ts.append(time.time() - t0)
+        return res, min(ts)
+
+    def row(engine, n_probe, shards, res, dt, n_run=n, nq_run=nq):
+        return dict(engine=engine, n=n_run, nq=nq_run, n_probe=n_probe,
+                    shards=shards,
+                    search_us=round(dt / nq_run * 1e6, 2),
+                    recall10=round(float(recall_at(res.indices[:, :10],
+                                                   gt[:nq_run])), 4),
+                    avg_ops=round(float(res.avg_ops), 4),
+                    pass_rate=round(float(res.pass_rate), 4))
+
+    rows = []
+    # per-query lax.map baseline (the retired formulation) at the
+    # headline probe count (8 when swept, else the largest probe)
+    headline = 8 if 8 in probes else probes[-1]
+    res_l, dt_l = timed(jax.jit(
+        lambda q: ivf_two_step_search_looped(q, codes, C, structure, ivf,
+                                             topk, headline)), queries)
+    rows.append(row("ivf_lax_map", headline, 1, res_l, dt_l))
+    # batched jnp engine across the probe sweep
+    dt_bh, recall_gap = None, None
+    for n_probe in probes:
+        res_b, dt_b = timed(jax.jit(
+            lambda q, p=n_probe: ivf_two_step_search(
+                q, codes, C, structure, ivf, topk, p, backend="jnp",
+                list_codes=slab, query_chunk=query_chunk)), queries)
+        rows.append(row("ivf_batched_jnp", n_probe, 1, res_b, dt_b))
+        if n_probe == headline:
+            dt_bh = dt_b
+            recall_gap = abs(rows[0]["recall10"] - rows[-1]["recall10"])
+    # flat two-step engine for context (the BENCH_search.json hot path)
+    res_f, dt_f = timed(jax.jit(
+        lambda q: two_step_search(q, codes, C, structure, topk,
+                                  backend="jnp")), queries)
+    rows.append(row("flat_two_step_jnp", None, 1, res_f, dt_f))
+    # pallas interpret: reduced size, correctness/overhead tracking only
+    q_s = queries[:pallas_nq]
+    res_p, dt_p = timed(
+        lambda q: ivf_two_step_search(q, codes, C, structure, ivf, topk,
+                                      pallas_n_probe, backend="pallas",
+                                      interpret=True), q_s)
+    rows.append(row("ivf_pallas_interpret", pallas_n_probe, 1, res_p, dt_p,
+                    nq_run=pallas_nq))
+    # sharded serving (needs >1 visible device)
+    n_dev = len(jax.devices())
+    if n_dev > 1:
+        mesh = jax.make_mesh((n_dev,), ("data",))
+        idx = IVFTwoStep(codes=codes, C=C, structure=structure, ivf=ivf,
+                         n_probe=headline, topk=topk,
+                         backend="jnp").shard(mesh)
+        res_s, dt_s = timed(idx.search, queries)
+        rows.append(row("ivf_batched_jnp", headline, n_dev, res_s, dt_s))
+    else:
+        print("# ivf: 1 device visible — skipping shard rows (set "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=N)",
+              flush=True)
+
+    out = dict(topk=topk, K=K, m=m, num_fast=num_fast, d=d,
+               n_lists=n_lists, imbalance=round(ivf.imbalance, 3),
+               rows=rows,
+               headline_probe=headline,
+               speedup_batched_vs_laxmap_probe8=round(dt_l / dt_bh, 3),
+               recall10_gap_probe8=round(recall_gap, 4))
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+    for r in rows:
+        print(f"ivf,{r['engine']},n={r['n']},nq={r['nq']},"
+              f"probe={r['n_probe']},shards={r['shards']},"
+              f"recall10={r['recall10']},{r['avg_ops']},{r['pass_rate']},"
+              f"{r['search_us']}", flush=True)
+    print(f"# ivf batched-vs-laxmap speedup "
+          f"{out['speedup_batched_vs_laxmap_probe8']}x (recall gap "
+          f"{out['recall10_gap_probe8']}) -> {out_path}", flush=True)
+    return out
+
+
 FIGURES = {
     "fig1": fig1_synthetic_pq.run,
     "fig2": fig2_synthetic_cq.run,
@@ -100,6 +226,7 @@ FIGURES = {
     "fig6": fig6_unseen.run,
     "beyond_ivf": beyond_ivf.run,
     "search": search_bench,
+    "ivf": ivf_bench,
 }
 
 

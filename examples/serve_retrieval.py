@@ -1,13 +1,22 @@
-"""Retrieval serving with the batched two-step engine: the whole query
+"""Retrieval serving with the unified index layer: the whole query
 batch goes through one fused dispatch (quant.serve_icq.build_ann_engine
--> core.search two-step, DESIGN.md §3.5) instead of a per-query loop.
+-> repro.index, DESIGN.md §7) instead of a per-query loop.
+
+--index picks the implementation: "two-step" (exhaustive ICQ),
+"flat" (one-step ADC baseline), or "ivf" (coarse-partitioned ICQ —
+probes --probe of --lists inverted lists per query).  --shards N
+serves the index sharded over an N-way data mesh (per-shard top-k +
+global merge; ids identical to single-device) — on CPU run under
+XLA_FLAGS=--xla_force_host_platform_device_count=N.
 
 backend="jnp" is the vectorized reference; backend="pallas" runs the
-(query-tile x point-tile) fused kernels — interpret mode on CPU (slow
-but bit-faithful), the MXU path on a TPU backend.
+fused (query-tile x point/candidate-tile) kernels — interpret mode on
+CPU (slow but bit-faithful), the MXU path on a TPU backend.
 
     PYTHONPATH=src python examples/serve_retrieval.py --queries 32
-    PYTHONPATH=src python examples/serve_retrieval.py --backend pallas
+    PYTHONPATH=src python examples/serve_retrieval.py --index ivf --probe 8
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+        python examples/serve_retrieval.py --index ivf --shards 4
 """
 import argparse
 import time
@@ -26,6 +35,11 @@ def main():
     ap.add_argument("--topk", type=int, default=50)
     ap.add_argument("--backend", default="jnp",
                     choices=["auto", "jnp", "pallas"])
+    ap.add_argument("--index", default="two-step",
+                    choices=["flat", "two-step", "ivf"])
+    ap.add_argument("--shards", type=int, default=1)
+    ap.add_argument("--lists", type=int, default=64)
+    ap.add_argument("--probe", type=int, default=8)
     args = ap.parse_args()
 
     xtr, ytr, xte, yte = make_table1_dataset("dataset3")
@@ -34,8 +48,20 @@ def main():
     print("fitting index...")
     model = fit(jax.random.PRNGKey(0), xtr, ytr, cfg, mode="icq", epochs=5)
 
+    mesh = None
+    if args.shards > 1:
+        if len(jax.devices()) < args.shards:
+            raise SystemExit(
+                f"--shards {args.shards} needs that many devices; on CPU "
+                "set XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{args.shards}")
+        mesh = jax.make_mesh((args.shards,), ("data",))
+    emb_db = model.embed(xtr) if args.index == "ivf" else None
     engine = build_ann_engine(model.codes, model.C, model.structure,
-                              topk=args.topk, backend=args.backend)
+                              topk=args.topk, backend=args.backend,
+                              index=args.index, mesh=mesh, emb_db=emb_db,
+                              n_lists=args.lists, n_probe=args.probe,
+                              key=jax.random.PRNGKey(1))
     nq = args.queries
     emb_q = model.embed(xte[:nq])
     res = engine(emb_q)                            # compile + warm
@@ -48,7 +74,8 @@ def main():
     mapv = float(mean_average_precision(res.indices, ytr, yte[:nq]))
     K = cfg.num_codebooks
     print(f"{nq} queries in {dt * 1e3:.1f} ms "
-          f"({dt / nq * 1e3:.2f} ms/q, backend={args.backend})")
+          f"({dt / nq * 1e3:.2f} ms/q, index={args.index}, "
+          f"backend={args.backend}, shards={args.shards})")
     print(f"MAP={mapv:.4f}  pass_rate={float(res.pass_rate):.3f}  "
           f"avg_ops={float(res.avg_ops):.2f}/{K}")
 

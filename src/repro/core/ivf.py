@@ -1,93 +1,15 @@
-"""IVF (inverted-file) coarse partitioning composed with ICQ — the
-beyond-paper extension production ANN systems (FAISS/ScaNN-style) layer
-on top of any quantizer.
+"""IVF x ICQ composition — thin re-export of ``repro.index.ivf``
+(DESIGN.md §7).
 
-A coarse k-means splits the database into ``n_lists`` cells; a query
-visits only the ``n_probe`` nearest cells and runs the ICQ two-step
-search over those candidates.  Ops per query drop by another
-~n_lists/n_probe on top of ICQ's crude-test pruning; the paper's
-Average-Ops metric generalizes to
-
-    ops = coarse_scan (n_lists dots) / n
-          + probed_frac * (|K_fast| + pass_rate * (K - |K_fast|))
-
-Static shapes for TPU: lists are padded to the max list length (pad id
--1, masked) — the memory overhead is the classic IVF imbalance factor,
-reported by ``build_ivf``.
+The per-query ``lax.map`` formulation this module used to hold was
+retired in favor of the batched candidate-gather engine; it survives as
+the oracle/baseline ``kernels/ref.py::ivf_two_step_search_looped``.
+``ivf_two_step_search`` keeps its call signature (now with the
+``backend`` / ``refine_cap`` engine options of the unified dispatch).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from repro.index.ivf import (IVFIndex, IVFTwoStep, build_ivf,  # noqa: F401
+                             ivf_two_step_search)
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import codebooks as cb
-from repro.core import search as srch
-
-
-class IVFIndex(NamedTuple):
-    centroids: jnp.ndarray       # (n_lists, d)
-    lists: jnp.ndarray           # (n_lists, max_len) int32 db ids, -1 pad
-    list_lens: jnp.ndarray       # (n_lists,)
-    imbalance: float             # max_len / (n / n_lists)
-
-
-def build_ivf(key, emb_db, n_lists: int, kmeans_iters: int = 20) -> IVFIndex:
-    cent, ids = cb.kmeans(key, emb_db, n_lists, iters=kmeans_iters)
-    import numpy as np
-    ids_np = np.asarray(ids)
-    buckets = [np.where(ids_np == l)[0] for l in range(n_lists)]
-    max_len = max(max(len(b) for b in buckets), 1)
-    lists = np.full((n_lists, max_len), -1, np.int32)
-    for l, b in enumerate(buckets):
-        lists[l, : len(b)] = b
-    lens = np.asarray([len(b) for b in buckets], np.int32)
-    n = emb_db.shape[0]
-    return IVFIndex(centroids=cent, lists=jnp.asarray(lists),
-                    list_lens=jnp.asarray(lens),
-                    imbalance=float(max_len / max(n / n_lists, 1)))
-
-
-def ivf_two_step_search(queries, codes, C, structure, ivf: IVFIndex,
-                        topk: int, n_probe: int):
-    """IVF + ICQ two-step.  Returns core.search.SearchResult with the
-    generalized ops accounting."""
-    K = C.shape[0]
-    fast = structure.fast_mask
-    sigma = structure.sigma
-    kf = jnp.sum(fast.astype(jnp.float32))
-    n_lists, max_len = ivf.lists.shape
-    n = codes.shape[0]
-
-    def one(q):
-        # coarse probe: nearest n_probe centroids
-        d2c = (jnp.sum(jnp.square(ivf.centroids - q[None]), axis=-1))
-        _, probes = jax.lax.top_k(-d2c, n_probe)             # (n_probe,)
-        cand_ids = ivf.lists[probes].reshape(-1)             # (n_probe*max_len,)
-        valid = cand_ids >= 0
-        safe_ids = jnp.where(valid, cand_ids, 0)
-        cand_codes = codes[safe_ids]                         # (nc, K)
-
-        lut = srch.build_lut(q, C)
-        crude = srch.lut_sum(lut, cand_codes, fast)
-        crude = jnp.where(valid, crude, jnp.inf)
-        neg_c, boot = jax.lax.top_k(-crude, topk)
-        full_boot = srch.lut_sum(lut, cand_codes[boot])
-        far = jnp.argmax(jnp.where(jnp.isfinite(-neg_c), full_boot, -jnp.inf))
-        t = crude[boot[far]]
-        passed = crude < t + sigma                           # eq. 2
-        slow = srch.lut_sum(lut, cand_codes, ~fast)
-        ranked = jnp.where(passed & valid, crude + slow, jnp.inf)
-        neg, idx = jax.lax.top_k(-ranked, topk)
-        n_cand = jnp.sum(valid.astype(jnp.float32))
-        n_pass = jnp.sum((passed & valid).astype(jnp.float32))
-        return safe_ids[idx], -neg, n_cand, n_pass
-
-    ids, dist, n_cand, n_pass = jax.lax.map(one, queries)
-    probed_frac = jnp.mean(n_cand) / n
-    pass_rate = jnp.mean(n_pass) / jnp.maximum(jnp.mean(n_cand), 1.0)
-    coarse = n_lists / n                                     # dots per point
-    avg_ops = coarse * K / 2 + probed_frac * (kf + pass_rate * (K - kf))
-    # (coarse dots cost ~d mults each ~ K/2 LUT-adds-equivalent at m=2d)
-    return srch.SearchResult(ids, dist, avg_ops, pass_rate)
+__all__ = ["IVFIndex", "IVFTwoStep", "build_ivf", "ivf_two_step_search"]

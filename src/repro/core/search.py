@@ -1,311 +1,35 @@
-"""Two-step similarity search (paper §3.4) + evaluation metrics.
+"""Two-step similarity search — thin re-export of the unified index
+layer (``repro.index``, DESIGN.md §7).
 
-Asymmetric distance computation (ADC): for query q the per-codebook LUT
+The engine implementations moved to ``repro.index``:
 
-    T[k, j] = ||c_{k,j}||^2 - 2 <q, c_{k,j}>
+  index/base.py   SearchResult, build_lut / lut_sum ADC primitives,
+                  backend resolution, query chunking, exact_search,
+                  MAP / recall metrics
+  index/flat.py   adc_search, two_step_search (jnp | pallas | auto
+                  dispatch, optional refine_cap compaction), FlatADC /
+                  TwoStep index classes
+  index/ivf.py    batched IVF composition (see core/ivf.py shim)
 
-gives  ||q - xbar||^2 = ||q||^2 + sum_k T[k, b_k] + (cross terms).  With
-the CQ constant-inner-product constraint the cross terms are a dataset
-constant, and after ICQ's hard projection the fast/slow groups are
-exactly orthogonal — so ranking by the LUT sum is ranking by distance.
-
-Two-step search (TPU-native dense adaptation, DESIGN.md §3):
-  phase 1: crude distance = LUT sum over the |K_fast| fast codebooks for
-           all n points; bootstrap a threshold t from the full distance
-           of the top-`topk` crude candidates;
-  phase 2: points with  crude < t + sigma  (eq. 2) are refined with the
-           remaining K - |K_fast| codebooks; everything else is pruned.
-
-This module is the *dispatch layer* over two batched engines
-(DESIGN.md §3.5):
-
-  backend="jnp"     fully vectorized reference — batched ``build_lut``,
-                    one ``take_along_axis`` gather per LUT sum, batched
-                    ``top_k`` over the whole query block (no per-query
-                    ``lax.map``).  Optionally chunked over queries
-                    (``query_chunk``) to bound the (nq, n) working set.
-  backend="pallas"  the fused (query-tile x point-tile) kernels in
-                    ``kernels/batched_search.py``: LUT tiles pinned in
-                    VMEM, each codes tile streamed from HBM once per
-                    query tile, eq. 2 test + slow-codebook refine +
-                    top-k merge fused in-kernel.
-  backend="auto"    "pallas" on TPU backends, "jnp" elsewhere.
-
-Database codes are stored packed (uint8 for m <= 256, core.encode.
-pack_codes) and widened to int32 only at the engine boundary — 4x less
-HBM traffic per streamed codes tile.
-
-"Average Ops" — the paper's speed metric (Figs. 1-5) — counts LUT adds
-per point:  |K_fast| + pass_rate * (K - |K_fast|), vs always-K for
-ADC baselines.  The analytic count is exact for the dense formulation
-and measurable identically on CPU and TPU.
+This module keeps the historical import surface
+(``from repro.core import search as srch``) stable; new code should
+import from ``repro.index`` directly.
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional
+from repro.index.base import (SearchResult, build_lut,  # noqa: F401
+                              chunked_over_queries, exact_search, lut_sum,
+                              mean_average_precision, recall_at,
+                              resolve_backend)
+from repro.index.flat import (adc_search, two_step_search,  # noqa: F401
+                              two_step_search_compact)
 
-import jax
-import jax.numpy as jnp
+# historical private aliases, kept for callers that reached into them
+_resolve_backend = resolve_backend
+_chunked_over_queries = chunked_over_queries
 
-from repro.core import codebooks as cb
-
-
-# ----------------------------------------------------------------- LUTs ----
-
-def build_lut(q, C):
-    """Per-query ADC tables.  q: (d,) or (nq,d); C: (K,m,d) -> (.., K, m)."""
-    sq = cb.codeword_sq_norms(C)                             # (K,m)
-    if q.ndim == 1:
-        return sq - 2.0 * jnp.einsum("d,kmd->km", q, C)
-    return sq[None] - 2.0 * jnp.einsum("qd,kmd->qkm", q, C)
-
-
-def lut_sum(lut, codes, cb_mask=None):
-    """Sum selected LUT entries — one vectorized ``take_along_axis``
-    gather (vmap/batch friendly; no Python loop over codebooks).
-
-    Shapes:
-      lut (K,m),    codes (n,K)     -> (n,)
-      lut (nq,K,m), codes (n,K)     -> (nq, n)   shared database codes
-      lut (nq,K,m), codes (nq,t,K)  -> (nq, t)   per-query candidate codes
-
-    ``cb_mask``: optional (K,) bool — restrict to a codebook subset
-    (the fast group for crude distances).
-    """
-    codes = codes.astype(jnp.int32)
-    if cb_mask is not None:
-        lut = lut * cb_mask[:, None].astype(lut.dtype)
-    if lut.ndim == 3 and codes.ndim == 2:
-        # batched LUTs against the shared database codes: accumulate one
-        # (nq, n) gather per codebook (lax.scan over K) instead of
-        # materializing the (nq, K, n) gather, which blows the cache at
-        # serving sizes (~4x slower measured at nq=64, n=100k)
-        def step(acc, lut_and_codes):
-            lut_k, codes_k = lut_and_codes               # (nq,m), (n,)
-            return acc + jnp.take(lut_k, codes_k, axis=1), None
-        acc0 = jnp.zeros((lut.shape[0], codes.shape[0]), lut.dtype)
-        acc, _ = jax.lax.scan(step, acc0,
-                              (jnp.swapaxes(lut, 0, 1), codes.T))
-        return acc
-    idx = jnp.swapaxes(codes, -1, -2)                        # (..., K, n)
-    parts = jnp.take_along_axis(lut, idx, axis=-1)           # (..., K, n)
-    return jnp.sum(parts, axis=-2)
-
-
-# -------------------------------------------------------------- searches ----
-
-class SearchResult(NamedTuple):
-    indices: jnp.ndarray     # (nq, topk) database ids, nearest first
-    distances: jnp.ndarray   # (nq, topk) LUT-sum distances (monotone in L2)
-    avg_ops: jnp.ndarray     # scalar — average LUT adds per database point
-    pass_rate: jnp.ndarray   # scalar — fraction refined (phase-2 survivors)
-
-
-def _resolve_backend(backend: str) -> str:
-    if backend == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "jnp"
-    if backend not in ("jnp", "pallas"):
-        raise ValueError(f"unknown search backend {backend!r}")
-    return backend
-
-
-def exact_search(queries, X, topk: int):
-    """Brute-force L2 ground truth.  queries: (nq,d), X: (n,d)."""
-    d2 = (jnp.sum(jnp.square(queries), -1)[:, None]
-          - 2.0 * queries @ X.T + jnp.sum(jnp.square(X), -1)[None, :])
-    neg, idx = jax.lax.top_k(-d2, topk)
-    return idx, -neg
-
-
-def _chunked_over_queries(fn, queries, query_chunk: Optional[int]):
-    """Apply the vectorized ``fn`` to query blocks of ``query_chunk`` (a
-    working-set bound for huge batches); None = one block."""
-    if query_chunk is None or queries.shape[0] <= query_chunk:
-        return fn(queries)
-    nq = queries.shape[0]
-    pad = (-nq) % query_chunk
-    qp = jnp.pad(queries, ((0, pad), (0, 0)))
-    blocks = qp.reshape(-1, query_chunk, queries.shape[1])
-    outs = jax.lax.map(fn, blocks)
-    return jax.tree.map(
-        lambda a: a.reshape((-1,) + a.shape[2:])[:nq], outs)
-
-
-def adc_search(queries, codes, C, topk: int, *, backend: str = "auto",
-               block_q: int = 64, block_n: int = 512, interpret=None,
-               query_chunk: Optional[int] = None):
-    """Baseline one-step ADC: full K-codebook LUT sum for every point,
-    batched over the whole query block."""
-    K, m = C.shape[0], C.shape[1]
-    be = _resolve_backend(backend)
-
-    if be == "pallas":
-        # codes stay packed into the kernel (widened per-tile in VMEM)
-        from repro.kernels import ops
-
-        def one_block(qs):
-            luts = build_lut(qs, C)
-            _, vals, ids = ops.batched_crude_topk(
-                codes, luts.reshape(qs.shape[0], K * m), topk,
-                block_q=block_q, block_n=block_n, interpret=interpret,
-                want_crude=False)
-            return ids, vals
-    else:
-        codes = codes.astype(jnp.int32)              # widen packed codes
-
-        def one_block(qs):
-            luts = build_lut(qs, C)                  # (nq,K,m)
-            dist = lut_sum(luts, codes)              # (nq,n)
-            neg, ids = jax.lax.top_k(-dist, topk)
-            return ids, -neg
-
-    idx, vals = _chunked_over_queries(one_block, queries, query_chunk)
-    return SearchResult(idx, vals, jnp.asarray(float(K)), jnp.asarray(1.0))
-
-
-def _eq2_passed(luts, codes, crude, topk: int, sigma):
-    """Eq. 2 margin test, shared by the jnp engines: bootstrap the
-    neighbor list from the crude top-k, rank it by full distance; the
-    threshold compares *crude vs crude of the furthest list element*
-    plus the margin sigma.  Returns the (nq, n) pass mask."""
-    neg_c, cand = jax.lax.top_k(-crude, topk)            # (nq,topk)
-    cand_codes = jnp.take(codes, cand, axis=0)           # (nq,topk,K)
-    full_cand = lut_sum(luts, cand_codes)                # (nq,topk)
-    far = jnp.argmax(full_cand, axis=1)                  # (nq,)
-    t = -jnp.take_along_axis(neg_c, far[:, None], axis=1)[:, 0]
-    return crude < (t + sigma)[:, None]
-
-
-def _two_step_block_jnp(qs, codes, C, fast, sigma, topk: int):
-    """Vectorized two-step over one query block.  Returns
-    (idx (nq,topk), dist (nq,topk), passed_frac (nq,))."""
-    luts = build_lut(qs, C)                              # (nq,K,m)
-    crude = lut_sum(luts, codes, fast)                   # (nq,n)
-    passed = _eq2_passed(luts, codes, crude, topk, sigma)
-    # refine passers only; pruned points are excluded from the ranking
-    slow = lut_sum(luts, codes, ~fast)
-    ranked = jnp.where(passed, crude + slow, jnp.inf)
-    neg, idx = jax.lax.top_k(-ranked, topk)
-    return idx, -neg, jnp.mean(passed.astype(jnp.float32), axis=1)
-
-
-def _two_step_pallas(queries, codes, C, fast, sigma, topk: int,
-                     block_q: int, block_n: int, interpret):
-    """Fused-kernel two-step: phase-1 crude + candidate top-k in one
-    kernel, tiny candidate refinement in jnp, fused phase-2 kernel."""
-    from repro.kernels import ops
-    nq = queries.shape[0]
-    K, m = C.shape[0], C.shape[1]
-    luts = build_lut(queries, C)                         # (nq,K,m)
-    fast_f = fast.astype(luts.dtype)[None, :, None]
-    lut_fast = (luts * fast_f).reshape(nq, K * m)
-    lut_slow = (luts * (1.0 - fast_f)).reshape(nq, K * m)
-
-    crude, cand_vals, cand_idx = ops.batched_crude_topk(
-        codes, lut_fast, topk, block_q=block_q, block_n=block_n,
-        interpret=interpret)
-    # threshold bootstrap on the (nq, topk) candidate set — tiny, jnp
-    cand_codes = jnp.take(codes, cand_idx, axis=0)       # (nq,topk,K)
-    full_cand = cand_vals + lut_sum(luts, cand_codes, ~fast)
-    far = jnp.argmax(full_cand, axis=1)
-    t = jnp.take_along_axis(cand_vals, far[:, None], axis=1)[:, 0]
-    thr = t + sigma                                      # (nq,)
-
-    dist, idx = ops.batched_refine_topk(
-        codes, lut_slow, crude, thr, topk, block_q=block_q,
-        block_n=block_n, interpret=interpret)
-    passed_frac = jnp.mean((crude < thr[:, None]).astype(jnp.float32), axis=1)
-    return idx, dist, passed_frac
-
-
-def two_step_search(queries, codes, C, structure, topk: int, *,
-                    backend: str = "auto", block_q: int = 64,
-                    block_n: int = 512, interpret=None,
-                    query_chunk: Optional[int] = None):
-    """ICQ two-step search (eq. 2 crude test -> eq. 1 refinement),
-    batched over the whole query block.
-
-    structure: core.icq.ICQStructure (xi, fast_mask, sigma).
-    backend:   "jnp" | "pallas" | "auto" (pallas on TPU) — see module
-               docstring; both produce identical rankings.
-    """
-    K = C.shape[0]
-    fast = structure.fast_mask
-    sigma = structure.sigma
-    kf = jnp.sum(fast.astype(jnp.float32))
-    be = _resolve_backend(backend)
-
-    if be == "pallas":
-        # codes stay packed into the kernels (widened per-tile in VMEM);
-        # query_chunk bounds the dense (chunk, n) crude matrix here too
-        fn = functools.partial(_two_step_pallas, codes=codes, C=C,
-                               fast=fast, sigma=sigma, topk=topk,
-                               block_q=block_q, block_n=block_n,
-                               interpret=interpret)
-    else:
-        fn = functools.partial(_two_step_block_jnp,
-                               codes=codes.astype(jnp.int32), C=C,
-                               fast=fast, sigma=sigma, topk=topk)
-    idx, dist, pf = _chunked_over_queries(fn, queries, query_chunk)
-    pass_rate = jnp.mean(pf)
-    avg_ops = kf + pass_rate * (K - kf)
-    return SearchResult(idx, dist, avg_ops, pass_rate)
-
-
-def two_step_search_compact(queries, codes, C, structure, topk: int,
-                            refine_cap: int, *,
-                            query_chunk: Optional[int] = None):
-    """Two-step search with an explicit survivor compaction (the TPU
-    execution shape): at most ``refine_cap`` survivors per query are
-    gathered and refined — a static-shape bound on phase-2 work.
-
-    Semantically identical to ``two_step_search`` whenever the number of
-    passers <= refine_cap; with a smaller cap it keeps the refine_cap
-    *best crude* survivors (a quality/throughput dial for serving).
-    """
-    K = C.shape[0]
-    fast = structure.fast_mask
-    sigma = structure.sigma
-    kf = jnp.sum(fast.astype(jnp.float32))
-    codes = codes.astype(jnp.int32)
-
-    def one_block(qs):
-        luts = build_lut(qs, C)
-        crude = lut_sum(luts, codes, fast)
-        passed = _eq2_passed(luts, codes, crude, topk, sigma)
-        # compact: best-crude survivors first, capped
-        masked = jnp.where(passed, crude, jnp.inf)
-        neg_s, surv = jax.lax.top_k(-masked, refine_cap)
-        valid = jnp.isfinite(-neg_s)
-        surv_codes = jnp.take(codes, surv, axis=0)       # (nq,cap,K)
-        full_surv = lut_sum(luts, surv_codes)
-        ranked = jnp.where(valid, full_surv, jnp.inf)
-        neg, pos = jax.lax.top_k(-ranked, topk)
-        idx = jnp.take_along_axis(surv, pos, axis=1)
-        return idx, -neg, jnp.mean(passed.astype(jnp.float32), axis=1)
-
-    idx, dist, pf = _chunked_over_queries(one_block, queries, query_chunk)
-    pass_rate = jnp.mean(pf)
-    avg_ops = kf + pass_rate * (K - kf)
-    return SearchResult(idx, dist, avg_ops, pass_rate)
-
-
-# --------------------------------------------------------------- metrics ----
-
-def mean_average_precision(retrieved_ids, db_labels, query_labels):
-    """Label-based MAP (the paper's metric): a retrieved point is relevant
-    iff it shares the query's class.  retrieved_ids: (nq, R)."""
-    rel = (db_labels[retrieved_ids] == query_labels[:, None]).astype(jnp.float32)
-    ranks = jnp.arange(1, rel.shape[1] + 1, dtype=jnp.float32)[None, :]
-    cum = jnp.cumsum(rel, axis=1)
-    prec_at = cum / ranks
-    denom = jnp.maximum(jnp.sum(rel, axis=1), 1.0)
-    ap = jnp.sum(prec_at * rel, axis=1) / denom
-    return jnp.mean(ap)
-
-
-def recall_at(retrieved_ids, true_ids):
-    """Fraction of true nearest neighbors recovered.  Both (nq, R)."""
-    hits = (retrieved_ids[:, :, None] == true_ids[:, None, :]).any(axis=1)
-    return jnp.mean(hits.astype(jnp.float32))
+__all__ = [
+    "SearchResult", "build_lut", "lut_sum", "adc_search", "exact_search",
+    "two_step_search", "two_step_search_compact", "mean_average_precision",
+    "recall_at", "resolve_backend", "chunked_over_queries",
+]

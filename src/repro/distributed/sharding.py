@@ -45,6 +45,24 @@ def axis_size(mesh: Mesh, name: str) -> int:
     return mesh.shape[name] if name in mesh.axis_names else 1
 
 
+def shard_map_compat(fn, mesh, in_specs, out_specs):
+    """``jax.shard_map`` across the jax versions this repo meets: the
+    top-level API with ``check_vma`` (newer), with ``check_rep``, or the
+    ``jax.experimental.shard_map`` fallback.  Replication checking is
+    disabled uniformly — our regions end in all_gather/psum so outputs
+    *are* replicated, which older checkers cannot always prove."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:
+            return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 def maybe(axis, dim: int, mesh: Mesh):
     """Shard `dim` over `axis` only if it divides evenly."""
     if axis is None:

@@ -1,0 +1,49 @@
+"""Unified index layer (DESIGN.md §7): one ``Index`` protocol
+(``build``/``search``/``shard``), three implementations, one backend
+dispatch.
+
+    from repro.index import make_index
+    idx = make_index("ivf", codes, C, structure, emb_db=emb,
+                     n_lists=256, n_probe=8)
+    idx = idx.shard(mesh)                 # optional: data-parallel serve
+    result = idx.search(queries)          # SearchResult
+
+``core.search`` and ``core.ivf`` re-export everything here for
+backward compatibility; new code should import from ``repro.index``.
+"""
+from repro.index.base import (Index, SearchResult, build_lut,
+                              chunked_over_queries, exact_search, lut_sum,
+                              mean_average_precision, recall_at,
+                              resolve_backend)
+from repro.index.flat import (FlatADC, TwoStep, adc_search, two_step_search,
+                              two_step_search_compact)
+from repro.index.ivf import (IVFIndex, IVFTwoStep, build_ivf,
+                             ivf_list_codes, ivf_two_step_search)
+
+INDEX_KINDS = {
+    "flat": FlatADC,
+    "two-step": TwoStep,
+    "ivf": IVFTwoStep,
+}
+
+
+def make_index(kind: str, codes, C, structure=None, **opts):
+    """Build an index by name: "flat" (one-step ADC), "two-step"
+    (exhaustive ICQ), or "ivf" (coarse-partitioned ICQ; needs
+    ``emb_db=`` and optionally ``key=``, ``n_lists=``)."""
+    try:
+        cls = INDEX_KINDS[kind]
+    except KeyError:
+        raise ValueError(f"unknown index kind {kind!r}; "
+                         f"expected one of {sorted(INDEX_KINDS)}") from None
+    return cls.build(codes, C, structure, **opts)
+
+
+__all__ = [
+    "Index", "SearchResult", "FlatADC", "TwoStep", "IVFTwoStep",
+    "IVFIndex", "INDEX_KINDS", "make_index", "adc_search",
+    "two_step_search", "two_step_search_compact", "ivf_two_step_search",
+    "build_ivf", "ivf_list_codes", "build_lut", "lut_sum", "exact_search",
+    "chunked_over_queries", "resolve_backend", "mean_average_precision",
+    "recall_at",
+]

@@ -1,0 +1,153 @@
+"""Index-layer foundations: the ``Index`` protocol, the shared
+``SearchResult`` record, ADC LUT primitives, backend resolution, query
+chunking, exact ground truth, and retrieval metrics (DESIGN.md §7).
+
+Every concrete index (``flat.FlatADC``, ``flat.TwoStep``,
+``ivf.IVFTwoStep``) speaks the same three-verb protocol:
+
+    build(...)            -> Index      classmethod constructor
+    search(queries, topk) -> SearchResult
+    shard(mesh)           -> Index      mesh-sharded serving clone
+
+so serving entries (``quant/serve_icq.build_ann_engine``,
+``launch/serve.py --ann``) select an index kind by name and never touch
+engine internals.  All implementations route through the same
+``jnp | pallas | auto`` backend dispatch.
+
+The ADC math lives here (moved from ``core/search.py``, which is now a
+thin re-export): per-query LUTs ``T[k, j] = ||c_{k,j}||^2 - 2 <q,
+c_{k,j}>`` and their masked sums — ranking by the LUT sum is ranking by
+L2 distance after ICQ's hard projection (cross terms constant).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+
+class SearchResult(NamedTuple):
+    indices: jnp.ndarray     # (nq, topk) database ids, nearest first
+    distances: jnp.ndarray   # (nq, topk) LUT-sum distances (monotone in L2)
+    avg_ops: jnp.ndarray     # scalar — average LUT adds per database point
+    pass_rate: jnp.ndarray   # scalar — fraction refined (phase-2 survivors)
+
+
+@runtime_checkable
+class Index(Protocol):
+    """The unified index protocol (DESIGN.md §7)."""
+
+    def search(self, queries, topk: Optional[int] = None) -> SearchResult:
+        ...
+
+    def shard(self, mesh) -> "Index":
+        ...
+
+
+# ----------------------------------------------------------------- LUTs ----
+
+def build_lut(q, C):
+    """Per-query ADC tables.  q: (d,) or (nq,d); C: (K,m,d) -> (.., K, m)."""
+    # lazy: repro.core re-exports this module's names, so a module-level
+    # import here would cycle when repro.index is imported first
+    from repro.core import codebooks as cb
+    sq = cb.codeword_sq_norms(C)                             # (K,m)
+    if q.ndim == 1:
+        return sq - 2.0 * jnp.einsum("d,kmd->km", q, C)
+    return sq[None] - 2.0 * jnp.einsum("qd,kmd->qkm", q, C)
+
+
+def lut_sum(lut, codes, cb_mask=None):
+    """Sum selected LUT entries — one vectorized ``take_along_axis``
+    gather (vmap/batch friendly; no Python loop over codebooks).
+
+    Shapes:
+      lut (K,m),    codes (n,K)     -> (n,)
+      lut (nq,K,m), codes (n,K)     -> (nq, n)   shared database codes
+      lut (nq,K,m), codes (nq,t,K)  -> (nq, t)   per-query candidate codes
+
+    ``cb_mask``: optional (K,) bool — restrict to a codebook subset
+    (the fast group for crude distances).
+    """
+    codes = codes.astype(jnp.int32)
+    if cb_mask is not None:
+        lut = lut * cb_mask[:, None].astype(lut.dtype)
+    if lut.ndim == 3 and codes.ndim == 2:
+        # batched LUTs against the shared database codes: accumulate one
+        # (nq, n) gather per codebook (lax.scan over K) instead of
+        # materializing the (nq, K, n) gather, which blows the cache at
+        # serving sizes (~4x slower measured at nq=64, n=100k)
+        def step(acc, lut_and_codes):
+            lut_k, codes_k = lut_and_codes               # (nq,m), (n,)
+            return acc + jnp.take(lut_k, codes_k, axis=1), None
+        acc0 = jnp.zeros((lut.shape[0], codes.shape[0]), lut.dtype)
+        acc, _ = jax.lax.scan(step, acc0,
+                              (jnp.swapaxes(lut, 0, 1), codes.T))
+        return acc
+    idx = jnp.swapaxes(codes, -1, -2)                        # (..., K, n)
+    parts = jnp.take_along_axis(lut, idx, axis=-1)           # (..., K, n)
+    return jnp.sum(parts, axis=-2)
+
+
+# ------------------------------------------------------------- dispatch ----
+
+def resolve_backend(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"unknown search backend {backend!r}")
+    return backend
+
+
+def chunked_over_queries(fn, queries, query_chunk: Optional[int]):
+    """Apply the vectorized ``fn`` to query blocks of ``query_chunk`` (a
+    working-set bound for huge batches); None = one block."""
+    if query_chunk is None or queries.shape[0] <= query_chunk:
+        return fn(queries)
+    nq = queries.shape[0]
+    pad = (-nq) % query_chunk
+    qp = jnp.pad(queries, ((0, pad), (0, 0)))
+    blocks = qp.reshape(-1, query_chunk, queries.shape[1])
+    outs = jax.lax.map(fn, blocks)
+    return jax.tree.map(
+        lambda a: a.reshape((-1,) + a.shape[2:])[:nq], outs)
+
+
+def exact_search(queries, X, topk: int, *,
+                 query_chunk: Optional[int] = None):
+    """Brute-force L2 ground truth.  queries: (nq,d), X: (n,d).
+
+    ``query_chunk`` bounds the dense (nq, n) distance matrix to
+    (query_chunk, n) blocks — ground-truth computation at benchmark
+    sizes (nq x n = 64 x 1M) OOMs without it.
+    """
+    xsq = jnp.sum(jnp.square(X), -1)[None, :]
+
+    def one_block(qs):
+        d2 = (jnp.sum(jnp.square(qs), -1)[:, None]
+              - 2.0 * qs @ X.T + xsq)
+        neg, idx = jax.lax.top_k(-d2, topk)
+        return idx, -neg
+
+    return chunked_over_queries(one_block, queries, query_chunk)
+
+
+# --------------------------------------------------------------- metrics ----
+
+def mean_average_precision(retrieved_ids, db_labels, query_labels):
+    """Label-based MAP (the paper's metric): a retrieved point is relevant
+    iff it shares the query's class.  retrieved_ids: (nq, R)."""
+    rel = (db_labels[retrieved_ids] == query_labels[:, None]).astype(jnp.float32)
+    ranks = jnp.arange(1, rel.shape[1] + 1, dtype=jnp.float32)[None, :]
+    cum = jnp.cumsum(rel, axis=1)
+    prec_at = cum / ranks
+    denom = jnp.maximum(jnp.sum(rel, axis=1), 1.0)
+    ap = jnp.sum(prec_at * rel, axis=1) / denom
+    return jnp.mean(ap)
+
+
+def recall_at(retrieved_ids, true_ids):
+    """Fraction of true nearest neighbors recovered.  Both (nq, R)."""
+    hits = (retrieved_ids[:, :, None] == true_ids[:, None, :]).any(axis=1)
+    return jnp.mean(hits.astype(jnp.float32))

@@ -1,0 +1,275 @@
+"""Flat (exhaustive) indexes: one-step ADC and the ICQ two-step engine.
+
+Both scan every database point; ``TwoStep`` prunes refinement work with
+the paper's eq. 2 margin test.  The engine implementations moved here
+from ``core/search.py`` (now a thin re-export) as part of the unified
+index layer (DESIGN.md §7); behavior and backends are unchanged:
+
+  backend="jnp"     fully vectorized reference — batched ``build_lut``,
+                    one ``take_along_axis`` gather per LUT sum, batched
+                    ``top_k`` over the whole query block (no per-query
+                    ``lax.map``).  Optionally chunked over queries
+                    (``query_chunk``) to bound the (nq, n) working set.
+  backend="pallas"  the fused (query-tile x point-tile) kernels in
+                    ``kernels/batched_search.py``: LUT tiles pinned in
+                    VMEM, each codes tile streamed from HBM once per
+                    query tile, eq. 2 test + slow-codebook refine +
+                    top-k merge fused in-kernel.
+  backend="auto"    "pallas" on TPU backends, "jnp" elsewhere.
+
+``two_step_search`` folds the static survivor compaction that used to be
+a separate entry (``two_step_search_compact``) into the dispatch as the
+``refine_cap`` engine option: at most ``refine_cap`` best-crude
+survivors per query are gathered and refined — a static-shape bound on
+phase-2 work (jnp engine only; the fused kernels bound phase-2 memory
+with the in-kernel top-k merge instead).
+
+Database codes are stored packed (uint8 for m <= 256, core.encode.
+pack_codes) and widened to int32 only at the engine boundary — 4x less
+HBM traffic per streamed codes tile.
+
+"Average Ops" — the paper's speed metric (Figs. 1-5) — counts LUT adds
+per point:  |K_fast| + pass_rate * (K - |K_fast|), vs always-K for
+ADC baselines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.index.base import (SearchResult, build_lut, chunked_over_queries,
+                              lut_sum, resolve_backend)
+
+
+# -------------------------------------------------------------- engines ----
+
+def adc_search(queries, codes, C, topk: int, *, backend: str = "auto",
+               block_q: int = 64, block_n: int = 512, interpret=None,
+               query_chunk: Optional[int] = None):
+    """Baseline one-step ADC: full K-codebook LUT sum for every point,
+    batched over the whole query block."""
+    K, m = C.shape[0], C.shape[1]
+    be = resolve_backend(backend)
+
+    if be == "pallas":
+        # codes stay packed into the kernel (widened per-tile in VMEM)
+        from repro.kernels import ops
+
+        def one_block(qs):
+            luts = build_lut(qs, C)
+            _, vals, ids = ops.batched_crude_topk(
+                codes, luts.reshape(qs.shape[0], K * m), topk,
+                block_q=block_q, block_n=block_n, interpret=interpret,
+                want_crude=False)
+            return ids, vals
+    else:
+        codes = codes.astype(jnp.int32)              # widen packed codes
+
+        def one_block(qs):
+            luts = build_lut(qs, C)                  # (nq,K,m)
+            dist = lut_sum(luts, codes)              # (nq,n)
+            neg, ids = jax.lax.top_k(-dist, topk)
+            return ids, -neg
+
+    idx, vals = chunked_over_queries(one_block, queries, query_chunk)
+    return SearchResult(idx, vals, jnp.asarray(float(K)), jnp.asarray(1.0))
+
+
+def _eq2_passed(luts, codes, crude, topk: int, sigma):
+    """Eq. 2 margin test, shared by the jnp engines: bootstrap the
+    neighbor list from the crude top-k, rank it by full distance; the
+    threshold compares *crude vs crude of the furthest list element*
+    plus the margin sigma.  Returns the (nq, n) pass mask."""
+    neg_c, cand = jax.lax.top_k(-crude, topk)            # (nq,topk)
+    cand_codes = jnp.take(codes, cand, axis=0)           # (nq,topk,K)
+    full_cand = lut_sum(luts, cand_codes)                # (nq,topk)
+    far = jnp.argmax(full_cand, axis=1)                  # (nq,)
+    t = -jnp.take_along_axis(neg_c, far[:, None], axis=1)[:, 0]
+    return crude < (t + sigma)[:, None]
+
+
+def _two_step_block_jnp(qs, codes, C, fast, sigma, topk: int):
+    """Vectorized two-step over one query block.  Returns
+    (idx (nq,topk), dist (nq,topk), passed_frac (nq,))."""
+    luts = build_lut(qs, C)                              # (nq,K,m)
+    crude = lut_sum(luts, codes, fast)                   # (nq,n)
+    passed = _eq2_passed(luts, codes, crude, topk, sigma)
+    # refine passers only; pruned points are excluded from the ranking
+    slow = lut_sum(luts, codes, ~fast)
+    ranked = jnp.where(passed, crude + slow, jnp.inf)
+    neg, idx = jax.lax.top_k(-ranked, topk)
+    return idx, -neg, jnp.mean(passed.astype(jnp.float32), axis=1)
+
+
+def _two_step_block_compact(qs, codes, C, fast, sigma, topk: int,
+                            refine_cap: int):
+    """Two-step with the static survivor compaction: the refine_cap best
+    crude survivors are gathered and refined by full LUT sum."""
+    luts = build_lut(qs, C)
+    crude = lut_sum(luts, codes, fast)
+    passed = _eq2_passed(luts, codes, crude, topk, sigma)
+    # compact: best-crude survivors first, capped
+    masked = jnp.where(passed, crude, jnp.inf)
+    neg_s, surv = jax.lax.top_k(-masked, refine_cap)
+    valid = jnp.isfinite(-neg_s)
+    surv_codes = jnp.take(codes, surv, axis=0)           # (nq,cap,K)
+    full_surv = lut_sum(luts, surv_codes)
+    ranked = jnp.where(valid, full_surv, jnp.inf)
+    neg, pos = jax.lax.top_k(-ranked, topk)
+    idx = jnp.take_along_axis(surv, pos, axis=1)
+    return idx, -neg, jnp.mean(passed.astype(jnp.float32), axis=1)
+
+
+def _two_step_pallas(queries, codes, C, fast, sigma, topk: int,
+                     block_q: int, block_n: int, interpret):
+    """Fused-kernel two-step: phase-1 crude + candidate top-k in one
+    kernel, tiny candidate refinement in jnp, fused phase-2 kernel."""
+    from repro.kernels import ops
+    nq = queries.shape[0]
+    K, m = C.shape[0], C.shape[1]
+    luts = build_lut(queries, C)                         # (nq,K,m)
+    fast_f = fast.astype(luts.dtype)[None, :, None]
+    lut_fast = (luts * fast_f).reshape(nq, K * m)
+    lut_slow = (luts * (1.0 - fast_f)).reshape(nq, K * m)
+
+    crude, cand_vals, cand_idx = ops.batched_crude_topk(
+        codes, lut_fast, topk, block_q=block_q, block_n=block_n,
+        interpret=interpret)
+    # threshold bootstrap on the (nq, topk) candidate set — tiny, jnp
+    cand_codes = jnp.take(codes, cand_idx, axis=0)       # (nq,topk,K)
+    full_cand = cand_vals + lut_sum(luts, cand_codes, ~fast)
+    far = jnp.argmax(full_cand, axis=1)
+    t = jnp.take_along_axis(cand_vals, far[:, None], axis=1)[:, 0]
+    thr = t + sigma                                      # (nq,)
+
+    dist, idx = ops.batched_refine_topk(
+        codes, lut_slow, crude, thr, topk, block_q=block_q,
+        block_n=block_n, interpret=interpret)
+    passed_frac = jnp.mean((crude < thr[:, None]).astype(jnp.float32), axis=1)
+    return idx, dist, passed_frac
+
+
+def two_step_search(queries, codes, C, structure, topk: int, *,
+                    backend: str = "auto", block_q: int = 64,
+                    block_n: int = 512, interpret=None,
+                    query_chunk: Optional[int] = None,
+                    refine_cap: Optional[int] = None):
+    """ICQ two-step search (eq. 2 crude test -> eq. 1 refinement),
+    batched over the whole query block.
+
+    structure:  core.icq.ICQStructure (xi, fast_mask, sigma).
+    backend:    "jnp" | "pallas" | "auto" (pallas on TPU) — see module
+                docstring; both produce identical rankings.
+    refine_cap: optional static survivor compaction (jnp engine): at
+                most this many best-crude survivors are refined.
+                Semantically identical to the dense ranking whenever the
+                survivor count <= refine_cap; a smaller cap is a
+                quality/throughput dial for serving.
+    """
+    K = C.shape[0]
+    fast = structure.fast_mask
+    sigma = structure.sigma
+    kf = jnp.sum(fast.astype(jnp.float32))
+    be = resolve_backend(backend)
+
+    if be == "pallas":
+        if refine_cap is not None:
+            raise ValueError("refine_cap compaction requires backend='jnp'"
+                             " (the fused kernels bound phase-2 work with"
+                             " the in-kernel top-k merge instead)")
+        # codes stay packed into the kernels (widened per-tile in VMEM);
+        # query_chunk bounds the dense (chunk, n) crude matrix here too
+        fn = functools.partial(_two_step_pallas, codes=codes, C=C,
+                               fast=fast, sigma=sigma, topk=topk,
+                               block_q=block_q, block_n=block_n,
+                               interpret=interpret)
+    elif refine_cap is not None:
+        fn = functools.partial(_two_step_block_compact,
+                               codes=codes.astype(jnp.int32), C=C,
+                               fast=fast, sigma=sigma, topk=topk,
+                               refine_cap=min(max(refine_cap, topk),
+                                              codes.shape[0]))
+    else:
+        fn = functools.partial(_two_step_block_jnp,
+                               codes=codes.astype(jnp.int32), C=C,
+                               fast=fast, sigma=sigma, topk=topk)
+    idx, dist, pf = chunked_over_queries(fn, queries, query_chunk)
+    pass_rate = jnp.mean(pf)
+    avg_ops = kf + pass_rate * (K - kf)
+    return SearchResult(idx, dist, avg_ops, pass_rate)
+
+
+def two_step_search_compact(queries, codes, C, structure, topk: int,
+                            refine_cap: int, *,
+                            query_chunk: Optional[int] = None):
+    """Back-compat wrapper: the survivor compaction is now the
+    ``refine_cap`` option of ``two_step_search``'s dispatch."""
+    return two_step_search(queries, codes, C, structure, topk,
+                           backend="jnp", query_chunk=query_chunk,
+                           refine_cap=refine_cap)
+
+
+# -------------------------------------------------------------- indexes ----
+
+@dataclasses.dataclass(frozen=True)
+class FlatADC:
+    """One-step exhaustive ADC index (baseline; no pruning)."""
+    codes: jnp.ndarray                  # (n, K) packed
+    C: jnp.ndarray                      # (K, m, d)
+    topk: int = 50
+    backend: str = "auto"
+    block_q: int = 64
+    block_n: int = 512
+    interpret: Optional[bool] = None
+    query_chunk: Optional[int] = None
+
+    @classmethod
+    def build(cls, codes, C, structure=None, **opts) -> "FlatADC":
+        return cls(codes=codes, C=C, **opts)
+
+    def search(self, queries, topk: Optional[int] = None) -> SearchResult:
+        return adc_search(queries, self.codes, self.C,
+                          topk if topk is not None else self.topk,
+                          backend=self.backend, block_q=self.block_q,
+                          block_n=self.block_n, interpret=self.interpret,
+                          query_chunk=self.query_chunk)
+
+    def shard(self, mesh):
+        from repro.index.sharded import ShardedFlatADC
+        return ShardedFlatADC(self, mesh)
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoStep:
+    """Exhaustive ICQ two-step index (eq. 2 pruning, optional
+    ``refine_cap`` compaction)."""
+    codes: jnp.ndarray                  # (n, K) packed
+    C: jnp.ndarray                      # (K, m, d)
+    structure: object                   # core.icq.ICQStructure
+    topk: int = 50
+    backend: str = "auto"
+    block_q: int = 64
+    block_n: int = 512
+    interpret: Optional[bool] = None
+    query_chunk: Optional[int] = None
+    refine_cap: Optional[int] = None
+
+    @classmethod
+    def build(cls, codes, C, structure, **opts) -> "TwoStep":
+        return cls(codes=codes, C=C, structure=structure, **opts)
+
+    def search(self, queries, topk: Optional[int] = None) -> SearchResult:
+        return two_step_search(queries, self.codes, self.C, self.structure,
+                               topk if topk is not None else self.topk,
+                               backend=self.backend, block_q=self.block_q,
+                               block_n=self.block_n, interpret=self.interpret,
+                               query_chunk=self.query_chunk,
+                               refine_cap=self.refine_cap)
+
+    def shard(self, mesh):
+        from repro.index.sharded import ShardedTwoStep
+        return ShardedTwoStep(self, mesh)

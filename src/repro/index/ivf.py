@@ -1,0 +1,352 @@
+"""IVF (inverted-file) coarse partitioning composed with ICQ — the
+paper's path to sub-linear query cost, batched for serving traffic
+(DESIGN.md §7).
+
+A coarse k-means splits the database into ``n_lists`` cells; a query
+visits only the ``n_probe`` nearest cells and runs the ICQ two-step
+search over those candidates.  Ops per query drop by another
+~n_lists/n_probe on top of ICQ's crude-test pruning; the paper's
+Average-Ops metric generalizes to
+
+    ops = coarse_scan (n_lists dots) / n
+          + probed_frac * (|K_fast| + pass_rate * (K - |K_fast|))
+
+The batched engine (vs the retired per-query ``lax.map`` formulation,
+kept as ``kernels/ref.py::ivf_two_step_search_looped``):
+
+  1. coarse-probe the whole query block at once: one (nq, n_lists)
+     distance matmul + batched ``top_k`` -> probes (nq, n_probe);
+  2. gather the padded candidate slab: ``lists[probes]`` flattens to
+     (nq, nc = n_probe * max_len) global ids (-1 pad) and one codes
+     gather yields (nq, nc, K) — *still packed* uint8; codes widen only
+     at the LUT-sum / kernel boundary;
+  3. run the batched crude -> eq. 2 -> refine pipeline over the slab:
+     backend="jnp" mirrors ``flat.two_step_search`` (with the optional
+     static ``refine_cap`` compaction), backend="pallas" reuses the
+     (query-tile x candidate-tile) fused kernels over the gathered slab
+     (``kernels/batched_search.py`` ivf_* variants).
+
+Static shapes for TPU: lists are padded to the max list length (pad id
+-1, masked) — the memory overhead is the classic IVF imbalance factor,
+reported by ``build_ivf``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index.base import (SearchResult, build_lut, chunked_over_queries,
+                              lut_sum, resolve_backend)
+
+
+class IVFIndex(NamedTuple):
+    centroids: jnp.ndarray       # (n_lists, d)
+    lists: jnp.ndarray           # (n_lists, max_len) int32 db ids, -1 pad
+    list_lens: jnp.ndarray       # (n_lists,)
+    imbalance: float             # max_len / (n / n_lists)
+
+
+def build_ivf(key, emb_db, n_lists: int, kmeans_iters: int = 20) -> IVFIndex:
+    """Coarse k-means partition of ``emb_db`` into padded inverted lists.
+
+    List entries are int32 *global database ids* (pad -1): gathering
+    ``codes[lists[probes]]`` keeps the candidate codes in their stored
+    packed dtype (uint8 for m <= 256) all the way to the LUT-sum /
+    kernel boundary — the gather never widens.
+    """
+    from repro.core import codebooks as cb
+
+    n = int(emb_db.shape[0])
+    if n_lists < 1:
+        raise ValueError(f"n_lists must be >= 1, got {n_lists}")
+    if n == 0:
+        raise ValueError("cannot build an IVF over an empty database")
+    # k-means cannot seed more centroids than points: fit the real
+    # count and pad the remaining rows with a far-away sentinel (huge
+    # but finite, so probe distances stay ordered, never NaN) over
+    # permanently empty lists
+    k_eff = min(n_lists, n)
+    cent, ids = cb.kmeans(key, emb_db, k_eff, iters=kmeans_iters)
+    if k_eff < n_lists:
+        pad = jnp.full((n_lists - k_eff, cent.shape[1]), 1e15,
+                       cent.dtype)
+        cent = jnp.concatenate([cent, pad], axis=0)
+    ids_np = np.asarray(ids)
+    buckets = [np.where(ids_np == l)[0] for l in range(n_lists)]
+    # max over bucket lengths is 0 when every bucket is empty (k-means
+    # collapse / n_lists > n leaves stragglers); keep max_len >= 1 so
+    # the padded layout stays well-formed with all-(-1) rows
+    max_len = max(max((len(b) for b in buckets), default=0), 1)
+    lists = np.full((n_lists, max_len), -1, np.int32)
+    for l, b in enumerate(buckets):
+        lists[l, : len(b)] = b
+    lens = np.asarray([len(b) for b in buckets], np.int32)
+    return IVFIndex(centroids=cent, lists=jnp.asarray(lists),
+                    list_lens=jnp.asarray(lens),
+                    imbalance=float(max_len / max(n / n_lists, 1)))
+
+
+# -------------------------------------------------------------- engines ----
+
+def coarse_probe(qs, centroids, n_probe: int):
+    """Nearest-``n_probe`` centroid ids for a query block: one (nq,
+    n_lists) distance matmul + batched top_k.  Returns (nq, n_probe)."""
+    d2c = (jnp.sum(jnp.square(centroids), -1)[None, :]
+           - 2.0 * qs @ centroids.T)                     # + ||q||^2 const
+    _, probes = jax.lax.top_k(-d2c, n_probe)
+    return probes
+
+
+def ivf_list_codes(ivf: "IVFIndex", codes):
+    """Move the packed codes *inside* the inverted lists: one padded
+    (n_lists, max_len, K) slab in the stored dtype (pad rows repeat
+    codes[0]; validity rides on the id slab).  Serving then gathers
+    contiguous list rows per probe instead of scattered database rows —
+    measurably faster and the layout the sharded engine serves from."""
+    return jnp.take(codes, jnp.maximum(ivf.lists, 0), axis=0)
+
+
+def gather_candidates(probes, lists, codes, topk: int, list_codes=None):
+    """Flatten the probed lists into the per-query candidate slab.
+
+    Returns (cand_ids (nq, nc), valid (nq, nc), cand_codes (nq, nc, K)
+    in the *stored* packed dtype).  ``list_codes`` (from
+    ``ivf_list_codes``) switches the codes gather to contiguous list
+    rows; values are identical either way.  The slab is right-padded
+    with invalid columns up to ``topk`` so downstream top_k calls always
+    have enough columns.
+    """
+    nq = probes.shape[0]
+    cand_ids = lists[probes].reshape(nq, -1)             # (nq, nc)
+    if list_codes is not None:
+        cand_codes = list_codes[probes].reshape(
+            nq, cand_ids.shape[1], -1)                   # contiguous rows
+    if cand_ids.shape[1] < topk:                         # tiny-slab guard
+        pad = topk - cand_ids.shape[1]
+        cand_ids = jnp.pad(cand_ids, ((0, 0), (0, pad)),
+                           constant_values=-1)
+    valid = cand_ids >= 0
+    safe = jnp.where(valid, cand_ids, 0)
+    if list_codes is None:
+        cand_codes = jnp.take(codes, safe, axis=0)       # packed dtype kept
+    elif cand_codes.shape[1] < cand_ids.shape[1]:
+        cand_codes = jnp.pad(
+            cand_codes,
+            ((0, 0), (0, cand_ids.shape[1] - cand_codes.shape[1]), (0, 0)))
+    return cand_ids, valid, cand_codes
+
+
+def _ivf_bootstrap_threshold(luts, crude, cand_codes, topk: int, sigma):
+    """Eq. 2 threshold over the candidate slab: bootstrap the neighbor
+    list from the crude top-k (slab may hold fewer than topk valid
+    candidates — invalid entries rank +inf and are excluded from the
+    far-element argmax).  Returns thr (nq,)."""
+    neg_c, cand = jax.lax.top_k(-crude, topk)            # (nq, topk)
+    cand_top = jnp.take_along_axis(
+        cand_codes, cand[:, :, None], axis=1)            # (nq, topk, K)
+    full_cand = lut_sum(luts, cand_top)
+    far = jnp.argmax(jnp.where(jnp.isfinite(-neg_c), full_cand, -jnp.inf),
+                     axis=1)
+    t = -jnp.take_along_axis(neg_c, far[:, None], axis=1)[:, 0]
+    return t + sigma
+
+
+def _ivf_block_jnp(qs, codes, C, fast, sigma, topk: int, centroids, lists,
+                   n_probe: int, refine_cap: Optional[int],
+                   list_codes=None):
+    """Batched IVF two-step over one query block.  Returns (ids
+    (nq,topk), dist (nq,topk), n_cand (nq,), n_pass (nq,))."""
+    luts = build_lut(qs, C)                              # (nq, K, m)
+    probes = coarse_probe(qs, centroids, n_probe)
+    cand_ids, valid, cand_codes = gather_candidates(probes, lists, codes,
+                                                    topk, list_codes)
+    safe = jnp.where(valid, cand_ids, 0)
+
+    # one unrolled pass over the K (static, small) codebooks feeds both
+    # the crude and the slow accumulators via per-codebook (nq, nc)
+    # gathers — never materializing the (nq, K, nc) parts tensor (which
+    # blows the cache at serving slab sizes) or a transposed codes copy;
+    # masking the gathered value == masking the LUT before the gather
+    fvals = fast.astype(luts.dtype)                          # (K,)
+    need_slow = refine_cap is None
+    nq, nc = cand_ids.shape
+    crude = jnp.zeros((nq, nc), luts.dtype)
+    slow = jnp.zeros((nq, nc), luts.dtype)
+    for k in range(luts.shape[1]):
+        v = jnp.take_along_axis(
+            luts[:, k, :], cand_codes[:, :, k].astype(jnp.int32), axis=1)
+        crude = crude + fvals[k] * v
+        if need_slow:
+            slow = slow + (1.0 - fvals[k]) * v
+    crude = jnp.where(valid, crude, jnp.inf)
+    thr = _ivf_bootstrap_threshold(luts, crude, cand_codes, topk, sigma)
+    passed = crude < thr[:, None]                        # invalid -> inf -> F
+
+    if refine_cap is None:
+        ranked = jnp.where(passed, crude + slow, jnp.inf)
+        neg, pos = jax.lax.top_k(-ranked, topk)
+    else:
+        # clamp into [topk, nc]: the slab is padded to >= topk columns
+        cap = min(max(refine_cap, topk), crude.shape[1])
+        masked = jnp.where(passed, crude, jnp.inf)
+        neg_s, surv = jax.lax.top_k(-masked, cap)        # slab positions
+        alive = jnp.isfinite(-neg_s)
+        surv_codes = jnp.take_along_axis(cand_codes, surv[:, :, None],
+                                         axis=1)         # (nq, cap, K)
+        full_surv = lut_sum(luts, surv_codes)
+        ranked = jnp.where(alive, full_surv, jnp.inf)
+        neg, cpos = jax.lax.top_k(-ranked, topk)
+        pos = jnp.take_along_axis(surv, cpos, axis=1)
+    ids = jnp.take_along_axis(safe, pos, axis=1)
+    n_cand = jnp.sum(valid.astype(jnp.float32), axis=1)
+    n_pass = jnp.sum(passed.astype(jnp.float32), axis=1)
+    return ids, -neg, n_cand, n_pass
+
+
+def _ivf_block_pallas(qs, codes, C, fast, sigma, topk: int, centroids,
+                      lists, n_probe: int, block_q: int, block_n: int,
+                      interpret, list_codes=None):
+    """Fused-kernel batched IVF: the (query-tile x candidate-tile)
+    kernels from ``kernels/batched_search.py`` sweep the gathered slab
+    (phase-1 crude + running top-k, then fused eq. 2 + refine + top-k
+    merge); the tiny threshold bootstrap stays in jnp."""
+    from repro.kernels import ops
+    nq = qs.shape[0]
+    K, m = C.shape[0], C.shape[1]
+    luts = build_lut(qs, C)
+    probes = coarse_probe(qs, centroids, n_probe)
+    cand_ids, valid, cand_codes = gather_candidates(probes, lists, codes,
+                                                    topk, list_codes)
+    safe = jnp.where(valid, cand_ids, 0)
+    fast_f = fast.astype(luts.dtype)[None, :, None]
+    lut_fast = (luts * fast_f).reshape(nq, K * m)
+    lut_slow = (luts * (1.0 - fast_f)).reshape(nq, K * m)
+
+    crude, cand_vals, cand_pos = ops.ivf_crude_topk(
+        cand_codes, cand_ids, lut_fast, topk, block_q=block_q,
+        block_n=block_n, interpret=interpret)
+    # threshold bootstrap on the (nq, topk) crude candidates — tiny, jnp
+    ok = jnp.isfinite(cand_vals)
+    pos_safe = jnp.where(ok, cand_pos, 0)
+    cand_top = jnp.take_along_axis(cand_codes, pos_safe[:, :, None], axis=1)
+    full_cand = cand_vals + lut_sum(luts, cand_top, ~fast)
+    far = jnp.argmax(jnp.where(ok, full_cand, -jnp.inf), axis=1)
+    t = jnp.take_along_axis(cand_vals, far[:, None], axis=1)[:, 0]
+    thr = t + sigma
+
+    dist, pos = ops.ivf_refine_topk(
+        cand_codes, lut_slow, crude, thr, topk, block_q=block_q,
+        block_n=block_n, interpret=interpret)
+    # merged positions are always real slab columns (the slab is padded
+    # to >= topk columns); clip only guards the take_along_axis bounds
+    ids = jnp.take_along_axis(
+        safe, jnp.minimum(pos, safe.shape[1] - 1), axis=1)
+    n_cand = jnp.sum(valid.astype(jnp.float32), axis=1)
+    n_pass = jnp.sum((crude < thr[:, None]).astype(jnp.float32), axis=1)
+    return ids, dist, n_cand, n_pass
+
+
+def ivf_ops_result(ids, dist, n_cand, n_pass, *, n: int, n_lists: int,
+                   K, kf) -> SearchResult:
+    """Fold per-query candidate/pass counts into the generalized
+    Average-Ops accounting shared by every IVF engine."""
+    probed_frac = jnp.mean(n_cand) / n
+    pass_rate = jnp.mean(n_pass) / jnp.maximum(jnp.mean(n_cand), 1.0)
+    coarse = n_lists / n                                 # dots per point
+    avg_ops = coarse * K / 2 + probed_frac * (kf + pass_rate * (K - kf))
+    # (coarse dots cost ~d mults each ~ K/2 LUT-adds-equivalent at m=2d)
+    return SearchResult(ids, dist, avg_ops, pass_rate)
+
+
+def ivf_two_step_search(queries, codes, C, structure, ivf: IVFIndex,
+                        topk: int, n_probe: int, *, backend: str = "auto",
+                        block_q: int = 4, block_n: int = 128,
+                        interpret=None, query_chunk: Optional[int] = None,
+                        refine_cap: Optional[int] = None, list_codes=None):
+    """Batched IVF + ICQ two-step.  Returns SearchResult with the
+    generalized ops accounting (see module docstring).
+
+    ``list_codes`` (optional, from ``ivf_list_codes``) serves from the
+    in-list codes slab — same results, faster gather."""
+    K = C.shape[0]
+    fast = structure.fast_mask
+    sigma = structure.sigma
+    kf = jnp.sum(fast.astype(jnp.float32))
+    n_lists = ivf.lists.shape[0]
+    n = codes.shape[0]
+    if not 1 <= n_probe <= n_lists:
+        raise ValueError(f"n_probe={n_probe} outside [1, {n_lists}]")
+    be = resolve_backend(backend)
+
+    if be == "pallas":
+        if refine_cap is not None:
+            raise ValueError("refine_cap compaction requires backend='jnp'"
+                             " (the fused kernels bound phase-2 work with"
+                             " the in-kernel top-k merge instead)")
+        fn = functools.partial(_ivf_block_pallas, codes=codes, C=C,
+                               fast=fast, sigma=sigma, topk=topk,
+                               centroids=ivf.centroids, lists=ivf.lists,
+                               n_probe=n_probe, block_q=block_q,
+                               block_n=block_n, interpret=interpret,
+                               list_codes=list_codes)
+    else:
+        fn = functools.partial(_ivf_block_jnp, codes=codes, C=C, fast=fast,
+                               sigma=sigma, topk=topk,
+                               centroids=ivf.centroids, lists=ivf.lists,
+                               n_probe=n_probe, refine_cap=refine_cap,
+                               list_codes=list_codes)
+    ids, dist, n_cand, n_pass = chunked_over_queries(fn, queries,
+                                                     query_chunk)
+    return ivf_ops_result(ids, dist, n_cand, n_pass, n=n, n_lists=n_lists,
+                          K=K, kf=kf)
+
+
+# --------------------------------------------------------------- index ----
+
+@dataclasses.dataclass(frozen=True)
+class IVFTwoStep:
+    """IVF-pruned ICQ two-step index: coarse partition probe + batched
+    candidate-slab two-step."""
+    codes: jnp.ndarray                  # (n, K) packed
+    C: jnp.ndarray                      # (K, m, d)
+    structure: object                   # core.icq.ICQStructure
+    ivf: IVFIndex
+    n_probe: int = 8
+    topk: int = 50
+    backend: str = "auto"
+    block_q: int = 4
+    block_n: int = 128
+    interpret: Optional[bool] = None
+    query_chunk: Optional[int] = None
+    refine_cap: Optional[int] = None
+    list_codes: Optional[jnp.ndarray] = None     # (n_lists, max_len, K)
+
+    @classmethod
+    def build(cls, codes, C, structure, *, emb_db, key=None,
+              n_lists: int = 64, kmeans_iters: int = 20,
+              **opts) -> "IVFTwoStep":
+        """Fit the coarse quantizer over ``emb_db`` and assemble the
+        index (codes slab moved inside the lists).  ``emb_db`` must be
+        the embeddings the codes encode."""
+        key = jax.random.PRNGKey(0) if key is None else key
+        ivf = build_ivf(key, emb_db, n_lists, kmeans_iters=kmeans_iters)
+        return cls(codes=codes, C=C, structure=structure, ivf=ivf,
+                   list_codes=ivf_list_codes(ivf, codes), **opts)
+
+    def search(self, queries, topk: Optional[int] = None) -> SearchResult:
+        return ivf_two_step_search(
+            queries, self.codes, self.C, self.structure, self.ivf,
+            topk if topk is not None else self.topk, self.n_probe,
+            backend=self.backend, block_q=self.block_q,
+            block_n=self.block_n, interpret=self.interpret,
+            query_chunk=self.query_chunk, refine_cap=self.refine_cap,
+            list_codes=self.list_codes)
+
+    def shard(self, mesh):
+        from repro.index.sharded import ShardedIVFTwoStep
+        return ShardedIVFTwoStep(self, mesh)

@@ -1,0 +1,376 @@
+"""Mesh-sharded ANN serving (DESIGN.md §7): packed codes / IVF lists
+sharded over the ``data`` mesh axis via ``shard_map``, per-shard local
+top-k, and a global merge that returns *bitwise-identical ids* to the
+single-device engines (distances agree to float-reassociation ulps:
+the SPMD-partitioned program may reassociate the LUT einsum).
+
+Merge discipline: every local top-k carries (distance, global key)
+pairs; shards ``all_gather`` their candidate lists and a two-key
+ascending ``lax.sort`` on (distance, key) reproduces ``jax.lax.top_k``'s
+lowest-index-wins tie-breaking globally.  Because each shard computes
+its columns with the same per-column arithmetic as the single-device
+engine (LUT sums reduce over K only), the merged ranking — including
+the +inf tail and the eq. 2 threshold bootstrap, which is merged
+*before* thresholding so every shard prunes against the global
+threshold — reproduces the single-device ranking exactly.
+
+The shard_map bodies are jnp-only: the ``backend`` / ``interpret`` /
+tile options of the source index apply to its single-device engines and
+are intentionally not consulted here (fused-kernel sharded serving is a
+TPU bring-up item; the dispatch makes it a local change).
+
+Layouts:
+  ShardedFlatADC / ShardedTwoStep   codes rows sharded: shard s owns
+      global rows [s*ns, (s+1)*ns); local top-k keys are global row ids.
+  ShardedIVFTwoStep                 inverted lists sharded: shard s owns
+      list rows [s*Ls, (s+1)*Ls) plus the per-list packed codes slab
+      gathered at shard time (codes live *inside* the inverted lists,
+      the classic IVF serving layout).  Probes are computed from the
+      replicated centroids; a probe slot is processed by exactly the
+      shard owning that list, every other shard masks it to
+      (+inf, id_max) so no slab position is ever contributed twice.
+      Keys are slab positions (probe-slot major) — the single-device
+      candidate order.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import shard_map_compat
+from repro.index import ivf as ivf_mod
+from repro.index.base import SearchResult, build_lut, lut_sum
+
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _put(mesh, x, spec):
+    return jax.device_put(x, NamedSharding(mesh, spec))
+
+
+def _pad_rows(x, rows, fill=0):
+    if x.shape[0] == rows:
+        return x
+    pad = [(0, rows - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad, constant_values=fill)
+
+
+def _gather_sorted(cols, axis_name: str, num_keys: int = 2):
+    """all_gather each (nq, k) operand along the shard axis and two-key
+    sort ascending — the global merge primitive.  Returns the sorted
+    (nq, D*k) operands."""
+    gathered = tuple(jax.lax.all_gather(c, axis_name, axis=1, tiled=True)
+                     for c in cols)
+    return jax.lax.sort(gathered, dimension=1, num_keys=num_keys)
+
+
+def _data_size(mesh) -> int:
+    return mesh.shape["data"]
+
+
+# ------------------------------------------------------------- flat ADC ----
+
+class ShardedFlatADC:
+    """Row-sharded one-step ADC: local full LUT sums + local top-k,
+    merged by (distance, global row id)."""
+
+    def __init__(self, base, mesh):
+        self.mesh = mesh
+        self.C = _put(mesh, base.C, P())
+        n = base.codes.shape[0]
+        D = _data_size(mesh)
+        self.n = n
+        self.ns = -(-n // D)
+        self.topk = base.topk
+        self.codes = _put(mesh, _pad_rows(base.codes, D * self.ns),
+                          P("data"))
+        self._fns = {}
+
+    def _fn(self, topk: int):
+        if topk in self._fns:
+            return self._fns[topk]
+        C, n, ns = self.C, self.n, self.ns
+        K = C.shape[0]
+        k_loc = min(topk, ns)
+
+        def body(qs, codes_shard):
+            off = jax.lax.axis_index("data") * ns
+            luts = build_lut(qs, C)
+            dist = lut_sum(luts, codes_shard)              # (nq, ns)
+            gids = off + jnp.arange(ns, dtype=jnp.int32)
+            dist = jnp.where(gids[None, :] < n, dist, jnp.inf)
+            neg, li = jax.lax.top_k(-dist, k_loc)
+            mv, mg = _gather_sorted((-neg, jnp.take(gids, li)), "data")
+            return mg[:, :topk], mv[:, :topk]
+
+        fn = jax.jit(shard_map_compat(
+            body, self.mesh, in_specs=(P(), P("data")),
+            out_specs=(P(), P())))
+        self._fns[topk] = fn
+        return fn
+
+    def search(self, queries, topk: Optional[int] = None) -> SearchResult:
+        topk = self.topk if topk is None else topk
+        idx, dist = self._fn(topk)(queries, self.codes)
+        K = self.C.shape[0]
+        return SearchResult(idx, dist, jnp.asarray(float(K)),
+                            jnp.asarray(1.0))
+
+    def shard(self, mesh):
+        raise ValueError("index is already sharded")
+
+
+# ------------------------------------------------------------- two-step ----
+
+class ShardedTwoStep:
+    """Row-sharded ICQ two-step.  The eq. 2 threshold is bootstrapped
+    from the *merged* global crude top-k (each shard refines its local
+    crude candidates, shards exchange (crude, gid, full) triples), so
+    every shard prunes against the exact single-device threshold."""
+
+    def __init__(self, base, mesh):
+        self.mesh = mesh
+        self.C = _put(mesh, base.C, P())
+        self.structure = base.structure
+        n = base.codes.shape[0]
+        D = _data_size(mesh)
+        self.n = n
+        self.ns = -(-n // D)
+        self.topk = base.topk
+        self.codes = _put(mesh, _pad_rows(base.codes, D * self.ns),
+                          P("data"))
+        self._fns = {}
+
+    def _fn(self, topk: int):
+        if topk in self._fns:
+            return self._fns[topk]
+        C, n, ns = self.C, self.n, self.ns
+        fast = self.structure.fast_mask
+        sigma = self.structure.sigma
+        k_loc = min(topk, ns)
+
+        def body(qs, codes_shard):
+            off = jax.lax.axis_index("data") * ns
+            luts = build_lut(qs, C)
+            crude = lut_sum(luts, codes_shard, fast)       # (nq, ns)
+            gids = off + jnp.arange(ns, dtype=jnp.int32)
+            crude = jnp.where(gids[None, :] < n, crude, jnp.inf)
+
+            # phase 1: local crude top-k + local full distances, merged
+            # globally before the threshold bootstrap
+            neg_c, li = jax.lax.top_k(-crude, k_loc)
+            cand_codes = jnp.take(codes_shard, li, axis=0)
+            full_cand = lut_sum(luts, cand_codes)          # (nq, k_loc)
+            sv, _, sf = _gather_sorted(
+                (-neg_c, jnp.take(gids, li), full_cand), "data")
+            sv, sf = sv[:, :topk], sf[:, :topk]
+            far = jnp.argmax(sf, axis=1)
+            t = jnp.take_along_axis(sv, far[:, None], axis=1)[:, 0]
+            thr = t + sigma
+
+            # phase 2: prune against the global threshold, local refine
+            # top-k, merge by (full distance, global id)
+            passed = crude < thr[:, None]
+            slow = lut_sum(luts, codes_shard, ~fast)
+            ranked = jnp.where(passed, crude + slow, jnp.inf)
+            neg, li2 = jax.lax.top_k(-ranked, k_loc)
+            mv, mg = _gather_sorted((-neg, jnp.take(gids, li2)), "data")
+            pf = jax.lax.psum(
+                jnp.sum(passed.astype(jnp.float32), axis=1), "data") / n
+            return mg[:, :topk], mv[:, :topk], pf
+
+        fn = jax.jit(shard_map_compat(
+            body, self.mesh, in_specs=(P(), P("data")),
+            out_specs=(P(), P(), P())))
+        self._fns[topk] = fn
+        return fn
+
+    def search(self, queries, topk: Optional[int] = None) -> SearchResult:
+        topk = self.topk if topk is None else topk
+        idx, dist, pf = self._fn(topk)(queries, self.codes)
+        K = self.C.shape[0]
+        kf = jnp.sum(self.structure.fast_mask.astype(jnp.float32))
+        pass_rate = jnp.mean(pf)
+        return SearchResult(idx, dist, kf + pass_rate * (K - kf), pass_rate)
+
+    def shard(self, mesh):
+        raise ValueError("index is already sharded")
+
+
+# ------------------------------------------------------------------ IVF ----
+
+class ShardedIVFTwoStep:
+    """List-sharded batched IVF: shard s owns list rows
+    [s*Ls, (s+1)*Ls) and their packed codes slab.  Candidate keys are
+    slab positions (probe-slot major), identical to the single-device
+    candidate order, so the merged ranking is bitwise-equal."""
+
+    def __init__(self, base, mesh):
+        # copy fields rather than retaining base: the sharded clone must
+        # not pin the replicated codes/slab arrays for its lifetime
+        self.mesh = mesh
+        self.C = _put(mesh, base.C, P())
+        self.structure = base.structure
+        self.centroids = _put(mesh, base.ivf.centroids, P())
+        n_lists, max_len = base.ivf.lists.shape
+        D = _data_size(mesh)
+        self.n = base.codes.shape[0]
+        self.n_lists = n_lists
+        self.max_len = max_len
+        self.Ls = -(-n_lists // D)
+        self.n_probe = base.n_probe
+        self.topk = base.topk
+        self.refine_cap = base.refine_cap
+        lists_p = _pad_rows(base.ivf.lists, D * self.Ls, fill=-1)
+        # codes live inside the inverted lists (ivf_list_codes slab) so
+        # serving never touches the flat codes array; pad rows are
+        # all-invalid (validity rides on the id slab)
+        slab = (base.list_codes if base.list_codes is not None
+                else ivf_mod.ivf_list_codes(base.ivf, base.codes))
+        slab = _pad_rows(slab, D * self.Ls)
+        self.lists = _put(mesh, lists_p, P("data"))
+        self.list_codes = _put(mesh, slab, P("data"))
+        self._fns = {}
+
+    def _fn(self, topk: int):
+        if topk in self._fns:
+            return self._fns[topk]
+        C, centroids = self.C, self.centroids
+        fast = self.structure.fast_mask
+        sigma = self.structure.sigma
+        n_probe, Ls, max_len = self.n_probe, self.Ls, self.max_len
+        refine_cap = self.refine_cap
+        # a shard owns at most min(n_probe, Ls) of a query's probes:
+        # compact the owned probe slots into that static bound so the
+        # per-shard slab sweep is ~1/D of the single-device work (the
+        # point of partition-parallel serving), instead of scoring the
+        # full n_probe slab with non-owned columns masked
+        P_loc = min(n_probe, Ls)
+        nc0 = n_probe * max_len                  # single-device slab width
+        nc = max(nc0, topk)
+        nc_loc0 = P_loc * max_len
+        nc_loc = max(nc_loc0, topk)
+        k_loc = min(topk, nc_loc)
+        cap = (None if refine_cap is None
+               else min(max(refine_cap, topk), nc))
+        cap_loc = None if cap is None else min(cap, nc_loc)
+
+        def body(qs, lists_sh, slab_sh):
+            si = jax.lax.axis_index("data")
+            L0 = si * Ls
+            nq = qs.shape[0]
+            luts = build_lut(qs, C)
+            probes = ivf_mod.coarse_probe(qs, centroids, n_probe)
+            local = (probes >= L0) & (probes < L0 + Ls)    # (nq, n_probe)
+            # owned probe slots first, in slot order (rank = slot index
+            # for owned, n_probe for the rest; top_k of the negation)
+            slot = jnp.arange(n_probe, dtype=jnp.int32)[None, :]
+            _, sel = jax.lax.top_k(-jnp.where(local, slot, n_probe), P_loc)
+            sel_local = jnp.take_along_axis(local, sel, axis=1)
+            rows = jnp.where(
+                sel_local, jnp.take_along_axis(probes, sel, axis=1) - L0, 0)
+            ids = jnp.where(sel_local[:, :, None], lists_sh[rows], -1)
+            ids = ids.reshape(nq, nc_loc0)
+            codes = slab_sh[rows].reshape(nq, nc_loc0, -1)  # packed dtype
+            owned = jnp.repeat(sel_local, max_len, axis=1)  # (nq, nc_loc0)
+            # global slab positions (probe-slot major — the
+            # single-device candidate order) of the compacted columns
+            pos = (sel[:, :, None] * max_len
+                   + jnp.arange(max_len, dtype=jnp.int32)[None, None, :]
+                   ).reshape(nq, nc_loc0)
+            if nc_loc > nc_loc0:                 # tiny-slab pad columns
+                extra = nc_loc - nc_loc0         # (global pos nc0..nc-1,
+                ids = jnp.pad(ids, ((0, 0), (0, extra)),  # shard 0 owns)
+                              constant_values=-1)
+                codes = jnp.pad(codes, ((0, 0), (0, extra), (0, 0)))
+                owned = jnp.concatenate(
+                    [owned, jnp.broadcast_to(si == 0, (nq, extra))], axis=1)
+                pos = jnp.concatenate(
+                    [pos, jnp.broadcast_to(
+                        nc0 + jnp.arange(extra, dtype=jnp.int32)[None],
+                        (nq, extra))], axis=1)
+            valid = owned & (ids >= 0)
+            safe = jnp.where(valid, ids, 0)
+
+            crude = lut_sum(luts, codes, fast)             # (nq, nc_loc)
+            crude = jnp.where(valid, crude, jnp.inf)
+            # a slab position is contributed by its owning shard only;
+            # everywhere else it sorts dead last
+            pos_key = jnp.where(owned, pos, _I32_MAX)
+            cols = jnp.broadcast_to(
+                jnp.arange(nc_loc, dtype=jnp.int32)[None], crude.shape)
+
+            # phase 1: local (crude, pos) top-k via two-key sort; full
+            # distances only for the k_loc bootstrap candidates; global
+            # merge, then the eq. 2 threshold on the merged candidates
+            c_s, p_s, col_s = jax.lax.sort((crude, pos_key, cols),
+                                           dimension=1, num_keys=2)
+            c_s, p_s, col_s = c_s[:, :k_loc], p_s[:, :k_loc], col_s[:, :k_loc]
+            cand_codes = jnp.take_along_axis(codes, col_s[:, :, None],
+                                             axis=1)
+            full_cand = lut_sum(luts, cand_codes)          # (nq, k_loc)
+            sv, sp, sf = _gather_sorted((c_s, p_s, full_cand), "data")
+            sv, sf = sv[:, :topk], sf[:, :topk]
+            far = jnp.argmax(jnp.where(jnp.isfinite(sv), sf, -jnp.inf),
+                             axis=1)
+            t = jnp.take_along_axis(sv, far[:, None], axis=1)[:, 0]
+            thr = t + sigma
+            passed = crude < thr[:, None]
+
+            if cap is None:
+                slow = lut_sum(luts, codes, ~fast)
+                ranked = jnp.where(passed, crude + slow, jnp.inf)
+                r_s, k_s, i_s = jax.lax.sort((ranked, pos_key, safe),
+                                             dimension=1, num_keys=2)
+                mv, _, mi = _gather_sorted(
+                    (r_s[:, :k_loc], k_s[:, :k_loc], i_s[:, :k_loc]),
+                    "data")
+                dist, idx = mv[:, :topk], mi[:, :topk]
+            else:
+                # static compaction: merge the (crude, pos)-best cap
+                # survivors globally (full distances computed for the
+                # local cap_loc survivors only), then rank the compacted
+                # set by full distance (compaction-slot tie-break = the
+                # single-device top_k order)
+                masked = jnp.where(passed, crude, jnp.inf)
+                c2, p2, col2 = jax.lax.sort((masked, pos_key, cols),
+                                            dimension=1, num_keys=2)
+                c2, p2, col2 = (c2[:, :cap_loc], p2[:, :cap_loc],
+                                col2[:, :cap_loc])
+                surv_codes = jnp.take_along_axis(codes, col2[:, :, None],
+                                                 axis=1)
+                f2 = lut_sum(luts, surv_codes)             # (nq, cap_loc)
+                i2 = jnp.take_along_axis(safe, col2, axis=1)
+                gv, _, gf, gi = _gather_sorted((c2, p2, f2, i2), "data")
+                gv, gf, gi = gv[:, :cap], gf[:, :cap], gi[:, :cap]
+                ranked = jnp.where(jnp.isfinite(gv), gf, jnp.inf)
+                neg, cpos = jax.lax.top_k(-ranked, topk)
+                dist = -neg
+                idx = jnp.take_along_axis(gi, cpos, axis=1)
+
+            n_cand = jax.lax.psum(
+                jnp.sum(valid.astype(jnp.float32), axis=1), "data")
+            n_pass = jax.lax.psum(
+                jnp.sum(passed.astype(jnp.float32), axis=1), "data")
+            return idx, dist, n_cand, n_pass
+
+        fn = jax.jit(shard_map_compat(
+            body, self.mesh, in_specs=(P(), P("data"), P("data")),
+            out_specs=(P(), P(), P(), P())))
+        self._fns[topk] = fn
+        return fn
+
+    def search(self, queries, topk: Optional[int] = None) -> SearchResult:
+        topk = self.topk if topk is None else topk
+        ids, dist, n_cand, n_pass = self._fn(topk)(
+            queries, self.lists, self.list_codes)
+        K = self.C.shape[0]
+        kf = jnp.sum(self.structure.fast_mask.astype(jnp.float32))
+        return ivf_mod.ivf_ops_result(ids, dist, n_cand, n_pass, n=self.n,
+                                      n_lists=self.n_lists, K=K, kf=kf)
+
+    def shard(self, mesh):
+        raise ValueError("index is already sharded")

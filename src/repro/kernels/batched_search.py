@@ -1,4 +1,5 @@
-"""Pallas TPU kernels: batched fused two-step search (DESIGN.md §3.5).
+"""Pallas TPU kernels: batched fused two-step search (DESIGN.md §3.5)
+and the IVF candidate-slab variants (DESIGN.md §7).
 
 The serving-shaped hot path: a (query-tile x point-tile) grid where a
 tile of per-query flattened LUTs (blk_q, K*m) is pinned in VMEM for the
@@ -34,6 +35,16 @@ before the merge (the dense crude matrix is simply sliced).
 Codes enter in their *stored* packed dtype (uint8 for m <= 256) and are
 widened to int32 per-tile inside the kernel — the HBM->VMEM stream
 carries 1 byte/entry, which is the 4x traffic saving the packing is for.
+
+IVF variants (``ivf_crude_topk_pallas`` / ``ivf_refine_topk_pallas``):
+same two-phase structure, but the codes operand is the *gathered
+candidate slab* (nq, nc, K) — per-query candidates, so the distance
+tile is a batched matvec ``(blk_q, blk_n, K*m) x (blk_q, K*m)`` instead
+of the shared-codes matmul.  Candidate validity rides in as the global
+id slab (pad id -1): invalid and grid-pad columns are masked to +inf
+*in the dense crude output* so phase 2 needs no separate mask.  Top-k
+indices are slab positions (probe-slot major), mapped back to global db
+ids by the caller.
 """
 from __future__ import annotations
 
@@ -165,6 +176,158 @@ def crude_topk_pallas(codes, lut_flat, *, topk: int, block_q: int = 64,
         return crude[:nq, :n], vals[:nq], idx[:nq]
     vals, idx = outs
     return None, vals[:nq], idx[:nq]
+
+
+# ------------------------------------------------------- IVF slab kernels ----
+
+def _slab_distances(codes, lut, K: int, m: int):
+    """Per-query candidate-slab distances: codes (blk_q, blk_n, K) int32,
+    lut (blk_q, K*m) f32 -> (blk_q, blk_n) f32 via a batched
+    onehot-matvec (one MXU-shaped dot per query row).
+
+    VMEM sizing: the one-hot intermediate is blk_q * blk_n * K*m f32 —
+    unlike the shared-codes kernels there is one one-hot *per query
+    row*.  Tile sizes must keep blk_q * blk_n * K * m * 4B well under
+    VMEM (the 4 x 128 defaults give 4 MB at K=8, m=256); raising blk_q
+    is the expensive axis."""
+    blk_q, blk_n, _ = codes.shape
+    onehot = flat_onehot(codes.reshape(blk_q * blk_n, K), K, m,
+                         lut.dtype).reshape(blk_q, blk_n, K * m)
+    return jax.lax.dot_general(
+        onehot, lut, dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+
+
+def _ivf_crude_kernel(codes_ref, ids_ref, lut_ref, crude_ref, vals_ref,
+                      idx_ref, *, K: int, m: int, topk: int, nc: int,
+                      blk_n: int):
+    ni = pl.program_id(1)
+    codes = codes_ref[...].astype(jnp.int32)     # (blk_q, blk_n, K)
+    ids = ids_ref[...]                           # (blk_q, blk_n) global ids
+    lut = lut_ref[...]                           # (blk_q, K*m) fast-masked
+    crude = _slab_distances(codes, lut, K, m)
+
+    blk_q = lut.shape[0]
+    gidx = ni * blk_n + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_n), 1)
+    # invalid (-1 pad) and grid-pad columns become +inf in the *dense*
+    # output, so the refine phase inherits the mask through crude
+    masked = jnp.where((ids >= 0) & (gidx < nc), crude, jnp.inf)
+    crude_ref[...] = masked
+
+    @pl.when(ni == 0)
+    def _():
+        _init_topk(vals_ref, idx_ref)
+
+    _merge_topk(vals_ref, idx_ref, masked, gidx, topk)
+
+
+def _ivf_refine_kernel(codes_ref, lut_ref, crude_ref, thr_ref, vals_ref,
+                       idx_ref, *, K: int, m: int, topk: int, nc: int,
+                       blk_n: int):
+    ni = pl.program_id(1)
+    codes = codes_ref[...].astype(jnp.int32)
+    lut = lut_ref[...]                           # (blk_q, K*m) slow-masked
+    crude = crude_ref[...]                       # (blk_q, blk_n) inf-masked
+    thr = thr_ref[...]                           # (blk_q, 1)
+    slow = _slab_distances(codes, lut, K, m)
+    full = crude + slow                          # eq. 1 refinement
+
+    blk_q = lut.shape[0]
+    gidx = ni * blk_n + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_n), 1)
+    passed = crude < thr                         # invalid columns are +inf
+    ranked = jnp.where(passed & (gidx < nc), full, jnp.inf)
+
+    @pl.when(ni == 0)
+    def _():
+        _init_topk(vals_ref, idx_ref)
+
+    _merge_topk(vals_ref, idx_ref, ranked, gidx, topk)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("topk", "block_q", "block_n", "interpret"))
+def ivf_crude_topk_pallas(cand_codes, cand_ids, lut_flat, *, topk: int,
+                          block_q: int = 4, block_n: int = 128,
+                          interpret: bool = True):
+    """IVF phase 1 over the gathered candidate slab.
+
+    cand_codes (nq, nc, K) int (packed dtypes welcome), cand_ids
+    (nq, nc) int32 global db ids (-1 pad), lut_flat (nq, K*m) f32
+    (fast-masked) -> (crude (nq, nc) f32 with invalid columns +inf,
+    cand_vals (nq, topk) f32, cand_pos (nq, topk) i32 slab positions).
+    """
+    nq, nc, K = cand_codes.shape
+    Km = lut_flat.shape[1]
+    m = Km // K
+    nc_pad = pl.cdiv(nc, block_n) * block_n
+    nq_pad = pl.cdiv(nq, block_q) * block_q
+    grid = (nq_pad // block_q, nc_pad // block_n)
+    codes_p = jnp.pad(cand_codes, ((0, nq_pad - nq), (0, nc_pad - nc),
+                                   (0, 0)))
+    ids_p = jnp.pad(cand_ids, ((0, nq_pad - nq), (0, nc_pad - nc)),
+                    constant_values=-1)
+    crude, vals, idx = pl.pallas_call(
+        functools.partial(_ivf_crude_kernel, K=K, m=m, topk=topk, nc=nc,
+                          blk_n=block_n),
+        out_shape=(jax.ShapeDtypeStruct((nq_pad, nc_pad), jnp.float32),
+                   jax.ShapeDtypeStruct((nq_pad, topk), jnp.float32),
+                   jax.ShapeDtypeStruct((nq_pad, topk), jnp.int32)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, block_n, K), lambda qi, ni: (qi, ni, 0)),
+            pl.BlockSpec((block_q, block_n), lambda qi, ni: (qi, ni)),
+            pl.BlockSpec((block_q, Km), lambda qi, ni: (qi, 0)),   # pinned
+        ],
+        out_specs=(
+            pl.BlockSpec((block_q, block_n), lambda qi, ni: (qi, ni)),
+            pl.BlockSpec((block_q, topk), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((block_q, topk), lambda qi, ni: (qi, 0)),
+        ),
+        interpret=interpret,
+    )(codes_p, ids_p, _pad_to(lut_flat.astype(jnp.float32), nq_pad))
+    return crude[:nq, :nc], vals[:nq], idx[:nq]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("topk", "block_q", "block_n", "interpret"))
+def ivf_refine_topk_pallas(cand_codes, lut_flat, crude, thresholds, *,
+                           topk: int, block_q: int = 4, block_n: int = 128,
+                           interpret: bool = True):
+    """IVF phase 2 over the candidate slab.  cand_codes (nq, nc, K) int,
+    lut_flat (nq, K*m) f32 (slow-masked), crude (nq, nc) f32 from phase 1
+    (invalid columns +inf), thresholds (nq,) f32 = t + sigma ->
+    (dist (nq, topk) f32, pos (nq, topk) i32 slab positions)."""
+    nq, nc, K = cand_codes.shape
+    Km = lut_flat.shape[1]
+    m = Km // K
+    nc_pad = pl.cdiv(nc, block_n) * block_n
+    nq_pad = pl.cdiv(nq, block_q) * block_q
+    grid = (nq_pad // block_q, nc_pad // block_n)
+    codes_p = jnp.pad(cand_codes, ((0, nq_pad - nq), (0, nc_pad - nc),
+                                   (0, 0)))
+    crude_p = jnp.full((nq_pad, nc_pad), jnp.inf, jnp.float32)
+    crude_p = jax.lax.dynamic_update_slice(
+        crude_p, crude.astype(jnp.float32), (0, 0))
+    thr = _pad_to(jnp.asarray(thresholds, jnp.float32)[:, None], nq_pad)
+    vals, idx = pl.pallas_call(
+        functools.partial(_ivf_refine_kernel, K=K, m=m, topk=topk, nc=nc,
+                          blk_n=block_n),
+        out_shape=(jax.ShapeDtypeStruct((nq_pad, topk), jnp.float32),
+                   jax.ShapeDtypeStruct((nq_pad, topk), jnp.int32)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, block_n, K), lambda qi, ni: (qi, ni, 0)),
+            pl.BlockSpec((block_q, Km), lambda qi, ni: (qi, 0)),   # pinned
+            pl.BlockSpec((block_q, block_n), lambda qi, ni: (qi, ni)),
+            pl.BlockSpec((block_q, 1), lambda qi, ni: (qi, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_q, topk), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((block_q, topk), lambda qi, ni: (qi, 0)),
+        ),
+        interpret=interpret,
+    )(codes_p, _pad_to(lut_flat.astype(jnp.float32), nq_pad), crude_p, thr)
+    return vals[:nq], idx[:nq]
 
 
 @functools.partial(jax.jit,

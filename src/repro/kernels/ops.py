@@ -10,7 +10,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.adc import adc_pallas
-from repro.kernels.batched_search import crude_topk_pallas, refine_topk_pallas
+from repro.kernels.batched_search import (crude_topk_pallas,
+                                          ivf_crude_topk_pallas,
+                                          ivf_refine_topk_pallas,
+                                          refine_topk_pallas)
 from repro.kernels.two_step import two_step_pallas
 from repro.kernels.kmeans import kmeans_assign_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -61,6 +64,31 @@ def batched_refine_topk(codes, lut_flat, crude, thresholds, topk: int, *,
     it = _default_interpret() if interpret is None else interpret
     return refine_topk_pallas(codes, lut_flat, crude, thresholds, topk=topk,
                               block_q=block_q, block_n=block_n, interpret=it)
+
+
+def ivf_crude_topk(cand_codes, cand_ids, lut_flat, topk: int, *,
+                   block_q: int = 4, block_n: int = 128, interpret=None):
+    """IVF phase 1 over the gathered candidate slab: crude LUT sums +
+    in-kernel running top-k of crude distances (slab positions).
+
+    cand_codes (nq, nc, K) int (packed ok), cand_ids (nq, nc) int32
+    global ids (-1 pad), lut_flat (nq, K*m) f32 (fast-masked) ->
+    (crude (nq, nc) with invalid +inf, vals (nq, topk), pos (nq, topk)).
+    """
+    it = _default_interpret() if interpret is None else interpret
+    return ivf_crude_topk_pallas(cand_codes, cand_ids, lut_flat, topk=topk,
+                                 block_q=block_q, block_n=block_n,
+                                 interpret=it)
+
+
+def ivf_refine_topk(cand_codes, lut_flat, crude, thresholds, topk: int, *,
+                    block_q: int = 4, block_n: int = 128, interpret=None):
+    """IVF phase 2: fused eq. 2 test + slow-codebook sum + top-k merge
+    over the candidate slab -> (dist (nq, topk), pos (nq, topk))."""
+    it = _default_interpret() if interpret is None else interpret
+    return ivf_refine_topk_pallas(cand_codes, lut_flat, crude, thresholds,
+                                  topk=topk, block_q=block_q,
+                                  block_n=block_n, interpret=it)
 
 
 def kmeans_assign(x, cent, *, block_n: int = 1024, interpret=None):

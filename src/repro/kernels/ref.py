@@ -59,6 +59,52 @@ def two_step_search_looped(queries, codes, C, structure, topk: int):
     return srch.SearchResult(idx, dist, avg_ops, pass_rate)
 
 
+def ivf_two_step_search_looped(queries, codes, C, structure, ivf,
+                               topk: int, n_probe: int):
+    """The pre-batching per-query ``lax.map`` IVF + two-step (moved here
+    from ``core/ivf.py``) — the numerical oracle for the batched IVF
+    engine and the latency baseline in ``benchmarks/run.py ivf``.
+    Returns the same SearchResult / generalized ops accounting."""
+    from repro.core import search as srch
+    from repro.index.ivf import ivf_ops_result
+
+    K = C.shape[0]
+    fast = structure.fast_mask
+    sigma = structure.sigma
+    kf = jnp.sum(fast.astype(jnp.float32))
+    n_lists = ivf.lists.shape[0]
+    n = codes.shape[0]
+
+    def one(q):
+        # coarse probe: nearest n_probe centroids
+        d2c = jnp.sum(jnp.square(ivf.centroids - q[None]), axis=-1)
+        _, probes = jax.lax.top_k(-d2c, n_probe)             # (n_probe,)
+        cand_ids = ivf.lists[probes].reshape(-1)             # (n_probe*len,)
+        valid = cand_ids >= 0
+        safe_ids = jnp.where(valid, cand_ids, 0)
+        cand_codes = codes[safe_ids]                         # (nc, K)
+
+        lut = srch.build_lut(q, C)
+        crude = srch.lut_sum(lut, cand_codes, fast)
+        crude = jnp.where(valid, crude, jnp.inf)
+        neg_c, boot = jax.lax.top_k(-crude, topk)
+        full_boot = srch.lut_sum(lut, cand_codes[boot])
+        far = jnp.argmax(jnp.where(jnp.isfinite(-neg_c), full_boot,
+                                   -jnp.inf))
+        t = crude[boot[far]]
+        passed = crude < t + sigma                           # eq. 2
+        slow = srch.lut_sum(lut, cand_codes, ~fast)
+        ranked = jnp.where(passed & valid, crude + slow, jnp.inf)
+        neg, idx = jax.lax.top_k(-ranked, topk)
+        n_cand = jnp.sum(valid.astype(jnp.float32))
+        n_pass = jnp.sum((passed & valid).astype(jnp.float32))
+        return safe_ids[idx], -neg, n_cand, n_pass
+
+    ids, dist, n_cand, n_pass = jax.lax.map(one, queries)
+    return ivf_ops_result(ids, dist, n_cand, n_pass, n=n, n_lists=n_lists,
+                          K=K, kf=kf)
+
+
 def kmeans_assign_ref(x, cent):
     """x (n,d), cent (m,d) -> (ids (n,) int32, sq-dist (n,) f32)."""
     x32 = x.astype(jnp.float32)

@@ -9,13 +9,20 @@ reports the achieved cache-byte reduction.
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --smoke --prompt-len 32 --decode-steps 8 --batch 2
 
-``--ann`` serves the batched two-step ANN engine instead (no LM): a
+``--ann`` serves the unified ANN index layer instead (no LM): a
 synthetic packed-uint8 index is built and query batches stream through
-``quant.serve_icq.build_ann_engine`` (DESIGN.md §3.5), reporting
-per-query latency, pass rate, and Average Ops:
+``quant.serve_icq.build_ann_engine`` (DESIGN.md §7), reporting
+per-query latency, pass rate, and Average Ops.  ``--ann-index`` picks
+the implementation (flat ADC, exhaustive two-step, or IVF with
+``--ann-lists`` / ``--ann-probe``); ``--ann-shards N`` serves the index
+sharded over an N-way ``data`` mesh (run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` on CPU):
 
     PYTHONPATH=src python -m repro.launch.serve --ann --ann-n 100000 \
         --ann-queries 64 --ann-backend jnp
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m repro.launch.serve --ann \
+        --ann-index ivf --ann-shards 4 --ann-n 20000
 """
 from __future__ import annotations
 
@@ -32,16 +39,31 @@ from repro.launch.steps import build_serve_fns
 
 def serve_ann(n: int, nq: int, backend: str, *, d: int = 16, K: int = 8,
               m: int = 256, num_fast: int = 2, topk: int = 50,
-              batches: int = 3):
-    """Synthetic ANN serving loop through the batched two-step engine."""
+              batches: int = 3, index: str = "two-step", shards: int = 1,
+              n_lists: int = 64, n_probe: int = 8):
+    """Synthetic ANN serving loop through the unified index layer."""
     from repro.data.synthetic import make_synthetic_index
     from repro.quant.serve_icq import build_ann_engine
 
     key = jax.random.PRNGKey(0)
     codes, C, structure = make_synthetic_index(key, n, d=d, K=K, m=m,
                                                num_fast=num_fast)
+    mesh = None
+    if shards > 1:
+        if len(jax.devices()) < shards:
+            raise SystemExit(
+                f"--ann-shards {shards} needs {shards} devices but only "
+                f"{len(jax.devices())} are visible; on CPU set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={shards}")
+        mesh = jax.make_mesh((shards,), ("data",))
+    emb_db = None
+    if index == "ivf":
+        from repro.core import codebooks as cb
+        emb_db = cb.decode(C, codes)          # reconstructed db embeddings
     engine = build_ann_engine(codes, C, structure, topk=topk,
-                              backend=backend)
+                              backend=backend, index=index, mesh=mesh,
+                              emb_db=emb_db, n_lists=n_lists,
+                              n_probe=n_probe, key=jax.random.fold_in(key, 1))
 
     qkey = jax.random.fold_in(key, 2)
     queries = jax.random.normal(qkey, (nq, d))
@@ -53,8 +75,8 @@ def serve_ann(n: int, nq: int, backend: str, *, d: int = 16, K: int = 8,
         res = engine(q)
         jax.block_until_ready(res.indices)
     dt = (time.time() - t0) / batches
-    print(f"ann: n={n} nq={nq} topk={topk} backend={backend}: "
-          f"{dt * 1e6 / nq:.1f} us/query "
+    print(f"ann: index={index} n={n} nq={nq} topk={topk} backend={backend} "
+          f"shards={shards}: {dt * 1e6 / nq:.1f} us/query "
           f"(batch {dt * 1e3:.1f} ms), pass_rate={float(res.pass_rate):.3f}, "
           f"avg_ops={float(res.avg_ops):.2f}/{K}")
 
@@ -68,15 +90,25 @@ def main():
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--icq-kv", action="store_true")
     ap.add_argument("--ann", action="store_true",
-                    help="serve the batched two-step ANN engine (no LM)")
+                    help="serve the batched ANN index layer (no LM)")
     ap.add_argument("--ann-n", type=int, default=100_000)
     ap.add_argument("--ann-queries", type=int, default=64)
     ap.add_argument("--ann-backend", default="auto",
                     choices=["auto", "jnp", "pallas"])
+    ap.add_argument("--ann-index", default="two-step",
+                    choices=["flat", "two-step", "ivf"])
+    ap.add_argument("--ann-shards", type=int, default=1,
+                    help="shard the index over an N-way data mesh")
+    ap.add_argument("--ann-lists", type=int, default=64,
+                    help="IVF coarse lists (--ann-index ivf)")
+    ap.add_argument("--ann-probe", type=int, default=8,
+                    help="IVF probed lists per query (--ann-index ivf)")
     args = ap.parse_args()
 
     if args.ann:
-        serve_ann(args.ann_n, args.ann_queries, args.ann_backend)
+        serve_ann(args.ann_n, args.ann_queries, args.ann_backend,
+                  index=args.ann_index, shards=args.ann_shards,
+                  n_lists=args.ann_lists, n_probe=args.ann_probe)
         return
     if args.arch is None:
         ap.error("--arch is required unless --ann is given")

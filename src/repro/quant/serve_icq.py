@@ -2,11 +2,15 @@
 the ICQ-KV decode step for dense-attention LMs (§Perf hillclimb "decode
 memory").
 
-``build_ann_engine`` wraps ``core.search.two_step_search``'s batched
-dispatch (DESIGN.md §3.5) into a jitted query-batch server — the
-retrieval analogue of ``build_icq_decode`` below: codes stay resident
+``build_ann_engine`` instantiates one of the unified index layer's
+implementations (``repro.index``, DESIGN.md §7) — ``index="flat"``
+(one-step ADC), ``"two-step"`` (exhaustive ICQ, the default), or
+``"ivf"`` (coarse-partitioned; pass ``emb_db=`` and ``n_lists=``) —
+and wraps it into a jitted query-batch server: codes stay resident
 (packed uint8), each call takes an (nq, d) embedding batch and returns
-a SearchResult.  Used by ``launch/serve.py --ann`` and
+a SearchResult.  With ``mesh=`` the index is sharded over the mesh's
+``data`` axis (``Index.shard``): per-shard local top-k + global merge,
+ids identical to single-device.  Used by ``launch/serve.py --ann`` and
 ``examples/serve_retrieval.py``.
 
 A drop-in replacement for the baseline ``decode_step`` of dense-family
@@ -35,25 +39,49 @@ from repro.quant.kv_cache import (ICQKVConfig, icq_kv_append,
 
 
 def build_ann_engine(codes, C, structure, *, topk: int = 50,
-                     backend: str = "auto", block_q: int = 64,
-                     block_n: int = 512, query_chunk=None):
+                     backend: str = "auto", block_q=None, block_n=None,
+                     query_chunk=None, index: str = "two-step", mesh=None,
+                     emb_db=None, n_lists: int = 64, n_probe: int = 8,
+                     refine_cap=None, key=None):
     """Batched ANN serving entry: returns jitted
-    ``serve(queries (nq, d)) -> core.search.SearchResult``.
+    ``serve(queries (nq, d)) -> repro.index.SearchResult``.
 
-    ``codes`` stay device-resident across calls (packed uint8; widened
-    at the kernel boundary).  ``backend`` follows the core dispatch:
-    "pallas" fused kernels on TPU, vectorized jnp elsewhere.
+    ``index`` selects the implementation ("flat" | "two-step" | "ivf");
+    "ivf" additionally needs ``emb_db`` (the database embeddings the
+    codes encode) and takes ``n_lists`` / ``n_probe`` / ``key``.
+    ``mesh`` (optional, with a "data" axis) shards the index for
+    data-parallel serving.  ``codes`` stay device-resident across calls
+    (packed uint8; widened at the kernel boundary).  ``backend`` follows
+    the unified dispatch: "pallas" fused kernels on TPU, vectorized jnp
+    elsewhere.
     """
-    from repro.core import search as srch
+    from repro.index import make_index
 
-    codes = jax.device_put(codes)
-    C = jax.device_put(C)
+    opts: Dict[str, Any] = dict(topk=topk, backend=backend,
+                                query_chunk=query_chunk)
+    # None = keep the index class's own tile defaults (they differ
+    # between the flat engines and the IVF slab kernels)
+    if block_q is not None:
+        opts["block_q"] = block_q
+    if block_n is not None:
+        opts["block_n"] = block_n
+    if index != "flat":
+        opts["refine_cap"] = refine_cap
+    if index == "ivf":
+        if emb_db is None:
+            raise ValueError("index='ivf' needs emb_db= to fit the "
+                             "coarse quantizer")
+        opts.update(emb_db=emb_db, n_lists=n_lists, n_probe=n_probe,
+                    key=key)
+    idx = make_index(index, jax.device_put(codes), jax.device_put(C),
+                     structure, **opts)
+    if mesh is not None:
+        idx = idx.shard(mesh)
+        return idx.search                    # sharded fns are pre-jitted
 
     @jax.jit
     def serve(queries):
-        return srch.two_step_search(
-            queries, codes, C, structure, topk, backend=backend,
-            block_q=block_q, block_n=block_n, query_chunk=query_chunk)
+        return idx.search(queries)
 
     return serve
 

@@ -1,6 +1,8 @@
 """Online variance (paper eq. 9) against numpy, + merge properties."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # property tests need it; CI installs it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import variance as V

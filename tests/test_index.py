@@ -1,0 +1,269 @@
+"""Unified index layer (DESIGN.md §7): batched IVF vs the per-query
+oracle, the fused-kernel IVF variant, refine_cap compaction, the Index
+protocol classes, exact_search chunking, and sharded-serving parity
+(subprocess under XLA_FLAGS=--xla_force_host_platform_device_count=4 —
+the in-process suite must keep seeing 1 device, see conftest)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import icq as icq_mod
+from repro.index import (FlatADC, Index, IVFTwoStep, TwoStep, adc_search,
+                         build_ivf, exact_search, ivf_list_codes,
+                         ivf_two_step_search, make_index, two_step_search)
+from repro.index.ivf import IVFIndex
+from repro.kernels.ref import ivf_two_step_search_looped
+
+
+def _problem(key, n, nq, K=4, m=16, kf=2, d=8, sigma=1.0):
+    C = jax.random.normal(key, (K, m, d)) * 0.3
+    codes = jax.random.randint(jax.random.fold_in(key, 1), (n, K), 0,
+                               m).astype(jnp.uint8)
+    fast = jnp.zeros((K,), bool).at[:kf].set(True)
+    st = icq_mod.ICQStructure(xi=jnp.ones((d,), bool), fast_mask=fast,
+                              sigma=jnp.asarray(sigma))
+    q = jax.random.normal(jax.random.fold_in(key, 2), (nq, d))
+    from repro.core import codebooks as cb
+    emb = cb.decode(C, codes)
+    return q, codes, C, st, emb
+
+
+# -------------------------------------------------------- batched IVF ----
+
+@pytest.mark.parametrize("n,nq,n_lists,n_probe", [
+    (1237, 9, 16, 4),        # non-divisible everything
+    (530, 7, 13, 1),         # n_probe = 1
+    (530, 7, 13, 13),        # n_probe = n_lists
+])
+def test_batched_ivf_matches_looped_oracle(key, n, nq, n_lists, n_probe):
+    """Batched candidate-gather engine == the per-query lax.map oracle:
+    exact ids, 1e-4 distances, identical ops accounting — with and
+    without the in-list codes slab."""
+    q, codes, C, st, emb = _problem(jax.random.fold_in(key, n), n, nq)
+    ivf = build_ivf(jax.random.fold_in(key, 3), emb, n_lists)
+    topk = 17
+    r_loop = ivf_two_step_search_looped(q, codes, C, st, ivf, topk, n_probe)
+    slab = ivf_list_codes(ivf, codes)
+    for lc in (None, slab):
+        r_b = ivf_two_step_search(q, codes, C, st, ivf, topk, n_probe,
+                                  backend="jnp", list_codes=lc)
+        np.testing.assert_array_equal(np.asarray(r_b.indices),
+                                      np.asarray(r_loop.indices))
+        np.testing.assert_allclose(np.asarray(r_b.distances),
+                                   np.asarray(r_loop.distances), atol=1e-4)
+        assert float(r_b.pass_rate) == pytest.approx(
+            float(r_loop.pass_rate), abs=1e-6)
+        assert float(r_b.avg_ops) == pytest.approx(
+            float(r_loop.avg_ops), abs=1e-6)
+
+
+def test_ivf_pallas_matches_jnp(key):
+    q, codes, C, st, emb = _problem(key, 911, 6, sigma=2.0)
+    ivf = build_ivf(jax.random.fold_in(key, 3), emb, 16)
+    r_j = ivf_two_step_search(q, codes, C, st, ivf, 17, 4, backend="jnp")
+    r_p = ivf_two_step_search(q, codes, C, st, ivf, 17, 4,
+                              backend="pallas", interpret=True,
+                              block_q=4, block_n=96)
+    np.testing.assert_array_equal(np.asarray(r_p.indices),
+                                  np.asarray(r_j.indices))
+    np.testing.assert_allclose(np.asarray(r_p.distances),
+                               np.asarray(r_j.distances), atol=1e-4)
+    assert float(r_p.pass_rate) == pytest.approx(float(r_j.pass_rate),
+                                                 abs=1e-5)
+
+
+def test_ivf_handles_empty_lists(key):
+    """Hand-built IVF with empty + short lists: every returned finite
+    hit is a real candidate of a probed list."""
+    q, codes, C, st, emb = _problem(key, 60, 5)
+    cent = jax.random.normal(jax.random.fold_in(key, 9), (6, 8))
+    lists = jnp.full((6, 30), -1, jnp.int32)
+    lists = lists.at[0, :30].set(jnp.arange(30))
+    lists = lists.at[2, :20].set(jnp.arange(30, 50))
+    lists = lists.at[5, :10].set(jnp.arange(50, 60))
+    # rows 1, 3, 4 stay empty
+    ivf = IVFIndex(centroids=cent, lists=lists,
+                   list_lens=jnp.asarray([30, 0, 20, 0, 0, 10]),
+                   imbalance=3.0)
+    r = ivf_two_step_search(q, codes, C, st, ivf, 8, 3, backend="jnp")
+    finite = np.isfinite(np.asarray(r.distances))
+    ids = np.asarray(r.indices)
+    assert (ids[finite] >= 0).all() and (ids[finite] < 60).all()
+    # probing everything == exhaustive two-step over all 60 points
+    r_all = ivf_two_step_search(q, codes, C, st, ivf, 8, 6, backend="jnp")
+    r_flat = two_step_search(q, codes, C, st, 8, backend="jnp")
+    finite = np.isfinite(np.asarray(r_all.distances))
+    np.testing.assert_array_equal(np.asarray(r_all.indices)[finite],
+                                  np.asarray(r_flat.indices)[finite])
+
+
+def test_ivf_all_empty_buckets_edge():
+    """build_ivf survives k-means collapse (n_lists >> n)."""
+    key = jax.random.PRNGKey(0)
+    emb = jax.random.normal(key, (5, 8))
+    ivf = build_ivf(key, emb, n_lists=12)
+    assert ivf.lists.shape[0] == 12 and ivf.lists.shape[1] >= 1
+    # each db id appears exactly once across the lists
+    ids = np.asarray(ivf.lists).ravel()
+    assert sorted(ids[ids >= 0].tolist()) == list(range(5))
+    with pytest.raises(ValueError):
+        build_ivf(key, emb[:0], n_lists=4)
+    with pytest.raises(ValueError):
+        build_ivf(key, emb, n_lists=0)
+
+
+def test_ivf_refine_cap(key):
+    """cap >= survivor count == dense ranking; a small cap still returns
+    sorted full distances over genuine candidates."""
+    q, codes, C, st, emb = _problem(key, 700, 6, sigma=3.0)
+    ivf = build_ivf(jax.random.fold_in(key, 3), emb, 8)
+    r_dense = ivf_two_step_search(q, codes, C, st, ivf, 11, 4,
+                                  backend="jnp")
+    r_cap = ivf_two_step_search(q, codes, C, st, ivf, 11, 4, backend="jnp",
+                                refine_cap=700 * 4)
+    np.testing.assert_array_equal(np.asarray(r_cap.indices),
+                                  np.asarray(r_dense.indices))
+    # refine_cap smaller than the survivor count: quality dial engages
+    r_small = ivf_two_step_search(q, codes, C, st, ivf, 11, 4,
+                                  backend="jnp", refine_cap=12)
+    d = np.asarray(r_small.distances)
+    assert (np.diff(d, axis=1)[np.isfinite(d[:, 1:])] >= 0).all()
+    assert float(r_small.pass_rate) == pytest.approx(
+        float(r_dense.pass_rate), abs=1e-6)   # accounting is cap-blind
+    # pallas rejects the cap explicitly
+    with pytest.raises(ValueError):
+        ivf_two_step_search(q, codes, C, st, ivf, 11, 4, backend="pallas",
+                            refine_cap=12)
+
+
+def test_two_step_refine_cap_dispatch(key):
+    """The compact engine is an option of the unified dispatch."""
+    q, codes, C, st, emb = _problem(key, 400, 7)
+    r_dense = two_step_search(q, codes, C, st, 9, backend="jnp")
+    r_cap = two_step_search(q, codes, C, st, 9, backend="jnp",
+                            refine_cap=400)
+    np.testing.assert_array_equal(np.asarray(r_cap.indices),
+                                  np.asarray(r_dense.indices))
+    with pytest.raises(ValueError):
+        two_step_search(q, codes, C, st, 9, backend="pallas",
+                        refine_cap=10)
+
+
+# ---------------------------------------------------------- protocol ----
+
+def test_index_protocol_classes(key):
+    q, codes, C, st, emb = _problem(key, 300, 5)
+    flat = FlatADC.build(codes, C, topk=9, backend="jnp")
+    two = TwoStep.build(codes, C, st, topk=9, backend="jnp")
+    ivf = IVFTwoStep.build(codes, C, st, emb_db=emb, key=key, n_lists=8,
+                           n_probe=8, topk=9, backend="jnp")
+    for idx in (flat, two, ivf):
+        assert isinstance(idx, Index)
+        r = idx.search(q)
+        assert r.indices.shape == (5, 9)
+    np.testing.assert_array_equal(
+        np.asarray(flat.search(q).indices),
+        np.asarray(adc_search(q, codes, C, 9, backend="jnp").indices))
+    np.testing.assert_array_equal(
+        np.asarray(two.search(q).indices),
+        np.asarray(two_step_search(q, codes, C, st, 9,
+                                   backend="jnp").indices))
+    # probing every list with pruning disabled (sigma -> inf) == the
+    # exhaustive ranking: candidate *order* differs (slab vs db), so
+    # with a finite margin the eq. 2 bootstrap may resolve crude *ties*
+    # differently — without pruning the rankings must coincide exactly
+    st_inf = icq_mod.ICQStructure(xi=st.xi, fast_mask=st.fast_mask,
+                                  sigma=jnp.asarray(1e30))
+    ivf_inf = IVFTwoStep(codes=codes, C=C, structure=st_inf, ivf=ivf.ivf,
+                         n_probe=8, topk=9, backend="jnp",
+                         list_codes=ivf.list_codes)
+    r_ivf = ivf_inf.search(q)
+    r_two = two_step_search(q, codes, C, st_inf, 9, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(r_ivf.indices),
+                                  np.asarray(r_two.indices))
+    # per-call topk override
+    assert ivf.search(q, topk=4).indices.shape == (5, 4)
+    # factory
+    got = make_index("two-step", codes, C, st, topk=9, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(got.search(q).indices),
+                                  np.asarray(two.search(q).indices))
+    with pytest.raises(ValueError):
+        make_index("nope", codes, C, st)
+
+
+def test_exact_search_query_chunk_invariant(key):
+    x = jax.random.normal(key, (400, 8))
+    q = jax.random.normal(jax.random.fold_in(key, 1), (23, 8))
+    i_full, d_full = exact_search(q, x, 10)
+    i_chunk, d_chunk = exact_search(q, x, 10, query_chunk=7)
+    np.testing.assert_array_equal(np.asarray(i_full), np.asarray(i_chunk))
+    np.testing.assert_allclose(np.asarray(d_full), np.asarray(d_chunk),
+                               rtol=1e-6)
+
+
+# ----------------------------------------------------------- sharding ----
+
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    assert len(jax.devices()) == 4, jax.devices()
+    from repro.core import codebooks as cb
+    from repro.core import icq as icq_mod
+    from repro.index import FlatADC, IVFTwoStep, TwoStep
+
+    key = jax.random.PRNGKey(0)
+    n, nq, K, m, d, kf = 1237, 9, 4, 16, 8, 2
+    C = jax.random.normal(key, (K, m, d)) * 0.3
+    codes = jax.random.randint(jax.random.fold_in(key, 1), (n, K), 0,
+                               m).astype(jnp.uint8)
+    fast = jnp.zeros((K,), bool).at[:kf].set(True)
+    st = icq_mod.ICQStructure(xi=jnp.ones((d,), bool), fast_mask=fast,
+                              sigma=jnp.asarray(1.0))
+    q = jax.random.normal(jax.random.fold_in(key, 2), (nq, d))
+    emb = cb.decode(C, codes)
+    mesh = jax.make_mesh((4,), ("data",))
+
+    def check(idx, tag):
+        r1, r4 = idx.search(q), idx.shard(mesh).search(q)
+        np.testing.assert_array_equal(np.asarray(r1.indices),
+                                      np.asarray(r4.indices), err_msg=tag)
+        np.testing.assert_allclose(np.asarray(r1.distances),
+                                   np.asarray(r4.distances), atol=1e-5,
+                                   err_msg=tag)
+        assert float(r1.pass_rate) == float(r4.pass_rate), tag
+        assert float(r1.avg_ops) == float(r4.avg_ops), tag
+
+    check(FlatADC.build(codes, C, topk=17, backend="jnp"), "flat")
+    check(TwoStep.build(codes, C, st, topk=17, backend="jnp"), "two-step")
+    for n_lists, n_probe, cap in [(16, 4, None), (16, 1, None),
+                                  (16, 16, None), (13, 5, None),
+                                  (16, 4, 20)]:
+        idx = IVFTwoStep.build(codes, C, st, emb_db=emb,
+                               key=jax.random.fold_in(key, 3),
+                               n_lists=n_lists, n_probe=n_probe, topk=17,
+                               backend="jnp", refine_cap=cap)
+        check(idx, f"ivf-{n_lists}-{n_probe}-{cap}")
+    print("SHARDED_PARITY_OK")
+""")
+
+
+def test_sharded_merge_matches_single_device():
+    """Per-shard top-k + global merge == single-device results (ids
+    exact, distances to reassociation tolerance) on a forced 4-device
+    host platform.  Runs in a subprocess: this suite must keep seeing a
+    single device (conftest)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT],
+                          capture_output=True, text=True, timeout=600,
+                          env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "SHARDED_PARITY_OK" in proc.stdout

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; CI installs it
 from hypothesis import given, settings, strategies as st
 
 from repro.quant import (ICQKVConfig, build_icq_kv_cache, dequantize_int8,
