@@ -40,6 +40,8 @@ def main():
     ap.add_argument("--shards", type=int, default=1)
     ap.add_argument("--lists", type=int, default=64)
     ap.add_argument("--probe", type=int, default=8)
+    ap.add_argument("--lut-dtype", default="f32", choices=["f32", "int8"],
+                    help="crude-pass LUT precision (DESIGN.md §8)")
     args = ap.parse_args()
 
     xtr, ytr, xte, yte = make_table1_dataset("dataset3")
@@ -61,6 +63,7 @@ def main():
                               topk=args.topk, backend=args.backend,
                               index=args.index, mesh=mesh, emb_db=emb_db,
                               n_lists=args.lists, n_probe=args.probe,
+                              lut_dtype=args.lut_dtype,
                               key=jax.random.PRNGKey(1))
     nq = args.queries
     emb_q = model.embed(xte[:nq])

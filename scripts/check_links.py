@@ -1,0 +1,88 @@
+"""Intra-repo markdown link checker (CI docs job).
+
+Scans README.md, DESIGN.md, ROADMAP.md, and docs/**/*.md for inline
+markdown links ``[text](target)`` and fails (exit 1) on any relative
+link whose target file does not exist, or whose ``#anchor`` does not
+match a heading in the target file (GitHub-style slugification).
+External links (http/https/mailto) are not fetched — this container is
+offline; the job guards the *intra-repo* doc graph against rot.
+
+    python scripts/check_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: inline-code markers dropped, lowercased,
+    punctuation removed, spaces -> dashes."""
+    h = heading.strip().replace("`", "")
+    h = "".join(c for c in h.lower() if c.isalnum() or c in " -_")
+    return h.replace(" ", "-")
+
+
+def anchors_of(md_path: pathlib.Path) -> set:
+    text = CODE_FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
+    slugs = set()
+    for m in HEADING_RE.finditer(text):
+        slugs.add(github_slug(m.group(1)))
+    return slugs
+
+
+def doc_files(root: pathlib.Path):
+    for name in ("README.md", "DESIGN.md", "ROADMAP.md"):
+        p = root / name
+        if p.exists():
+            yield p
+    docs = root / "docs"
+    if docs.is_dir():
+        yield from sorted(docs.rglob("*.md"))
+
+
+def check(root: pathlib.Path) -> list:
+    errors = []
+    for md in doc_files(root):
+        text = CODE_FENCE_RE.sub("", md.read_text(encoding="utf-8"))
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            if path_part:
+                dest = (md.parent / path_part).resolve()
+                if not dest.exists():
+                    errors.append(f"{md.relative_to(root)}: broken link "
+                                  f"-> {target} (no such file)")
+                    continue
+            else:
+                dest = md                        # same-file anchor
+            if anchor and dest.suffix == ".md":
+                if github_slug(anchor) not in anchors_of(dest):
+                    errors.append(f"{md.relative_to(root)}: broken anchor "
+                                  f"-> {target}")
+    return errors
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    errors = check(root)
+    n_files = len(list(doc_files(root)))
+    if errors:
+        for e in errors:
+            print(f"BROKEN: {e}", file=sys.stderr)
+        print(f"{len(errors)} broken link(s) across {n_files} files",
+              file=sys.stderr)
+        return 1
+    print(f"docs link check OK ({n_files} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,10 +17,10 @@ import from ``repro.index`` directly.
 """
 from __future__ import annotations
 
-from repro.index.base import (SearchResult, build_lut,  # noqa: F401
-                              chunked_over_queries, exact_search, lut_sum,
-                              mean_average_precision, recall_at,
-                              resolve_backend)
+from repro.index.base import (QuantizedLUT, SearchResult,  # noqa: F401
+                              build_lut, chunked_over_queries, exact_search,
+                              lut_sum, mean_average_precision, quantize_lut,
+                              recall_at, resolve_backend, resolve_lut_dtype)
 from repro.index.flat import (adc_search, two_step_search,  # noqa: F401
                               two_step_search_compact)
 
@@ -29,7 +29,8 @@ _resolve_backend = resolve_backend
 _chunked_over_queries = chunked_over_queries
 
 __all__ = [
-    "SearchResult", "build_lut", "lut_sum", "adc_search", "exact_search",
-    "two_step_search", "two_step_search_compact", "mean_average_precision",
-    "recall_at", "resolve_backend", "chunked_over_queries",
+    "QuantizedLUT", "SearchResult", "build_lut", "lut_sum", "quantize_lut",
+    "adc_search", "exact_search", "two_step_search",
+    "two_step_search_compact", "mean_average_precision", "recall_at",
+    "resolve_backend", "resolve_lut_dtype", "chunked_over_queries",
 ]

@@ -63,6 +63,17 @@ def shard_map_compat(fn, mesh, in_specs, out_specs):
                check_rep=False)
 
 
+def abstract_mesh(sizes: Sequence[int], names: Sequence[str]):
+    """``jax.sharding.AbstractMesh`` across the signature change: newer
+    jax takes ``(axis_sizes, axis_names)``, older jax takes one
+    ``((name, size), ...)`` shape tuple."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(sizes), tuple(names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
 def maybe(axis, dim: int, mesh: Mesh):
     """Shard `dim` over `axis` only if it divides evenly."""
     if axis is None:

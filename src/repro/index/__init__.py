@@ -11,10 +11,10 @@ dispatch.
 ``core.search`` and ``core.ivf`` re-export everything here for
 backward compatibility; new code should import from ``repro.index``.
 """
-from repro.index.base import (Index, SearchResult, build_lut,
-                              chunked_over_queries, exact_search, lut_sum,
-                              mean_average_precision, recall_at,
-                              resolve_backend)
+from repro.index.base import (Index, LUT_DTYPES, QuantizedLUT, SearchResult,
+                              build_lut, chunked_over_queries, exact_search,
+                              lut_sum, mean_average_precision, quantize_lut,
+                              recall_at, resolve_backend, resolve_lut_dtype)
 from repro.index.flat import (FlatADC, TwoStep, adc_search, two_step_search,
                               two_step_search_compact)
 from repro.index.ivf import (IVFIndex, IVFTwoStep, build_ivf,
@@ -41,9 +41,10 @@ def make_index(kind: str, codes, C, structure=None, **opts):
 
 __all__ = [
     "Index", "SearchResult", "FlatADC", "TwoStep", "IVFTwoStep",
-    "IVFIndex", "INDEX_KINDS", "make_index", "adc_search",
-    "two_step_search", "two_step_search_compact", "ivf_two_step_search",
-    "build_ivf", "ivf_list_codes", "build_lut", "lut_sum", "exact_search",
-    "chunked_over_queries", "resolve_backend", "mean_average_precision",
+    "IVFIndex", "INDEX_KINDS", "LUT_DTYPES", "QuantizedLUT", "make_index",
+    "adc_search", "two_step_search", "two_step_search_compact",
+    "ivf_two_step_search", "build_ivf", "ivf_list_codes", "build_lut",
+    "lut_sum", "quantize_lut", "exact_search", "chunked_over_queries",
+    "resolve_backend", "resolve_lut_dtype", "mean_average_precision",
     "recall_at",
 ]

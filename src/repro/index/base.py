@@ -18,6 +18,13 @@ The ADC math lives here (moved from ``core/search.py``, which is now a
 thin re-export): per-query LUTs ``T[k, j] = ||c_{k,j}||^2 - 2 <q,
 c_{k,j}>`` and their masked sums — ranking by the LUT sum is ranking by
 L2 distance after ICQ's hard projection (cross terms constant).
+
+Quantized LUTs (DESIGN.md §8): ``quantize_lut`` calibrates a per-query
+affine int8 form of the tables (Bolt / Quick-ADC style) and ``lut_sum``
+accumulates the int8 entries in a narrow integer dtype before one
+rescale back to true-distance units — the crude pass of the two-step
+engines runs on these when ``lut_dtype="int8"``; the refine pass always
+stays float32.
 """
 from __future__ import annotations
 
@@ -25,6 +32,8 @@ from typing import NamedTuple, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+
+LUT_DTYPES = ("f32", "int8")
 
 
 class SearchResult(NamedTuple):
@@ -47,8 +56,124 @@ class Index(Protocol):
 
 # ----------------------------------------------------------------- LUTs ----
 
+class QuantizedLUT(NamedTuple):
+    """Per-query affine-int8 ADC tables (DESIGN.md §8).
+
+    An f32 table ``T`` is calibrated per query from its min/max over the
+    *summed* codebook subset: ``scale = (hi - lo) / 255``, and each
+    entry is stored as ``q = round((T - lo) / scale) - 128`` in int8.
+    Dequantization of a single entry is ``scale * q + bias`` with
+    ``bias = lo + 128 * scale``; a sum over S selected entries is
+    recovered *exactly in the bias term* as
+
+        sum_T ~= scale * sum_q + S * bias
+
+    so quantized crude distances stay in true-distance units and remain
+    comparable against eq. 2 thresholds and across shards (the scale is
+    query-global: it depends only on the query's LUT, never on which
+    rows/lists a shard owns).
+
+    Fields:
+      q      int8 tables, same shape as the source LUT ((nq, K, m) or
+             (K, m)); codebooks outside the calibration mask are zeroed
+             so they contribute nothing to integer sums.
+      scale  (nq,) (or scalar) f32 per-query step size, >= 1e-12.
+      bias   (nq,) (or scalar) f32 per-*selected-entry* dequant offset.
+    """
+    q: jnp.ndarray
+    scale: jnp.ndarray
+    bias: jnp.ndarray
+
+
+def resolve_lut_dtype(lut_dtype: str) -> str:
+    """Validate the ``lut_dtype`` engine option ("f32" | "int8")."""
+    if lut_dtype not in LUT_DTYPES:
+        raise ValueError(f"unknown lut_dtype {lut_dtype!r}; "
+                         f"expected one of {LUT_DTYPES}")
+    return lut_dtype
+
+
+def quantize_lut(lut, cb_mask=None) -> QuantizedLUT:
+    """Per-query affine int8 calibration of ADC tables (DESIGN.md §8).
+
+    lut:      (nq, K, m) or (K, m) f32 tables from ``build_lut``.
+    cb_mask:  optional (K,) bool — calibrate min/max over (and keep
+              only) this codebook subset; entries of masked-out
+              codebooks are zeroed in the int8 table.  Pass the fast
+              mask when the quantized table feeds a crude (fast-group)
+              sum: the tighter range roughly halves the step size.
+
+    Returns a ``QuantizedLUT``; the worst-case round-trip error of any
+    kept entry is ``scale / 2`` (plus float rounding), so a sum over S
+    entries is within ``S * scale / 2`` of the f32 sum.
+    """
+    red = tuple(range(lut.ndim - 2, lut.ndim))               # (K, m) axes
+    if cb_mask is None:
+        lo = jnp.min(lut, axis=red)
+        hi = jnp.max(lut, axis=red)
+    else:
+        keep = cb_mask[:, None]                              # (K, 1)
+        lo = jnp.min(jnp.where(keep, lut, jnp.inf), axis=red)
+        hi = jnp.max(jnp.where(keep, lut, -jnp.inf), axis=red)
+    scale = jnp.maximum((hi - lo) / 255.0, 1e-12)
+    lo_b = lo[..., None, None]
+    q = jnp.clip(jnp.round((lut - lo_b) / scale[..., None, None]) - 128.0,
+                 -128.0, 127.0).astype(jnp.int8)
+    if cb_mask is not None:
+        q = q * cb_mask[:, None].astype(jnp.int8)
+    return QuantizedLUT(q=q, scale=scale, bias=lo + 128.0 * scale)
+
+
+def _bias_count(K: int, cb_mask):
+    """Number of codebooks entering a quantized sum — the ``S`` of the
+    accumulated-bias correction ``S * bias`` (DESIGN.md §8)."""
+    return (jnp.asarray(float(K), jnp.float32) if cb_mask is None
+            else jnp.sum(cb_mask.astype(jnp.float32)))
+
+
+def dequantize_acc(qlut: QuantizedLUT, acc, cb_mask=None):
+    """Rescale an integer LUT-sum accumulator to true-distance f32:
+    ``scale * acc + count * bias`` — THE definition of the quantized
+    dequant, shared by every jnp engine (``lut_sum``'s quantized body
+    and the unrolled IVF loop); the fused kernels receive the identical
+    (scale, offset) pair via ``quantized_kernel_operands`` and apply
+    the same expression in the same order, which is what makes jnp /
+    pallas / sharded int8 rankings bitwise-identical.
+
+    acc: integer array whose *leading* dims broadcast against
+    ``qlut.scale`` (e.g. (nq, n) acc with (nq,) scale, or (n,) acc
+    with scalar scale)."""
+    offset = _bias_count(qlut.q.shape[-2], cb_mask) * qlut.bias
+    return (qlut.scale[..., None] * acc.astype(jnp.float32)
+            + offset[..., None])
+
+
+def quantized_kernel_operands(luts, cb_mask=None):
+    """Calibrate ``luts`` ((nq, K, m) f32) and flatten into the fused
+    crude kernels' operand triple: ``(q_flat (nq, K*m) int8, scale
+    (nq,) f32, offset (nq,) f32)`` with ``offset = count * bias`` —
+    the same accounting as ``dequantize_acc``."""
+    qlut = quantize_lut(luts, cb_mask)
+    nq, K, m = qlut.q.shape
+    return (qlut.q.reshape(nq, K * m), qlut.scale,
+            _bias_count(K, cb_mask) * qlut.bias)
+
+
+def _int_acc_dtype(K: int):
+    # |q| <= 128 per entry, so a K-codebook sum fits int16 whenever
+    # K * 128 <= int16 max — true for every real config (K <= 255); the
+    # narrow accumulator is the point of the quantized crude pass
+    # (~half the accumulator traffic of f32/int32 on the CPU backend)
+    return jnp.int16 if K * 128 <= jnp.iinfo(jnp.int16).max else jnp.int32
+
+
 def build_lut(q, C):
-    """Per-query ADC tables.  q: (d,) or (nq,d); C: (K,m,d) -> (.., K, m)."""
+    """Per-query ADC tables ``T[k, j] = ||c_{k,j}||^2 - 2 <q, c_{k,j}>``.
+
+    q: (d,) or (nq, d) f32 queries; C: (K, m, d) codebooks ->
+    (K, m) or (nq, K, m) f32.  Ranking by sums of these tables is
+    ranking by L2 distance (the ``||q||^2`` term is constant per query).
+    """
     # lazy: repro.core re-exports this module's names, so a module-level
     # import here would cycle when repro.index is imported first
     from repro.core import codebooks as cb
@@ -62,14 +187,29 @@ def lut_sum(lut, codes, cb_mask=None):
     """Sum selected LUT entries — one vectorized ``take_along_axis``
     gather (vmap/batch friendly; no Python loop over codebooks).
 
-    Shapes:
+    Shapes (f32 ``lut`` array or ``QuantizedLUT`` whose ``q`` has the
+    same shape):
       lut (K,m),    codes (n,K)     -> (n,)
       lut (nq,K,m), codes (n,K)     -> (nq, n)   shared database codes
       lut (nq,K,m), codes (nq,t,K)  -> (nq, t)   per-query candidate codes
 
+    ``codes`` may arrive in any integer dtype (packed uint8 included);
+    they are widened to int32 gather indices here.
+
     ``cb_mask``: optional (K,) bool — restrict to a codebook subset
     (the fast group for crude distances).
+
+    Passing a ``QuantizedLUT`` (from ``quantize_lut``) accumulates the
+    int8 entries in the narrowest exact integer dtype (int16 for
+    K <= 255, else int32) and applies one affine rescale at the end:
+    ``scale * acc + count * bias`` with ``count`` the number of summed
+    codebooks — the result is in true-distance units (DESIGN.md §8).
+    The mask the table was *calibrated* with must cover the mask summed
+    over here (masked-out codebooks are zeroed in ``q``, so the integer
+    sum skips them but ``count`` must only count kept ones).
     """
+    if isinstance(lut, QuantizedLUT):
+        return _lut_sum_quantized(lut, codes, cb_mask)
     codes = codes.astype(jnp.int32)
     if cb_mask is not None:
         lut = lut * cb_mask[:, None].astype(lut.dtype)
@@ -90,6 +230,32 @@ def lut_sum(lut, codes, cb_mask=None):
     return jnp.sum(parts, axis=-2)
 
 
+def _lut_sum_quantized(qlut: QuantizedLUT, codes, cb_mask=None):
+    """Integer-accumulating ``lut_sum`` body for ``QuantizedLUT``s.
+
+    Masked-out codebooks are already zeroed in ``qlut.q`` (quantize_lut
+    calibration mask), so the integer accumulation simply sums all K
+    gathered entries; ``cb_mask`` only determines the bias count.  The
+    final rescale ``scale * acc + (count * bias)`` is ordered exactly
+    like the fused kernels' dequant so jnp and pallas agree bitwise.
+    """
+    q = qlut.q
+    acc_dt = _int_acc_dtype(q.shape[-2])
+    codes = codes.astype(jnp.int32)
+    if q.ndim == 3 and codes.ndim == 2:
+        def step(acc, q_and_codes):
+            q_k, codes_k = q_and_codes                   # (nq,m), (n,)
+            return acc + jnp.take(q_k, codes_k, axis=1).astype(acc_dt), None
+        acc0 = jnp.zeros((q.shape[0], codes.shape[0]), acc_dt)
+        acc, _ = jax.lax.scan(step, acc0,
+                              (jnp.swapaxes(q, 0, 1), codes.T))
+        return dequantize_acc(qlut, acc, cb_mask)
+    idx = jnp.swapaxes(codes, -1, -2)                        # (..., K, n)
+    parts = jnp.take_along_axis(q, idx, axis=-1)             # (..., K, n)
+    acc = jnp.sum(parts.astype(acc_dt), axis=-2)
+    return dequantize_acc(qlut, acc, cb_mask)
+
+
 # ------------------------------------------------------------- dispatch ----
 
 def resolve_backend(backend: str) -> str:
@@ -102,7 +268,16 @@ def resolve_backend(backend: str) -> str:
 
 def chunked_over_queries(fn, queries, query_chunk: Optional[int]):
     """Apply the vectorized ``fn`` to query blocks of ``query_chunk`` (a
-    working-set bound for huge batches); None = one block."""
+    working-set bound for huge batches); None = one block.
+
+    queries: (nq, d).  When nq is not a multiple of ``query_chunk`` the
+    batch is zero-padded up to the next multiple, ``fn`` runs on every
+    (query_chunk, d) block via ``lax.map``, and every output leaf is
+    sliced back to its true first-``nq`` rows — callers never see pad
+    queries, but ``fn`` must tolerate all-zero query rows (every engine
+    here does: a zero query just produces finite distances that are
+    discarded by the slice).
+    """
     if query_chunk is None or queries.shape[0] <= query_chunk:
         return fn(queries)
     nq = queries.shape[0]

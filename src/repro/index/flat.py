@@ -31,6 +31,13 @@ HBM traffic per streamed codes tile.
 "Average Ops" — the paper's speed metric (Figs. 1-5) — counts LUT adds
 per point:  |K_fast| + pass_rate * (K - |K_fast|), vs always-K for
 ADC baselines.
+
+``lut_dtype="int8"`` (DESIGN.md §8) runs the crude pass on per-query
+affine-quantized tables (``base.quantize_lut``): integer accumulation,
+one rescale back to true-distance units.  The refine/slow pass always
+stays float32 — eq. 2's exact re-ranking is untouched; quantization
+only perturbs which points pass the margin test and the crude component
+of reported distances (bounded by |K_fast| * scale / 2 per point).
 """
 from __future__ import annotations
 
@@ -42,18 +49,26 @@ import jax
 import jax.numpy as jnp
 
 from repro.index.base import (SearchResult, build_lut, chunked_over_queries,
-                              lut_sum, resolve_backend)
+                              lut_sum, quantize_lut,
+                              quantized_kernel_operands, resolve_backend,
+                              resolve_lut_dtype)
 
 
 # -------------------------------------------------------------- engines ----
 
 def adc_search(queries, codes, C, topk: int, *, backend: str = "auto",
                block_q: int = 64, block_n: int = 512, interpret=None,
-               query_chunk: Optional[int] = None):
+               query_chunk: Optional[int] = None, lut_dtype: str = "f32"):
     """Baseline one-step ADC: full K-codebook LUT sum for every point,
-    batched over the whole query block."""
+    batched over the whole query block.
+
+    queries (nq, d) f32; codes (n, K) packed int; C (K, m, d) f32.
+    ``lut_dtype="int8"`` quantizes the whole table per query (no fast
+    subset here — the one-step ranking itself becomes approximate, with
+    per-point error <= K * scale / 2)."""
     K, m = C.shape[0], C.shape[1]
     be = resolve_backend(backend)
+    quantized = resolve_lut_dtype(lut_dtype) == "int8"
 
     if be == "pallas":
         # codes stay packed into the kernel (widened per-tile in VMEM)
@@ -61,17 +76,26 @@ def adc_search(queries, codes, C, topk: int, *, backend: str = "auto",
 
         def one_block(qs):
             luts = build_lut(qs, C)
-            _, vals, ids = ops.batched_crude_topk(
-                codes, luts.reshape(qs.shape[0], K * m), topk,
-                block_q=block_q, block_n=block_n, interpret=interpret,
-                want_crude=False)
+            nq = qs.shape[0]
+            if quantized:
+                q_flat, scale, offset = quantized_kernel_operands(luts)
+                _, vals, ids = ops.batched_crude_topk(
+                    codes, q_flat, topk,
+                    block_q=block_q, block_n=block_n, interpret=interpret,
+                    want_crude=False, lut_scale=scale, lut_offset=offset)
+            else:
+                _, vals, ids = ops.batched_crude_topk(
+                    codes, luts.reshape(nq, K * m), topk,
+                    block_q=block_q, block_n=block_n, interpret=interpret,
+                    want_crude=False)
             return ids, vals
     else:
         codes = codes.astype(jnp.int32)              # widen packed codes
 
         def one_block(qs):
             luts = build_lut(qs, C)                  # (nq,K,m)
-            dist = lut_sum(luts, codes)              # (nq,n)
+            lut = quantize_lut(luts) if quantized else luts
+            dist = lut_sum(lut, codes)               # (nq,n)
             neg, ids = jax.lax.top_k(-dist, topk)
             return ids, -neg
 
@@ -79,25 +103,41 @@ def adc_search(queries, codes, C, topk: int, *, backend: str = "auto",
     return SearchResult(idx, vals, jnp.asarray(float(K)), jnp.asarray(1.0))
 
 
-def _eq2_passed(luts, codes, crude, topk: int, sigma):
+def _eq2_passed(luts, codes, crude, topk: int, sigma, fast=None):
     """Eq. 2 margin test, shared by the jnp engines: bootstrap the
     neighbor list from the crude top-k, rank it by full distance; the
     threshold compares *crude vs crude of the furthest list element*
-    plus the margin sigma.  Returns the (nq, n) pass mask."""
+    plus the margin sigma.  Returns the (nq, n) pass mask.
+
+    With ``fast`` given (the quantized-crude path) the candidates' full
+    distances are formed as quantized-crude + exact-slow — the same
+    decomposition the fused kernels use — so jnp and pallas bootstrap
+    identical thresholds under ``lut_dtype="int8"``."""
     neg_c, cand = jax.lax.top_k(-crude, topk)            # (nq,topk)
     cand_codes = jnp.take(codes, cand, axis=0)           # (nq,topk,K)
-    full_cand = lut_sum(luts, cand_codes)                # (nq,topk)
+    if fast is None:
+        full_cand = lut_sum(luts, cand_codes)            # (nq,topk)
+    else:
+        full_cand = -neg_c + lut_sum(luts, cand_codes, ~fast)
     far = jnp.argmax(full_cand, axis=1)                  # (nq,)
     t = -jnp.take_along_axis(neg_c, far[:, None], axis=1)[:, 0]
     return crude < (t + sigma)[:, None]
 
 
-def _two_step_block_jnp(qs, codes, C, fast, sigma, topk: int):
+def _crude_tables(luts, fast, quantized: bool):
+    """The crude pass's LUT representation: the f32 tables themselves,
+    or their per-query int8 form calibrated over the fast subset."""
+    return quantize_lut(luts, fast) if quantized else luts
+
+
+def _two_step_block_jnp(qs, codes, C, fast, sigma, topk: int,
+                        quantized: bool = False):
     """Vectorized two-step over one query block.  Returns
     (idx (nq,topk), dist (nq,topk), passed_frac (nq,))."""
     luts = build_lut(qs, C)                              # (nq,K,m)
-    crude = lut_sum(luts, codes, fast)                   # (nq,n)
-    passed = _eq2_passed(luts, codes, crude, topk, sigma)
+    crude = lut_sum(_crude_tables(luts, fast, quantized), codes, fast)
+    passed = _eq2_passed(luts, codes, crude, topk, sigma,
+                         fast if quantized else None)
     # refine passers only; pruned points are excluded from the ranking
     slow = lut_sum(luts, codes, ~fast)
     ranked = jnp.where(passed, crude + slow, jnp.inf)
@@ -106,12 +146,15 @@ def _two_step_block_jnp(qs, codes, C, fast, sigma, topk: int):
 
 
 def _two_step_block_compact(qs, codes, C, fast, sigma, topk: int,
-                            refine_cap: int):
+                            refine_cap: int, quantized: bool = False):
     """Two-step with the static survivor compaction: the refine_cap best
-    crude survivors are gathered and refined by full LUT sum."""
+    crude survivors are gathered and refined by full LUT sum (always
+    exact f32 — under ``lut_dtype="int8"`` quantization only affects
+    which points survive and their selection order)."""
     luts = build_lut(qs, C)
-    crude = lut_sum(luts, codes, fast)
-    passed = _eq2_passed(luts, codes, crude, topk, sigma)
+    crude = lut_sum(_crude_tables(luts, fast, quantized), codes, fast)
+    passed = _eq2_passed(luts, codes, crude, topk, sigma,
+                         fast if quantized else None)
     # compact: best-crude survivors first, capped
     masked = jnp.where(passed, crude, jnp.inf)
     neg_s, surv = jax.lax.top_k(-masked, refine_cap)
@@ -125,20 +168,29 @@ def _two_step_block_compact(qs, codes, C, fast, sigma, topk: int,
 
 
 def _two_step_pallas(queries, codes, C, fast, sigma, topk: int,
-                     block_q: int, block_n: int, interpret):
+                     block_q: int, block_n: int, interpret,
+                     quantized: bool = False):
     """Fused-kernel two-step: phase-1 crude + candidate top-k in one
-    kernel, tiny candidate refinement in jnp, fused phase-2 kernel."""
+    kernel, tiny candidate refinement in jnp, fused phase-2 kernel.
+    ``quantized`` feeds phase 1 int8 tables (dequantized in-kernel);
+    phase 2 keeps the exact f32 slow tables either way."""
     from repro.kernels import ops
     nq = queries.shape[0]
     K, m = C.shape[0], C.shape[1]
     luts = build_lut(queries, C)                         # (nq,K,m)
     fast_f = fast.astype(luts.dtype)[None, :, None]
-    lut_fast = (luts * fast_f).reshape(nq, K * m)
     lut_slow = (luts * (1.0 - fast_f)).reshape(nq, K * m)
 
-    crude, cand_vals, cand_idx = ops.batched_crude_topk(
-        codes, lut_fast, topk, block_q=block_q, block_n=block_n,
-        interpret=interpret)
+    if quantized:
+        q_flat, scale, offset = quantized_kernel_operands(luts, fast)
+        crude, cand_vals, cand_idx = ops.batched_crude_topk(
+            codes, q_flat, topk, block_q=block_q, block_n=block_n,
+            interpret=interpret, lut_scale=scale, lut_offset=offset)
+    else:
+        lut_fast = (luts * fast_f).reshape(nq, K * m)
+        crude, cand_vals, cand_idx = ops.batched_crude_topk(
+            codes, lut_fast, topk, block_q=block_q, block_n=block_n,
+            interpret=interpret)
     # threshold bootstrap on the (nq, topk) candidate set — tiny, jnp
     cand_codes = jnp.take(codes, cand_idx, axis=0)       # (nq,topk,K)
     full_cand = cand_vals + lut_sum(luts, cand_codes, ~fast)
@@ -157,7 +209,8 @@ def two_step_search(queries, codes, C, structure, topk: int, *,
                     backend: str = "auto", block_q: int = 64,
                     block_n: int = 512, interpret=None,
                     query_chunk: Optional[int] = None,
-                    refine_cap: Optional[int] = None):
+                    refine_cap: Optional[int] = None,
+                    lut_dtype: str = "f32"):
     """ICQ two-step search (eq. 2 crude test -> eq. 1 refinement),
     batched over the whole query block.
 
@@ -165,16 +218,26 @@ def two_step_search(queries, codes, C, structure, topk: int, *,
     backend:    "jnp" | "pallas" | "auto" (pallas on TPU) — see module
                 docstring; both produce identical rankings.
     refine_cap: optional static survivor compaction (jnp engine): at
-                most this many best-crude survivors are refined.
-                Semantically identical to the dense ranking whenever the
-                survivor count <= refine_cap; a smaller cap is a
-                quality/throughput dial for serving.
+                most this many best-crude survivors are refined.  Under
+                lut_dtype="f32", semantically identical to the dense
+                ranking whenever the survivor count <= refine_cap; a
+                smaller cap is a quality/throughput dial for serving.
+                Under "int8" the capped path re-ranks its survivors by
+                *exact* f32 full distance while the dense path ranks by
+                quantized-crude + exact-slow, so the two can differ on
+                quantization-margin ties even with a sufficient cap
+                (the capped ranking is the more exact of the two).
+    lut_dtype:  "f32" (exact crude pass) | "int8" (per-query quantized
+                crude tables, DESIGN.md §8).  The refine pass is always
+                f32; both backends produce identical rankings for
+                either dtype.
     """
     K = C.shape[0]
     fast = structure.fast_mask
     sigma = structure.sigma
     kf = jnp.sum(fast.astype(jnp.float32))
     be = resolve_backend(backend)
+    quantized = resolve_lut_dtype(lut_dtype) == "int8"
 
     if be == "pallas":
         if refine_cap is not None:
@@ -186,17 +249,19 @@ def two_step_search(queries, codes, C, structure, topk: int, *,
         fn = functools.partial(_two_step_pallas, codes=codes, C=C,
                                fast=fast, sigma=sigma, topk=topk,
                                block_q=block_q, block_n=block_n,
-                               interpret=interpret)
+                               interpret=interpret, quantized=quantized)
     elif refine_cap is not None:
         fn = functools.partial(_two_step_block_compact,
                                codes=codes.astype(jnp.int32), C=C,
                                fast=fast, sigma=sigma, topk=topk,
                                refine_cap=min(max(refine_cap, topk),
-                                              codes.shape[0]))
+                                              codes.shape[0]),
+                               quantized=quantized)
     else:
         fn = functools.partial(_two_step_block_jnp,
                                codes=codes.astype(jnp.int32), C=C,
-                               fast=fast, sigma=sigma, topk=topk)
+                               fast=fast, sigma=sigma, topk=topk,
+                               quantized=quantized)
     idx, dist, pf = chunked_over_queries(fn, queries, query_chunk)
     pass_rate = jnp.mean(pf)
     avg_ops = kf + pass_rate * (K - kf)
@@ -217,7 +282,10 @@ def two_step_search_compact(queries, codes, C, structure, topk: int,
 
 @dataclasses.dataclass(frozen=True)
 class FlatADC:
-    """One-step exhaustive ADC index (baseline; no pruning)."""
+    """One-step exhaustive ADC index (baseline; no pruning).
+
+    ``lut_dtype="int8"`` quantizes the full per-query table (the whole
+    one-step ranking becomes approximate, DESIGN.md §8)."""
     codes: jnp.ndarray                  # (n, K) packed
     C: jnp.ndarray                      # (K, m, d)
     topk: int = 50
@@ -226,6 +294,7 @@ class FlatADC:
     block_n: int = 512
     interpret: Optional[bool] = None
     query_chunk: Optional[int] = None
+    lut_dtype: str = "f32"
 
     @classmethod
     def build(cls, codes, C, structure=None, **opts) -> "FlatADC":
@@ -236,7 +305,8 @@ class FlatADC:
                           topk if topk is not None else self.topk,
                           backend=self.backend, block_q=self.block_q,
                           block_n=self.block_n, interpret=self.interpret,
-                          query_chunk=self.query_chunk)
+                          query_chunk=self.query_chunk,
+                          lut_dtype=self.lut_dtype)
 
     def shard(self, mesh):
         from repro.index.sharded import ShardedFlatADC
@@ -246,7 +316,7 @@ class FlatADC:
 @dataclasses.dataclass(frozen=True)
 class TwoStep:
     """Exhaustive ICQ two-step index (eq. 2 pruning, optional
-    ``refine_cap`` compaction)."""
+    ``refine_cap`` compaction, optional int8 crude tables)."""
     codes: jnp.ndarray                  # (n, K) packed
     C: jnp.ndarray                      # (K, m, d)
     structure: object                   # core.icq.ICQStructure
@@ -257,6 +327,7 @@ class TwoStep:
     interpret: Optional[bool] = None
     query_chunk: Optional[int] = None
     refine_cap: Optional[int] = None
+    lut_dtype: str = "f32"
 
     @classmethod
     def build(cls, codes, C, structure, **opts) -> "TwoStep":
@@ -268,7 +339,8 @@ class TwoStep:
                                backend=self.backend, block_q=self.block_q,
                                block_n=self.block_n, interpret=self.interpret,
                                query_chunk=self.query_chunk,
-                               refine_cap=self.refine_cap)
+                               refine_cap=self.refine_cap,
+                               lut_dtype=self.lut_dtype)
 
     def shard(self, mesh):
         from repro.index.sharded import ShardedTwoStep

@@ -40,8 +40,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.index.base import (SearchResult, build_lut, chunked_over_queries,
-                              lut_sum, resolve_backend)
+from repro.index.base import (SearchResult, _int_acc_dtype, build_lut,
+                              chunked_over_queries, dequantize_acc, lut_sum,
+                              quantize_lut, quantized_kernel_operands,
+                              resolve_backend, resolve_lut_dtype)
 
 
 class IVFIndex(NamedTuple):
@@ -141,15 +143,24 @@ def gather_candidates(probes, lists, codes, topk: int, list_codes=None):
     return cand_ids, valid, cand_codes
 
 
-def _ivf_bootstrap_threshold(luts, crude, cand_codes, topk: int, sigma):
+def _ivf_bootstrap_threshold(luts, crude, cand_codes, topk: int, sigma,
+                             fast=None):
     """Eq. 2 threshold over the candidate slab: bootstrap the neighbor
     list from the crude top-k (slab may hold fewer than topk valid
     candidates — invalid entries rank +inf and are excluded from the
-    far-element argmax).  Returns thr (nq,)."""
+    far-element argmax).  Returns thr (nq,).
+
+    With ``fast`` given (the quantized-crude path) the candidates' full
+    distances are quantized-crude + exact-slow — the decomposition the
+    fused kernels use — so jnp and pallas bootstrap identical
+    thresholds under ``lut_dtype="int8"``."""
     neg_c, cand = jax.lax.top_k(-crude, topk)            # (nq, topk)
     cand_top = jnp.take_along_axis(
         cand_codes, cand[:, :, None], axis=1)            # (nq, topk, K)
-    full_cand = lut_sum(luts, cand_top)
+    if fast is None:
+        full_cand = lut_sum(luts, cand_top)
+    else:
+        full_cand = -neg_c + lut_sum(luts, cand_top, ~fast)
     far = jnp.argmax(jnp.where(jnp.isfinite(-neg_c), full_cand, -jnp.inf),
                      axis=1)
     t = -jnp.take_along_axis(neg_c, far[:, None], axis=1)[:, 0]
@@ -158,7 +169,7 @@ def _ivf_bootstrap_threshold(luts, crude, cand_codes, topk: int, sigma):
 
 def _ivf_block_jnp(qs, codes, C, fast, sigma, topk: int, centroids, lists,
                    n_probe: int, refine_cap: Optional[int],
-                   list_codes=None):
+                   list_codes=None, quantized: bool = False):
     """Batched IVF two-step over one query block.  Returns (ids
     (nq,topk), dist (nq,topk), n_cand (nq,), n_pass (nq,))."""
     luts = build_lut(qs, C)                              # (nq, K, m)
@@ -174,17 +185,35 @@ def _ivf_block_jnp(qs, codes, C, fast, sigma, topk: int, centroids, lists,
     # masking the gathered value == masking the LUT before the gather
     fvals = fast.astype(luts.dtype)                          # (K,)
     need_slow = refine_cap is None
+    K = luts.shape[1]
     nq, nc = cand_ids.shape
-    crude = jnp.zeros((nq, nc), luts.dtype)
     slow = jnp.zeros((nq, nc), luts.dtype)
-    for k in range(luts.shape[1]):
-        v = jnp.take_along_axis(
-            luts[:, k, :], cand_codes[:, :, k].astype(jnp.int32), axis=1)
-        crude = crude + fvals[k] * v
-        if need_slow:
-            slow = slow + (1.0 - fvals[k]) * v
+    if quantized:
+        # int8 crude accumulation (DESIGN.md §8): masked codebooks are
+        # zeroed in the table, the narrow integer sum skips them, one
+        # affine rescale recovers true-distance units (ordered exactly
+        # like the fused kernel's dequant)
+        qlut = quantize_lut(luts, fast)
+        acc = jnp.zeros((nq, nc), _int_acc_dtype(K))
+        for k in range(K):
+            ck = cand_codes[:, :, k].astype(jnp.int32)
+            acc = acc + jnp.take_along_axis(qlut.q[:, k, :], ck,
+                                            axis=1).astype(acc.dtype)
+            if need_slow:
+                v = jnp.take_along_axis(luts[:, k, :], ck, axis=1)
+                slow = slow + (1.0 - fvals[k]) * v
+        crude = dequantize_acc(qlut, acc, fast)
+    else:
+        crude = jnp.zeros((nq, nc), luts.dtype)
+        for k in range(K):
+            v = jnp.take_along_axis(
+                luts[:, k, :], cand_codes[:, :, k].astype(jnp.int32), axis=1)
+            crude = crude + fvals[k] * v
+            if need_slow:
+                slow = slow + (1.0 - fvals[k]) * v
     crude = jnp.where(valid, crude, jnp.inf)
-    thr = _ivf_bootstrap_threshold(luts, crude, cand_codes, topk, sigma)
+    thr = _ivf_bootstrap_threshold(luts, crude, cand_codes, topk, sigma,
+                                   fast if quantized else None)
     passed = crude < thr[:, None]                        # invalid -> inf -> F
 
     if refine_cap is None:
@@ -210,11 +239,13 @@ def _ivf_block_jnp(qs, codes, C, fast, sigma, topk: int, centroids, lists,
 
 def _ivf_block_pallas(qs, codes, C, fast, sigma, topk: int, centroids,
                       lists, n_probe: int, block_q: int, block_n: int,
-                      interpret, list_codes=None):
+                      interpret, list_codes=None, quantized: bool = False):
     """Fused-kernel batched IVF: the (query-tile x candidate-tile)
     kernels from ``kernels/batched_search.py`` sweep the gathered slab
     (phase-1 crude + running top-k, then fused eq. 2 + refine + top-k
-    merge); the tiny threshold bootstrap stays in jnp."""
+    merge); the tiny threshold bootstrap stays in jnp.  ``quantized``
+    feeds phase 1 int8 tables (dequantized in-kernel); phase 2 keeps
+    the exact f32 slow tables either way."""
     from repro.kernels import ops
     nq = qs.shape[0]
     K, m = C.shape[0], C.shape[1]
@@ -224,12 +255,19 @@ def _ivf_block_pallas(qs, codes, C, fast, sigma, topk: int, centroids,
                                                     topk, list_codes)
     safe = jnp.where(valid, cand_ids, 0)
     fast_f = fast.astype(luts.dtype)[None, :, None]
-    lut_fast = (luts * fast_f).reshape(nq, K * m)
     lut_slow = (luts * (1.0 - fast_f)).reshape(nq, K * m)
 
-    crude, cand_vals, cand_pos = ops.ivf_crude_topk(
-        cand_codes, cand_ids, lut_fast, topk, block_q=block_q,
-        block_n=block_n, interpret=interpret)
+    if quantized:
+        q_flat, scale, offset = quantized_kernel_operands(luts, fast)
+        crude, cand_vals, cand_pos = ops.ivf_crude_topk(
+            cand_codes, cand_ids, q_flat, topk,
+            block_q=block_q, block_n=block_n, interpret=interpret,
+            lut_scale=scale, lut_offset=offset)
+    else:
+        lut_fast = (luts * fast_f).reshape(nq, K * m)
+        crude, cand_vals, cand_pos = ops.ivf_crude_topk(
+            cand_codes, cand_ids, lut_fast, topk, block_q=block_q,
+            block_n=block_n, interpret=interpret)
     # threshold bootstrap on the (nq, topk) crude candidates — tiny, jnp
     ok = jnp.isfinite(cand_vals)
     pos_safe = jnp.where(ok, cand_pos, 0)
@@ -267,12 +305,15 @@ def ivf_two_step_search(queries, codes, C, structure, ivf: IVFIndex,
                         topk: int, n_probe: int, *, backend: str = "auto",
                         block_q: int = 4, block_n: int = 128,
                         interpret=None, query_chunk: Optional[int] = None,
-                        refine_cap: Optional[int] = None, list_codes=None):
+                        refine_cap: Optional[int] = None, list_codes=None,
+                        lut_dtype: str = "f32"):
     """Batched IVF + ICQ two-step.  Returns SearchResult with the
     generalized ops accounting (see module docstring).
 
     ``list_codes`` (optional, from ``ivf_list_codes``) serves from the
-    in-list codes slab — same results, faster gather."""
+    in-list codes slab — same results, faster gather.  ``lut_dtype``
+    ("f32" | "int8") selects the crude-pass table precision (DESIGN.md
+    §8); the refine pass is always f32."""
     K = C.shape[0]
     fast = structure.fast_mask
     sigma = structure.sigma
@@ -282,6 +323,7 @@ def ivf_two_step_search(queries, codes, C, structure, ivf: IVFIndex,
     if not 1 <= n_probe <= n_lists:
         raise ValueError(f"n_probe={n_probe} outside [1, {n_lists}]")
     be = resolve_backend(backend)
+    quantized = resolve_lut_dtype(lut_dtype) == "int8"
 
     if be == "pallas":
         if refine_cap is not None:
@@ -293,13 +335,13 @@ def ivf_two_step_search(queries, codes, C, structure, ivf: IVFIndex,
                                centroids=ivf.centroids, lists=ivf.lists,
                                n_probe=n_probe, block_q=block_q,
                                block_n=block_n, interpret=interpret,
-                               list_codes=list_codes)
+                               list_codes=list_codes, quantized=quantized)
     else:
         fn = functools.partial(_ivf_block_jnp, codes=codes, C=C, fast=fast,
                                sigma=sigma, topk=topk,
                                centroids=ivf.centroids, lists=ivf.lists,
                                n_probe=n_probe, refine_cap=refine_cap,
-                               list_codes=list_codes)
+                               list_codes=list_codes, quantized=quantized)
     ids, dist, n_cand, n_pass = chunked_over_queries(fn, queries,
                                                      query_chunk)
     return ivf_ops_result(ids, dist, n_cand, n_pass, n=n, n_lists=n_lists,
@@ -324,6 +366,7 @@ class IVFTwoStep:
     interpret: Optional[bool] = None
     query_chunk: Optional[int] = None
     refine_cap: Optional[int] = None
+    lut_dtype: str = "f32"
     list_codes: Optional[jnp.ndarray] = None     # (n_lists, max_len, K)
 
     @classmethod
@@ -345,7 +388,7 @@ class IVFTwoStep:
             backend=self.backend, block_q=self.block_q,
             block_n=self.block_n, interpret=self.interpret,
             query_chunk=self.query_chunk, refine_cap=self.refine_cap,
-            list_codes=self.list_codes)
+            list_codes=self.list_codes, lut_dtype=self.lut_dtype)
 
     def shard(self, mesh):
         from repro.index.sharded import ShardedIVFTwoStep

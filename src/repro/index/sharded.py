@@ -19,6 +19,18 @@ tile options of the source index apply to its single-device engines and
 are intentionally not consulted here (fused-kernel sharded serving is a
 TPU bring-up item; the dispatch makes it a local change).
 
+``lut_dtype`` *is* honored: with "int8" each shard runs its crude pass
+on the quantized tables (DESIGN.md §8).  Calibration is query-global by
+construction — ``quantize_lut`` derives scale/bias from the per-query
+LUT alone, which is computed from the *replicated* codebooks inside the
+shard_map body, so every shard quantizes with the identical affine and
+dequantized crude distances merge comparably across shards (a per-shard
+min/max would break the global top-k ordering).  The refine/full pass
+stays f32 on every shard, and the eq. 2 bootstrap mirrors the
+single-device quantized decomposition (quantized-crude + exact-slow),
+so sharded ids remain bitwise-identical to the single-device
+``lut_dtype="int8"`` engines.
+
 Layouts:
   ShardedFlatADC / ShardedTwoStep   codes rows sharded: shard s owns
       global rows [s*ns, (s+1)*ns); local top-k keys are global row ids.
@@ -42,7 +54,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed.sharding import shard_map_compat
 from repro.index import ivf as ivf_mod
-from repro.index.base import SearchResult, build_lut, lut_sum
+from repro.index.base import (SearchResult, build_lut, lut_sum,
+                              quantize_lut, resolve_lut_dtype)
 
 _I32_MAX = jnp.iinfo(jnp.int32).max
 
@@ -75,7 +88,14 @@ def _data_size(mesh) -> int:
 
 class ShardedFlatADC:
     """Row-sharded one-step ADC: local full LUT sums + local top-k,
-    merged by (distance, global row id)."""
+    merged by (distance, global row id).
+
+    Construction (`FlatADC.shard(mesh)`): codes rows are zero-padded up
+    to a multiple of the shard count and laid out P("data") — shard s
+    owns global rows [s*ns, (s+1)*ns); pad rows are masked to +inf
+    before the local top-k so they never merge.  ``lut_dtype`` follows
+    the source index (int8 = quantized full-table sums, query-global
+    calibration — see module docstring)."""
 
     def __init__(self, base, mesh):
         self.mesh = mesh
@@ -85,6 +105,7 @@ class ShardedFlatADC:
         self.n = n
         self.ns = -(-n // D)
         self.topk = base.topk
+        self.lut_dtype = resolve_lut_dtype(getattr(base, "lut_dtype", "f32"))
         self.codes = _put(mesh, _pad_rows(base.codes, D * self.ns),
                           P("data"))
         self._fns = {}
@@ -95,11 +116,13 @@ class ShardedFlatADC:
         C, n, ns = self.C, self.n, self.ns
         K = C.shape[0]
         k_loc = min(topk, ns)
+        quantized = self.lut_dtype == "int8"
 
         def body(qs, codes_shard):
             off = jax.lax.axis_index("data") * ns
             luts = build_lut(qs, C)
-            dist = lut_sum(luts, codes_shard)              # (nq, ns)
+            lut = quantize_lut(luts) if quantized else luts
+            dist = lut_sum(lut, codes_shard)               # (nq, ns)
             gids = off + jnp.arange(ns, dtype=jnp.int32)
             dist = jnp.where(gids[None, :] < n, dist, jnp.inf)
             neg, li = jax.lax.top_k(-dist, k_loc)
@@ -113,6 +136,8 @@ class ShardedFlatADC:
         return fn
 
     def search(self, queries, topk: Optional[int] = None) -> SearchResult:
+        """queries (nq, d) f32 -> SearchResult; ids bitwise-identical
+        to the single-device engine, distances to reassociation ulps."""
         topk = self.topk if topk is None else topk
         idx, dist = self._fn(topk)(queries, self.codes)
         K = self.C.shape[0]
@@ -129,7 +154,13 @@ class ShardedTwoStep:
     """Row-sharded ICQ two-step.  The eq. 2 threshold is bootstrapped
     from the *merged* global crude top-k (each shard refines its local
     crude candidates, shards exchange (crude, gid, full) triples), so
-    every shard prunes against the exact single-device threshold."""
+    every shard prunes against the exact single-device threshold.
+
+    Construction (`TwoStep.shard(mesh)`): codes rows zero-padded to a
+    multiple of the shard count, laid out P("data"); pad rows mask to
+    +inf before every local top-k.  ``lut_dtype="int8"`` quantizes the
+    crude pass per shard with the query-global affine (module
+    docstring); the slow/full tables stay f32."""
 
     def __init__(self, base, mesh):
         self.mesh = mesh
@@ -140,6 +171,7 @@ class ShardedTwoStep:
         self.n = n
         self.ns = -(-n // D)
         self.topk = base.topk
+        self.lut_dtype = resolve_lut_dtype(getattr(base, "lut_dtype", "f32"))
         self.codes = _put(mesh, _pad_rows(base.codes, D * self.ns),
                           P("data"))
         self._fns = {}
@@ -151,19 +183,26 @@ class ShardedTwoStep:
         fast = self.structure.fast_mask
         sigma = self.structure.sigma
         k_loc = min(topk, ns)
+        quantized = self.lut_dtype == "int8"
 
         def body(qs, codes_shard):
             off = jax.lax.axis_index("data") * ns
             luts = build_lut(qs, C)
-            crude = lut_sum(luts, codes_shard, fast)       # (nq, ns)
+            crude_lut = quantize_lut(luts, fast) if quantized else luts
+            crude = lut_sum(crude_lut, codes_shard, fast)  # (nq, ns)
             gids = off + jnp.arange(ns, dtype=jnp.int32)
             crude = jnp.where(gids[None, :] < n, crude, jnp.inf)
 
             # phase 1: local crude top-k + local full distances, merged
-            # globally before the threshold bootstrap
+            # globally before the threshold bootstrap (quantized mode
+            # mirrors the single-device decomposition: quantized crude
+            # + exact slow)
             neg_c, li = jax.lax.top_k(-crude, k_loc)
             cand_codes = jnp.take(codes_shard, li, axis=0)
-            full_cand = lut_sum(luts, cand_codes)          # (nq, k_loc)
+            if quantized:
+                full_cand = -neg_c + lut_sum(luts, cand_codes, ~fast)
+            else:
+                full_cand = lut_sum(luts, cand_codes)      # (nq, k_loc)
             sv, _, sf = _gather_sorted(
                 (-neg_c, jnp.take(gids, li), full_cand), "data")
             sv, sf = sv[:, :topk], sf[:, :topk]
@@ -189,6 +228,8 @@ class ShardedTwoStep:
         return fn
 
     def search(self, queries, topk: Optional[int] = None) -> SearchResult:
+        """queries (nq, d) f32 -> SearchResult; ids and pass accounting
+        bitwise-identical to the single-device engine."""
         topk = self.topk if topk is None else topk
         idx, dist, pf = self._fn(topk)(queries, self.codes)
         K = self.C.shape[0]
@@ -206,7 +247,14 @@ class ShardedIVFTwoStep:
     """List-sharded batched IVF: shard s owns list rows
     [s*Ls, (s+1)*Ls) and their packed codes slab.  Candidate keys are
     slab positions (probe-slot major), identical to the single-device
-    candidate order, so the merged ranking is bitwise-equal."""
+    candidate order, so the merged ranking is bitwise-equal.
+
+    Construction (`IVFTwoStep.shard(mesh)`): list rows and the in-list
+    codes slab are padded to a multiple of the shard count (pad lists
+    all-invalid, id -1) and laid out P("data"); centroids/codebooks are
+    replicated.  ``lut_dtype="int8"`` runs each shard's slab crude pass
+    on the query-global quantized tables (module docstring); the
+    refine/full pass stays f32."""
 
     def __init__(self, base, mesh):
         # copy fields rather than retaining base: the sharded clone must
@@ -224,6 +272,7 @@ class ShardedIVFTwoStep:
         self.n_probe = base.n_probe
         self.topk = base.topk
         self.refine_cap = base.refine_cap
+        self.lut_dtype = resolve_lut_dtype(getattr(base, "lut_dtype", "f32"))
         lists_p = _pad_rows(base.ivf.lists, D * self.Ls, fill=-1)
         # codes live inside the inverted lists (ivf_list_codes slab) so
         # serving never touches the flat codes array; pad rows are
@@ -257,6 +306,7 @@ class ShardedIVFTwoStep:
         cap = (None if refine_cap is None
                else min(max(refine_cap, topk), nc))
         cap_loc = None if cap is None else min(cap, nc_loc)
+        quantized = self.lut_dtype == "int8"
 
         def body(qs, lists_sh, slab_sh):
             si = jax.lax.axis_index("data")
@@ -295,7 +345,8 @@ class ShardedIVFTwoStep:
             valid = owned & (ids >= 0)
             safe = jnp.where(valid, ids, 0)
 
-            crude = lut_sum(luts, codes, fast)             # (nq, nc_loc)
+            crude_lut = quantize_lut(luts, fast) if quantized else luts
+            crude = lut_sum(crude_lut, codes, fast)        # (nq, nc_loc)
             crude = jnp.where(valid, crude, jnp.inf)
             # a slab position is contributed by its owning shard only;
             # everywhere else it sorts dead last
@@ -311,7 +362,10 @@ class ShardedIVFTwoStep:
             c_s, p_s, col_s = c_s[:, :k_loc], p_s[:, :k_loc], col_s[:, :k_loc]
             cand_codes = jnp.take_along_axis(codes, col_s[:, :, None],
                                              axis=1)
-            full_cand = lut_sum(luts, cand_codes)          # (nq, k_loc)
+            if quantized:       # quantized crude + exact slow (§8)
+                full_cand = c_s + lut_sum(luts, cand_codes, ~fast)
+            else:
+                full_cand = lut_sum(luts, cand_codes)      # (nq, k_loc)
             sv, sp, sf = _gather_sorted((c_s, p_s, full_cand), "data")
             sv, sf = sv[:, :topk], sf[:, :topk]
             far = jnp.argmax(jnp.where(jnp.isfinite(sv), sf, -jnp.inf),
@@ -364,6 +418,9 @@ class ShardedIVFTwoStep:
         return fn
 
     def search(self, queries, topk: Optional[int] = None) -> SearchResult:
+        """queries (nq, d) f32 -> SearchResult with the generalized IVF
+        ops accounting; ids and counts bitwise-identical to the
+        single-device engine."""
         topk = self.topk if topk is None else topk
         ids, dist, n_cand, n_pass = self._fn(topk)(
             queries, self.lists, self.list_codes)

@@ -36,6 +36,17 @@ Codes enter in their *stored* packed dtype (uint8 for m <= 256) and are
 widened to int32 per-tile inside the kernel — the HBM->VMEM stream
 carries 1 byte/entry, which is the 4x traffic saving the packing is for.
 
+Quantized-LUT mode (DESIGN.md §8): the crude kernels also accept
+*int8* LUT tiles (``lut_flat`` dtype int8, plus per-query ``lut_scale``
+/ ``lut_offset`` f32 columns).  The one-hot dot then runs int8 x int8
+with ``preferred_element_type=int32`` — the MXU's native quantized
+form — and the (blk_q, blk_n) int32 tile is rescaled in-VMEM to
+true-distance f32 (``scale * acc + offset``) before the masking/top-k
+merge, which is therefore unchanged.  An int8 tile is 4x smaller than
+f32, doubling-and-more the LUT capacity that can stay VMEM-pinned per
+query tile.  The refine kernels are f32-only on purpose: eq. 2's exact
+re-ranking (the slow/full pass) must not be quantized.
+
 IVF variants (``ivf_crude_topk_pallas`` / ``ivf_refine_topk_pallas``):
 same two-phase structure, but the codes operand is the *gathered
 candidate slab* (nq, nc, K) — per-query candidates, so the distance
@@ -79,15 +90,25 @@ def _init_topk(vals_ref, idx_ref):
 
 def _crude_topk_kernel(codes_ref, lut_ref, *refs,
                        K: int, m: int, topk: int, n: int, blk_n: int,
-                       want_crude: bool):
+                       want_crude: bool, quantized: bool):
     ni = pl.program_id(1)
     codes = codes_ref[...].astype(jnp.int32)     # widen packed codes per-tile
-    lut = lut_ref[...]                           # (blk_q, K*m) f32, fast-masked
+    lut = lut_ref[...]                  # (blk_q, K*m) f32 | int8, fast-masked
     blk_q = lut.shape[0]
-    onehot = flat_onehot(codes, K, m, lut.dtype)      # (blk_n, K*m)
-    crude = jax.lax.dot_general(                      # (blk_q, blk_n) on MXU
-        lut, onehot, dimension_numbers=(((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    if quantized:
+        scale_ref, offset_ref, *refs = refs
+        onehot = flat_onehot(codes, K, m, jnp.int8)   # (blk_n, K*m)
+        acc = jax.lax.dot_general(                    # int8 x int8 -> int32
+            lut, onehot, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        # rescale to true-distance f32: masked codebooks are zero in the
+        # int8 tile, so only the offset (= |K_fast| * bias) corrects them
+        crude = scale_ref[...] * acc.astype(jnp.float32) + offset_ref[...]
+    else:
+        onehot = flat_onehot(codes, K, m, lut.dtype)  # (blk_n, K*m)
+        crude = jax.lax.dot_general(                  # (blk_q, blk_n) on MXU
+            lut, onehot, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
     if want_crude:
         crude_ref, vals_ref, idx_ref = refs
         crude_ref[...] = crude
@@ -131,22 +152,51 @@ def _refine_topk_kernel(codes_ref, lut_ref, crude_ref, thr_ref,
 
 
 def _pad_to(x, rows):
+    """The shared padding contract of every wrapper below: zero-pad the
+    *leading* axis of ``x`` up to ``rows`` (a whole number of grid
+    tiles).  Pad rows are real kernel inputs — each kernel masks the
+    pad columns/rows it produces to +inf (or carries validity ids) so
+    padding never reaches a returned value; callers always slice
+    outputs back to true sizes before returning."""
     return x if x.shape[0] == rows else jnp.pad(
         x, [(0, rows - x.shape[0])] + [(0, 0)] * (x.ndim - 1))
+
+
+def _check_quantized_args(lut_flat, lut_scale, lut_offset):
+    """int8 LUTs need the per-query affine columns; f32 forbids them."""
+    if lut_flat.dtype == jnp.int8:
+        if lut_scale is None or lut_offset is None:
+            raise ValueError("int8 lut_flat requires lut_scale and "
+                             "lut_offset (see index.base.quantize_lut)")
+        return True
+    if lut_scale is not None or lut_offset is not None:
+        raise ValueError("lut_scale/lut_offset are only valid with an "
+                         "int8 lut_flat")
+    return False
 
 
 @functools.partial(jax.jit,
                    static_argnames=("topk", "block_q", "block_n", "interpret",
                                     "want_crude"))
-def crude_topk_pallas(codes, lut_flat, *, topk: int, block_q: int = 64,
-                      block_n: int = 512, interpret: bool = True,
-                      want_crude: bool = True):
+def crude_topk_pallas(codes, lut_flat, lut_scale=None, lut_offset=None, *,
+                      topk: int, block_q: int = 64, block_n: int = 512,
+                      interpret: bool = True, want_crude: bool = True):
     """Phase 1.  codes (n, K) int (packed dtypes welcome — widened
-    per-tile in-kernel), lut_flat (nq, K*m) f32 (fast-masked, flattened)
-    -> (crude (nq, n) f32, cand_vals (nq, topk) f32,
-    cand_idx (nq, topk) i32); ``want_crude=False`` skips writing the
-    dense (nq, n) crude matrix to HBM (one-step ADC only needs the
-    top-k) and returns crude=None."""
+    per-tile in-kernel), lut_flat (nq, K*m) fast-masked flattened
+    tables, f32 *or* int8 (quantized-LUT mode, DESIGN.md §8: int8
+    requires ``lut_scale`` (nq,) and ``lut_offset`` (nq,) f32 — the
+    per-query dequant affine, offset already multiplied by the summed
+    codebook count) -> (crude (nq, n) f32, cand_vals (nq, topk) f32,
+    cand_idx (nq, topk) i32).  Crude values are always returned in
+    true-distance f32 units, whatever the LUT dtype.
+
+    ``want_crude=False`` skips writing the dense (nq, n) crude matrix
+    to HBM (one-step ADC only needs the top-k) and returns crude=None.
+
+    Padding: n and nq are padded up to the (block_q, block_n) grid
+    (``_pad_to``); pad point columns are masked to +inf before the
+    in-kernel merge and all outputs are sliced back to (nq, ...)."""
+    quantized = _check_quantized_args(lut_flat, lut_scale, lut_offset)
     n, K = codes.shape
     nq, Km = lut_flat.shape
     m = Km // K
@@ -159,18 +209,29 @@ def crude_topk_pallas(codes, lut_flat, *, topk: int, block_q: int = 64,
                   pl.BlockSpec((block_q, topk), lambda qi, ni: (qi, 0)))
     crude_shape = (jax.ShapeDtypeStruct((nq_pad, n_pad), jnp.float32),)
     crude_spec = (pl.BlockSpec((block_q, block_n), lambda qi, ni: (qi, ni)),)
+    in_specs = [
+        pl.BlockSpec((block_n, K), lambda qi, ni: (ni, 0)),
+        pl.BlockSpec((block_q, Km), lambda qi, ni: (qi, 0)),  # pinned
+    ]
+    operands = [_pad_to(codes, n_pad),
+                _pad_to(lut_flat if quantized
+                        else lut_flat.astype(jnp.float32), nq_pad)]
+    if quantized:
+        col = pl.BlockSpec((block_q, 1), lambda qi, ni: (qi, 0))
+        in_specs += [col, col]
+        operands += [
+            _pad_to(jnp.asarray(lut_scale, jnp.float32)[:, None], nq_pad),
+            _pad_to(jnp.asarray(lut_offset, jnp.float32)[:, None], nq_pad)]
     outs = pl.pallas_call(
         functools.partial(_crude_topk_kernel, K=K, m=m, topk=topk, n=n,
-                          blk_n=block_n, want_crude=want_crude),
+                          blk_n=block_n, want_crude=want_crude,
+                          quantized=quantized),
         out_shape=(crude_shape if want_crude else ()) + topk_shapes,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_n, K), lambda qi, ni: (ni, 0)),
-            pl.BlockSpec((block_q, Km), lambda qi, ni: (qi, 0)),  # pinned
-        ],
+        in_specs=in_specs,
         out_specs=(crude_spec if want_crude else ()) + topk_specs,
         interpret=interpret,
-    )(_pad_to(codes, n_pad), _pad_to(lut_flat.astype(jnp.float32), nq_pad))
+    )(*operands)
     if want_crude:
         crude, vals, idx = outs
         return crude[:nq, :n], vals[:nq], idx[:nq]
@@ -182,30 +243,40 @@ def crude_topk_pallas(codes, lut_flat, *, topk: int, block_q: int = 64,
 
 def _slab_distances(codes, lut, K: int, m: int):
     """Per-query candidate-slab distances: codes (blk_q, blk_n, K) int32,
-    lut (blk_q, K*m) f32 -> (blk_q, blk_n) f32 via a batched
-    onehot-matvec (one MXU-shaped dot per query row).
+    lut (blk_q, K*m) f32 | int8 -> (blk_q, blk_n) f32 | int32 via a
+    batched onehot-matvec (one MXU-shaped dot per query row; int8 LUTs
+    dot int8 x int8 into an int32 tile — the caller rescales).
 
-    VMEM sizing: the one-hot intermediate is blk_q * blk_n * K*m f32 —
-    unlike the shared-codes kernels there is one one-hot *per query
-    row*.  Tile sizes must keep blk_q * blk_n * K * m * 4B well under
-    VMEM (the 4 x 128 defaults give 4 MB at K=8, m=256); raising blk_q
-    is the expensive axis."""
+    VMEM sizing: the one-hot intermediate is blk_q * blk_n * K*m at the
+    LUT's width — unlike the shared-codes kernels there is one one-hot
+    *per query row*.  Tile sizes must keep blk_q * blk_n * K * m * 4B
+    well under VMEM (the 4 x 128 defaults give 4 MB at K=8, m=256, f32;
+    int8 one-hots are 4x smaller); raising blk_q is the expensive
+    axis."""
     blk_q, blk_n, _ = codes.shape
+    quantized = lut.dtype == jnp.int8
     onehot = flat_onehot(codes.reshape(blk_q * blk_n, K), K, m,
                          lut.dtype).reshape(blk_q, blk_n, K * m)
     return jax.lax.dot_general(
         onehot, lut, dimension_numbers=(((2,), (1,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32)
+        preferred_element_type=jnp.int32 if quantized else jnp.float32)
 
 
-def _ivf_crude_kernel(codes_ref, ids_ref, lut_ref, crude_ref, vals_ref,
-                      idx_ref, *, K: int, m: int, topk: int, nc: int,
-                      blk_n: int):
+def _ivf_crude_kernel(codes_ref, ids_ref, lut_ref, *refs,
+                      K: int, m: int, topk: int, nc: int, blk_n: int,
+                      quantized: bool):
     ni = pl.program_id(1)
     codes = codes_ref[...].astype(jnp.int32)     # (blk_q, blk_n, K)
     ids = ids_ref[...]                           # (blk_q, blk_n) global ids
-    lut = lut_ref[...]                           # (blk_q, K*m) fast-masked
-    crude = _slab_distances(codes, lut, K, m)
+    lut = lut_ref[...]                  # (blk_q, K*m) fast-masked f32 | int8
+    if quantized:
+        scale_ref, offset_ref, crude_ref, vals_ref, idx_ref = refs
+        acc = _slab_distances(codes, lut, K, m)          # int32
+        crude = (scale_ref[...] * acc.astype(jnp.float32)
+                 + offset_ref[...])
+    else:
+        crude_ref, vals_ref, idx_ref = refs
+        crude = _slab_distances(codes, lut, K, m)
 
     blk_q = lut.shape[0]
     gidx = ni * blk_n + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_n), 1)
@@ -246,16 +317,24 @@ def _ivf_refine_kernel(codes_ref, lut_ref, crude_ref, thr_ref, vals_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("topk", "block_q", "block_n", "interpret"))
-def ivf_crude_topk_pallas(cand_codes, cand_ids, lut_flat, *, topk: int,
-                          block_q: int = 4, block_n: int = 128,
-                          interpret: bool = True):
+def ivf_crude_topk_pallas(cand_codes, cand_ids, lut_flat, lut_scale=None,
+                          lut_offset=None, *, topk: int, block_q: int = 4,
+                          block_n: int = 128, interpret: bool = True):
     """IVF phase 1 over the gathered candidate slab.
 
-    cand_codes (nq, nc, K) int (packed dtypes welcome), cand_ids
-    (nq, nc) int32 global db ids (-1 pad), lut_flat (nq, K*m) f32
-    (fast-masked) -> (crude (nq, nc) f32 with invalid columns +inf,
-    cand_vals (nq, topk) f32, cand_pos (nq, topk) i32 slab positions).
-    """
+    cand_codes (nq, nc, K) int (packed dtypes welcome — widened
+    per-tile in-kernel), cand_ids (nq, nc) int32 global db ids (-1
+    pad), lut_flat (nq, K*m) fast-masked tables, f32 *or* int8
+    (quantized-LUT mode: int8 requires ``lut_scale`` / ``lut_offset``
+    (nq,) f32, see ``crude_topk_pallas``) -> (crude (nq, nc) f32 with
+    invalid columns +inf, cand_vals (nq, topk) f32, cand_pos (nq, topk)
+    i32 slab positions).  Crude values are always true-distance f32.
+
+    Padding: nq and nc are padded up to the (block_q, block_n) grid
+    (``_pad_to`` on the query axis; the slab pad columns carry id -1 so
+    they mask to +inf like in-slab invalid candidates); outputs are
+    sliced back to (nq, nc)/(nq, topk)."""
+    quantized = _check_quantized_args(lut_flat, lut_scale, lut_offset)
     nq, nc, K = cand_codes.shape
     Km = lut_flat.shape[1]
     m = Km // K
@@ -266,25 +345,35 @@ def ivf_crude_topk_pallas(cand_codes, cand_ids, lut_flat, *, topk: int,
                                    (0, 0)))
     ids_p = jnp.pad(cand_ids, ((0, nq_pad - nq), (0, nc_pad - nc)),
                     constant_values=-1)
+    in_specs = [
+        pl.BlockSpec((block_q, block_n, K), lambda qi, ni: (qi, ni, 0)),
+        pl.BlockSpec((block_q, block_n), lambda qi, ni: (qi, ni)),
+        pl.BlockSpec((block_q, Km), lambda qi, ni: (qi, 0)),   # pinned
+    ]
+    operands = [codes_p, ids_p,
+                _pad_to(lut_flat if quantized
+                        else lut_flat.astype(jnp.float32), nq_pad)]
+    if quantized:
+        col = pl.BlockSpec((block_q, 1), lambda qi, ni: (qi, 0))
+        in_specs += [col, col]
+        operands += [
+            _pad_to(jnp.asarray(lut_scale, jnp.float32)[:, None], nq_pad),
+            _pad_to(jnp.asarray(lut_offset, jnp.float32)[:, None], nq_pad)]
     crude, vals, idx = pl.pallas_call(
         functools.partial(_ivf_crude_kernel, K=K, m=m, topk=topk, nc=nc,
-                          blk_n=block_n),
+                          blk_n=block_n, quantized=quantized),
         out_shape=(jax.ShapeDtypeStruct((nq_pad, nc_pad), jnp.float32),
                    jax.ShapeDtypeStruct((nq_pad, topk), jnp.float32),
                    jax.ShapeDtypeStruct((nq_pad, topk), jnp.int32)),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_q, block_n, K), lambda qi, ni: (qi, ni, 0)),
-            pl.BlockSpec((block_q, block_n), lambda qi, ni: (qi, ni)),
-            pl.BlockSpec((block_q, Km), lambda qi, ni: (qi, 0)),   # pinned
-        ],
+        in_specs=in_specs,
         out_specs=(
             pl.BlockSpec((block_q, block_n), lambda qi, ni: (qi, ni)),
             pl.BlockSpec((block_q, topk), lambda qi, ni: (qi, 0)),
             pl.BlockSpec((block_q, topk), lambda qi, ni: (qi, 0)),
         ),
         interpret=interpret,
-    )(codes_p, ids_p, _pad_to(lut_flat.astype(jnp.float32), nq_pad))
+    )(*operands)
     return crude[:nq, :nc], vals[:nq], idx[:nq]
 
 
@@ -293,10 +382,17 @@ def ivf_crude_topk_pallas(cand_codes, cand_ids, lut_flat, *, topk: int,
 def ivf_refine_topk_pallas(cand_codes, lut_flat, crude, thresholds, *,
                            topk: int, block_q: int = 4, block_n: int = 128,
                            interpret: bool = True):
-    """IVF phase 2 over the candidate slab.  cand_codes (nq, nc, K) int,
-    lut_flat (nq, K*m) f32 (slow-masked), crude (nq, nc) f32 from phase 1
-    (invalid columns +inf), thresholds (nq,) f32 = t + sigma ->
-    (dist (nq, topk) f32, pos (nq, topk) i32 slab positions)."""
+    """IVF phase 2 over the candidate slab.  cand_codes (nq, nc, K) int
+    (packed dtypes welcome), lut_flat (nq, K*m) f32 (slow-masked —
+    always f32: the refine pass is eq. 2's exact re-ranking and is
+    never quantized), crude (nq, nc) f32 from phase 1 (invalid columns
+    +inf; a quantized phase 1 already emits dequantized f32), thresholds
+    (nq,) f32 = t + sigma -> (dist (nq, topk) f32, pos (nq, topk) i32
+    slab positions).
+
+    Padding: nq/nc padded up to the grid; the crude matrix is embedded
+    in a +inf canvas so pad columns can never pass the margin test, and
+    outputs are sliced back to (nq, topk)."""
     nq, nc, K = cand_codes.shape
     Km = lut_flat.shape[1]
     m = Km // K
@@ -335,10 +431,16 @@ def ivf_refine_topk_pallas(cand_codes, lut_flat, crude, thresholds, *,
 def refine_topk_pallas(codes, lut_flat, crude, thresholds, *, topk: int,
                        block_q: int = 64, block_n: int = 512,
                        interpret: bool = True):
-    """Phase 2.  codes (n, K) int (packed dtypes welcome), lut_flat
-    (nq, K*m) f32 (slow-masked), crude (nq, n) f32 from phase 1,
-    thresholds (nq,) f32 = t + sigma ->
-    (dist (nq, topk) f32, idx (nq, topk) i32); pruned rows rank +inf."""
+    """Phase 2.  codes (n, K) int (packed dtypes welcome — widened
+    per-tile in-kernel), lut_flat (nq, K*m) f32 (slow-masked — always
+    f32: the refine pass is eq. 2's exact re-ranking and is never
+    quantized), crude (nq, n) f32 from phase 1 (a quantized phase 1
+    already emits dequantized f32), thresholds (nq,) f32 = t + sigma ->
+    (dist (nq, topk) f32, idx (nq, topk) i32); pruned points rank +inf.
+
+    Padding: n/nq padded up to the grid (``_pad_to``); the crude matrix
+    is embedded in a +inf canvas so pad columns can never pass the
+    margin test, and outputs are sliced back to (nq, topk)."""
     n, K = codes.shape
     nq, Km = lut_flat.shape
     m = Km // K

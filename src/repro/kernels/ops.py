@@ -39,16 +39,20 @@ def two_step(codes, lut, fast_mask, threshold, *, block_n: int = 512,
 
 def batched_crude_topk(codes, lut_flat, topk: int, *, block_q: int = 64,
                        block_n: int = 512, interpret=None,
-                       want_crude: bool = True):
+                       want_crude: bool = True, lut_scale=None,
+                       lut_offset=None):
     """Batched phase 1: crude LUT sums for every (query, point) pair plus
     the in-kernel running top-k of crude distances.
 
-    codes (n, K) int (packed ok), lut_flat (nq, K*m) f32 (fast-masked,
-    flattened) -> (crude (nq, n) | None, cand_vals (nq, topk),
-    cand_idx (nq, topk)); ``want_crude=False`` skips the dense matrix.
+    codes (n, K) int (packed ok), lut_flat (nq, K*m) fast-masked
+    flattened tables — f32, or int8 with ``lut_scale``/``lut_offset``
+    (nq,) f32 (quantized-LUT mode; crude output is dequantized f32) ->
+    (crude (nq, n) | None, cand_vals (nq, topk), cand_idx (nq, topk));
+    ``want_crude=False`` skips the dense matrix.
     """
     it = _default_interpret() if interpret is None else interpret
-    return crude_topk_pallas(codes, lut_flat, topk=topk, block_q=block_q,
+    return crude_topk_pallas(codes, lut_flat, lut_scale, lut_offset,
+                             topk=topk, block_q=block_q,
                              block_n=block_n, interpret=it,
                              want_crude=want_crude)
 
@@ -67,16 +71,20 @@ def batched_refine_topk(codes, lut_flat, crude, thresholds, topk: int, *,
 
 
 def ivf_crude_topk(cand_codes, cand_ids, lut_flat, topk: int, *,
-                   block_q: int = 4, block_n: int = 128, interpret=None):
+                   block_q: int = 4, block_n: int = 128, interpret=None,
+                   lut_scale=None, lut_offset=None):
     """IVF phase 1 over the gathered candidate slab: crude LUT sums +
     in-kernel running top-k of crude distances (slab positions).
 
     cand_codes (nq, nc, K) int (packed ok), cand_ids (nq, nc) int32
-    global ids (-1 pad), lut_flat (nq, K*m) f32 (fast-masked) ->
-    (crude (nq, nc) with invalid +inf, vals (nq, topk), pos (nq, topk)).
+    global ids (-1 pad), lut_flat (nq, K*m) fast-masked tables — f32,
+    or int8 with ``lut_scale``/``lut_offset`` (nq,) f32 (quantized-LUT
+    mode; crude output is dequantized f32) -> (crude (nq, nc) with
+    invalid +inf, vals (nq, topk), pos (nq, topk)).
     """
     it = _default_interpret() if interpret is None else interpret
-    return ivf_crude_topk_pallas(cand_codes, cand_ids, lut_flat, topk=topk,
+    return ivf_crude_topk_pallas(cand_codes, cand_ids, lut_flat, lut_scale,
+                                 lut_offset, topk=topk,
                                  block_q=block_q, block_n=block_n,
                                  interpret=it)
 

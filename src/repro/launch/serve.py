@@ -14,8 +14,9 @@ synthetic packed-uint8 index is built and query batches stream through
 ``quant.serve_icq.build_ann_engine`` (DESIGN.md §7), reporting
 per-query latency, pass rate, and Average Ops.  ``--ann-index`` picks
 the implementation (flat ADC, exhaustive two-step, or IVF with
-``--ann-lists`` / ``--ann-probe``); ``--ann-shards N`` serves the index
-sharded over an N-way ``data`` mesh (run under
+``--ann-lists`` / ``--ann-probe``); ``--lut-dtype int8`` serves the
+crude pass from quantized tables (DESIGN.md §8); ``--ann-shards N``
+serves the index sharded over an N-way ``data`` mesh (run under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` on CPU):
 
     PYTHONPATH=src python -m repro.launch.serve --ann --ann-n 100000 \
@@ -40,7 +41,7 @@ from repro.launch.steps import build_serve_fns
 def serve_ann(n: int, nq: int, backend: str, *, d: int = 16, K: int = 8,
               m: int = 256, num_fast: int = 2, topk: int = 50,
               batches: int = 3, index: str = "two-step", shards: int = 1,
-              n_lists: int = 64, n_probe: int = 8):
+              n_lists: int = 64, n_probe: int = 8, lut_dtype: str = "f32"):
     """Synthetic ANN serving loop through the unified index layer."""
     from repro.data.synthetic import make_synthetic_index
     from repro.quant.serve_icq import build_ann_engine
@@ -63,7 +64,8 @@ def serve_ann(n: int, nq: int, backend: str, *, d: int = 16, K: int = 8,
     engine = build_ann_engine(codes, C, structure, topk=topk,
                               backend=backend, index=index, mesh=mesh,
                               emb_db=emb_db, n_lists=n_lists,
-                              n_probe=n_probe, key=jax.random.fold_in(key, 1))
+                              n_probe=n_probe, lut_dtype=lut_dtype,
+                              key=jax.random.fold_in(key, 1))
 
     qkey = jax.random.fold_in(key, 2)
     queries = jax.random.normal(qkey, (nq, d))
@@ -76,7 +78,7 @@ def serve_ann(n: int, nq: int, backend: str, *, d: int = 16, K: int = 8,
         jax.block_until_ready(res.indices)
     dt = (time.time() - t0) / batches
     print(f"ann: index={index} n={n} nq={nq} topk={topk} backend={backend} "
-          f"shards={shards}: {dt * 1e6 / nq:.1f} us/query "
+          f"lut={lut_dtype} shards={shards}: {dt * 1e6 / nq:.1f} us/query "
           f"(batch {dt * 1e3:.1f} ms), pass_rate={float(res.pass_rate):.3f}, "
           f"avg_ops={float(res.avg_ops):.2f}/{K}")
 
@@ -103,12 +105,16 @@ def main():
                     help="IVF coarse lists (--ann-index ivf)")
     ap.add_argument("--ann-probe", type=int, default=8,
                     help="IVF probed lists per query (--ann-index ivf)")
+    ap.add_argument("--lut-dtype", default="f32", choices=["f32", "int8"],
+                    help="crude-pass LUT precision (int8 = quantized "
+                         "tables, DESIGN.md §8)")
     args = ap.parse_args()
 
     if args.ann:
         serve_ann(args.ann_n, args.ann_queries, args.ann_backend,
                   index=args.ann_index, shards=args.ann_shards,
-                  n_lists=args.ann_lists, n_probe=args.ann_probe)
+                  n_lists=args.ann_lists, n_probe=args.ann_probe,
+                  lut_dtype=args.lut_dtype)
         return
     if args.arch is None:
         ap.error("--arch is required unless --ann is given")

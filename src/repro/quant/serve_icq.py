@@ -42,7 +42,7 @@ def build_ann_engine(codes, C, structure, *, topk: int = 50,
                      backend: str = "auto", block_q=None, block_n=None,
                      query_chunk=None, index: str = "two-step", mesh=None,
                      emb_db=None, n_lists: int = 64, n_probe: int = 8,
-                     refine_cap=None, key=None):
+                     refine_cap=None, key=None, lut_dtype: str = "f32"):
     """Batched ANN serving entry: returns jitted
     ``serve(queries (nq, d)) -> repro.index.SearchResult``.
 
@@ -53,12 +53,14 @@ def build_ann_engine(codes, C, structure, *, topk: int = 50,
     data-parallel serving.  ``codes`` stay device-resident across calls
     (packed uint8; widened at the kernel boundary).  ``backend`` follows
     the unified dispatch: "pallas" fused kernels on TPU, vectorized jnp
-    elsewhere.
+    elsewhere.  ``lut_dtype`` ("f32" | "int8") selects the crude-pass
+    LUT precision (DESIGN.md §8; honored by the sharded engines too).
     """
     from repro.index import make_index
 
     opts: Dict[str, Any] = dict(topk=topk, backend=backend,
-                                query_chunk=query_chunk)
+                                query_chunk=query_chunk,
+                                lut_dtype=lut_dtype)
     # None = keep the index class's own tile defaults (they differ
     # between the flat engines and the IVF slab kernels)
     if block_q is not None:

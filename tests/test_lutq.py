@@ -1,0 +1,291 @@
+"""Quantized-LUT (int8) search stack (DESIGN.md §8): calibration
+round-trip error bound, quantized lut_sum vs the dequantized reference,
+pallas==jnp parity for the int8 crude kernels, query-chunk invariance,
+the int8-vs-f32 recall@10 gap on the seed config, and sharded int8
+merge identity (subprocess under 4 forced host devices)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codebooks as cb
+from repro.core import icq as icq_mod
+from repro.index import (adc_search, build_ivf, build_lut,
+                         ivf_two_step_search, lut_sum, quantize_lut,
+                         two_step_search)
+
+
+def _problem(key, n, nq, K=4, m=16, kf=2, d=8, sigma=1.0):
+    C = jax.random.normal(key, (K, m, d)) * 0.3
+    codes = jax.random.randint(jax.random.fold_in(key, 1), (n, K), 0,
+                               m).astype(jnp.uint8)
+    fast = jnp.zeros((K,), bool).at[:kf].set(True)
+    st = icq_mod.ICQStructure(xi=jnp.ones((d,), bool), fast_mask=fast,
+                              sigma=jnp.asarray(sigma))
+    q = jax.random.normal(jax.random.fold_in(key, 2), (nq, d))
+    return q, codes, C, st
+
+
+# ---------------------------------------------------------- calibration ----
+
+def test_quantize_lut_roundtrip_error_bound(key):
+    """Every kept entry dequantizes to within scale/2 of its f32 value
+    (the affine-calibration guarantee a sum of S entries inherits as
+    S * scale / 2)."""
+    C = jax.random.normal(key, (6, 32, 8)) * 0.4
+    q = jax.random.normal(jax.random.fold_in(key, 1), (5, 8))
+    luts = build_lut(q, C)
+    mask = jnp.zeros((6,), bool).at[:2].set(True)
+    for cb_mask in (None, mask):
+        ql = quantize_lut(luts, cb_mask)
+        deq = (ql.scale[:, None, None] * ql.q.astype(jnp.float32)
+               + ql.bias[:, None, None])
+        keep = (jnp.ones(luts.shape, bool) if cb_mask is None
+                else jnp.broadcast_to(cb_mask[None, :, None], luts.shape))
+        err = jnp.max(jnp.abs(jnp.where(keep, deq - luts, 0.0)), axis=(1, 2))
+        # scale/2 plus a float-rounding epsilon
+        assert (np.asarray(err) <= np.asarray(ql.scale) / 2 + 1e-5).all()
+    # the fast-subset calibration must be at least as tight
+    assert float(jnp.max(quantize_lut(luts, mask).scale)) <= \
+        float(jnp.max(quantize_lut(luts).scale)) + 1e-12
+    # single-query (K, m) tables quantize too
+    ql1 = quantize_lut(luts[0])
+    assert ql1.q.shape == luts[0].shape and ql1.scale.ndim == 0
+
+
+def test_quantize_lut_constant_table_guard(key):
+    """A degenerate all-equal table must not divide by zero."""
+    luts = jnp.ones((3, 4, 8))
+    ql = quantize_lut(luts)
+    assert np.isfinite(np.asarray(ql.scale)).all()
+    deq = (ql.scale[:, None, None] * ql.q.astype(jnp.float32)
+           + ql.bias[:, None, None])
+    np.testing.assert_allclose(np.asarray(deq), 1.0, atol=1e-5)
+
+
+def test_lut_sum_quantized_matches_dequantized_reference(key):
+    """Integer accumulation + one rescale == summing the dequantized
+    f32 table, for all three lut_sum shape cases."""
+    K, m, n, nq, t = 5, 16, 200, 4, 9
+    C = jax.random.normal(key, (K, m, 8)) * 0.3
+    q = jax.random.normal(jax.random.fold_in(key, 1), (nq, 8))
+    luts = build_lut(q, C)
+    codes = jax.random.randint(jax.random.fold_in(key, 2), (n, K), 0, m)
+    cand = jax.random.randint(jax.random.fold_in(key, 3), (nq, t, K), 0, m)
+    mask = jnp.zeros((K,), bool).at[:2].set(True)
+    for cb_mask in (None, mask):
+        ql = quantize_lut(luts, cb_mask)
+        keep = (jnp.ones((K,), bool) if cb_mask is None else cb_mask)
+        deq = jnp.where(
+            keep[None, :, None],
+            ql.scale[:, None, None] * ql.q.astype(jnp.float32)
+            + ql.bias[:, None, None], 0.0)
+        # shared database codes
+        got = lut_sum(ql, codes, cb_mask)
+        want = lut_sum(deq, codes)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4)
+        # per-query candidate codes
+        got_c = lut_sum(ql, cand, cb_mask)
+        want_c = lut_sum(deq, cand)
+        np.testing.assert_allclose(np.asarray(got_c), np.asarray(want_c),
+                                   atol=1e-4)
+    # single-query case
+    ql0 = quantize_lut(luts[0])
+    got0 = lut_sum(ql0, codes)
+    deq0 = (ql0.scale * ql0.q.astype(jnp.float32) + ql0.bias)
+    np.testing.assert_allclose(np.asarray(got0),
+                               np.asarray(lut_sum(deq0, codes)), atol=1e-4)
+
+
+# --------------------------------------------------------------- parity ----
+
+@pytest.mark.parametrize("n,nq,K,m,kf", [
+    (257, 5, 4, 16, 1),      # non-divisible n/nq, |K_fast| = 1
+    (530, 7, 8, 32, 7),      # |K_fast| = K - 1
+])
+def test_two_step_int8_pallas_matches_jnp(key, n, nq, K, m, kf):
+    """int8 crude kernel == int8 jnp engine: exact ids, 1e-4 distances,
+    identical pass accounting (both dequantize with the same affine)."""
+    q, codes, C, st = _problem(jax.random.fold_in(key, n), n, nq, K=K,
+                               m=m, kf=kf)
+    topk = 17
+    r_j = two_step_search(q, codes, C, st, topk, backend="jnp",
+                          lut_dtype="int8")
+    r_p = two_step_search(q, codes, C, st, topk, backend="pallas",
+                          interpret=True, block_q=3, block_n=200,
+                          lut_dtype="int8")
+    np.testing.assert_array_equal(np.asarray(r_p.indices),
+                                  np.asarray(r_j.indices))
+    np.testing.assert_allclose(np.asarray(r_p.distances),
+                               np.asarray(r_j.distances), atol=1e-4)
+    assert float(r_p.pass_rate) == pytest.approx(float(r_j.pass_rate),
+                                                 abs=1e-6)
+
+
+def test_adc_int8_pallas_matches_jnp(key):
+    q, codes, C, st = _problem(key, 300, 6)
+    r_j = adc_search(q, codes, C, 12, backend="jnp", lut_dtype="int8")
+    r_p = adc_search(q, codes, C, 12, backend="pallas", interpret=True,
+                     block_q=4, block_n=128, lut_dtype="int8")
+    np.testing.assert_array_equal(np.asarray(r_j.indices),
+                                  np.asarray(r_p.indices))
+    np.testing.assert_allclose(np.asarray(r_j.distances),
+                               np.asarray(r_p.distances), atol=1e-4)
+
+
+def test_ivf_int8_pallas_matches_jnp(key):
+    q, codes, C, st = _problem(key, 911, 6, sigma=2.0)
+    emb = cb.decode(C, codes)
+    ivf = build_ivf(jax.random.fold_in(key, 3), emb, 16)
+    r_j = ivf_two_step_search(q, codes, C, st, ivf, 17, 4, backend="jnp",
+                              lut_dtype="int8")
+    r_p = ivf_two_step_search(q, codes, C, st, ivf, 17, 4,
+                              backend="pallas", interpret=True,
+                              block_q=4, block_n=96, lut_dtype="int8")
+    np.testing.assert_array_equal(np.asarray(r_p.indices),
+                                  np.asarray(r_j.indices))
+    np.testing.assert_allclose(np.asarray(r_p.distances),
+                               np.asarray(r_j.distances), atol=1e-4)
+    assert float(r_p.pass_rate) == pytest.approx(float(r_j.pass_rate),
+                                                 abs=1e-6)
+
+
+def test_int8_query_chunk_invariant(key):
+    """Calibration is per-query, so chunking cannot change results."""
+    q, codes, C, st = _problem(key, 400, 11)
+    r_full = two_step_search(q, codes, C, st, 9, backend="jnp",
+                             lut_dtype="int8")
+    r_chunk = two_step_search(q, codes, C, st, 9, backend="jnp",
+                              lut_dtype="int8", query_chunk=3)
+    np.testing.assert_array_equal(np.asarray(r_full.indices),
+                                  np.asarray(r_chunk.indices))
+    np.testing.assert_allclose(np.asarray(r_full.distances),
+                               np.asarray(r_chunk.distances), rtol=1e-6)
+
+
+def test_int8_refine_cap_engages(key):
+    """refine_cap + int8: the cap path re-ranks survivors by *exact*
+    full distances (quantization only selects); distances come back
+    sorted and the pass accounting matches the dense int8 engine."""
+    q, codes, C, st = _problem(key, 400, 7, sigma=3.0)
+    r_dense = two_step_search(q, codes, C, st, 9, backend="jnp",
+                              lut_dtype="int8")
+    r_cap = two_step_search(q, codes, C, st, 9, backend="jnp",
+                            lut_dtype="int8", refine_cap=12)
+    d = np.asarray(r_cap.distances)
+    assert (np.diff(d, axis=1)[np.isfinite(d[:, 1:])] >= 0).all()
+    assert float(r_cap.pass_rate) == pytest.approx(
+        float(r_dense.pass_rate), abs=1e-6)
+
+
+def test_lut_dtype_validation(key):
+    q, codes, C, st = _problem(key, 64, 3)
+    with pytest.raises(ValueError):
+        two_step_search(q, codes, C, st, 5, backend="jnp",
+                        lut_dtype="fp16")
+    with pytest.raises(ValueError):
+        adc_search(q, codes, C, 5, backend="jnp", lut_dtype="bf16")
+    # the kernels reject mismatched quantization operands outright
+    from repro.kernels.batched_search import crude_topk_pallas
+    luts = build_lut(q, C).reshape(q.shape[0], -1)
+    with pytest.raises(ValueError):
+        crude_topk_pallas(codes, luts, jnp.ones((q.shape[0],)), None,
+                          topk=5, interpret=True)
+    with pytest.raises(ValueError):
+        crude_topk_pallas(codes, luts.astype(jnp.int8), topk=5,
+                          interpret=True)
+
+
+# ----------------------------------------------------------- seed config ----
+
+def test_int8_recall_gap_on_seed_config():
+    """Acceptance: on a fitted seed-config model the int8 crude pass
+    costs <= 0.01 recall@10 (vs exact L2 over the embedded database)
+    relative to the f32 engine."""
+    from repro.configs.base import ICQConfig
+    from repro.core import fit
+    from repro.data import make_table1_dataset
+    from repro.index import exact_search, recall_at
+
+    xtr, ytr, xte, _ = make_table1_dataset("dataset3")
+    xtr, ytr, xte = xtr[:1500], ytr[:1500], xte[:64]
+    cfg = ICQConfig(d=16, num_codebooks=8, codebook_size=32, num_fast=2)
+    model = fit(jax.random.PRNGKey(0), xtr, ytr, cfg, mode="icq", epochs=3,
+                batch_size=256)
+    emb_q, emb_db = model.embed(xte), model.embed(xtr)
+    gt, _ = exact_search(emb_q, emb_db, 10)
+    rec = {}
+    for lut_dtype in ("f32", "int8"):
+        r = two_step_search(emb_q, model.codes, model.C, model.structure,
+                            20, backend="jnp", lut_dtype=lut_dtype)
+        rec[lut_dtype] = float(recall_at(r.indices[:, :10], gt))
+    assert abs(rec["f32"] - rec["int8"]) <= 0.01, rec
+
+
+# ------------------------------------------------------------- sharding ----
+
+_SHARDED_INT8_SCRIPT = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    assert len(jax.devices()) == 4, jax.devices()
+    from repro.core import codebooks as cb
+    from repro.core import icq as icq_mod
+    from repro.index import FlatADC, IVFTwoStep, TwoStep
+
+    key = jax.random.PRNGKey(0)
+    n, nq, K, m, d, kf = 1237, 9, 4, 16, 8, 2
+    C = jax.random.normal(key, (K, m, d)) * 0.3
+    codes = jax.random.randint(jax.random.fold_in(key, 1), (n, K), 0,
+                               m).astype(jnp.uint8)
+    fast = jnp.zeros((K,), bool).at[:kf].set(True)
+    st = icq_mod.ICQStructure(xi=jnp.ones((d,), bool), fast_mask=fast,
+                              sigma=jnp.asarray(1.0))
+    q = jax.random.normal(jax.random.fold_in(key, 2), (nq, d))
+    emb = cb.decode(C, codes)
+    mesh = jax.make_mesh((4,), ("data",))
+
+    def check(idx, tag):
+        r1, r4 = idx.search(q), idx.shard(mesh).search(q)
+        np.testing.assert_array_equal(np.asarray(r1.indices),
+                                      np.asarray(r4.indices), err_msg=tag)
+        np.testing.assert_allclose(np.asarray(r1.distances),
+                                   np.asarray(r4.distances), atol=1e-5,
+                                   err_msg=tag)
+        assert float(r1.pass_rate) == float(r4.pass_rate), tag
+
+    check(FlatADC.build(codes, C, topk=17, backend="jnp",
+                        lut_dtype="int8"), "flat-int8")
+    check(TwoStep.build(codes, C, st, topk=17, backend="jnp",
+                        lut_dtype="int8"), "two-step-int8")
+    for n_lists, n_probe, cap in [(16, 4, None), (13, 5, None),
+                                  (16, 4, 20)]:
+        idx = IVFTwoStep.build(codes, C, st, emb_db=emb,
+                               key=jax.random.fold_in(key, 3),
+                               n_lists=n_lists, n_probe=n_probe, topk=17,
+                               backend="jnp", refine_cap=cap,
+                               lut_dtype="int8")
+        check(idx, f"ivf-int8-{n_lists}-{n_probe}-{cap}")
+    print("SHARDED_INT8_OK")
+""")
+
+
+def test_sharded_int8_merge_identity():
+    """Sharded serving under lut_dtype="int8": ids bitwise-identical to
+    the single-device int8 engines (the query-global calibration makes
+    per-shard dequantized distances merge-comparable).  Subprocess: the
+    in-process suite must keep seeing one device (conftest)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _SHARDED_INT8_SCRIPT],
+                          capture_output=True, text=True, timeout=600,
+                          env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "SHARDED_INT8_OK" in proc.stdout
