@@ -1,15 +1,17 @@
 """Benchmark entry point: one section per paper figure + kernel
-microbenchmarks + the batched-search engine benchmark (emits
-``BENCH_search.json``) + the batched-IVF engine benchmark (emits
-``BENCH_ivf.json``) + the quantized-LUT benchmark (emits
-``BENCH_lutq.json``) for cross-PR perf tracking + the roofline table
-(if dry-run artifacts exist).  See docs/benchmarks.md for every
-``--only`` target.
+microbenchmarks + the engine benchmarks for cross-PR perf tracking —
+batched search (``BENCH_search.json``), batched IVF
+(``BENCH_ivf.json``), quantized LUTs (``BENCH_lutq.json``), the tiled
+ICM encoding engine (``BENCH_encode.json``), and the scan-compiled
+trainer (``BENCH_train.json``) — plus the roofline table (if dry-run
+artifacts exist).  See docs/benchmarks.md for every ``--only`` target.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig3]
     PYTHONPATH=src python -m benchmarks.run --only search   # just the JSON
     PYTHONPATH=src python -m benchmarks.run --only ivf      # BENCH_ivf.json
     PYTHONPATH=src python -m benchmarks.run --only lutq     # BENCH_lutq.json
+    PYTHONPATH=src python -m benchmarks.run --only encode   # BENCH_encode.json
+    PYTHONPATH=src python -m benchmarks.run --only train    # BENCH_train.json
 """
 from __future__ import annotations
 
@@ -339,6 +341,194 @@ def lutq_bench(full: bool = False, *, out_path: str = "BENCH_lutq.json",
     return out
 
 
+def encode_bench(full: bool = False, *, out_path: str = "BENCH_encode.json",
+                 n: int = 100_000, d: int = 16, K: int = 8, m: int = 256,
+                 iters: int = 3, chunk: int = 8192, repeats: int = 3,
+                 point_chunk: int = 8192, pallas_n: int = 8192,
+                 block_n: int = 1024):
+    """Tiled ICM encoding engine vs the seed per-chunk host loop
+    (cross-Gram formulation, ragged last chunk re-jitted), written to
+    ``out_path`` for cross-PR perf tracking (DESIGN.md §9).
+
+    The seed loop materializes the (K, K, m, m) cross-Gram and a
+    (K, chunk, m) query tensor per chunk and re-traces for the ragged
+    final chunk; the engine runs the residual recurrence in padded
+    fixed-shape blocks.  Steady-state throughput is reported (both
+    warmed), so the seed's extra re-jit is *not* counted against it;
+    the parity row asserts both paths assign identical codes.  The
+    pallas row runs interpret mode at a reduced size (correctness/call
+    overhead tracking, not TPU latency).
+    """
+    from repro.core import codebooks as cb
+    from repro.core.encode import icm_encode
+    from repro.kernels.ref import icm_encode_gram
+
+    if full:
+        n = max(n, 1_000_000)
+    key = jax.random.PRNGKey(0)
+    x = (jax.random.normal(key, (n, d))
+         * jnp.linspace(0.3, 2.0, d)[None, :])
+    C = cb.init_residual(jax.random.fold_in(key, 1), x[:4096], K, m,
+                         iters=10)
+    jax.block_until_ready(C)
+
+    seed_fn = jax.jit(lambda e: icm_encode_gram(e, C, iters))
+
+    def seed_loop():
+        parts = []
+        for s in range(0, n, chunk):
+            parts.append(seed_fn(x[s: s + chunk]))   # ragged tail re-jits
+        return jnp.concatenate(parts, axis=0)
+
+    def engine_jnp():
+        return icm_encode(x, C, iters, backend="jnp",
+                          point_chunk=point_chunk)
+
+    def timed(fn):
+        out = fn()                                   # compile + warm
+        jax.block_until_ready(out)
+        ts = []
+        for _ in range(repeats):
+            t0 = time.time()
+            jax.block_until_ready(fn())
+            ts.append(time.time() - t0)
+        # min-of-repeats: cpu-share throttled container (see ivf_bench)
+        return out, min(ts)
+
+    codes_seed, dt_seed = timed(seed_loop)
+    codes_eng, dt_eng = timed(engine_jnp)
+    parity = bool(jnp.all(codes_seed == codes_eng))
+    rows = [
+        dict(engine="seed_chunk_loop", n=n, encode_us_per_pt=round(
+            dt_seed / n * 1e6, 3), pts_per_s=round(n / dt_seed)),
+        dict(engine="tiled_jnp", n=n, encode_us_per_pt=round(
+            dt_eng / n * 1e6, 3), pts_per_s=round(n / dt_eng),
+            codes_match_seed=parity),
+    ]
+    # pallas interpret: reduced size, correctness/overhead tracking only
+    x_s = x[:pallas_n]
+    codes_p, dt_p = timed(lambda: icm_encode(x_s, C, iters,
+                                             backend="pallas",
+                                             block_n=block_n,
+                                             interpret=True))
+    rows.append(dict(engine="tiled_pallas_interpret", n=pallas_n,
+                     encode_us_per_pt=round(dt_p / pallas_n * 1e6, 3),
+                     pts_per_s=round(pallas_n / dt_p),
+                     codes_match_jnp=bool(
+                         jnp.all(codes_p == codes_eng[:pallas_n]))))
+
+    out = dict(K=K, m=m, d=d, iters=iters, chunk=chunk,
+               point_chunk=point_chunk, rows=rows,
+               codes_parity_seed_vs_engine=parity,
+               speedup_engine_vs_seed=round(dt_seed / dt_eng, 3))
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+    for r in rows:
+        print(f"encode,{r['engine']},n={r['n']},,,,,"
+              f"{r['pts_per_s']},{r['encode_us_per_pt']}", flush=True)
+    print(f"# encode engine-vs-seed speedup "
+          f"{out['speedup_engine_vs_seed']}x (codes parity {parity}) "
+          f"-> {out_path}", flush=True)
+    return out
+
+
+def train_bench(full: bool = False, *, out_path: str = "BENCH_train.json",
+                n: int = 8192, epochs: int = 2, batch_size: int = 256,
+                repeats: int = 3):
+    """Scan-compiled epoch driver vs the seed per-batch host-dispatch
+    loop on the joint ICQ trainer, written to ``out_path`` for cross-PR
+    perf tracking (DESIGN.md §9).
+
+    Both paths run the identical jitted step function; the delta is
+    pure dispatch structure — one ``lax.scan`` + donated state per
+    epoch vs one host round-trip (device_put of the indexed batch +
+    dispatch + metric fetch) per batch.
+    """
+    from repro.configs.base import ICQConfig
+    from repro.core import variance
+    from repro.trainer import (compile_epoch, epoch_batches,
+                               init_train_state, make_train_step)
+    from repro.data import make_table1_dataset
+
+    if full:
+        n, epochs = max(n, 10_000), max(epochs, 8)
+    xtr, ytr, _, _ = make_table1_dataset("dataset2")
+    xtr, ytr = xtr[:n], ytr[:n]
+    cfg = ICQConfig(d=16, num_codebooks=8, codebook_size=64, num_fast=2)
+    key = jax.random.PRNGKey(0)
+    state = init_train_state(key, cfg, embed_kind="linear", d_raw=64,
+                             mode="icq",
+                             sample_batch=(xtr[:4096], ytr[:4096]))
+    step = make_train_step(cfg, state["embed_apply"], state["opt"], "icq",
+                           None)
+    nb = n // batch_size
+
+    step_jit = jax.jit(step)
+
+    def host_loop():
+        params, opt_state = state["params"], state["opt_state"]
+        rng = jax.random.PRNGKey(1)
+        for ep in range(epochs):
+            rng, k = jax.random.split(rng)
+            perm = jax.random.permutation(k, n)
+            var_state = variance.init_state(cfg.d)
+            for b in range(nb):
+                idx = perm[b * batch_size:(b + 1) * batch_size]
+                params, opt_state, var_state, mets = step_jit(
+                    params, opt_state, var_state, (xtr[idx], ytr[idx]))
+        jax.block_until_ready(params)
+        return params
+
+    epoch_fn = compile_epoch(step, cfg.d, donate=False)
+
+    def scan_loop():
+        params, opt_state = state["params"], state["opt_state"]
+        rng = jax.random.PRNGKey(1)
+        for ep in range(epochs):
+            rng, k = jax.random.split(rng)
+            xb, yb = epoch_batches(k, xtr, ytr, batch_size)
+            params, opt_state, var_state, mets = epoch_fn(params, opt_state,
+                                                          xb, yb)
+        jax.block_until_ready(params)
+        return params
+
+    # interleave the two drivers and take the median of paired ratios
+    # (see lutq_bench: common-mode cpu-share interference cancels inside
+    # each pair on this throttled container); per-row latencies report
+    # min-of-repeats like the other benches
+    host_loop()                                      # compile + warm
+    scan_loop()
+    ts_host, ts_scan = [], []
+    for _ in range(3 * repeats):
+        t0 = time.time()
+        host_loop()
+        ts_host.append(time.time() - t0)
+        t0 = time.time()
+        scan_loop()
+        ts_scan.append(time.time() - t0)
+    dt_host, dt_scan = min(ts_host), min(ts_scan)
+    pair = sorted(h / s for h, s in zip(ts_host, ts_scan))
+    speedup = pair[len(pair) // 2]
+    steps_total = epochs * nb
+    rows = [
+        dict(driver="host_loop", n=n, epochs=epochs, batch=batch_size,
+             us_per_step=round(dt_host / steps_total * 1e6, 1)),
+        dict(driver="scan_epoch", n=n, epochs=epochs, batch=batch_size,
+             us_per_step=round(dt_scan / steps_total * 1e6, 1)),
+    ]
+    out = dict(n=n, epochs=epochs, batch_size=batch_size,
+               steps_per_epoch=nb, rows=rows,
+               speedup_scan_vs_host=round(speedup, 3))
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+    for r in rows:
+        print(f"train,{r['driver']},n={r['n']},epochs={r['epochs']},"
+              f"batch={r['batch']},,,,{r['us_per_step']}", flush=True)
+    print(f"# train scan-vs-host speedup {out['speedup_scan_vs_host']}x "
+          f"-> {out_path}", flush=True)
+    return out
+
+
 FIGURES = {
     "fig1": fig1_synthetic_pq.run,
     "fig2": fig2_synthetic_cq.run,
@@ -350,6 +540,8 @@ FIGURES = {
     "search": search_bench,
     "ivf": ivf_bench,
     "lutq": lutq_bench,
+    "encode": encode_bench,
+    "train": train_bench,
 }
 
 

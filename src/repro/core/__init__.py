@@ -7,10 +7,10 @@ Layout:
   encode.py     PQ encode, ICM for additive codes, straight-through
   losses.py     L^E / L^C / L^P / L^ICQ / CQ penalty (eqs. 3, 6)
   icq.py        psi/xi, fast-set selection (eq. 8), margin sigma (eq. 11)
-  search.py     two-step search (eq. 2 -> eq. 1), ADC, MAP/recall
-  train.py      joint trainer (embedding + quantizers + prior), export
+  search.py     thin re-export of the index layer (repro.index, §7)
+  train.py      thin re-export of the trainer layer (repro.trainer, §9)
   embed.py      linear / CNN embedding models
-  baselines/    PQ, OPQ, CQ, SQ, PQN
+  baselines/    PQ, OPQ, CQ, SQ, PQN (adapters over repro.trainer)
 """
 from repro.core.train import ICQModel, fit, finalize
 from repro.core.icq import ICQStructure, build_structure

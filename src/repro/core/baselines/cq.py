@@ -1,4 +1,6 @@
-"""Composite Quantization (Zhang, Du, Wang 2014) — unsupervised.
+"""Composite Quantization (Zhang, Du, Wang 2014) — thin re-export of
+the trainer-layer implementation (``repro.trainer.quantizers``,
+DESIGN.md §9).
 
 Additive codebooks with the constant-inner-product constraint, learned
 by alternating gradient steps on C (reconstruction + CQ penalty) and ICM
@@ -7,56 +9,7 @@ used in Fig. 2's SQ+CQ comparison and as ICQ's ablation control.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import codebooks as cb
-from repro.core import encode as enc
-from repro.core import icq as icq_mod
-from repro.core import losses
 from repro.core.train import ICQModel
-from repro.train.optimizer import AdamW
+from repro.trainer.quantizers import CQQuantizer, fit_cq
 
-
-def fit_cq(key, xs, icq_cfg, *, rounds: int = 10, grad_steps: int = 50,
-           lr: float = 5e-3, embed_params=None, embed_apply=None) -> ICQModel:
-    apply_fn = embed_apply or (lambda p, x: x)
-    emb = apply_fn(embed_params, xs).astype(jnp.float32)
-    d = emb.shape[-1]
-    C = cb.init_residual(key, emb, icq_cfg.num_codebooks,
-                         icq_cfg.codebook_size, iters=10)
-    codes = enc.icm_encode(emb, C, icq_cfg.icm_iters)
-    opt = AdamW(lr=lambda s: jnp.asarray(lr), weight_decay=0.0, clip_norm=0.0)
-
-    def loss_fn(C, codes):
-        rec = cb.decode(C, codes)
-        l_rec = jnp.mean(jnp.sum(jnp.square(emb - rec), axis=-1))
-        l_cq, _ = losses.cq_penalty(C, codes)
-        return l_rec + icq_cfg.gamma_cq * l_cq
-
-    @jax.jit
-    def c_steps(C, codes, opt_state):
-        def body(carry, _):
-            C, opt_state = carry
-            g = jax.grad(loss_fn)(C, codes)
-            params, opt_state, _ = opt.update({"C": g}, opt_state, {"C": C})
-            return (params["C"], opt_state), None
-        (C, opt_state), _ = jax.lax.scan(body, (C, opt_state), None,
-                                         length=grad_steps)
-        return C, opt_state
-
-    encode_jit = jax.jit(lambda e, C, codes: enc.icm_encode(
-        e, C, icq_cfg.icm_iters, init_codes=codes))
-    opt_state = opt.init({"C": C})
-    for _ in range(rounds):
-        C, opt_state = c_steps(C, codes, opt_state)
-        codes = encode_jit(emb, C, codes)
-
-    structure = icq_mod.ICQStructure(
-        xi=jnp.ones((d,), bool),
-        fast_mask=jnp.ones((C.shape[0],), bool),
-        sigma=jnp.zeros(()))
-    return ICQModel(icq_cfg=icq_cfg, embed_params=embed_params,
-                    embed_apply=apply_fn, C=C,
-                    codes=enc.pack_codes(codes, icq_cfg.codebook_size),
-                    structure=structure, lam=jnp.var(emb, axis=0), mode="cq")
+__all__ = ["ICQModel", "CQQuantizer", "fit_cq"]

@@ -1,4 +1,6 @@
-"""Optimized Product Quantization (Ge et al. 2013) — non-parametric OPQ.
+"""Optimized Product Quantization (Ge et al. 2013) — thin re-export of
+the trainer-layer implementation (``repro.trainer.quantizers``,
+DESIGN.md §9).
 
 Alternates: (1) PQ in the rotated space R x; (2) rotation update by the
 orthogonal Procrustes solution  R = U V^T  from  SVD(X^T Xbar).  The
@@ -7,44 +9,7 @@ shared with plain PQ.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import codebooks as cb
-from repro.core import encode as enc
-from repro.core import icq as icq_mod
 from repro.core.train import ICQModel
+from repro.trainer.quantizers import OPQQuantizer, fit_opq
 
-
-def fit_opq(key, xs, icq_cfg, *, rounds: int = 8, kmeans_iters: int = 10,
-            embed_params=None, embed_apply=None) -> ICQModel:
-    base_apply = embed_apply or (lambda p, x: x)
-    emb = base_apply(embed_params, xs).astype(jnp.float32)
-    d = emb.shape[-1]
-    R = jnp.eye(d, dtype=jnp.float32)
-    C = None
-    for r in range(rounds):
-        xr = emb @ R
-        C = cb.init_pq(jax.random.fold_in(key, r), xr,
-                       icq_cfg.num_codebooks, icq_cfg.codebook_size,
-                       kmeans_iters)
-        codes = enc.encode_pq(xr, C)
-        xbar = cb.decode(C, codes)
-        # Procrustes: maximize tr(R^T X^T Xbar)  ->  R = U V^T
-        u, s, vt = jnp.linalg.svd(emb.T @ xbar, full_matrices=False)
-        R = u @ vt
-    xr = emb @ R
-    codes = enc.pack_codes(enc.encode_pq(xr, C), icq_cfg.codebook_size)
-
-    ep = {"base": embed_params, "R": R}
-
-    def apply_fn(p, x):
-        return base_apply(p["base"], x) @ p["R"]
-
-    structure = icq_mod.ICQStructure(
-        xi=jnp.ones((d,), bool),
-        fast_mask=jnp.ones((C.shape[0],), bool),
-        sigma=jnp.zeros(()))
-    return ICQModel(icq_cfg=icq_cfg, embed_params=ep, embed_apply=apply_fn,
-                    C=C, codes=codes, structure=structure,
-                    lam=jnp.var(xr, axis=0), mode="pq")
+__all__ = ["ICQModel", "OPQQuantizer", "fit_opq"]

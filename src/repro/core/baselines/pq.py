@@ -1,32 +1,13 @@
-"""Product Quantization (Jegou, Douze, Schmid 2010).
+"""Product Quantization (Jegou, Douze, Schmid 2010) — thin re-export of
+the trainer-layer implementation (``repro.trainer.quantizers``,
+DESIGN.md §9).
 
 Unsupervised: k-means per contiguous subspace; encoding is independent
 per codebook; search is one-step ADC over all K tables.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import codebooks as cb
-from repro.core import encode as enc
-from repro.core import icq as icq_mod
 from repro.core.train import ICQModel
+from repro.trainer.quantizers import PQQuantizer, fit_pq
 
-
-def fit_pq(key, xs, icq_cfg, *, kmeans_iters: int = 25,
-           embed_params=None, embed_apply=None) -> ICQModel:
-    """Fit PQ on raw vectors (or pre-embedded if embed_* given)."""
-    apply_fn = embed_apply or (lambda p, x: x)
-    emb = apply_fn(embed_params, xs)
-    C = cb.init_pq(key, emb, icq_cfg.num_codebooks, icq_cfg.codebook_size,
-                   kmeans_iters)
-    codes = enc.pack_codes(enc.encode_pq(emb, C), icq_cfg.codebook_size)
-    d = emb.shape[-1]
-    structure = icq_mod.ICQStructure(
-        xi=jnp.ones((d,), bool),
-        fast_mask=jnp.ones((C.shape[0],), bool),
-        sigma=jnp.zeros(()))
-    return ICQModel(icq_cfg=icq_cfg, embed_params=embed_params,
-                    embed_apply=apply_fn, C=C, codes=codes,
-                    structure=structure, lam=jnp.var(emb, axis=0), mode="pq")
+__all__ = ["ICQModel", "PQQuantizer", "fit_pq"]

@@ -1,230 +1,23 @@
-"""Joint embedding + quantizer training (paper §3.1-3.3).
+"""Joint embedding + quantizer training — thin re-export of the unified
+trainer layer (``repro.trainer``, DESIGN.md §9), kept for the
+historical import surface exactly like ``core/search.py`` re-exports
+the index layer.
 
-One trainer covers ICQ and the ablation/baseline modes by switching the
-active loss terms (paper eq. 3 augmented):
+The implementation lives in:
 
-    mode="icq":  L^E + L^C + gamma1 L^P + gamma2 L^ICQ (+ CQ penalty)
-    mode="cq":   L^E + L^C + CQ penalty          (SQ = linear embed + cq)
-    mode="pq":   L^E + L^C with codebooks hard-projected onto contiguous
-                 subspaces after every step (PQ/PQN-style)
+    trainer/joint.py   the jitted train step (loss terms per mode),
+                       init, and the engine-backed ``finalize`` export
+    trainer/epoch.py   ``fit`` — the scan-compiled (optionally
+                       mesh-sharded) epoch driver with proper key
+                       threading
+    trainer/encode.py  padded-chunk database encoding
 
-Gradient flow notes:
-- Lambda is the *online* variance estimate (eq. 9, core.variance); its
-  value comes from the running state but its gradient flows through the
-  current batch's sample variance (straight-through running stats), so
-  L^P shapes the embedding W as intended.
-- xi is hard for search but L^ICQ uses the prior's soft responsibilities
-  (minor-mode posterior) so the interleaving penalty stays differentiable
-  in Theta.
-- L^C uses straight-through soft assignments (core.encode.st_decode);
-  codebooks get dense gradients, embeddings see the hard reconstruction.
-
-The trainer is a pure-JAX step (jit-compiled) driven by a host loop;
-encode-side ICM re-encoding happens at export time (``finalize``).
+New code should import from ``repro.trainer``.
 """
-from __future__ import annotations
+from repro.trainer.base import ICQModel
+from repro.trainer.epoch import fit
+from repro.trainer.joint import (_pq_support_mask, _soft_xi, finalize,
+                                 init_train_state, make_train_step)
 
-import dataclasses
-from typing import Any, Callable, Dict, Optional
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import codebooks as cb
-from repro.core import embed as embed_mod
-from repro.core import encode as enc
-from repro.core import icq as icq_mod
-from repro.core import losses
-from repro.core import prior as prior_mod
-from repro.core import variance
-from repro.train.optimizer import AdamW
-
-
-@dataclasses.dataclass
-class ICQModel:
-    """Fitted artifact: everything the search side needs."""
-    icq_cfg: Any
-    embed_params: Any
-    embed_apply: Callable
-    C: jnp.ndarray               # (K,m,d) — hard-projected for mode="icq"
-    codes: jnp.ndarray           # (n,K) database codes (ICM-encoded)
-    structure: icq_mod.ICQStructure
-    lam: jnp.ndarray             # (d,) final variance estimate
-    mode: str = "icq"
-
-    def embed(self, x):
-        return self.embed_apply(self.embed_params, x)
-
-
-def _pq_support_mask(K: int, d: int):
-    """(K,d) 0/1 contiguous-subspace masks (PQ)."""
-    assert d % K == 0
-    sub = d // K
-    m = jnp.zeros((K, d))
-    for k in range(K):
-        m = m.at[k, k * sub:(k + 1) * sub].set(1.0)
-    return m
-
-
-def init_train_state(key, icq_cfg, *, embed_kind: str = "linear",
-                     d_raw: Optional[int] = None, num_classes: int = 10,
-                     img_hw: Optional[int] = None, channels: Optional[int] = None,
-                     mode: str = "icq", lr: float = 1e-3,
-                     sample_batch=None) -> Dict:
-    """Build params + optimizer + variance state.  ``sample_batch`` (x, y)
-    seeds the codebooks from real embeddings (residual k-means)."""
-    d, K, m = icq_cfg.d, icq_cfg.num_codebooks, icq_cfg.codebook_size
-    k_embed, k_cb, k3 = jax.random.split(key, 3)
-    embed_params, embed_apply = embed_mod.build_embedder(
-        embed_kind, k_embed, d_raw=d_raw, d=d, num_classes=num_classes,
-        img_hw=img_hw, channels=channels)
-
-    theta0 = prior_mod.init_theta()
-    if sample_batch is not None:
-        emb0 = embed_apply(embed_params, sample_batch[0])
-        if mode == "pq":
-            C0 = cb.init_pq(k_cb, emb0, K, m)
-        else:
-            C0 = cb.init_residual(k_cb, emb0, K, m)
-        theta0 = prior_mod.init_theta_from_data(jnp.var(emb0, axis=0))
-    else:
-        C0 = jax.random.normal(k_cb, (K, m, d), jnp.float32) * 0.1
-
-    params = {"embed": embed_params, "C": C0, "theta": theta0}
-    opt = AdamW(lr=lambda step: jnp.asarray(lr, jnp.float32),
-                weight_decay=0.0, clip_norm=1.0)
-    return {
-        "params": params,
-        "opt_state": opt.init(params),
-        "var_state": variance.init_state(d),
-        "opt": opt,
-        "embed_apply": embed_apply,
-        "mode": mode,
-        "pq_mask": _pq_support_mask(K, d) if mode == "pq" else None,
-    }
-
-
-def _soft_xi(lam, theta, icq_cfg):
-    """Minor-mode posterior responsibility — the differentiable xi."""
-    log_major, log_minor = prior_mod.mode_log_components(
-        lam, theta, pi1=icq_cfg.pi1, pi2=icq_cfg.pi2, alpha2=icq_cfg.alpha2)
-    return jax.nn.sigmoid(log_minor - log_major)
-
-
-def make_train_step(icq_cfg, embed_apply, opt: AdamW, mode: str,
-                    pq_mask=None, tau: float = 1.0):
-    """Returns jit-able step(params, opt_state, var_state, batch) ->
-    (params, opt_state, var_state, metrics)."""
-
-    def loss_fn(params, var_state, x, y):
-        emb = embed_apply(params["embed"], x)
-        # --- L^E ---
-        logits = embed_mod.classify(params["embed"], emb)
-        l_e = losses.classification_loss(logits, y)
-        # --- online variance with straight-through running value ---
-        new_var = variance.update(var_state, emb)
-        _, lam_batch = variance.batch_moments(emb)
-        lam = (jax.lax.stop_gradient(variance.lambda_hat(new_var) - lam_batch)
-               + lam_batch)
-        # --- L^C ---
-        l_c, codes = losses.quantization_loss(emb, params["C"], tau)
-        total = l_e + l_c
-        mets = {"l_e": l_e, "l_c": l_c}
-        if mode in ("icq", "cq"):
-            l_cq, _ = losses.cq_penalty(params["C"], codes)
-            total = total + icq_cfg.gamma_cq * l_cq
-            mets["l_cq"] = l_cq
-        if mode == "icq":
-            l_p = prior_mod.nll(lam, params["theta"], pi1=icq_cfg.pi1,
-                                pi2=icq_cfg.pi2, alpha2=icq_cfg.alpha2)
-            xi_soft = _soft_xi(jax.lax.stop_gradient(lam), params["theta"],
-                               icq_cfg)
-            l_icq = losses.icq_loss(params["C"], xi_soft)
-            total = total + icq_cfg.gamma_p * l_p + icq_cfg.gamma_icq * l_icq
-            mets.update(l_p=l_p, l_icq=l_icq, psi_size=jnp.sum(xi_soft > 0.5))
-        mets["total"] = total
-        return total, (new_var, mets)
-
-    def step(params, opt_state, var_state, batch):
-        x, y = batch
-        grads, (new_var, mets) = jax.grad(loss_fn, has_aux=True)(
-            params, var_state, x, y)
-        if mode == "icq":
-            # Theta must track the (moving) variance distribution faster
-            # than W reshapes it, or the mixture collapses to one mode
-            # (§3.3); 3 scalars, so the boosted rate is cheap and safe.
-            grads = dict(grads, theta=jax.tree.map(
-                lambda g: g * 10.0, grads["theta"]))
-        params, opt_state, gnorm = opt.update(grads, opt_state, params)
-        if mode == "pq":                      # hard support projection
-            params = dict(params, C=params["C"] * pq_mask[:, None, :])
-        mets["gnorm"] = gnorm
-        return params, opt_state, new_var, mets
-
-    return step
-
-
-def fit(key, xs, ys, icq_cfg, *, embed_kind="linear", num_classes=10,
-        img_hw=None, channels=None, mode="icq", epochs=5, batch_size=256,
-        lr=1e-3, tau=1.0, verbose=False) -> ICQModel:
-    """Host training loop over (xs, ys) numpy/jnp arrays -> fitted ICQModel."""
-    n = xs.shape[0]
-    d_raw = xs.shape[-1] if xs.ndim == 2 else None
-    nb = max(n // batch_size, 1)
-    state = init_train_state(
-        key, icq_cfg, embed_kind=embed_kind, d_raw=d_raw,
-        num_classes=num_classes, img_hw=img_hw, channels=channels, mode=mode,
-        lr=lr, sample_batch=(xs[:min(n, 4096)], ys[:min(n, 4096)]))
-    step = jax.jit(make_train_step(icq_cfg, state["embed_apply"], state["opt"],
-                                   mode, state["pq_mask"], tau))
-    params, opt_state, var_state = (state["params"], state["opt_state"],
-                                    state["var_state"])
-    rng = jax.random.PRNGKey(0x5EED)
-    for ep in range(epochs):
-        rng, k = jax.random.split(rng)
-        perm = jax.random.permutation(k, n)
-        var_state = variance.init_state(icq_cfg.d)   # fresh estimate per epoch
-        for b in range(nb):
-            idx = perm[b * batch_size:(b + 1) * batch_size]
-            params, opt_state, var_state, mets = step(
-                params, opt_state, var_state, (xs[idx], ys[idx]))
-        if verbose:
-            print(f"  epoch {ep}: " + " ".join(
-                f"{k}={float(v):.4f}" for k, v in mets.items()))
-    return finalize(params, state["embed_apply"], var_state, icq_cfg, xs,
-                    mode=mode)
-
-
-def finalize(params, embed_apply, var_state, icq_cfg, xs, *, mode="icq",
-             encode_batch: int = 8192) -> ICQModel:
-    """Export: hard-project codebooks (ICQ), ICM-encode the database,
-    build the search structure."""
-    lam = variance.lambda_hat(var_state)
-    C = params["C"]
-    if mode == "icq":
-        structure = icq_mod.build_structure(C, lam, params["theta"], icq_cfg)
-        C = icq_mod.project_codebooks(C, structure.xi, structure.fast_mask)
-        # rebuild with projected C (fast set/energies unchanged by projection)
-        structure = icq_mod.ICQStructure(
-            xi=structure.xi, fast_mask=structure.fast_mask,
-            sigma=structure.sigma)
-    else:
-        xi = prior_mod.psi_mask_topk(lam, max(1, icq_cfg.d // 2))
-        structure = icq_mod.ICQStructure(
-            xi=xi, fast_mask=jnp.ones((C.shape[0],), bool),
-            sigma=jnp.zeros(()))
-
-    encode_fn = jax.jit(lambda e: enc.encode_pq(e, C) if mode == "pq"
-                        else enc.icm_encode(e, C, icq_cfg.icm_iters))
-    chunks = []
-    n = xs.shape[0]
-    for s in range(0, n, encode_batch):
-        emb = embed_apply(params["embed"], xs[s: s + encode_batch])
-        chunks.append(encode_fn(emb))
-    # store packed (uint8 for m <= 256): 4x less HBM traffic per codes
-    # tile; search engines widen to int32 at the kernel boundary
-    codes = enc.pack_codes(jnp.concatenate(chunks, axis=0),
-                           icq_cfg.codebook_size)
-    return ICQModel(icq_cfg=icq_cfg, embed_params=params["embed"],
-                    embed_apply=embed_apply, C=C, codes=codes,
-                    structure=structure, lam=lam, mode=mode)
+__all__ = ["ICQModel", "fit", "finalize", "init_train_state",
+           "make_train_step"]

@@ -29,6 +29,9 @@ def init_state(d: int) -> Dict:
         "count": jnp.zeros((), jnp.float32),   # number of batches seen (paper's b)
         "n": jnp.zeros((), jnp.float32),       # number of samples seen (exact merge)
         "m2": jnp.zeros((d,), jnp.float32),    # sum of squared deviations (exact merge)
+        # present from step 0 so the state pytree is scan-carry stable
+        # (the compiled epoch driver scans update as the carry)
+        "_exact_mean": jnp.zeros((d,), jnp.float32),
     }
 
 
@@ -40,6 +43,24 @@ def batch_moments(x):
     return m, v
 
 
+def global_batch_moments(x, axis_name=None):
+    """Batch moments of the *global* batch when ``x`` is the local shard
+    of a data-parallel region (shard_map/pmap over ``axis_name``).
+
+    Equal shard sizes (the scan epoch driver guarantees them) make the
+    pmean of local means/second moments the exact global moments; with
+    ``axis_name=None`` this is exactly ``batch_moments``.  Differentiable
+    (pmean is linear), so the straight-through Lambda gradient in the
+    joint trainer flows unchanged under data parallelism.
+    """
+    if axis_name is None:
+        return batch_moments(x)
+    x = x.astype(jnp.float32)
+    m = jax.lax.pmean(jnp.mean(x, axis=0), axis_name)
+    ex2 = jax.lax.pmean(jnp.mean(jnp.square(x), axis=0), axis_name)
+    return m, ex2 - jnp.square(m)
+
+
 def update(state: Dict, x) -> Dict:
     """Paper eq. 9 — equal-weight incremental update with batch b's moments.
 
@@ -47,6 +68,15 @@ def update(state: Dict, x) -> Dict:
     estimators are available; ``lambda_hat`` reads the paper's estimate.
     """
     m_b, l_b = batch_moments(x)
+    return update_from_moments(state, m_b, l_b,
+                               jnp.asarray(x.shape[0], jnp.float32))
+
+
+def update_from_moments(state: Dict, m_b, l_b, nb) -> Dict:
+    """``update`` with precomputed batch moments (and sample count
+    ``nb``) — the form the data-parallel trainer uses with *global*
+    moments from ``global_batch_moments`` so every shard applies the
+    identical state transition (DESIGN.md §9)."""
     b = state["count"] + 1.0
     inv_b = 1.0 / b
     delta = m_b - state["mean"]
@@ -55,7 +85,7 @@ def update(state: Dict, x) -> Dict:
                + inv_b * (1.0 - inv_b) * jnp.square(delta))
 
     # exact count-weighted merge (Chan) in parallel
-    nb = jnp.asarray(x.shape[0], jnp.float32)
+    nb = jnp.asarray(nb, jnp.float32)
     n = state["n"]
     tot = n + nb
     d_exact = m_b - _exact_mean(state)

@@ -45,22 +45,44 @@ def axis_size(mesh: Mesh, name: str) -> int:
     return mesh.shape[name] if name in mesh.axis_names else 1
 
 
-def shard_map_compat(fn, mesh, in_specs, out_specs):
+def shard_map_compat(fn, mesh, in_specs, out_specs, axis_names=None):
     """``jax.shard_map`` across the jax versions this repo meets: the
     top-level API with ``check_vma`` (newer), with ``check_rep``, or the
     ``jax.experimental.shard_map`` fallback.  Replication checking is
     disabled uniformly — our regions end in all_gather/psum so outputs
-    *are* replicated, which older checkers cannot always prove."""
+    *are* replicated, which older checkers cannot always prove.
+
+    ``axis_names`` (optional): the mesh axes the region is *manual*
+    over (partial-manual shard_map; the rest stay GSPMD-auto).  Newer
+    jax spells this ``axis_names={...}``, the experimental fallback
+    spells it ``auto=<complement>``."""
     if hasattr(jax, "shard_map"):
+        kw = {} if axis_names is None else {"axis_names": set(axis_names)}
         try:
             return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                                 out_specs=out_specs, check_vma=False)
+                                 out_specs=out_specs, check_vma=False, **kw)
         except TypeError:
             return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                                 out_specs=out_specs, check_rep=False)
+                                 out_specs=out_specs, check_rep=False, **kw)
     from jax.experimental.shard_map import shard_map as _sm
+    kw = ({} if axis_names is None
+          else {"auto": frozenset(mesh.axis_names) - set(axis_names)})
     return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-               check_rep=False)
+               check_rep=False, **kw)
+
+
+def make_mesh_auto(sizes: Sequence[int], names: Sequence[str]):
+    """``jax.make_mesh`` with all-Auto axis types across jax versions:
+    newer jax needs ``axis_types=(AxisType.Auto, ...)`` for meshes whose
+    regions mix sharding constraints with shard_map; 0.4.x has neither
+    ``AxisType`` nor the ``axis_types`` parameter (its meshes are
+    implicitly auto)."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(tuple(sizes), tuple(names),
+                             axis_types=(AxisType.Auto,) * len(tuple(names)))
+    except (ImportError, TypeError, AttributeError):
+        return jax.make_mesh(tuple(sizes), tuple(names))
 
 
 def abstract_mesh(sizes: Sequence[int], names: Sequence[str]):

@@ -17,8 +17,9 @@ from repro.index.base import (Index, LUT_DTYPES, QuantizedLUT, SearchResult,
                               recall_at, resolve_backend, resolve_lut_dtype)
 from repro.index.flat import (FlatADC, TwoStep, adc_search, two_step_search,
                               two_step_search_compact)
-from repro.index.ivf import (IVFIndex, IVFTwoStep, build_ivf,
-                             ivf_list_codes, ivf_two_step_search)
+from repro.index.ivf import (IVFIndex, IVFTwoStep, build_ivf, ivf_assign,
+                             ivf_extend, ivf_list_codes,
+                             ivf_two_step_search)
 
 INDEX_KINDS = {
     "flat": FlatADC,
@@ -43,7 +44,8 @@ __all__ = [
     "Index", "SearchResult", "FlatADC", "TwoStep", "IVFTwoStep",
     "IVFIndex", "INDEX_KINDS", "LUT_DTYPES", "QuantizedLUT", "make_index",
     "adc_search", "two_step_search", "two_step_search_compact",
-    "ivf_two_step_search", "build_ivf", "ivf_list_codes", "build_lut",
+    "ivf_two_step_search", "build_ivf", "ivf_assign", "ivf_extend",
+    "ivf_list_codes", "build_lut",
     "lut_sum", "quantize_lut", "exact_search", "chunked_over_queries",
     "resolve_backend", "resolve_lut_dtype", "mean_average_precision",
     "recall_at",

@@ -45,9 +45,22 @@ class SearchResult(NamedTuple):
 
 @runtime_checkable
 class Index(Protocol):
-    """The unified index protocol (DESIGN.md §7)."""
+    """The unified index protocol (DESIGN.md §7, §9).
+
+    ``add`` is the incremental build surface: new vectors are encoded
+    through the tiled engine (``core.encode.icm_encode``, PQ
+    warm-started — exact for orthogonal-support codebooks too) and
+    appended as rows (flat/two-step) or routed into the owning inverted
+    lists (IVF) *without retraining*; a new index is returned (indexes
+    are frozen).  Encoding is per-point, so an ``add`` produces search
+    results identical to a from-scratch build over the concatenated
+    data against the same codebooks (and, for IVF, the same coarse
+    centroids)."""
 
     def search(self, queries, topk: Optional[int] = None) -> SearchResult:
+        ...
+
+    def add(self, new_vectors, *, icm_iters: int = 3) -> "Index":
         ...
 
     def shard(self, mesh) -> "Index":

@@ -280,6 +280,19 @@ def two_step_search_compact(queries, codes, C, structure, topk: int,
 
 # -------------------------------------------------------------- indexes ----
 
+def _encode_new_rows(new_vectors, C, codes_dtype, *, icm_iters: int,
+                     encode_backend: str, point_chunk: Optional[int]):
+    """Shared ``Index.add`` encode step (DESIGN.md §9): run the tiled
+    ICM engine over the new embeddings (PQ warm start; for
+    orthogonal-support PQ codebooks the interaction terms vanish, so
+    ICM reproduces the independent assignment exactly) and pack to the
+    stored codes dtype."""
+    from repro.core import encode as enc
+
+    new = enc.icm_encode(jnp.asarray(new_vectors), C, icm_iters,
+                         backend=encode_backend, point_chunk=point_chunk)
+    return new.astype(codes_dtype)
+
 @dataclasses.dataclass(frozen=True)
 class FlatADC:
     """One-step exhaustive ADC index (baseline; no pruning).
@@ -307,6 +320,20 @@ class FlatADC:
                           block_n=self.block_n, interpret=self.interpret,
                           query_chunk=self.query_chunk,
                           lut_dtype=self.lut_dtype)
+
+    def add(self, new_vectors, *, icm_iters: int = 3,
+            encode_backend: str = "auto",
+            point_chunk: Optional[int] = 8192) -> "FlatADC":
+        """Encode ``new_vectors`` ((n_new, d) embeddings) through the
+        tiled engine and append their rows — incremental build, no
+        retraining (DESIGN.md §9).  Returns a new index; new rows get
+        ids [n, n + n_new)."""
+        new = _encode_new_rows(new_vectors, self.C, self.codes.dtype,
+                               icm_iters=icm_iters,
+                               encode_backend=encode_backend,
+                               point_chunk=point_chunk)
+        return dataclasses.replace(
+            self, codes=jnp.concatenate([self.codes, new], axis=0))
 
     def shard(self, mesh):
         from repro.index.sharded import ShardedFlatADC
@@ -341,6 +368,20 @@ class TwoStep:
                                query_chunk=self.query_chunk,
                                refine_cap=self.refine_cap,
                                lut_dtype=self.lut_dtype)
+
+    def add(self, new_vectors, *, icm_iters: int = 3,
+            encode_backend: str = "auto",
+            point_chunk: Optional[int] = 8192) -> "TwoStep":
+        """Encode ``new_vectors`` ((n_new, d) embeddings) through the
+        tiled engine and append their rows — incremental build, no
+        retraining (DESIGN.md §9).  Returns a new index; new rows get
+        ids [n, n + n_new)."""
+        new = _encode_new_rows(new_vectors, self.C, self.codes.dtype,
+                               icm_iters=icm_iters,
+                               encode_backend=encode_backend,
+                               point_chunk=point_chunk)
+        return dataclasses.replace(
+            self, codes=jnp.concatenate([self.codes, new], axis=0))
 
     def shard(self, mesh):
         from repro.index.sharded import ShardedTwoStep

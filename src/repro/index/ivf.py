@@ -53,6 +53,24 @@ class IVFIndex(NamedTuple):
     imbalance: float             # max_len / (n / n_lists)
 
 
+def _pack_buckets(buckets, n_lists: int, n: int) -> IVFIndex:
+    """Lay per-list id buckets out as the padded (n_lists, max_len)
+    slab — shared by ``build_ivf`` / ``ivf_assign`` / ``ivf_extend``.
+    Bucket entries must already be global database ids in ascending
+    order (assignment iterates ids in order, so they are)."""
+    # max over bucket lengths is 0 when every bucket is empty (k-means
+    # collapse / n_lists > n leaves stragglers); keep max_len >= 1 so
+    # the padded layout stays well-formed with all-(-1) rows
+    max_len = max(max((len(b) for b in buckets), default=0), 1)
+    lists = np.full((n_lists, max_len), -1, np.int32)
+    for l, b in enumerate(buckets):
+        lists[l, : len(b)] = b
+    lens = np.asarray([len(b) for b in buckets], np.int32)
+    return IVFIndex(centroids=None, lists=jnp.asarray(lists),
+                    list_lens=jnp.asarray(lens),
+                    imbalance=float(max_len / max(n / n_lists, 1)))
+
+
 def build_ivf(key, emb_db, n_lists: int, kmeans_iters: int = 20) -> IVFIndex:
     """Coarse k-means partition of ``emb_db`` into padded inverted lists.
 
@@ -80,17 +98,48 @@ def build_ivf(key, emb_db, n_lists: int, kmeans_iters: int = 20) -> IVFIndex:
         cent = jnp.concatenate([cent, pad], axis=0)
     ids_np = np.asarray(ids)
     buckets = [np.where(ids_np == l)[0] for l in range(n_lists)]
-    # max over bucket lengths is 0 when every bucket is empty (k-means
-    # collapse / n_lists > n leaves stragglers); keep max_len >= 1 so
-    # the padded layout stays well-formed with all-(-1) rows
-    max_len = max(max((len(b) for b in buckets), default=0), 1)
-    lists = np.full((n_lists, max_len), -1, np.int32)
-    for l, b in enumerate(buckets):
-        lists[l, : len(b)] = b
-    lens = np.asarray([len(b) for b in buckets], np.int32)
-    return IVFIndex(centroids=cent, lists=jnp.asarray(lists),
-                    list_lens=jnp.asarray(lens),
-                    imbalance=float(max_len / max(n / n_lists, 1)))
+    return _pack_buckets(buckets, n_lists, n)._replace(centroids=cent)
+
+
+def ivf_assign(centroids, emb_db) -> IVFIndex:
+    """Inverted lists from *fixed* coarse centroids: assign every
+    ``emb_db`` row to its nearest centroid.  The from-scratch
+    counterpart of ``ivf_extend`` — ``build_ivf(key, e1, L)`` then
+    ``ivf_extend``-ing e2 yields exactly
+    ``ivf_assign(ivf.centroids, concat(e1, e2))`` (DESIGN.md §9)."""
+    from repro.core import codebooks as cb
+
+    n = int(emb_db.shape[0])
+    n_lists = centroids.shape[0]
+    ids_np = np.asarray(cb.kmeans_assign(jnp.asarray(emb_db, jnp.float32),
+                                         centroids))
+    buckets = [np.where(ids_np == l)[0] for l in range(n_lists)]
+    return _pack_buckets(buckets, n_lists, n)._replace(centroids=centroids)
+
+
+def ivf_extend(ivf: IVFIndex, new_emb, start_id: int) -> IVFIndex:
+    """Route new points into the existing inverted lists — the IVF leg
+    of ``Index.add`` (DESIGN.md §9).  Centroids stay fixed (no
+    retraining); each new embedding is assigned to its nearest centroid
+    and its global id (``start_id + row``) appended to that list, with
+    the padded slab re-laid-out (max_len grows as needed).  Appending
+    preserves ascending id order per list, so the result is identical
+    to ``ivf_assign`` over the concatenated embeddings."""
+    from repro.core import codebooks as cb
+
+    n_lists = ivf.lists.shape[0]
+    new_ids = np.asarray(cb.kmeans_assign(
+        jnp.asarray(new_emb, jnp.float32), ivf.centroids))
+    lists_np = np.asarray(ivf.lists)
+    lens_np = np.asarray(ivf.list_lens)
+    buckets = [lists_np[l, : lens_np[l]] for l in range(n_lists)]
+    for l in range(n_lists):
+        extra = start_id + np.where(new_ids == l)[0].astype(np.int32)
+        if extra.size:
+            buckets[l] = np.concatenate([buckets[l], extra])
+    n = start_id + int(new_emb.shape[0])
+    return _pack_buckets(buckets, n_lists, n)._replace(
+        centroids=ivf.centroids)
 
 
 # -------------------------------------------------------------- engines ----
@@ -389,6 +438,31 @@ class IVFTwoStep:
             block_n=self.block_n, interpret=self.interpret,
             query_chunk=self.query_chunk, refine_cap=self.refine_cap,
             list_codes=self.list_codes, lut_dtype=self.lut_dtype)
+
+    def add(self, new_vectors, *, icm_iters: int = 3,
+            encode_backend: str = "auto",
+            point_chunk: Optional[int] = 8192) -> "IVFTwoStep":
+        """Encode ``new_vectors`` ((n_new, d) embeddings) through the
+        tiled engine and route them into the owning inverted lists —
+        incremental build, coarse centroids fixed, no retraining
+        (DESIGN.md §9).  New rows get ids [n, n + n_new); the in-list
+        codes slab is rebuilt when the index serves from one.  Search
+        results are identical to a from-scratch index over the
+        concatenated embeddings with the same centroids
+        (``ivf_assign``)."""
+        from repro.index.flat import _encode_new_rows
+
+        new = _encode_new_rows(new_vectors, self.C, self.codes.dtype,
+                               icm_iters=icm_iters,
+                               encode_backend=encode_backend,
+                               point_chunk=point_chunk)
+        codes = jnp.concatenate([self.codes, new], axis=0)
+        ivf = ivf_extend(self.ivf, new_vectors,
+                         start_id=self.codes.shape[0])
+        lc = (ivf_list_codes(ivf, codes) if self.list_codes is not None
+              else None)
+        return dataclasses.replace(self, codes=codes, ivf=ivf,
+                                   list_codes=lc)
 
     def shard(self, mesh):
         from repro.index.sharded import ShardedIVFTwoStep

@@ -71,6 +71,18 @@ def _pad_rows(x, rows, fill=0):
     return jnp.pad(x, pad, constant_values=fill)
 
 
+def _sharded_add(self, new_vectors, **kw):
+    """Sharded serving clones are immutable: they copy only the padded,
+    sharded arrays (never retaining the source index), so there is
+    nothing to append to.  Grow the *source* index with ``Index.add``
+    and re-shard — ``quant.serve_icq.build_ann_engine`` keeps the
+    source index and does exactly that in its ``add``."""
+    raise NotImplementedError(
+        "sharded indexes are serving clones: call add() on the source "
+        "index and re-shard(mesh) (or use build_ann_engine(...).add, "
+        "which keeps the source index for you)")
+
+
 def _gather_sorted(cols, axis_name: str, num_keys: int = 2):
     """all_gather each (nq, k) operand along the shard axis and two-key
     sort ascending — the global merge primitive.  Returns the sorted
@@ -143,6 +155,8 @@ class ShardedFlatADC:
         K = self.C.shape[0]
         return SearchResult(idx, dist, jnp.asarray(float(K)),
                             jnp.asarray(1.0))
+
+    add = _sharded_add
 
     def shard(self, mesh):
         raise ValueError("index is already sharded")
@@ -236,6 +250,8 @@ class ShardedTwoStep:
         kf = jnp.sum(self.structure.fast_mask.astype(jnp.float32))
         pass_rate = jnp.mean(pf)
         return SearchResult(idx, dist, kf + pass_rate * (K - kf), pass_rate)
+
+    add = _sharded_add
 
     def shard(self, mesh):
         raise ValueError("index is already sharded")
@@ -428,6 +444,8 @@ class ShardedIVFTwoStep:
         kf = jnp.sum(self.structure.fast_mask.astype(jnp.float32))
         return ivf_mod.ivf_ops_result(ids, dist, n_cand, n_pass, n=self.n,
                                       n_lists=self.n_lists, K=K, kf=kf)
+
+    add = _sharded_add
 
     def shard(self, mesh):
         raise ValueError("index is already sharded")

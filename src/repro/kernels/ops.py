@@ -14,6 +14,7 @@ from repro.kernels.batched_search import (crude_topk_pallas,
                                           ivf_crude_topk_pallas,
                                           ivf_refine_topk_pallas,
                                           refine_topk_pallas)
+from repro.kernels.icm_encode import icm_encode_pallas
 from repro.kernels.two_step import two_step_pallas
 from repro.kernels.kmeans import kmeans_assign_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -97,6 +98,15 @@ def ivf_refine_topk(cand_codes, lut_flat, crude, thresholds, topk: int, *,
     return ivf_refine_topk_pallas(cand_codes, lut_flat, crude, thresholds,
                                   topk=topk, block_q=block_q,
                                   block_n=block_n, interpret=it)
+
+
+def icm_encode(x, init_codes, C, *, iters: int = 3, block_n: int = 1024,
+               interpret=None):
+    """Point-tiled ICM encode (DESIGN.md §9): x (n, d), init_codes
+    (n, K) warm start, C (K, m, d) -> codes (n, K) int32."""
+    it = _default_interpret() if interpret is None else interpret
+    return icm_encode_pallas(x, init_codes, C, iters=iters,
+                             block_n=block_n, interpret=it)
 
 
 def kmeans_assign(x, cent, *, block_n: int = 1024, interpret=None):

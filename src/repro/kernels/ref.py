@@ -105,6 +105,46 @@ def ivf_two_step_search_looped(queries, codes, C, structure, ivf,
                           K=K, kf=kf)
 
 
+def icm_encode_gram(x, C, iters: int = 3, init_codes=None):
+    """The seed cross-Gram ICM formulation — kept as the numerical
+    oracle for the tiled encoding engine (``core.encode.icm_encode``
+    jnp/pallas backends) and as the baseline in ``benchmarks/run.py
+    encode``.
+
+    Materializes the full (K, K, m, m) cross-Gram plus the (K, n, m)
+    query-codeword inner products and sweeps codebooks with a
+    vmap-of-gathers interaction sum; x (n, d), C (K, m, d) ->
+    codes (n, K) int32.  Warm-started from the independent (PQ-style)
+    assignment unless ``init_codes`` given — the same warm start the
+    tiled engine uses.
+    """
+    from repro.core import codebooks as cb
+    from repro.core.encode import encode_pq
+
+    K, m, _ = C.shape
+    sq = cb.codeword_sq_norms(C)                             # (K,m)
+    xc = jnp.einsum("nd,kmd->knm", x, C)                     # (K,n,m)
+    G = cb.cross_gram(C)                                     # (K,K,m,m)
+    codes = encode_pq(x, C) if init_codes is None else init_codes
+
+    def sweep(codes, _):
+        def step(codes, k):
+            # interaction: sum over k'!=k of G[k', k][codes[:,k']]
+            # gather rows: G[kp,k] is (m,m); codes[:,kp] selects (n,m)
+            def one(kp):
+                return G[kp, k][codes[:, kp]]                # (n,m)
+            inter = jnp.sum(jax.vmap(one)(jnp.arange(K)), axis=0) - one(k)
+            scores = sq[k][None, :] - 2.0 * xc[k] + 2.0 * inter
+            new_k = jnp.argmin(scores, axis=-1).astype(jnp.int32)
+            return codes.at[:, k].set(new_k), None
+
+        codes, _ = jax.lax.scan(step, codes, jnp.arange(K))
+        return codes, None
+
+    codes, _ = jax.lax.scan(sweep, codes, jnp.arange(iters))
+    return codes
+
+
 def kmeans_assign_ref(x, cent):
     """x (n,d), cent (m,d) -> (ids (n,) int32, sq-dist (n,) f32)."""
     x32 = x.astype(jnp.float32)

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.distributed.sharding import shard_map_compat
 from repro.launch.steps import CellPlan
 from repro.quant.grad_compress import ef_quantize
 from repro.quant.int8 import dequantize_int8
@@ -57,10 +58,11 @@ def plan_combine_cell(cfg, mesh, *, compressed: bool) -> CellPlan:
     r = jax.ShapeDtypeStruct((rows, block), jnp.float32)
     spec = P(("data", "model"), None)                 # pod-replicated
     shard = NamedSharding(mesh, spec)
-    fn = jax.shard_map(
+    # outputs ARE pod-replicated (gather+mean / pmean) — the compat shim
+    # disables the replication checker uniformly
+    fn = shard_map_compat(
         _combine_int8 if compressed else _combine_fp32,
-        mesh=mesh, in_specs=(spec, spec), out_specs=(spec, spec),
-        check_vma=False)   # outputs ARE pod-replicated (gather+mean / pmean)
+        mesh, (spec, spec), (spec, spec))
 
     class _Shape:                                     # minimal ShapeSpec-like
         name = "grad_combine"

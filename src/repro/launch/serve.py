@@ -41,8 +41,15 @@ from repro.launch.steps import build_serve_fns
 def serve_ann(n: int, nq: int, backend: str, *, d: int = 16, K: int = 8,
               m: int = 256, num_fast: int = 2, topk: int = 50,
               batches: int = 3, index: str = "two-step", shards: int = 1,
-              n_lists: int = 64, n_probe: int = 8, lut_dtype: str = "f32"):
-    """Synthetic ANN serving loop through the unified index layer."""
+              n_lists: int = 64, n_probe: int = 8, lut_dtype: str = "f32",
+              n_add: int = 0):
+    """Synthetic ANN serving loop through the unified index layer.
+
+    ``n_add`` > 0 additionally exercises the incremental build surface:
+    after the timed batches, ``n_add`` fresh vectors are encoded and
+    appended via ``AnnEngine.add`` (ICM engine, no retraining; sharded
+    engines re-shard the grown source index) and one more query batch
+    is served from the grown index."""
     from repro.data.synthetic import make_synthetic_index
     from repro.quant.serve_icq import build_ann_engine
 
@@ -56,7 +63,8 @@ def serve_ann(n: int, nq: int, backend: str, *, d: int = 16, K: int = 8,
                 f"--ann-shards {shards} needs {shards} devices but only "
                 f"{len(jax.devices())} are visible; on CPU set "
                 f"XLA_FLAGS=--xla_force_host_platform_device_count={shards}")
-        mesh = jax.make_mesh((shards,), ("data",))
+        from repro.distributed.sharding import make_mesh_auto
+        mesh = make_mesh_auto((shards,), ("data",))
     emb_db = None
     if index == "ivf":
         from repro.core import codebooks as cb
@@ -81,6 +89,21 @@ def serve_ann(n: int, nq: int, backend: str, *, d: int = 16, K: int = 8,
           f"lut={lut_dtype} shards={shards}: {dt * 1e6 / nq:.1f} us/query "
           f"(batch {dt * 1e3:.1f} ms), pass_rate={float(res.pass_rate):.3f}, "
           f"avg_ops={float(res.avg_ops):.2f}/{K}")
+
+    if n_add > 0:
+        from repro.core import codebooks as cb
+        new_codes = jax.random.randint(jax.random.fold_in(key, 3),
+                                       (n_add, K), 0, m)
+        new_vecs = cb.decode(C, new_codes) + 0.01 * jax.random.normal(
+            jax.random.fold_in(key, 4), (n_add, d))
+        t0 = time.time()
+        engine.add(new_vecs)
+        dt_add = time.time() - t0
+        res2 = engine(queries)
+        jax.block_until_ready(res2.indices)
+        print(f"ann-add: +{n_add} vectors in {dt_add * 1e3:.1f} ms "
+              f"(encode+append, no retrain) -> n={engine.n}; "
+              f"post-add pass_rate={float(res2.pass_rate):.3f}")
 
 
 def main():
@@ -108,13 +131,16 @@ def main():
     ap.add_argument("--lut-dtype", default="f32", choices=["f32", "int8"],
                     help="crude-pass LUT precision (int8 = quantized "
                          "tables, DESIGN.md §8)")
+    ap.add_argument("--ann-add", type=int, default=0,
+                    help="after serving, grow the index by N vectors via "
+                         "AnnEngine.add (incremental encode, DESIGN.md §9)")
     args = ap.parse_args()
 
     if args.ann:
         serve_ann(args.ann_n, args.ann_queries, args.ann_backend,
                   index=args.ann_index, shards=args.ann_shards,
                   n_lists=args.ann_lists, n_probe=args.ann_probe,
-                  lut_dtype=args.lut_dtype)
+                  lut_dtype=args.lut_dtype, n_add=args.ann_add)
         return
     if args.arch is None:
         ap.error("--arch is required unless --ann is given")

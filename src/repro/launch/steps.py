@@ -319,9 +319,8 @@ def wrap_pod_manual(fn, mesh, in_shardings, out_shardings):
     out_specs = jax.tree.map(
         pod_manual_spec, out_shardings,
         is_leaf=lambda x: hasattr(x, "spec"))
-    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, axis_names={"pod"},
-                         check_vma=False)
+    return shrules.shard_map_compat(fn, mesh, in_specs, out_specs,
+                                    axis_names={"pod"})
 
 
 def plan_icq_kv_cell(cfg, shape, mesh, *, top_c_frac: float = 1 / 16,

@@ -38,13 +38,56 @@ from repro.quant.kv_cache import (ICQKVConfig, icq_kv_append,
                                   init_icq_kv_cache)
 
 
+class AnnEngine:
+    """A serving handle over one index: callable for query batches and
+    growable via ``add`` (DESIGN.md §9).
+
+    ``engine(queries)`` (or ``engine.search(queries)``) runs the jitted
+    batched search — the historical ``build_ann_engine`` contract.
+    ``engine.add(new_vectors)`` encodes the new embeddings through the
+    tiled ICM engine, appends/routes them into the index *without
+    retraining*, and refreshes the jitted search (re-sharding over the
+    engine's mesh if one was given); the engine keeps the unsharded
+    source index precisely so sharded serving stays growable.  Returns
+    ``self`` so calls chain."""
+
+    def __init__(self, index, mesh=None):
+        self.index = index                   # the unsharded source index
+        self.mesh = mesh
+        self._refresh()
+
+    def _refresh(self):
+        if self.mesh is not None:
+            self._serve = self.index.shard(self.mesh).search
+        else:
+            idx = self.index
+            self._serve = jax.jit(lambda queries: idx.search(queries))
+
+    def __call__(self, queries):
+        return self._serve(queries)
+
+    def search(self, queries):
+        return self._serve(queries)
+
+    @property
+    def n(self) -> int:
+        return self.index.codes.shape[0]
+
+    def add(self, new_vectors, **encode_opts) -> "AnnEngine":
+        self.index = self.index.add(new_vectors, **encode_opts)
+        self._refresh()
+        return self
+
+
 def build_ann_engine(codes, C, structure, *, topk: int = 50,
                      backend: str = "auto", block_q=None, block_n=None,
                      query_chunk=None, index: str = "two-step", mesh=None,
                      emb_db=None, n_lists: int = 64, n_probe: int = 8,
                      refine_cap=None, key=None, lut_dtype: str = "f32"):
-    """Batched ANN serving entry: returns jitted
-    ``serve(queries (nq, d)) -> repro.index.SearchResult``.
+    """Batched ANN serving entry: returns an ``AnnEngine`` — call it
+    with an (nq, d) query batch for a ``repro.index.SearchResult``,
+    and grow it in place with ``engine.add(new_vectors)`` (incremental
+    encode + append, no retraining).
 
     ``index`` selects the implementation ("flat" | "two-step" | "ivf");
     "ivf" additionally needs ``emb_db`` (the database embeddings the
@@ -77,15 +120,7 @@ def build_ann_engine(codes, C, structure, *, topk: int = 50,
                     key=key)
     idx = make_index(index, jax.device_put(codes), jax.device_put(C),
                      structure, **opts)
-    if mesh is not None:
-        idx = idx.shard(mesh)
-        return idx.search                    # sharded fns are pre-jitted
-
-    @jax.jit
-    def serve(queries):
-        return idx.search(queries)
-
-    return serve
+    return AnnEngine(idx, mesh=mesh)
 
 
 def supports_icq_kv(cfg) -> bool:

@@ -1,0 +1,50 @@
+"""Unified trainer layer (DESIGN.md §9): one ``Quantizer`` protocol
+(``init``/``step``/``finalize``), the joint ICQ trainer plus the
+baseline quantizers behind it, the scan-compiled (optionally
+mesh-sharded) epoch driver, and the tiled database encoder.
+
+    from repro.trainer import fit, make_quantizer, encode_database
+    model = fit(key, xs, ys, cfg, mode="icq", epochs=6)       # scan epochs
+    q = make_quantizer("cq", cfg); st = q.init(key, xs)       # protocol
+    codes = encode_database(emb_new, model.C)                 # engine
+
+``core.train`` and ``core.baselines.*`` re-export everything here for
+backward compatibility; new code should import from ``repro.trainer``.
+"""
+from repro.trainer.base import ICQModel, Quantizer, plain_structure
+from repro.trainer.encode import encode_database
+from repro.trainer.epoch import compile_epoch, epoch_batches, fit
+from repro.trainer.joint import (finalize, init_train_state,
+                                 make_train_step)
+from repro.trainer.quantizers import (CQQuantizer, JointQuantizer,
+                                      OPQQuantizer, PQQuantizer, fit_cq,
+                                      fit_opq, fit_pq)
+
+QUANTIZER_KINDS = {
+    "icq": lambda cfg, **o: JointQuantizer(cfg, mode="icq", **o),
+    "sq": lambda cfg, **o: JointQuantizer(cfg, mode="cq", **o),
+    "pqn": lambda cfg, **o: JointQuantizer(cfg, mode="pq", **o),
+    "pq": PQQuantizer,
+    "opq": OPQQuantizer,
+    "cq": CQQuantizer,
+}
+
+
+def make_quantizer(kind: str, icq_cfg, **opts) -> Quantizer:
+    """Build a quantizer by name: the joint trainer modes ("icq", "sq",
+    "pqn") or the unsupervised baselines ("pq", "opq", "cq")."""
+    try:
+        ctor = QUANTIZER_KINDS[kind]
+    except KeyError:
+        raise ValueError(f"unknown quantizer kind {kind!r}; expected one "
+                         f"of {sorted(QUANTIZER_KINDS)}") from None
+    return ctor(icq_cfg, **opts)
+
+
+__all__ = [
+    "ICQModel", "Quantizer", "QUANTIZER_KINDS", "JointQuantizer",
+    "PQQuantizer", "OPQQuantizer", "CQQuantizer", "make_quantizer",
+    "fit", "finalize", "init_train_state", "make_train_step",
+    "compile_epoch", "epoch_batches", "encode_database",
+    "plain_structure", "fit_pq", "fit_opq", "fit_cq",
+]

@@ -1,0 +1,75 @@
+"""Trainer-layer foundations: the ``Quantizer`` protocol and the shared
+``ICQModel`` fitted artifact (DESIGN.md §9).
+
+The trainer layer is the producer-side twin of the index layer (§7):
+where every index speaks ``build / search / shard``, every quantizer —
+the joint ICQ trainer and the PQ / OPQ / CQ / SQ / PQN baselines —
+speaks the same three-verb protocol:
+
+    init(key, xs, ys)   -> state     seed codebooks / embedding / prior
+    step(state, batch)  -> state     one optimization step or round
+    finalize(state, xs) -> ICQModel  export: project, encode db, pack
+
+so drivers (``trainer.epoch.fit``, ``launch/train.py --icq``,
+benchmark harnesses) select a quantizer by name via
+``trainer.make_quantizer`` and never touch trainer internals.  ``state``
+is a plain dict; its array leaves form a pytree (jit/scan/donation
+friendly) and non-array entries (jitted step fns, static config) ride
+along untouched.
+
+``finalize`` always exports through the tiled encoding engine
+(``trainer.encode.encode_database``): fixed-shape padded chunks (one
+compile), ICM for additive codebooks / independent assignment for PQ,
+codes packed to the narrowest dtype that fits m.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class ICQModel:
+    """Fitted artifact: everything the search side needs."""
+    icq_cfg: Any
+    embed_params: Any
+    embed_apply: Callable
+    C: jnp.ndarray               # (K,m,d) — hard-projected for mode="icq"
+    codes: jnp.ndarray           # (n,K) database codes (ICM-encoded, packed)
+    structure: Any               # core.icq.ICQStructure
+    lam: jnp.ndarray             # (d,) final variance estimate
+    mode: str = "icq"
+
+    def embed(self, x):
+        return self.embed_apply(self.embed_params, x)
+
+
+@runtime_checkable
+class Quantizer(Protocol):
+    """The unified quantizer protocol (DESIGN.md §9)."""
+
+    def init(self, key, xs, ys=None) -> Dict:
+        ...
+
+    def step(self, state: Dict, batch) -> Dict:
+        ...
+
+    def finalize(self, state: Dict, xs) -> ICQModel:
+        ...
+
+
+def plain_structure(C, d: int):
+    """The degenerate structure non-interleaved quantizers export: every
+    dimension in psi, every codebook fast, zero margin — one-step ADC
+    semantics through the shared search API.  Returns an
+    ``core.icq.ICQStructure`` (imported lazily: this module is the
+    trainer layer's import root and must stay core-free so
+    ``repro.trainer`` and ``repro.core`` can import in either order)."""
+    from repro.core import icq as icq_mod
+
+    return icq_mod.ICQStructure(
+        xi=jnp.ones((d,), bool),
+        fast_mask=jnp.ones((C.shape[0],), bool),
+        sigma=jnp.zeros(()))

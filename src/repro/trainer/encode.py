@@ -1,0 +1,67 @@
+"""Database encoding through the tiled engine (DESIGN.md §9): embed +
+encode in fixed-shape padded chunks, pack to the narrowest dtype.
+
+The seed export loop embedded and encoded raw-size chunks, so the
+ragged last chunk re-jitted the encode function (a full ICM trace +
+compile for one partial batch).  ``encode_database`` compiles exactly
+one (chunk, ...)-shaped embed+encode function, zero-pads the final
+chunk up to that shape, and masks the pad rows out of the stored codes.
+Per-point independence of both encoders (PQ argmin and the ICM residual
+recurrence) means padding never changes a real row's codes.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import encode as enc
+
+
+def encode_database(xs, C, *, embed_apply=None, embed_params=None,
+                    mode: str = "icm", icm_iters: int = 3,
+                    chunk: int = 8192, backend: str = "auto",
+                    block_n: int = 1024, interpret=None,
+                    pack: bool = True):
+    """Encode a database against codebooks ``C`` -> (n, K) packed codes.
+
+    xs:           (n, ...) raw inputs (numpy or jnp); embedded per chunk
+                  with ``embed_apply(embed_params, chunk)`` when given,
+                  else taken as embeddings directly.
+    C:            (K, m, d) codebooks.
+    mode:         "icm" (additive codebooks — the tiled ICM engine,
+                  PQ-warm-started) | "pq" (independent per-codebook
+                  assignment; exact for orthogonal supports).
+    chunk:        rows per jitted call; the last chunk is zero-padded up
+                  to this size (one compile for the whole database).
+    backend:      engine dispatch for the ICM sweeps
+                  ("jnp" | "pallas" | "auto").
+    block_n:      pallas point-tile size.
+    pack:         pack to the narrowest dtype that fits m
+                  (``encode.pack_codes``); False returns int32.
+    """
+    n = xs.shape[0]
+    m = C.shape[1]
+    chunk = max(min(chunk, n), 1)
+
+    @jax.jit
+    def enc_chunk(xc):
+        emb = (embed_apply(embed_params, xc) if embed_apply is not None
+               else xc)
+        if mode == "pq":
+            return enc.encode_pq(emb, C)
+        return enc.icm_encode(emb, C, icm_iters, backend=backend,
+                              block_n=block_n, interpret=interpret)
+
+    parts = []
+    for s in range(0, n, chunk):
+        xc = xs[s: s + chunk]
+        if xc.shape[0] < chunk:                 # pad the ragged last chunk
+            pad = [(0, chunk - xc.shape[0])] + [(0, 0)] * (xs.ndim - 1)
+            xc = (np.pad(np.asarray(xc), pad) if isinstance(xc, np.ndarray)
+                  else jnp.pad(xc, pad))
+        parts.append(enc_chunk(jnp.asarray(xc)))
+    codes = jnp.concatenate(parts, axis=0)[:n]  # mask pad rows out
+    return enc.pack_codes(codes, m) if pack else codes

@@ -6,7 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.hlo_cost import analyze_hlo
+from repro.distributed.sharding import make_mesh_auto, shard_map_compat
+from repro.launch.hlo_cost import analyze_hlo, xla_cost_analysis
 
 
 def _compile(f, *args):
@@ -21,7 +22,7 @@ def test_loop_free_matches_xla():
     w = jax.ShapeDtypeStruct((512, 512), jnp.float32)
     c = _compile(f, x, w)
     mine = analyze_hlo(c.as_text())
-    xla = c.cost_analysis()
+    xla = xla_cost_analysis(c)
     assert mine["flops"] == pytest.approx(xla["flops"], rel=1e-6)
     assert mine["flops"] == pytest.approx(2 * 2 * 256 * 512 * 512, rel=1e-6)
 
@@ -65,8 +66,7 @@ def test_nested_scan_multiplies():
 
 def test_collectives_counted_with_multiplier():
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_auto((1,), ("d",))
 
     def h_fn(x):
         def body(c, _):
@@ -75,8 +75,8 @@ def test_collectives_counted_with_multiplier():
         out, ss = jax.lax.scan(body, x, None, length=5)
         return out, ss
 
-    sm = jax.shard_map(h_fn, mesh=mesh, in_specs=P("d"),
-                       out_specs=(P("d"), P(None, "d")))
+    sm = shard_map_compat(h_fn, mesh, P("d"),
+                          (P("d"), P(None, "d")))
     c = jax.jit(sm).lower(
         jax.ShapeDtypeStruct((16, 64), jnp.float32)).compile()
     m = analyze_hlo(c.as_text())
@@ -93,8 +93,7 @@ def test_dryrun_exec_flops_vs_hlo_on_real_cell():
     from repro.configs.base import ShapeSpec
     from repro.launch.dryrun import exec_flops
     from repro.launch.steps import lower_cell, plan_cell
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_auto((1, 1), ("data", "model"))
     cfg = dataclasses.replace(get_config("tinyllama-1.1b"), num_layers=2,
                               microbatch_size=2)
     shape = ShapeSpec(name="t", seq_len=512, global_batch=2, kind="train")

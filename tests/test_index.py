@@ -13,6 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import codebooks as cb_mod
+from repro.core import encode as enc_mod
 from repro.core import icq as icq_mod
 from repro.index import (FlatADC, Index, IVFTwoStep, TwoStep, adc_search,
                          build_ivf, exact_search, ivf_list_codes,
@@ -267,3 +269,122 @@ def test_sharded_merge_matches_single_device():
                           env=env)
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "SHARDED_PARITY_OK" in proc.stdout
+
+
+# ------------------------------------------------- incremental builds ----
+
+def _icq_problem(key, n, d=16, K=4, m=16):
+    """A *real* additive-codebook problem (projected ICQ codebooks) so
+    add()'s ICM encoding is exercised with genuine interactions."""
+    emb = jax.random.normal(key, (n, d)) * jnp.linspace(0.3, 2.0, d)
+    C = cb_mod.init_residual(key, emb, K, m, iters=5)
+    xi = jnp.asarray([1] * (d // 3) + [0] * (d - d // 3), bool)
+    fast = jnp.zeros((K,), bool).at[:2].set(True)
+    C = icq_mod.project_codebooks(C, xi, fast)
+    st = icq_mod.ICQStructure(xi=xi, fast_mask=fast, sigma=jnp.asarray(1.0))
+    codes = enc_mod.pack_codes(enc_mod.icm_encode(emb, C, 3, backend="jnp"),
+                               m)
+    return emb, C, st, codes
+
+
+def test_add_flat_and_two_step_identical_to_rebuild(key):
+    """Index.add == from-scratch build on the concatenated dataset:
+    encoding is per-point, so appended rows carry the exact codes a
+    full rebuild would assign (ids and distances identical)."""
+    emb, C, st, codes_all = _icq_problem(key, 900)
+    e1, e2 = emb[:700], emb[700:]
+    codes1 = enc_mod.pack_codes(enc_mod.icm_encode(e1, C, 3,
+                                                   backend="jnp"), 16)
+    q = jax.random.normal(jax.random.fold_in(key, 9), (7, 16))
+    for build in (lambda c: FlatADC.build(c, C, topk=9, backend="jnp"),
+                  lambda c: TwoStep.build(c, C, st, topk=9, backend="jnp")):
+        grown = build(codes1).add(e2, icm_iters=3)
+        ref = build(codes_all)
+        assert grown.codes.dtype == ref.codes.dtype
+        np.testing.assert_array_equal(np.asarray(grown.codes),
+                                      np.asarray(ref.codes))
+        rg, rr = grown.search(q), ref.search(q)
+        np.testing.assert_array_equal(np.asarray(rg.indices),
+                                      np.asarray(rr.indices))
+        np.testing.assert_array_equal(np.asarray(rg.distances),
+                                      np.asarray(rr.distances))
+
+
+def test_add_ivf_identical_to_rebuild_same_centroids(key):
+    """IVF add keeps the coarse centroids fixed; the reference build is
+    ivf_assign over the concatenated embeddings with those centroids —
+    lists, slab, and search results must all match."""
+    import dataclasses as dc
+    from repro.index import ivf_assign, ivf_list_codes
+    emb, C, st, codes_all = _icq_problem(key, 900)
+    e1, e2 = emb[:700], emb[700:]
+    codes1 = enc_mod.pack_codes(enc_mod.icm_encode(e1, C, 3,
+                                                   backend="jnp"), 16)
+    q = jax.random.normal(jax.random.fold_in(key, 9), (7, 16))
+    idx = IVFTwoStep.build(codes1, C, st, emb_db=e1, key=key, n_lists=8,
+                           n_probe=4, topk=9, backend="jnp")
+    grown = idx.add(e2, icm_iters=3)
+    ivf_ref = ivf_assign(idx.ivf.centroids, emb)
+    ref = IVFTwoStep(codes=codes_all, C=C, structure=st, ivf=ivf_ref,
+                     n_probe=4, topk=9, backend="jnp",
+                     list_codes=ivf_list_codes(ivf_ref, codes_all))
+    np.testing.assert_array_equal(np.asarray(grown.ivf.lists),
+                                  np.asarray(ref.ivf.lists))
+    np.testing.assert_array_equal(np.asarray(grown.list_codes),
+                                  np.asarray(ref.list_codes))
+    rg, rr = grown.search(q), ref.search(q)
+    np.testing.assert_array_equal(np.asarray(rg.indices),
+                                  np.asarray(rr.indices))
+    np.testing.assert_array_equal(np.asarray(rg.distances),
+                                  np.asarray(rr.distances))
+
+
+def test_add_grows_max_len_when_lists_overflow(key):
+    """Appending enough rows to one cell must grow the padded slab."""
+    emb, C, st, _ = _icq_problem(key, 300)
+    e1 = emb[:200]
+    codes1 = enc_mod.pack_codes(enc_mod.icm_encode(e1, C, 3,
+                                                   backend="jnp"), 16)
+    idx = IVFTwoStep.build(codes1, C, st, emb_db=e1, key=key, n_lists=4,
+                           n_probe=4, topk=5, backend="jnp")
+    # 100 near-identical rows all route into one cell
+    clones = jnp.broadcast_to(emb[0], (100, emb.shape[1])) \
+        + 0.001 * jax.random.normal(key, (100, emb.shape[1]))
+    grown = idx.add(clones)
+    assert grown.ivf.lists.shape[1] > idx.ivf.lists.shape[1]
+    assert grown.codes.shape[0] == 300
+    r = grown.search(emb[:1])
+    assert r.indices.shape == (1, 5)
+
+
+def test_sharded_add_raises_with_guidance(key):
+    q, codes, C, st, emb = _problem(key, 100, 2)
+    idx = TwoStep.build(codes, C, st, topk=5, backend="jnp")
+    from repro.distributed.sharding import make_mesh_auto
+    sharded = idx.shard(make_mesh_auto((1,), ("data",)))
+    with pytest.raises(NotImplementedError, match="source index"):
+        sharded.add(emb[:3])
+
+
+def test_ann_engine_add_reshards_and_serves(key):
+    """AnnEngine keeps the unsharded source index: add() grows it and
+    refreshes the jitted (or sharded) serving fn."""
+    from repro.quant.serve_icq import build_ann_engine
+    emb, C, st, _ = _icq_problem(key, 500)
+    e1, e2 = emb[:400], emb[400:]
+    codes1 = enc_mod.pack_codes(enc_mod.icm_encode(e1, C, 3,
+                                                   backend="jnp"), 16)
+    engine = build_ann_engine(codes1, C, st, topk=9, backend="jnp")
+    q = jax.random.normal(jax.random.fold_in(key, 9), (4, 16))
+    r0 = engine(q)
+    assert engine.n == 400
+    engine.add(e2)
+    assert engine.n == 500
+    r1 = engine(q)
+    assert r1.indices.shape == r0.indices.shape
+    # grown engine == engine built over everything at once
+    codes_all = enc_mod.pack_codes(enc_mod.icm_encode(emb, C, 3,
+                                                      backend="jnp"), 16)
+    ref = build_ann_engine(codes_all, C, st, topk=9, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(r1.indices),
+                                  np.asarray(ref(q).indices))

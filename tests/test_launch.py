@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, smoke_config
+from repro.distributed.sharding import make_mesh_auto, shard_map_compat
 from repro.configs.base import ShapeSpec
 from repro.launch.steps import (batch_shardings, batch_struct,
                                 build_train_step, num_microbatches,
@@ -15,8 +16,7 @@ from repro.launch.steps import (batch_shardings, batch_struct,
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_auto((1, 1), ("data", "model"))
 
 
 def test_num_microbatches_geometry():
@@ -86,8 +86,7 @@ def test_icq_grad_train_step_matches_plain_closely(key):
     from jax.sharding import PartitionSpec  # noqa: F401
     cfg = dataclasses.replace(smoke_config("tinyllama-1.1b"),
                               microbatch_size=1)
-    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = make_mesh_auto((1, 1, 1), ("pod", "data", "model"))
     toks = jax.random.randint(key, (1, 2, 32), 0, cfg.vocab_size)
     batch = {"tokens": toks, "labels": toks}
 
@@ -98,10 +97,10 @@ def test_icq_grad_train_step_matches_plain_closely(key):
         params = model.init(jax.random.PRNGKey(0))
         opt_state = init_opt(params)
         if icq_grad:
-            step = jax.jit(jax.shard_map(
-                step_fn, mesh=mesh,
-                in_specs=(PartitionSpec(),) * 3,
-                out_specs=(PartitionSpec(),) * 3, check_vma=False))
+            step = jax.jit(shard_map_compat(
+                step_fn, mesh,
+                (PartitionSpec(),) * 3,
+                (PartitionSpec(),) * 3))
         else:
             step = jax.jit(step_fn)
         p, o, m = step(params, opt_state, batch)

@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro.configs import smoke_config
+from repro.distributed.sharding import make_mesh_auto, shard_map_compat
 from repro.models import build_model
 
 
@@ -62,14 +63,12 @@ def test_combine_programs_numerics():
     from repro.launch.combine import _combine_fp32, _combine_int8
     from repro.quant.grad_compress import ef_quantize
     from repro.quant.int8 import dequantize_int8
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_auto((1,), ("pod",))
     g = jax.random.normal(jax.random.PRNGKey(0), (64, 32)) * 0.01
     r = jnp.zeros_like(g)
     for fn in (_combine_fp32, _combine_int8):
-        out, _ = jax.jit(jax.shard_map(
-            fn, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
-            check_vma=False))(g, r)
+        out, _ = jax.jit(shard_map_compat(
+            fn, mesh, (P(), P()), (P(), P())))(g, r)
         if fn is _combine_fp32:
             np.testing.assert_allclose(np.asarray(out), np.asarray(g),
                                        atol=1e-7)
@@ -84,8 +83,7 @@ def test_icq_kv_plan_lowers_on_tiny_mesh():
     from repro.configs.base import ShapeSpec
     from repro.launch.steps import lower_cell, plan_icq_kv_cell
     cfg = dataclasses.replace(smoke_config("tinyllama-1.1b"), head_dim=64)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_auto((1, 1), ("data", "model"))
     shape = ShapeSpec("d", seq_len=256, global_batch=2, kind="decode")
     plan = plan_icq_kv_cell(cfg, shape, mesh)
     compiled = lower_cell(plan).compile()

@@ -10,6 +10,7 @@ from repro.quant import (ICQKVConfig, build_icq_kv_cache, dequantize_int8,
                          icq_kv_append, icq_kv_decode_attention,
                          quantize_int8)
 from repro.quant.grad_compress import compress_state_init, ef_quantize
+from repro.distributed.sharding import make_mesh_auto, shard_map_compat
 from repro.quant.kv_cache import reference_decode_attention
 
 
@@ -126,17 +127,15 @@ def test_compressed_cross_pod_mean_single_pod(key):
     dequantized local gradient (wire format check via shard_map)."""
     from jax.sharding import PartitionSpec as P
     from repro.quant.grad_compress import compressed_cross_pod_mean
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_auto((1,), ("pod",))
     g = {"w": jax.random.normal(key, (8, 4))}
     res = compress_state_init(g)
 
     def f(g, r):
         return compressed_cross_pod_mean(g, r, axis_name="pod")
 
-    out, new_res = jax.jit(jax.shard_map(
-        f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
-        check_vma=False))(g, res)
+    out, new_res = jax.jit(shard_map_compat(
+        f, mesh, (P(), P()), (P(), P())))(g, res)
     q, s, _ = ef_quantize(g["w"], res["w"])
     np.testing.assert_allclose(np.asarray(out["w"]),
                                np.asarray(dequantize_int8(q, s)), atol=1e-6)
