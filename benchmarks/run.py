@@ -6,8 +6,15 @@ ICM encoding engine (``BENCH_encode.json``), and the scan-compiled
 trainer (``BENCH_train.json``) — plus the roofline table (if dry-run
 artifacts exist).  See docs/benchmarks.md for every ``--only`` target.
 
+Engine targets accept ``--config path.json`` (a ``repro.api.ICQConfig``,
+docs/api.md) pinning geometry and engine options, so a BENCH run is
+reproducible from a checked-in config
+(``benchmarks/configs/bench_small.json``).
+
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig3]
     PYTHONPATH=src python -m benchmarks.run --only search   # just the JSON
+    PYTHONPATH=src python -m benchmarks.run --only ivf \
+        --config benchmarks/configs/bench_small.json
     PYTHONPATH=src python -m benchmarks.run --only ivf      # BENCH_ivf.json
     PYTHONPATH=src python -m benchmarks.run --only lutq     # BENCH_lutq.json
     PYTHONPATH=src python -m benchmarks.run --only encode   # BENCH_encode.json
@@ -529,6 +536,31 @@ def train_bench(full: bool = False, *, out_path: str = "BENCH_train.json",
     return out
 
 
+def config_overrides(cfg, target: str):
+    """Kwargs for one engine-bench ``--only`` target from an api
+    ``ICQConfig`` (repro.api, docs/api.md) — a checked-in config (e.g.
+    ``benchmarks/configs/bench_small.json``) pins the geometry/engine
+    options so a BENCH run is reproducible bit-for-bit from the repo."""
+    t, e, i, s = cfg.train, cfg.encode, cfg.index, cfg.serve
+    geom = dict(d=t.d, K=t.num_codebooks, m=t.codebook_size,
+                num_fast=t.num_fast)
+    table = {
+        "search": dict(geom, topk=s.topk),
+        "ivf": dict(geom, topk=s.topk, n_lists=i.n_lists,
+                    **({"query_chunk": s.query_chunk}
+                       if s.query_chunk is not None else {})),
+        "lutq": dict(geom, topk=s.topk),
+        "encode": dict(d=t.d, K=t.num_codebooks, m=t.codebook_size,
+                       iters=e.icm_iters, chunk=e.chunk,
+                       **({"point_chunk": e.point_chunk}
+                          if e.point_chunk is not None else {})),
+        "train": dict(epochs=t.epochs, batch_size=t.batch_size),
+    }
+    return table.get(target)
+
+
+CONFIG_TARGETS = ("search", "ivf", "lutq", "encode", "train")
+
 FIGURES = {
     "fig1": fig1_synthetic_pq.run,
     "fig2": fig2_synthetic_cq.run,
@@ -581,19 +613,35 @@ def main():
     ap.add_argument("--only", default=None,
                     help="run a single section; see docs/benchmarks.md "
                          f"(one of: {', '.join(FIGURES)})")
+    ap.add_argument("--config", default=None,
+                    help="repro.api ICQConfig JSON pinning the bench "
+                         "geometry/engine options (engine targets only: "
+                         f"{', '.join(CONFIG_TARGETS)}); e.g. the "
+                         "checked-in benchmarks/configs/bench_small.json")
     args = ap.parse_args()
 
     if args.only is not None and args.only not in FIGURES:
         # a typo'd name used to silently run *nothing*; fail loudly
         ap.error(f"unknown --only target {args.only!r}; valid targets: "
                  f"{', '.join(sorted(FIGURES))}")
+    overrides = {}
+    if args.config is not None:
+        if args.only not in CONFIG_TARGETS:
+            ap.error(f"--config drives the engine targets "
+                     f"({', '.join(CONFIG_TARGETS)}); pass --only "
+                     "with one of them")
+        from repro.api import ICQConfig
+        cfg = ICQConfig.load(args.config)
+        overrides = config_overrides(cfg, args.only)
+        print(f"# config {args.config} (hash {cfg.config_hash()[:12]}) "
+              f"-> {overrides}", flush=True)
 
     header()
     t0 = time.time()
     for name, run_fn in FIGURES.items():
         if args.only and name != args.only:
             continue
-        run_fn(full=args.full)
+        run_fn(full=args.full, **(overrides if name == args.only else {}))
     if not args.only:
         kernel_micro()
     print(f"# total {time.time() - t0:.0f}s", flush=True)

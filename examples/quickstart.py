@@ -1,13 +1,15 @@
-"""Quickstart: fit ICQ on a synthetic dataset and run the two-step search.
+"""Quickstart: the front-door api end to end — config, fit, index,
+search, save, reload (docs/api.md).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 
-from repro.configs.base import ICQConfig
-from repro.core import (adc_search, exact_search, fit,
-                        mean_average_precision, recall_at, two_step_search)
+from repro.api import (ICQConfig, IndexConfig, ServeConfig, TrainConfig,
+                       icq_session, load_ann_engine)
 from repro.data import make_table1_dataset
+from repro.index import (adc_search, exact_search, mean_average_precision,
+                         recall_at)
 
 
 def main():
@@ -15,25 +17,39 @@ def main():
     xtr, ytr, xte, yte = make_table1_dataset("dataset3")
     xtr, ytr, xte, yte = xtr[:3000], ytr[:3000], xte[:200], yte[:200]
 
-    # --- joint training: embedding W + codebooks C + prior Theta ---
-    cfg = ICQConfig(d=16, num_codebooks=8, codebook_size=64, num_fast=2)
-    model = fit(jax.random.PRNGKey(0), xtr, ytr, cfg, mode="icq",
-                epochs=6, verbose=True)
+    # --- one config for the whole lifecycle (JSON round-trippable) ---
+    cfg = ICQConfig(
+        train=TrainConfig(d=16, num_codebooks=8, codebook_size=64,
+                          num_fast=2, epochs=6),
+        index=IndexConfig(kind="two-step"),
+        serve=ServeConfig(topk=50))
+
+    # --- fit -> index -> search through one session ---
+    session = icq_session(cfg)
+    model = session.fit(xtr, ytr, key=jax.random.PRNGKey(0), verbose=True)
     print(f"psi: {int(model.structure.xi.sum())}/16 dims, "
           f"fast codebooks: {int(model.structure.fast_mask.sum())}/8, "
           f"margin sigma: {float(model.structure.sigma):.2f}")
 
-    # --- search: crude-first two-step vs full ADC vs exact ---
+    searcher = session.index()                 # index over the fit data
+    r2 = searcher.search(xte)                  # raw queries; model embeds
+
+    # --- compare: crude-first two-step vs full ADC vs exact ---
     emb_q, emb_db = model.embed(xte), model.embed(xtr)
-    r2 = two_step_search(emb_q, model.codes, model.C, model.structure, 50)
     r1 = adc_search(emb_q, model.codes, model.C, 50)
     gt, _ = exact_search(emb_q, emb_db, 50)
-
     for name, r in (("two-step", r2), ("adc", r1)):
         print(f"{name:9s} MAP={float(mean_average_precision(r.indices, ytr, yte)):.4f} "
               f"recall@50={float(recall_at(r.indices, gt)):.3f} "
               f"avg_ops={float(r.avg_ops):.2f}/8")
     print(f"speedup at equal codes: {float(r1.avg_ops / r2.avg_ops):.2f}x")
+
+    # --- persist + reload: bitwise-identical serving in a fresh process ---
+    path = searcher.save("/tmp/icq_quickstart")
+    reloaded = load_ann_engine(path)
+    r3 = reloaded(emb_q)
+    assert bool((r3.indices == r2.indices).all())
+    print(f"artifacts -> {path} (reload serves identical ids)")
 
 
 if __name__ == "__main__":

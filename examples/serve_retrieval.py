@@ -1,13 +1,16 @@
-"""Retrieval serving with the unified index layer: the whole query
-batch goes through one fused dispatch (quant.serve_icq.build_ann_engine
--> repro.index, DESIGN.md §7) instead of a per-query loop.
+"""Retrieval serving with the front-door api: one config tree drives
+fit → index → search (``repro.api``, docs/api.md), and the whole query
+batch goes through one fused dispatch (the unified index layer,
+DESIGN.md §7) instead of a per-query loop.
 
 --index picks the implementation: "two-step" (exhaustive ICQ),
 "flat" (one-step ADC baseline), or "ivf" (coarse-partitioned ICQ —
 probes --probe of --lists inverted lists per query).  --shards N
 serves the index sharded over an N-way data mesh (per-shard top-k +
 global merge; ids identical to single-device) — on CPU run under
-XLA_FLAGS=--xla_force_host_platform_device_count=N.
+XLA_FLAGS=--xla_force_host_platform_device_count=N.  --save-artifacts
+persists config + model + index for a fresh process
+(``launch/serve.py --load-artifacts``).
 
 backend="jnp" is the vectorized reference; backend="pallas" runs the
 fused (query-tile x point/candidate-tile) kernels — interpret mode on
@@ -23,10 +26,9 @@ import time
 
 import jax
 
-from repro.configs.base import ICQConfig
-from repro.core import fit, mean_average_precision
-from repro.data import make_table1_dataset
-from repro.quant.serve_icq import build_ann_engine
+from repro.api import (ICQConfig, IndexConfig, ServeConfig, TrainConfig,
+                       icq_session)
+from repro.index import mean_average_precision
 
 
 def main():
@@ -42,13 +44,18 @@ def main():
     ap.add_argument("--probe", type=int, default=8)
     ap.add_argument("--lut-dtype", default="f32", choices=["f32", "int8"],
                     help="crude-pass LUT precision (DESIGN.md §8)")
+    ap.add_argument("--save-artifacts", default=None, metavar="DIR",
+                    help="persist config + model + index after serving")
     args = ap.parse_args()
 
-    xtr, ytr, xte, yte = make_table1_dataset("dataset3")
-    xtr, ytr = xtr[:4000], ytr[:4000]
-    cfg = ICQConfig(d=16, num_codebooks=8, codebook_size=64, num_fast=2)
-    print("fitting index...")
-    model = fit(jax.random.PRNGKey(0), xtr, ytr, cfg, mode="icq", epochs=5)
+    xtr, ytr, xte, yte = make_data()
+    cfg = ICQConfig(
+        train=TrainConfig(d=16, num_codebooks=8, codebook_size=64,
+                          num_fast=2, epochs=5),
+        index=IndexConfig(kind=args.index, n_lists=args.lists,
+                          n_probe=args.probe),
+        serve=ServeConfig(topk=args.topk, backend=args.backend,
+                          lut_dtype=args.lut_dtype))
 
     mesh = None
     if args.shards > 1:
@@ -58,29 +65,38 @@ def main():
                 "set XLA_FLAGS=--xla_force_host_platform_device_count="
                 f"{args.shards}")
         mesh = jax.make_mesh((args.shards,), ("data",))
-    emb_db = model.embed(xtr) if args.index == "ivf" else None
-    engine = build_ann_engine(model.codes, model.C, model.structure,
-                              topk=args.topk, backend=args.backend,
-                              index=args.index, mesh=mesh, emb_db=emb_db,
-                              n_lists=args.lists, n_probe=args.probe,
-                              lut_dtype=args.lut_dtype,
-                              key=jax.random.PRNGKey(1))
+
+    print("fitting index...")
+    session = icq_session(cfg)
+    session.fit(xtr, ytr, key=jax.random.PRNGKey(0))
+    searcher = session.index(mesh=mesh, key=jax.random.PRNGKey(1))
+
     nq = args.queries
-    emb_q = model.embed(xte[:nq])
-    res = engine(emb_q)                            # compile + warm
+    res = searcher.search(xte[:nq])                # compile + warm
     jax.block_until_ready(res.indices)
     t0 = time.time()
-    res = engine(emb_q)
+    res = searcher.search(xte[:nq])
     jax.block_until_ready(res.indices)
     dt = time.time() - t0
 
     mapv = float(mean_average_precision(res.indices, ytr, yte[:nq]))
-    K = cfg.num_codebooks
+    K = cfg.train.num_codebooks
     print(f"{nq} queries in {dt * 1e3:.1f} ms "
           f"({dt / nq * 1e3:.2f} ms/q, index={args.index}, "
           f"backend={args.backend}, shards={args.shards})")
     print(f"MAP={mapv:.4f}  pass_rate={float(res.pass_rate):.3f}  "
           f"avg_ops={float(res.avg_ops):.2f}/{K}")
+
+    if args.save_artifacts:
+        path = searcher.save(args.save_artifacts)
+        print(f"artifacts -> {path} (serve with launch/serve.py "
+              "--load-artifacts)")
+
+
+def make_data():
+    from repro.data import make_table1_dataset
+    xtr, ytr, xte, yte = make_table1_dataset("dataset3")
+    return xtr[:4000], ytr[:4000], xte, yte
 
 
 if __name__ == "__main__":

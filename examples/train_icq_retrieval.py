@@ -17,10 +17,9 @@ import time
 
 import jax
 
-from repro.configs.base import ICQConfig
-from repro.core import adc_search, mean_average_precision
+from repro.api import Artifacts, ICQConfig, ServeConfig, TrainConfig
 from repro.distributed import CheckpointManager
-from repro.index import make_index
+from repro.index import adc_search, make_index, mean_average_precision
 from repro.trainer import (compile_epoch, epoch_batches, finalize,
                            init_train_state, make_train_step)
 
@@ -33,11 +32,19 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/icq_retrieval_ckpt")
     ap.add_argument("--hold-out", type=int, default=256,
                     help="rows appended via Index.add after the build")
+    ap.add_argument("--save-artifacts", default=None, metavar="DIR",
+                    help="persist config + model + index at the end")
     args = ap.parse_args()
 
     from repro.data import make_table1_dataset
     xtr, ytr, xte, yte = make_table1_dataset(args.dataset)
-    cfg = ICQConfig(d=16, num_codebooks=8, codebook_size=64, num_fast=2)
+    # the api config is the source of truth; this example drives the
+    # trainer layer underneath it by hand to thread checkpointing
+    api_cfg = ICQConfig(train=TrainConfig(
+        d=16, num_codebooks=8, codebook_size=64, num_fast=2,
+        epochs=args.epochs, batch_size=args.batch_size),
+        serve=ServeConfig(topk=50, backend="jnp"))
+    cfg = api_cfg.train.hyperparams(icm_iters=api_cfg.encode.icm_iters)
 
     # explicit epoch loop (vs trainer.fit) to thread checkpointing; the
     # per-epoch work is still one compiled scan with donated state
@@ -90,6 +97,12 @@ def main():
           f"ops={float(r2.avg_ops):.2f} | "
           f"adc MAP={float(mean_average_precision(r1.indices, ytr, yte)):.4f} "
           f"ops={float(r1.avg_ops):.2f}")
+
+    if args.save_artifacts:
+        path = Artifacts(config=api_cfg, model=model,
+                         index=idx).save(args.save_artifacts)
+        print(f"artifacts -> {path} (serve with launch/serve.py "
+              "--load-artifacts)")
 
 
 if __name__ == "__main__":

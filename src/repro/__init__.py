@@ -1,0 +1,52 @@
+"""repro — Interleaved Composite Quantization as a JAX/Pallas ANN system.
+
+The stable entry points live one level down; this root package lazily
+re-exports the front-door surface so ``from repro import icq_session``
+works without importing the heavy subsystems at startup:
+
+  - ``repro.api``      the front door: config tree, ``icq_session``
+                       lifecycle, persistent ``Artifacts``, serving
+                       engines (docs/api.md)
+  - ``repro.index``    the unified index layer: FlatADC / TwoStep /
+                       IVFTwoStep behind one protocol (DESIGN.md §7)
+  - ``repro.trainer``  the unified trainer layer: ``fit``, the
+                       ``Quantizer`` protocol, the tiled encoder (§9)
+  - ``repro.core``     the paper's math (re-exports the two layers
+                       above for backward compatibility)
+
+``from repro import *`` pulls exactly ``__all__`` (resolved lazily via
+PEP 562 module ``__getattr__``).
+"""
+from __future__ import annotations
+
+import importlib
+
+# name -> providing module, resolved on first attribute access
+_EXPORTS = {
+    name: "repro.api" for name in (
+        "ICQConfig", "TrainConfig", "EncodeConfig", "IndexConfig",
+        "ServeConfig", "ConfigError", "icq_session", "ICQSession",
+        "Searcher", "Artifacts", "ArtifactError", "save_artifacts",
+        "load_artifacts", "AnnEngine", "build_ann_engine",
+        "load_ann_engine")
+}
+_EXPORTS.update({name: "repro.index" for name in (
+    "make_index", "SearchResult", "FlatADC", "TwoStep", "IVFTwoStep",
+    "exact_search", "recall_at", "mean_average_precision")})
+_EXPORTS.update({name: "repro.trainer" for name in (
+    "fit", "make_quantizer", "encode_database", "ICQModel", "Quantizer")})
+
+__all__ = sorted(_EXPORTS) + ["api", "index", "trainer"]
+
+
+def __getattr__(name: str):
+    module = _EXPORTS.get(name)
+    if module is None:
+        if name in ("api", "index", "trainer"):
+            return importlib.import_module(f"repro.{name}")
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    return getattr(importlib.import_module(module), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,0 +1,46 @@
+"""``repro.api`` — the one front door (docs/api.md, DESIGN.md §10).
+
+PRs 1–4 built the internals: a unified index layer (``repro.index``), a
+unified trainer layer (``repro.trainer``), fused Pallas engines, and
+mesh-sharded serving.  This package is the stable user-facing surface
+over all of them:
+
+  - **Config** — one frozen, JSON-round-trippable, schema-versioned
+    dataclass tree: ``ICQConfig`` = ``TrainConfig`` + ``EncodeConfig``
+    + ``IndexConfig`` + ``ServeConfig``.
+  - **Lifecycle** — ``session = icq_session(config)``;
+    ``state = session.fit(X, y, key=key)``;
+    ``searcher = session.index(db)``; ``searcher.search(q, k)``.
+  - **Persistence** — ``Artifacts`` (npz tensors + json manifest with
+    format version, config hash, and a dtype/shape inventory):
+    ``searcher.save(path)`` then, in a fresh process,
+    ``load_ann_engine(path)`` — fit→save→load→search is
+    bitwise-identical to the in-process path for all three index types.
+  - **Serving** — ``AnnEngine`` (jitted, growable, mesh-shardable) and
+    ``build_ann_engine`` (the historical kwarg entry, now a shim over
+    the config path).
+
+Everything here re-exports from the submodules; ``from repro.api
+import *`` pulls exactly ``__all__``.
+"""
+from repro.api.artifacts import (FORMAT_VERSION, ArtifactError, Artifacts,
+                                 load_artifacts, save_artifacts)
+from repro.api.config import (CHOICES, SCHEMA_VERSION, ConfigError,
+                              EncodeConfig, ICQConfig, IndexConfig,
+                              ServeConfig, TrainConfig)
+from repro.api.serving import (AnnEngine, build_ann_engine, build_index,
+                               load_ann_engine)
+from repro.api.session import ICQSession, Searcher, icq_session
+
+__all__ = [
+    # config tree
+    "ICQConfig", "TrainConfig", "EncodeConfig", "IndexConfig",
+    "ServeConfig", "ConfigError", "SCHEMA_VERSION", "CHOICES",
+    # lifecycle
+    "icq_session", "ICQSession", "Searcher",
+    # persistence
+    "Artifacts", "ArtifactError", "save_artifacts", "load_artifacts",
+    "FORMAT_VERSION",
+    # serving
+    "AnnEngine", "build_ann_engine", "build_index", "load_ann_engine",
+]

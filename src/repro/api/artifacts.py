@@ -1,0 +1,360 @@
+"""Persistent artifacts for ``repro.api`` (docs/api.md): one directory
+holding everything a fresh process needs to serve a trained system —
+``manifest.json`` (format version, full config + config hash, array
+inventory, model/index metadata) plus ``arrays.npz`` (every tensor,
+path-keyed like the checkpoint format).
+
+Guarantees:
+
+  - **Bitwise round trip** — ``save`` stores the exact device arrays
+    (codes in their packed dtype, f32 codebooks/structure), ``load``
+    reconstructs the same frozen index dataclass with the same engine
+    options, so fit → save → load → search returns ids *and* distances
+    bitwise-identical to the in-process path (tested for FlatADC /
+    TwoStep / IVFTwoStep, uint8 + uint16 codes, f32 + int8 LUTs in
+    ``tests/test_api.py``).
+  - **Self-describing** — the manifest's array inventory (name →
+    dtype/shape) is checked against the npz on load, so truncated or
+    tampered artifacts fail with a clear ``ArtifactError`` instead of
+    serving garbage.
+  - **Versioned** — ``format_version`` gates the directory layout and
+    the embedded config re-validates against its own
+    ``schema_version``; both mismatches raise with instructions.
+
+The model side (embedding params, codebooks, database codes, ICQ
+structure, variance estimate) serializes any ``trainer.base.ICQModel``
+whose embedder is one of the built-ins (linear / cnn / identity — the
+apply function is rebuilt from the recorded kind).  The index side
+serializes any of the three index types; IVF's derived in-list codes
+slab is *recomputed* on load (deterministic gather) rather than stored,
+halving the artifact size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import ICQConfig
+
+FORMAT_VERSION = 1
+_MANIFEST = "manifest.json"
+_ARRAYS = "arrays.npz"
+
+# embedders reconstructible from a recorded kind (core/embed.py)
+_EMBED_KINDS = ("linear", "cnn", "identity")
+
+
+class ArtifactError(RuntimeError):
+    """An artifact directory failed to load: wrong format version,
+    missing/corrupt files, or an inventory mismatch.  The message says
+    which check failed and on what."""
+
+
+def _embed_apply_for(kind: str):
+    from repro.core import embed as embed_mod
+
+    if kind == "linear":
+        return embed_mod.linear_apply
+    if kind == "cnn":
+        return embed_mod.cnn_apply
+    if kind == "identity":
+        return lambda p, x: x
+    raise ArtifactError(
+        f"unknown embed kind {kind!r} in manifest; this build rebuilds "
+        f"{list(_EMBED_KINDS)}")
+
+
+def _structure_arrays(structure) -> Dict[str, np.ndarray]:
+    return {"structure/xi": np.asarray(structure.xi),
+            "structure/fast_mask": np.asarray(structure.fast_mask),
+            "structure/sigma": np.asarray(structure.sigma)}
+
+
+def _structure_from(arrays: Dict[str, np.ndarray]):
+    from repro.core.icq import ICQStructure
+
+    return ICQStructure(xi=jnp.asarray(arrays["structure/xi"]),
+                        fast_mask=jnp.asarray(arrays["structure/fast_mask"]),
+                        sigma=jnp.asarray(arrays["structure/sigma"]))
+
+
+def _index_opts(config: ICQConfig) -> Dict[str, Any]:
+    """Engine options for rebuilding an index from ``config`` — the same
+    resolution ``repro.api.serving`` uses to build one, so a loaded
+    index serves identically to the in-process original."""
+    serve, index = config.serve, config.index
+    opts: Dict[str, Any] = dict(topk=serve.topk, backend=serve.backend,
+                                query_chunk=serve.query_chunk,
+                                lut_dtype=serve.lut_dtype)
+    if serve.block_q is not None:
+        opts["block_q"] = serve.block_q
+    if serve.block_n is not None:
+        opts["block_n"] = serve.block_n
+    if index.kind != "flat":
+        opts["refine_cap"] = index.refine_cap
+    return opts
+
+
+@dataclasses.dataclass
+class Artifacts:
+    """A saved (or about-to-be-saved) system: config + optional trained
+    model + optional built index.  ``save``/``load`` are inverses; see
+    the module docstring for the on-disk layout."""
+    config: ICQConfig
+    model: Optional[Any] = None          # trainer.base.ICQModel
+    index: Optional[Any] = None          # repro.index.{FlatADC,TwoStep,IVFTwoStep}
+    manifest: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------------- save --
+    def save(self, path: str) -> str:
+        """Write the artifact directory (atomic: ``.tmp`` then rename).
+        Returns ``path``."""
+        arrays: Dict[str, np.ndarray] = {}
+        manifest: Dict[str, Any] = {
+            "format_version": FORMAT_VERSION,
+            "config": self.config.to_dict(),
+            "config_hash": self.config.config_hash(),
+        }
+
+        if self.model is not None:
+            manifest["model"] = self._save_model(arrays)
+        if self.index is not None:
+            manifest["index"] = self._save_index(arrays)
+        if self.model is None and self.index is None:
+            raise ArtifactError("nothing to save: artifacts need a model, "
+                                "an index, or both")
+        manifest["arrays"] = {
+            k: {"dtype": str(a.dtype), "shape": list(a.shape)}
+            for k, a in arrays.items()}
+
+        tmp = path.rstrip("/") + ".tmp"
+        if os.path.exists(tmp):
+            import shutil
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, _ARRAYS), **arrays)
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
+            json.dump(manifest, f, indent=2, sort_keys=True)
+        if os.path.exists(path):
+            import shutil
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+        self.manifest = manifest
+        return path
+
+    def _save_model(self, arrays: Dict[str, np.ndarray]) -> Dict[str, Any]:
+        from repro.distributed.checkpoint import flatten_pytree
+
+        model = self.model
+        embed_kind = self.config.train.embed
+        if model.embed_params is None:
+            embed_kind = "identity"
+        else:
+            for k, a in flatten_pytree(model.embed_params).items():
+                arrays[f"model/embed/{k}"] = a
+        arrays["model/C"] = np.asarray(model.C)
+        arrays["model/codes"] = np.asarray(model.codes)
+        arrays["model/lam"] = np.asarray(model.lam)
+        for k, a in _structure_arrays(model.structure).items():
+            arrays[f"model/{k}"] = a
+        return {"mode": model.mode, "embed": embed_kind,
+                "n": int(model.codes.shape[0])}
+
+    def _save_index(self, arrays: Dict[str, np.ndarray]) -> Dict[str, Any]:
+        from repro.index import FlatADC, IVFTwoStep, TwoStep
+
+        idx = self.index
+        kinds = {FlatADC: "flat", TwoStep: "two-step", IVFTwoStep: "ivf"}
+        kind = kinds.get(type(idx))
+        if kind is None:
+            raise ArtifactError(
+                f"cannot serialize index type {type(idx).__name__}; "
+                "supported: FlatADC, TwoStep, IVFTwoStep (shard clones "
+                "are serving views — save the unsharded source index)")
+        arrays["index/codes"] = np.asarray(idx.codes)
+        arrays["index/C"] = np.asarray(idx.C)
+        meta: Dict[str, Any] = {"kind": kind, "n": int(idx.codes.shape[0])}
+        if kind != "flat":
+            for k, a in _structure_arrays(idx.structure).items():
+                arrays[f"index/{k}"] = a
+        if kind == "ivf":
+            if int(idx.n_probe) != self.config.index.n_probe:
+                raise ArtifactError(
+                    f"index.n_probe={int(idx.n_probe)} on the index being "
+                    f"saved disagrees with the config's "
+                    f"index.n_probe={self.config.index.n_probe}; the "
+                    "embedded config describes the reload, so align them")
+            arrays["index/ivf/centroids"] = np.asarray(idx.ivf.centroids)
+            arrays["index/ivf/lists"] = np.asarray(idx.ivf.lists)
+            arrays["index/ivf/list_lens"] = np.asarray(idx.ivf.list_lens)
+            meta["imbalance"] = float(idx.ivf.imbalance)
+            meta["n_probe"] = int(idx.n_probe)      # informational
+            meta["list_codes"] = idx.list_codes is not None
+        return meta
+
+    # ------------------------------------------------------------- load --
+    @classmethod
+    def load(cls, path: str, *, overrides=None) -> "Artifacts":
+        """Read + verify an artifact directory.  Raises ``ArtifactError``
+        on any structural problem (missing files, version mismatch,
+        inventory mismatch) and ``ConfigError`` if the embedded config
+        fails its own schema validation.
+
+        ``overrides`` (dotted-path dict, e.g. ``{"serve.backend":
+        "jnp"}``) is applied to the embedded config *before* the index
+        is rebuilt, so a saved index can be re-served under different
+        engine options — except ``index.kind``, which names the stored
+        layout and cannot be overridden on load."""
+        manifest = cls._read_manifest(path)
+        config = ICQConfig.from_dict(manifest["config"])
+        if overrides:
+            if "index.kind" in overrides and overrides["index.kind"] \
+                    != config.index.kind:
+                raise ArtifactError(
+                    f"index.kind cannot be overridden on load (artifacts "
+                    f"at {path} store a {config.index.kind!r} index); "
+                    "rebuild and re-save to change the index kind")
+            config = config.with_overrides(overrides)
+
+        arrays = cls._load_arrays(path, manifest)
+        model = (cls._load_model(arrays, manifest["model"], config)
+                 if "model" in manifest else None)
+        index = (cls._load_index(arrays, manifest["index"], config)
+                 if "index" in manifest else None)
+        return cls(config=config, model=model, index=index,
+                   manifest=manifest)
+
+    @staticmethod
+    def _read_manifest(path: str) -> Dict[str, Any]:
+        manifest_path = os.path.join(path, _MANIFEST)
+        if not os.path.isfile(manifest_path):
+            raise ArtifactError(
+                f"{path!r} is not an artifacts directory (no {_MANIFEST})")
+        try:
+            with open(manifest_path) as f:
+                manifest = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise ArtifactError(
+                f"{path}: corrupt {_MANIFEST}: {e}") from None
+        version = manifest.get("format_version")
+        if version != FORMAT_VERSION:
+            raise ArtifactError(
+                f"{path}: artifact format_version={version!r} is not "
+                f"supported (this build reads {FORMAT_VERSION}); "
+                "re-export the artifacts with a matching build")
+        if "config" not in manifest:
+            raise ArtifactError(f"{path}: manifest has no embedded config")
+        return manifest
+
+    @staticmethod
+    def _load_arrays(path: str, manifest: Dict) -> Dict[str, np.ndarray]:
+        npz_path = os.path.join(path, _ARRAYS)
+        if not os.path.isfile(npz_path):
+            raise ArtifactError(f"{path}: missing {_ARRAYS}")
+        try:
+            with np.load(npz_path) as z:
+                arrays = {k: z[k] for k in z.files}
+        except Exception as e:
+            raise ArtifactError(f"{path}: corrupt {_ARRAYS}: {e}") from None
+        inventory = manifest.get("arrays", {})
+        missing = set(inventory) - set(arrays)
+        if missing:
+            raise ArtifactError(
+                f"{path}: {_ARRAYS} is missing array(s) "
+                f"{sorted(missing)} listed in the manifest inventory")
+        for name, spec in inventory.items():
+            a = arrays[name]
+            if (str(a.dtype) != spec["dtype"]
+                    or list(a.shape) != list(spec["shape"])):
+                raise ArtifactError(
+                    f"{path}: array {name!r} is {a.dtype}{list(a.shape)} "
+                    f"but the manifest records {spec['dtype']}"
+                    f"{spec['shape']} — artifact is corrupt or tampered")
+        return arrays
+
+    @staticmethod
+    def _load_model(arrays, meta: Dict, config: ICQConfig):
+        from repro.trainer.base import ICQModel
+
+        embed_kind = meta["embed"]
+        embed_apply = _embed_apply_for(embed_kind)
+        prefix = "model/embed/"
+        embed_flat = {k[len(prefix):]: a for k, a in arrays.items()
+                      if k.startswith(prefix)}
+        embed_params = _nest(embed_flat) if embed_flat else None
+        structure = _structure_from(
+            {k.replace("model/", "", 1): a for k, a in arrays.items()
+             if k.startswith("model/structure/")})
+        return ICQModel(
+            icq_cfg=config.train.hyperparams(
+                icm_iters=config.encode.icm_iters),
+            embed_params=embed_params,
+            embed_apply=embed_apply,
+            C=jnp.asarray(arrays["model/C"]),
+            codes=jnp.asarray(arrays["model/codes"]),
+            structure=structure,
+            lam=jnp.asarray(arrays["model/lam"]),
+            mode=meta["mode"])
+
+    @staticmethod
+    def _load_index(arrays, meta: Dict, config: ICQConfig):
+        from repro.index import (FlatADC, IVFIndex, IVFTwoStep, TwoStep,
+                                 ivf_list_codes)
+
+        kind = meta["kind"]
+        if kind != config.index.kind:
+            raise ArtifactError(
+                f"manifest index kind {kind!r} disagrees with the embedded "
+                f"config's index.kind={config.index.kind!r}")
+        codes = jnp.asarray(arrays["index/codes"])
+        C = jnp.asarray(arrays["index/C"])
+        opts = _index_opts(config)
+        if kind == "flat":
+            return FlatADC(codes=codes, C=C, **opts)
+        structure = _structure_from(
+            {k.replace("index/", "", 1): a for k, a in arrays.items()
+             if k.startswith("index/structure/")})
+        if kind == "two-step":
+            return TwoStep(codes=codes, C=C, structure=structure, **opts)
+        ivf = IVFIndex(centroids=jnp.asarray(arrays["index/ivf/centroids"]),
+                       lists=jnp.asarray(arrays["index/ivf/lists"]),
+                       list_lens=jnp.asarray(arrays["index/ivf/list_lens"]),
+                       imbalance=float(meta["imbalance"]))
+        # n_probe follows the (possibly overridden) config — save checks
+        # it matched the index, so the plain reload is unchanged while
+        # load-time overrides actually take effect
+        return IVFTwoStep(
+            codes=codes, C=C, structure=structure, ivf=ivf,
+            n_probe=config.index.n_probe,
+            list_codes=(ivf_list_codes(ivf, codes)
+                        if meta.get("list_codes", True) else None),
+            **opts)
+
+
+def _nest(flat: Dict[str, np.ndarray]) -> Dict:
+    """Rebuild a nested dict pytree from ``a/b/c``-keyed arrays (the
+    embed params are plain nested dicts, so no template is needed)."""
+    out: Dict = {}
+    for key, a in flat.items():
+        node = out
+        parts = key.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(a)
+    return out
+
+
+def save_artifacts(path: str, *, config: ICQConfig, model=None,
+                   index=None) -> str:
+    """One-call save: ``Artifacts(config, model, index).save(path)``."""
+    return Artifacts(config=config, model=model, index=index).save(path)
+
+
+def load_artifacts(path: str) -> Artifacts:
+    """One-call load: ``Artifacts.load(path)``."""
+    return Artifacts.load(path)

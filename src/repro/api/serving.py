@@ -1,0 +1,162 @@
+"""Config-driven index construction and the ``AnnEngine`` serving
+handle — the execution half of ``repro.api`` (docs/api.md).
+
+``build_index`` turns (codes, C, structure) + the config tree's
+``IndexConfig``/``ServeConfig`` sections into one of the unified index
+layer's implementations; ``AnnEngine`` wraps any index into a jitted,
+optionally mesh-sharded, growable query server.  The historical
+``quant.serve_icq.build_ann_engine`` kwarg entry survives as a thin
+shim over these (its kwargs are folded into a config), so every serving
+caller — ``launch/serve.py``, the examples, the benchmarks — now goes
+through the same door, and ``load_ann_engine`` opens that door from a
+saved artifact directory.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.api.artifacts import ArtifactError, Artifacts
+from repro.api.config import ConfigError, IndexConfig, ServeConfig
+
+
+class AnnEngine:
+    """A serving handle over one index: callable for query batches and
+    growable via ``add`` (DESIGN.md §9).
+
+    ``engine(queries)`` (or ``engine.search(queries)``) runs the jitted
+    batched search — the historical ``build_ann_engine`` contract.
+    ``engine.add(new_vectors)`` encodes the new embeddings through the
+    tiled ICM engine, appends/routes them into the index *without
+    retraining*, and refreshes the jitted search (re-sharding over the
+    engine's mesh if one was given); the engine keeps the unsharded
+    source index precisely so sharded serving stays growable.  Returns
+    ``self`` so calls chain."""
+
+    def __init__(self, index, mesh=None):
+        self.index = index                   # the unsharded source index
+        self.mesh = mesh
+        self._refresh()
+
+    def _refresh(self):
+        if self.mesh is not None:
+            self._view = self.index.shard(self.mesh)
+            self._serve = self._view.search
+        else:
+            self._view = idx = self.index
+            self._serve = jax.jit(lambda queries: idx.search(queries))
+
+    def __call__(self, queries):
+        return self._serve(queries)
+
+    def search(self, queries, k: Optional[int] = None):
+        """Serve one query batch; ``k`` overrides the index's built-in
+        ``topk`` for this call (off the jitted default path)."""
+        if k is None:
+            return self._serve(queries)
+        return self._view.search(queries, topk=k)
+
+    @property
+    def n(self) -> int:
+        return self.index.codes.shape[0]
+
+    def add(self, new_vectors, **encode_opts) -> "AnnEngine":
+        self.index = self.index.add(new_vectors, **encode_opts)
+        self._refresh()
+        return self
+
+
+def build_index(codes, C, structure, *, index_cfg: IndexConfig,
+                serve_cfg: ServeConfig, emb_db=None, key=None):
+    """Build an index from the config tree's sections — THE construction
+    path behind ``ICQSession.index``, ``build_ann_engine``, and artifact
+    loading (``api.artifacts._index_opts`` mirrors the option
+    resolution, which is what makes a loaded index serve identically).
+
+    ``emb_db`` (the embeddings the codes encode) is required for
+    ``index_cfg.kind == "ivf"``; ``key`` seeds its coarse k-means.
+    """
+    from repro.index import make_index
+
+    opts: Dict[str, Any] = dict(topk=serve_cfg.topk,
+                                backend=serve_cfg.backend,
+                                query_chunk=serve_cfg.query_chunk,
+                                lut_dtype=serve_cfg.lut_dtype)
+    # None = keep the index class's own tile defaults (they differ
+    # between the flat engines and the IVF slab kernels)
+    if serve_cfg.block_q is not None:
+        opts["block_q"] = serve_cfg.block_q
+    if serve_cfg.block_n is not None:
+        opts["block_n"] = serve_cfg.block_n
+    if index_cfg.kind != "flat":
+        opts["refine_cap"] = index_cfg.refine_cap
+    if index_cfg.kind == "ivf":
+        if emb_db is None:
+            raise ConfigError("index.kind='ivf' needs emb_db= (the "
+                              "embeddings the codes encode) to fit the "
+                              "coarse quantizer")
+        opts.update(emb_db=emb_db, n_lists=index_cfg.n_lists,
+                    n_probe=index_cfg.n_probe,
+                    kmeans_iters=index_cfg.kmeans_iters, key=key)
+    return make_index(index_cfg.kind, jax.device_put(codes),
+                      jax.device_put(C), structure, **opts)
+
+
+def build_ann_engine(codes, C, structure, *, topk: int = 50,
+                     backend: str = "auto", block_q=None, block_n=None,
+                     query_chunk=None, index: str = "two-step", mesh=None,
+                     emb_db=None, n_lists: int = 64, n_probe: int = 8,
+                     refine_cap=None, key=None, lut_dtype: str = "f32"):
+    """Batched ANN serving entry: returns an ``AnnEngine`` — call it
+    with an (nq, d) query batch for a ``repro.index.SearchResult``,
+    and grow it in place with ``engine.add(new_vectors)`` (incremental
+    encode + append, no retraining).
+
+    This is the historical kwarg surface; the kwargs are folded into
+    the api config tree (``IndexConfig`` + ``ServeConfig``) and routed
+    through ``build_index`` — new code should build an ``ICQConfig``
+    and use ``ICQSession`` / ``build_index`` directly (docs/api.md).
+
+    ``index`` selects the implementation ("flat" | "two-step" | "ivf");
+    "ivf" additionally needs ``emb_db`` (the database embeddings the
+    codes encode) and takes ``n_lists`` / ``n_probe`` / ``key``.
+    ``mesh`` (optional, with a "data" axis) shards the index for
+    data-parallel serving.  ``codes`` stay device-resident across calls
+    (packed uint8; widened at the kernel boundary).  ``backend`` follows
+    the unified dispatch: "pallas" fused kernels on TPU, vectorized jnp
+    elsewhere.  ``lut_dtype`` ("f32" | "int8") selects the crude-pass
+    LUT precision (DESIGN.md §8; honored by the sharded engines too).
+    """
+    # n_lists/n_probe only describe an IVF; for the flat kinds they were
+    # historically ignored, so keep them out of the validated config
+    index_cfg = (IndexConfig(kind=index, n_lists=n_lists, n_probe=n_probe,
+                             refine_cap=refine_cap)
+                 if index == "ivf"
+                 else IndexConfig(kind=index, refine_cap=refine_cap))
+    serve_cfg = ServeConfig(topk=topk, backend=backend, lut_dtype=lut_dtype,
+                            query_chunk=query_chunk, block_q=block_q,
+                            block_n=block_n)
+    idx = build_index(codes, C, structure, index_cfg=index_cfg,
+                      serve_cfg=serve_cfg, emb_db=emb_db, key=key)
+    return AnnEngine(idx, mesh=mesh)
+
+
+def load_ann_engine(path: str, *, mesh=None,
+                    overrides: Optional[Dict[str, Any]] = None) -> AnnEngine:
+    """Open a saved artifact directory as a live serving engine.
+
+    The artifacts must contain an index (``Artifacts.save`` with
+    ``index=``); ``overrides`` applies dotted config overrides (e.g.
+    ``{"serve.backend": "jnp"}``, ``{"index.n_probe": 16}``) before the
+    index is rebuilt, so a saved index can be re-served with different
+    engine options without re-exporting (``index.kind`` names the
+    stored layout and is rejected).  ``mesh`` shards the loaded index
+    for data-parallel serving, exactly like ``build_ann_engine(mesh=)``.
+    """
+    art = Artifacts.load(path, overrides=overrides)
+    if art.index is None:
+        raise ArtifactError(
+            f"{path}: artifacts hold no index (model-only save); build "
+            "one with ICQSession.index and save again")
+    return AnnEngine(art.index, mesh=mesh)

@@ -1,0 +1,205 @@
+"""The lifecycle facade of ``repro.api`` (docs/api.md): one object that
+walks a config through fit → encode → index → search → save.
+
+    from repro.api import ICQConfig, icq_session
+
+    session = icq_session(ICQConfig.load("config.json"))
+    state = session.fit(X, y, key=jax.random.PRNGKey(0))   # ICQModel
+    searcher = session.index()            # index over the fit data
+    result = searcher.search(queries, k=10)
+    searcher.save("artifacts/run0")       # fit→save→load→search is
+                                          # bitwise-identical (tested)
+
+``fit`` dispatches on ``config.train.quantizer``: the joint trainer
+modes ("icq", "sq", "pqn") run the scan-compiled — optionally
+data-parallel — epoch driver (``trainer.fit``); the protocol baselines
+("pq", "opq", "cq") run the generic ``init``/``step``/``finalize``
+loop.  ``index`` builds any of the three index types from the config's
+``index``/``serve`` sections over the fit data or a new database, and
+``Searcher`` embeds raw-space queries with the trained model before
+every search, so callers never touch embeddings, codes, or LUTs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.artifacts import Artifacts
+from repro.api.config import (JOINT_MODES, ConfigError, ICQConfig)
+from repro.api.serving import AnnEngine, build_index
+
+
+class Searcher:
+    """A trained model + a built (optionally sharded) index behind one
+    query method.  ``search`` takes *raw-space* queries (they are
+    embedded with the session's model); ``add`` grows the index from
+    raw-space vectors without retraining; ``save`` persists model +
+    index as one artifact directory (``repro.api.artifacts``)."""
+
+    def __init__(self, model, engine: AnnEngine, config: ICQConfig):
+        self.model = model
+        self.engine = engine
+        self.config = config
+
+    @property
+    def index(self):
+        """The unsharded source index (a frozen index dataclass)."""
+        return self.engine.index
+
+    @property
+    def n(self) -> int:
+        return self.engine.n
+
+    def search(self, queries, k: Optional[int] = None):
+        """Embed ``queries`` ((nq, ...) raw inputs) and search.  ``k``
+        overrides ``config.serve.topk`` for this call.  Returns a
+        ``repro.index.SearchResult``."""
+        emb = self.model.embed(jnp.asarray(queries))
+        return self.engine.search(emb, k)
+
+    def add(self, new_x, **encode_opts) -> "Searcher":
+        """Encode raw-space ``new_x`` through the model + tiled ICM
+        engine and grow the index in place (no retraining).  New rows
+        get ids [n, n + n_new).  ``encode_opts`` (``icm_iters``,
+        ``encode_backend``, ``point_chunk``) override the config's
+        encode section for this call.  Returns ``self``."""
+        opts = dict(icm_iters=self.config.encode.icm_iters,
+                    encode_backend=self.config.encode.backend,
+                    point_chunk=self.config.encode.point_chunk)
+        opts.update(encode_opts)
+        self.engine.add(self.model.embed(jnp.asarray(new_x)), **opts)
+        return self
+
+    def save(self, path: str) -> str:
+        """Persist config + model + (unsharded) index to ``path``; a
+        fresh process reloads with ``repro.api.load_artifacts`` /
+        ``load_ann_engine`` and serves identically."""
+        return Artifacts(config=self.config, model=self.model,
+                         index=self.engine.index).save(path)
+
+
+class ICQSession:
+    """The front door: holds a validated ``ICQConfig`` and the state the
+    lifecycle produces (fitted model, fit-data embeddings)."""
+
+    def __init__(self, config: ICQConfig):
+        if not isinstance(config, ICQConfig):
+            raise ConfigError(
+                f"icq_session needs an api ICQConfig, got "
+                f"{type(config).__name__} (build one with "
+                "repro.api.ICQConfig or ICQConfig.load(path))")
+        self.config = config
+        self.model = None                 # trainer.base.ICQModel after fit
+        self._fit_emb = None              # embeddings of the fit data
+
+    # -------------------------------------------------------------- fit --
+    def fit(self, X, y=None, *, key=None, mesh=None, verbose: bool = False):
+        """Train the configured quantizer on ``X`` (+ optional labels
+        ``y`` for the supervised embedding loss; zeros when omitted).
+
+        key:   PRNG key threading init + shuffle (default PRNGKey(0)).
+        mesh:  optional mesh with a "data" axis — data-parallel epochs
+               for the joint trainer modes (``trainer.fit(mesh=)``).
+
+        Returns (and retains) the fitted ``ICQModel``; the fit data's
+        embeddings are kept so ``index()`` can build over them without
+        re-embedding.
+        """
+        cfg = self.config
+        key = jax.random.PRNGKey(0) if key is None else key
+        X = jnp.asarray(X)
+        y = (jnp.zeros((X.shape[0],), jnp.int32) if y is None
+             else jnp.asarray(y))
+        quantizer = cfg.train.quantizer
+        hyper = cfg.train.hyperparams(icm_iters=cfg.encode.icm_iters)
+        if quantizer in JOINT_MODES:
+            from repro.trainer import fit as trainer_fit
+
+            self.model = trainer_fit(
+                key, X, y, hyper, mode=JOINT_MODES[quantizer],
+                embed_kind=cfg.train.embed,
+                num_classes=cfg.train.num_classes,
+                img_hw=cfg.train.img_hw, channels=cfg.train.channels,
+                epochs=cfg.train.epochs, batch_size=cfg.train.batch_size,
+                lr=cfg.train.lr, tau=cfg.train.tau, verbose=verbose,
+                mesh=mesh, encode_batch=cfg.encode.chunk,
+                encode_backend=cfg.encode.backend)
+        else:
+            from repro.trainer import make_quantizer
+
+            if mesh is not None:
+                raise ConfigError(
+                    f"mesh-parallel fit is only wired for the joint "
+                    f"trainer modes {sorted(JOINT_MODES)}, not "
+                    f"{quantizer!r}")
+            q = make_quantizer(quantizer, hyper)
+            state = q.init(key, X, y)
+            for _ in range(cfg.train.epochs):
+                state = q.step(state, (X, y))
+            self.model = q.finalize(state, X)
+        self._fit_emb = self.model.embed(X)
+        return self.model
+
+    # ------------------------------------------------------------ index --
+    def index(self, db=None, *, mesh=None, key=None) -> Searcher:
+        """Build the configured index and wrap it with the model into a
+        ``Searcher``.
+
+        db:    optional (n, ...) raw-space database to index; ``None``
+               indexes the fit data (reusing the codes ``fit`` already
+               exported — no re-encode).
+        mesh:  optional "data"-axis mesh for sharded serving.
+        key:   seeds the IVF coarse k-means (default derived from 0).
+        """
+        if self.model is None:
+            raise ConfigError("session.index() before session.fit(); fit "
+                              "a model first (or load artifacts with "
+                              "repro.api.load_artifacts)")
+        cfg = self.config
+        if db is None:
+            codes, emb_db = self.model.codes, self._fit_emb
+        else:
+            from repro.trainer import encode_database
+
+            emb_db = self.model.embed(jnp.asarray(db))
+            codes = encode_database(
+                emb_db, self.model.C,
+                mode="pq" if self.model.mode == "pq" else "icm",
+                icm_iters=cfg.encode.icm_iters, chunk=cfg.encode.chunk,
+                backend=cfg.encode.backend)
+        idx = build_index(codes, self.model.C, self.model.structure,
+                          index_cfg=cfg.index, serve_cfg=cfg.serve,
+                          emb_db=emb_db,
+                          key=jax.random.PRNGKey(0) if key is None else key)
+        return Searcher(self.model, AnnEngine(idx, mesh=mesh), cfg)
+
+    # ------------------------------------------------------------- save --
+    def save(self, path: str) -> str:
+        """Persist the fitted model (no index) — ``Searcher.save``
+        persists model + index together."""
+        if self.model is None:
+            raise ConfigError("session.save() before session.fit()")
+        return Artifacts(config=self.config, model=self.model).save(path)
+
+    @classmethod
+    def from_artifacts(cls, path: str) -> "ICQSession":
+        """Rebuild a session (config + fitted model) from saved
+        artifacts; ``index()`` then works as after ``fit`` (for a saved
+        *index*, prefer ``repro.api.load_ann_engine`` — it skips the
+        rebuild and serves the stored index directly)."""
+        art = Artifacts.load(path)
+        if art.model is None:
+            raise ConfigError(
+                f"{path}: artifacts hold no model (index-only save); "
+                "serve them with repro.api.load_ann_engine instead")
+        session = cls(art.config)
+        session.model = art.model
+        return session
+
+
+def icq_session(config: ICQConfig) -> ICQSession:
+    """Open the front door: validate ``config`` and return an
+    ``ICQSession`` (see class docstring for the lifecycle)."""
+    return ICQSession(config)

@@ -2,7 +2,8 @@
 elastic re-meshing."""
 from repro.distributed.sharding import (batch_shardings, cache_shardings,
                                         param_shardings, replicated)
-from repro.distributed.checkpoint import CheckpointManager
+from repro.distributed.checkpoint import (CheckpointManager, flatten_pytree,
+                                          unflatten_pytree)
 from repro.distributed.fault_tolerance import (HeartbeatMonitor,
                                                TrainSupervisor)
 from repro.distributed.elastic import (make_elastic_mesh, plan_mesh_shape,
@@ -10,6 +11,7 @@ from repro.distributed.elastic import (make_elastic_mesh, plan_mesh_shape,
 
 __all__ = [
     "batch_shardings", "cache_shardings", "param_shardings", "replicated",
-    "CheckpointManager", "HeartbeatMonitor", "TrainSupervisor",
+    "CheckpointManager", "flatten_pytree", "unflatten_pytree",
+    "HeartbeatMonitor", "TrainSupervisor",
     "make_elastic_mesh", "plan_mesh_shape", "reshard_state",
 ]

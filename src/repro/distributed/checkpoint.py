@@ -31,13 +31,25 @@ import jax
 import numpy as np
 
 
-def _flatten(tree) -> Dict[str, np.ndarray]:
+def flatten_pytree(tree) -> Dict[str, np.ndarray]:
+    """Flatten a pytree to path-keyed host arrays (``a/b/0/c`` keys) —
+    the on-disk layout shared by checkpoints and ``repro.api``
+    artifacts (one npz per save, keys = tree paths)."""
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
         flat[key] = np.asarray(leaf)
     return flat
+
+
+def unflatten_pytree(template, flat: Dict[str, np.ndarray]):
+    """Inverse of ``flatten_pytree`` against a structural ``template``
+    (leaf dtypes/shapes are restored from the template's leaves)."""
+    return _unflatten(template, flat)
+
+
+_flatten = flatten_pytree
 
 
 def _unflatten(template, flat: Dict[str, np.ndarray]):

@@ -10,6 +10,10 @@ dispatch.
 
 ``core.search`` and ``core.ivf`` re-export everything here for
 backward compatibility; new code should import from ``repro.index``.
+The config-driven facade over this layer — sessions, persistent
+artifacts, ``load_ann_engine`` — is ``repro.api`` (docs/api.md), which
+re-exports the names most callers need (``make_index``,
+``SearchResult``, the three index classes) at the package root.
 """
 from repro.index.base import (Index, LUT_DTYPES, QuantizedLUT, SearchResult,
                               build_lut, chunked_over_queries, exact_search,

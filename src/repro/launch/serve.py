@@ -11,16 +11,23 @@ reports the achieved cache-byte reduction.
 
 ``--ann`` serves the unified ANN index layer instead (no LM): a
 synthetic packed-uint8 index is built and query batches stream through
-``quant.serve_icq.build_ann_engine`` (DESIGN.md §7), reporting
-per-query latency, pass rate, and Average Ops.  ``--ann-index`` picks
-the implementation (flat ADC, exhaustive two-step, or IVF with
-``--ann-lists`` / ``--ann-probe``); ``--lut-dtype int8`` serves the
-crude pass from quantized tables (DESIGN.md §8); ``--ann-shards N``
-serves the index sharded over an N-way ``data`` mesh (run under
+the front-door api (``repro.api.build_ann_engine``, docs/api.md),
+reporting per-query latency, pass rate, and Average Ops.  The run is
+driven by an api config tree — ``--config path.json`` loads one, and
+the engine flags (``--ann-index``, ``--ann-backend``, ``--ann-lists``,
+``--ann-probe``, ``--lut-dtype``) are dotted overrides on top of it.
+``--save-artifacts DIR`` persists the built index
+(``repro.api.Artifacts``); ``--load-artifacts DIR`` serves a saved
+directory in a fresh process instead of building one.  ``--ann-shards
+N`` serves the index sharded over an N-way ``data`` mesh (run under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` on CPU):
 
     PYTHONPATH=src python -m repro.launch.serve --ann --ann-n 100000 \
         --ann-queries 64 --ann-backend jnp
+    PYTHONPATH=src python -m repro.launch.serve --ann \
+        --save-artifacts /tmp/ann && \
+        PYTHONPATH=src python -m repro.launch.serve \
+        --load-artifacts /tmp/ann
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python -m repro.launch.serve --ann \
         --ann-index ivf --ann-shards 4 --ann-n 20000
@@ -38,44 +45,21 @@ from repro.configs import get_config, smoke_config
 from repro.launch.steps import build_serve_fns
 
 
-def serve_ann(n: int, nq: int, backend: str, *, d: int = 16, K: int = 8,
-              m: int = 256, num_fast: int = 2, topk: int = 50,
-              batches: int = 3, index: str = "two-step", shards: int = 1,
-              n_lists: int = 64, n_probe: int = 8, lut_dtype: str = "f32",
-              n_add: int = 0):
-    """Synthetic ANN serving loop through the unified index layer.
+def _serve_mesh(shards: int):
+    if shards <= 1:
+        return None
+    if len(jax.devices()) < shards:
+        raise SystemExit(
+            f"--ann-shards {shards} needs {shards} devices but only "
+            f"{len(jax.devices())} are visible; on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={shards}")
+    from repro.distributed.sharding import make_mesh_auto
+    return make_mesh_auto((shards,), ("data",))
 
-    ``n_add`` > 0 additionally exercises the incremental build surface:
-    after the timed batches, ``n_add`` fresh vectors are encoded and
-    appended via ``AnnEngine.add`` (ICM engine, no retraining; sharded
-    engines re-shard the grown source index) and one more query batch
-    is served from the grown index."""
-    from repro.data.synthetic import make_synthetic_index
-    from repro.quant.serve_icq import build_ann_engine
 
-    key = jax.random.PRNGKey(0)
-    codes, C, structure = make_synthetic_index(key, n, d=d, K=K, m=m,
-                                               num_fast=num_fast)
-    mesh = None
-    if shards > 1:
-        if len(jax.devices()) < shards:
-            raise SystemExit(
-                f"--ann-shards {shards} needs {shards} devices but only "
-                f"{len(jax.devices())} are visible; on CPU set "
-                f"XLA_FLAGS=--xla_force_host_platform_device_count={shards}")
-        from repro.distributed.sharding import make_mesh_auto
-        mesh = make_mesh_auto((shards,), ("data",))
-    emb_db = None
-    if index == "ivf":
-        from repro.core import codebooks as cb
-        emb_db = cb.decode(C, codes)          # reconstructed db embeddings
-    engine = build_ann_engine(codes, C, structure, topk=topk,
-                              backend=backend, index=index, mesh=mesh,
-                              emb_db=emb_db, n_lists=n_lists,
-                              n_probe=n_probe, lut_dtype=lut_dtype,
-                              key=jax.random.fold_in(key, 1))
-
-    qkey = jax.random.fold_in(key, 2)
+def _serve_batches(engine, nq: int, d: int, batches: int, label: str):
+    """Warm + time ``batches`` random query batches through ``engine``."""
+    qkey = jax.random.fold_in(jax.random.PRNGKey(0), 2)
     queries = jax.random.normal(qkey, (nq, d))
     res = engine(queries)                      # compile + warm
     jax.block_until_ready(res.indices)
@@ -85,10 +69,50 @@ def serve_ann(n: int, nq: int, backend: str, *, d: int = 16, K: int = 8,
         res = engine(q)
         jax.block_until_ready(res.indices)
     dt = (time.time() - t0) / batches
-    print(f"ann: index={index} n={n} nq={nq} topk={topk} backend={backend} "
-          f"lut={lut_dtype} shards={shards}: {dt * 1e6 / nq:.1f} us/query "
+    print(f"{label}: {dt * 1e6 / nq:.1f} us/query "
           f"(batch {dt * 1e3:.1f} ms), pass_rate={float(res.pass_rate):.3f}, "
-          f"avg_ops={float(res.avg_ops):.2f}/{K}")
+          f"avg_ops={float(res.avg_ops):.2f}")
+    return queries, res
+
+
+def serve_ann(cfg, n: int, nq: int, *, batches: int = 3, shards: int = 1,
+              n_add: int = 0, save_dir=None):
+    """Synthetic ANN serving loop through the front-door api: the config
+    tree's ``train`` section fixes the synthetic index geometry, the
+    ``index``/``serve`` sections drive construction and the engine
+    (``repro.api.build_ann_engine``).
+
+    ``n_add`` > 0 additionally exercises the incremental build surface:
+    after the timed batches, ``n_add`` fresh vectors are encoded and
+    appended via ``AnnEngine.add`` (ICM engine, no retraining; sharded
+    engines re-shard the grown source index) and one more query batch
+    is served from the grown index.  ``save_dir`` persists the built
+    index (index-only artifacts) for ``--load-artifacts``."""
+    from repro.api import Artifacts, build_ann_engine
+    from repro.data.synthetic import make_synthetic_index
+
+    d, K, m = cfg.train.d, cfg.train.num_codebooks, cfg.train.codebook_size
+    key = jax.random.PRNGKey(0)
+    codes, C, structure = make_synthetic_index(key, n, d=d, K=K, m=m,
+                                               num_fast=cfg.train.num_fast)
+    mesh = _serve_mesh(shards)
+    emb_db = None
+    if cfg.index.kind == "ivf":
+        from repro.core import codebooks as cb
+        emb_db = cb.decode(C, codes)          # reconstructed db embeddings
+    engine = build_ann_engine(codes, C, structure, topk=cfg.serve.topk,
+                              backend=cfg.serve.backend,
+                              index=cfg.index.kind, mesh=mesh,
+                              emb_db=emb_db, n_lists=cfg.index.n_lists,
+                              n_probe=cfg.index.n_probe,
+                              query_chunk=cfg.serve.query_chunk,
+                              lut_dtype=cfg.serve.lut_dtype,
+                              key=jax.random.fold_in(key, 1))
+    queries, _ = _serve_batches(
+        engine, nq, d, batches,
+        f"ann: index={cfg.index.kind} n={n} nq={nq} topk={cfg.serve.topk} "
+        f"backend={cfg.serve.backend} lut={cfg.serve.lut_dtype} "
+        f"shards={shards}")
 
     if n_add > 0:
         from repro.core import codebooks as cb
@@ -105,6 +129,30 @@ def serve_ann(n: int, nq: int, backend: str, *, d: int = 16, K: int = 8,
               f"(encode+append, no retrain) -> n={engine.n}; "
               f"post-add pass_rate={float(res2.pass_rate):.3f}")
 
+    if save_dir:
+        path = Artifacts(config=cfg, index=engine.index).save(save_dir)
+        print(f"ann: artifacts (config hash {cfg.config_hash()[:12]}) "
+              f"-> {path}; reload with --load-artifacts")
+
+
+def serve_loaded(path: str, nq: int, *, batches: int = 3, shards: int = 1,
+                 overrides=None):
+    """Serve a saved artifact directory end-to-end: load + verify the
+    manifest, rebuild the index (``repro.api.load_ann_engine``), and
+    stream random query batches through it — the fresh-process half of
+    the fit→save→load→search contract (CI runs this against artifacts
+    written by ``launch/train.py --save-artifacts`` and by
+    ``--ann --save-artifacts``)."""
+    from repro.api import load_ann_engine
+
+    engine = load_ann_engine(path, mesh=_serve_mesh(shards),
+                             overrides=overrides or None)
+    d = engine.index.C.shape[-1]
+    print(f"loaded artifacts {path}: index n={engine.n} d={d} "
+          f"(kind from manifest)")
+    _serve_batches(engine, nq, d, batches,
+                   f"ann-loaded: n={engine.n} nq={nq} shards={shards}")
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -116,34 +164,74 @@ def main():
     ap.add_argument("--icq-kv", action="store_true")
     ap.add_argument("--ann", action="store_true",
                     help="serve the batched ANN index layer (no LM)")
+    ap.add_argument("--config", default=None,
+                    help="repro.api ICQConfig JSON driving the --ann run "
+                         "(docs/api.md); the --ann-*/--lut-dtype flags "
+                         "below override individual fields")
+    ap.add_argument("--save-artifacts", default=None, metavar="DIR",
+                    help="persist the --ann index (index-only artifacts); "
+                         "reload with --load-artifacts DIR")
+    ap.add_argument("--load-artifacts", default=None, metavar="DIR",
+                    help="serve a saved artifact directory instead of "
+                         "building one (repro.api.load_ann_engine); "
+                         "engine flags act as overrides")
     ap.add_argument("--ann-n", type=int, default=100_000)
     ap.add_argument("--ann-queries", type=int, default=64)
-    ap.add_argument("--ann-backend", default="auto",
-                    choices=["auto", "jnp", "pallas"])
-    ap.add_argument("--ann-index", default="two-step",
-                    choices=["flat", "two-step", "ivf"])
+    ap.add_argument("--ann-backend", default=None,
+                    choices=["auto", "jnp", "pallas"],
+                    help="override serve.backend (config default: auto)")
+    ap.add_argument("--ann-index", default=None,
+                    choices=["flat", "two-step", "ivf"],
+                    help="override index.kind (config default: two-step)")
     ap.add_argument("--ann-shards", type=int, default=1,
                     help="shard the index over an N-way data mesh")
-    ap.add_argument("--ann-lists", type=int, default=64,
-                    help="IVF coarse lists (--ann-index ivf)")
-    ap.add_argument("--ann-probe", type=int, default=8,
-                    help="IVF probed lists per query (--ann-index ivf)")
-    ap.add_argument("--lut-dtype", default="f32", choices=["f32", "int8"],
-                    help="crude-pass LUT precision (int8 = quantized "
+    ap.add_argument("--ann-lists", type=int, default=None,
+                    help="override index.n_lists (config default: 64)")
+    ap.add_argument("--ann-probe", type=int, default=None,
+                    help="override index.n_probe (config default: 8)")
+    ap.add_argument("--lut-dtype", default=None, choices=["f32", "int8"],
+                    help="override serve.lut_dtype (int8 = quantized "
                          "tables, DESIGN.md §8)")
     ap.add_argument("--ann-add", type=int, default=0,
                     help="after serving, grow the index by N vectors via "
                          "AnnEngine.add (incremental encode, DESIGN.md §9)")
     args = ap.parse_args()
 
+    overrides = {k: v for k, v in {
+        "serve.backend": args.ann_backend,
+        "index.kind": args.ann_index,
+        "index.n_lists": args.ann_lists,
+        "index.n_probe": args.ann_probe,
+        "serve.lut_dtype": args.lut_dtype,
+    }.items() if v is not None}
+
+    if args.load_artifacts:
+        # flags that only make sense when *building* an index would be
+        # silently ignored here — reject them instead
+        for flag, val in (("--config", args.config),
+                          ("--save-artifacts", args.save_artifacts),
+                          ("--ann-add", args.ann_add or None),
+                          ("--ann-index", args.ann_index)):
+            if val is not None:
+                ap.error(f"{flag} cannot be combined with "
+                         "--load-artifacts (the artifacts embed their "
+                         "own config and index layout); remaining "
+                         "engine flags act as overrides")
+        serve_loaded(args.load_artifacts, args.ann_queries,
+                     shards=args.ann_shards, overrides=overrides)
+        return
     if args.ann:
-        serve_ann(args.ann_n, args.ann_queries, args.ann_backend,
-                  index=args.ann_index, shards=args.ann_shards,
-                  n_lists=args.ann_lists, n_probe=args.ann_probe,
-                  lut_dtype=args.lut_dtype, n_add=args.ann_add)
+        from repro.api import ICQConfig
+
+        cfg = (ICQConfig.load(args.config) if args.config
+               else ICQConfig())
+        serve_ann(cfg.with_overrides(overrides), args.ann_n,
+                  args.ann_queries, shards=args.ann_shards,
+                  n_add=args.ann_add, save_dir=args.save_artifacts)
         return
     if args.arch is None:
-        ap.error("--arch is required unless --ann is given")
+        ap.error("--arch is required unless --ann or --load-artifacts "
+                 "is given")
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     prefill_fn, decode_fn, model = build_serve_fns(cfg)

@@ -57,24 +57,46 @@ def make_host_batch(pipe, cfg, shape, n_micro, step):
     return batch
 
 
+def icq_config_from_args(args):
+    """Resolve the run's ``repro.api.ICQConfig``: ``--config path.json``
+    (validated, schema-versioned) or the CLI default, with the legacy
+    flags applied as dotted overrides — a flag left at its ``None``
+    default defers to the config."""
+    from repro.api import ICQConfig, TrainConfig, ServeConfig
+
+    if args.config is not None:
+        cfg = ICQConfig.load(args.config)
+    else:                       # the historical CLI defaults
+        cfg = ICQConfig(
+            train=TrainConfig(codebook_size=64, epochs=3, batch_size=256),
+            serve=ServeConfig(topk=20, backend="jnp"))
+    overrides = {}
+    if args.icq_epochs is not None:
+        overrides["train.epochs"] = args.icq_epochs
+    if args.icq_batch is not None:
+        overrides["train.batch_size"] = args.icq_batch
+    if args.icq_index is not None:
+        overrides["index.kind"] = args.icq_index
+    return cfg.with_overrides(overrides)
+
+
 def run_icq(args):
-    """Train -> index -> add -> query: the retrieval pipeline on the
-    trainer layer (scan epochs, optional data-parallel mesh, tiled
-    encoding engine, incremental index build)."""
+    """Train -> index -> add -> query -> (save): the retrieval pipeline
+    through the front-door api (``repro.api.icq_session``, docs/api.md)
+    — scan epochs, optional data-parallel mesh, tiled encoding engine,
+    incremental index build, persistent artifacts."""
     import jax.numpy as jnp
 
-    from repro.configs.base import ICQConfig
+    from repro.api import icq_session
     from repro.data import make_table1_dataset
     from repro.index import recall_at
-    from repro.quant.serve_icq import build_ann_engine
-    from repro.trainer import fit
 
+    cfg = icq_config_from_args(args)
     xtr, ytr, xte, yte = make_table1_dataset(args.icq_dataset)
     xtr, ytr = xtr[: args.icq_n], ytr[: args.icq_n]
     n_held = max(args.icq_add, 1)
     x_held, xtr = xtr[-n_held:], xtr[:-n_held]       # rows added post-build
     ytr = ytr[:-n_held]
-    cfg = ICQConfig(d=16, num_codebooks=8, codebook_size=64, num_fast=2)
 
     mesh = None
     if args.icq_shards > 1:
@@ -85,30 +107,36 @@ def run_icq(args):
                 f"count={args.icq_shards}")
         mesh = shrules.make_mesh_auto((args.icq_shards,), ("data",))
 
+    session = icq_session(cfg)
     t0 = time.time()
-    model = fit(jax.random.PRNGKey(args.seed), xtr, ytr, cfg, mode="icq",
-                epochs=args.icq_epochs, batch_size=args.icq_batch,
-                mesh=mesh, verbose=True)
-    print(f"icq: fit n={xtr.shape[0]} epochs={args.icq_epochs} "
+    model = session.fit(xtr, ytr, key=jax.random.PRNGKey(args.seed),
+                        mesh=mesh, verbose=True)
+    print(f"icq: fit n={xtr.shape[0]} epochs={cfg.train.epochs} "
           f"shards={args.icq_shards} in {time.time() - t0:.1f}s; "
-          f"psi={int(model.structure.xi.sum())}/{cfg.d} "
-          f"fast={int(model.structure.fast_mask.sum())}/{cfg.num_codebooks}")
+          f"psi={int(model.structure.xi.sum())}/{cfg.train.d} "
+          f"fast={int(model.structure.fast_mask.sum())}"
+          f"/{cfg.train.num_codebooks}")
 
-    engine = build_ann_engine(model.codes, model.C, model.structure,
-                              topk=20, backend="jnp", index=args.icq_index,
-                              emb_db=model.embed(xtr), mesh=mesh,
-                              key=jax.random.PRNGKey(args.seed + 1))
-    n0 = engine.n
-    engine.add(model.embed(x_held))                  # incremental build
-    res = engine(model.embed(xte[:64]))
+    searcher = session.index(mesh=mesh,
+                             key=jax.random.PRNGKey(args.seed + 1))
+    n0 = searcher.n
+    searcher.add(x_held)                             # incremental build
+    res = searcher.search(xte[:64])
     jax.block_until_ready(res.indices)
     # the held-out rows must be findable: query with themselves
-    self_res = engine(model.embed(x_held[: min(n_held, 16)]))
+    self_res = searcher.search(x_held[: min(n_held, 16)])
     self_ids = jnp.arange(n0, n0 + min(n_held, 16))[:, None]
     hit = float(recall_at(self_res.indices, self_ids))
-    print(f"icq: index={args.icq_index} grown {n0} -> {engine.n}; "
+    print(f"icq: index={cfg.index.kind} grown {n0} -> {searcher.n}; "
           f"query batch ok (pass_rate={float(res.pass_rate):.3f}); "
-          f"added-row self-recall@20={hit:.3f}")
+          f"added-row self-recall@{cfg.serve.topk}={hit:.3f}")
+
+    if args.save_artifacts:
+        path = searcher.save(args.save_artifacts)
+        print(f"icq: artifacts (config hash "
+              f"{cfg.config_hash()[:12]}) -> {path}; reload with "
+              "launch/serve.py --load-artifacts or "
+              "repro.api.load_ann_engine")
 
 
 def main():
@@ -126,14 +154,25 @@ def main():
     ap.add_argument("--icq", action="store_true",
                     help="run the retrieval trainer pipeline (no LM): "
                          "scan-compiled fit -> index -> add -> query")
+    ap.add_argument("--config", default=None,
+                    help="repro.api ICQConfig JSON driving the --icq run "
+                         "(docs/api.md); the --icq-* flags below override "
+                         "individual fields")
+    ap.add_argument("--save-artifacts", default=None, metavar="DIR",
+                    help="after the --icq run, persist config + model + "
+                         "index (repro.api.Artifacts); reload with "
+                         "launch/serve.py --load-artifacts DIR")
     ap.add_argument("--icq-dataset", default="dataset2")
     ap.add_argument("--icq-n", type=int, default=4000)
-    ap.add_argument("--icq-epochs", type=int, default=3)
-    ap.add_argument("--icq-batch", type=int, default=256)
+    ap.add_argument("--icq-epochs", type=int, default=None,
+                    help="override train.epochs (config default: 3)")
+    ap.add_argument("--icq-batch", type=int, default=None,
+                    help="override train.batch_size (config default: 256)")
     ap.add_argument("--icq-shards", type=int, default=1,
                     help="data-parallel training/serving mesh size")
-    ap.add_argument("--icq-index", default="two-step",
-                    choices=["flat", "two-step", "ivf"])
+    ap.add_argument("--icq-index", default=None,
+                    choices=["flat", "two-step", "ivf"],
+                    help="override index.kind (config default: two-step)")
     ap.add_argument("--icq-add", type=int, default=64,
                     help="held-out rows appended via Index.add post-build")
     args = ap.parse_args()

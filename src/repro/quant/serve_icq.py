@@ -2,22 +2,19 @@
 the ICQ-KV decode step for dense-attention LMs (§Perf hillclimb "decode
 memory").
 
-``build_ann_engine`` instantiates one of the unified index layer's
-implementations (``repro.index``, DESIGN.md §7) — ``index="flat"``
-(one-step ADC), ``"two-step"`` (exhaustive ICQ, the default), or
-``"ivf"`` (coarse-partitioned; pass ``emb_db=`` and ``n_lists=``) —
-and wraps it into a jitted query-batch server: codes stay resident
-(packed uint8), each call takes an (nq, d) embedding batch and returns
-a SearchResult.  With ``mesh=`` the index is sharded over the mesh's
-``data`` axis (``Index.shard``): per-shard local top-k + global merge,
-ids identical to single-device.  Used by ``launch/serve.py --ann`` and
-``examples/serve_retrieval.py``.
+``AnnEngine`` / ``build_ann_engine`` moved to ``repro.api.serving`` as
+part of the front-door API redesign (docs/api.md) and are re-exported
+here unchanged for backward compatibility — ``build_ann_engine``'s
+kwargs now fold into the api config tree (``IndexConfig`` +
+``ServeConfig``) before reaching the unified index layer.  New code
+should import from ``repro.api``.
 
-A drop-in replacement for the baseline ``decode_step`` of dense-family
-archs: each layer's KV cache is stored as the interleaved quantized form
-(per-head variance-permuted d_fast bf16 crude slab + int8 full-width
-codes, repro.quant.kv_cache) and attention runs crude-first over d_fast
-dims, refining only the static ``top_c`` survivors.
+The ICQ-KV side stays here: a drop-in replacement for the baseline
+``decode_step`` of dense-family archs — each layer's KV cache is stored
+as the interleaved quantized form (per-head variance-permuted d_fast
+bf16 crude slab + int8 full-width codes, repro.quant.kv_cache) and
+attention runs crude-first over d_fast dims, refining only the static
+``top_c`` survivors.
 
 Decode-time HBM traffic per layer drops from  S*(dh*2)*2B (bf16 K+V)
 to  S*d_fast*2B + top_c*2*dh*1B  (~3.6x at d_fast=dh/4, top_c=S/16);
@@ -25,102 +22,18 @@ the dry-run memory/roofline deltas are recorded in EXPERIMENTS.md §Perf.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
+# back-compat re-exports: the serving engine now lives in the api layer
+from repro.api.serving import AnnEngine, build_ann_engine  # noqa: F401
 from repro.models import nn
 from repro.models.transformer import _norm_apply
 from repro.quant.kv_cache import (ICQKVConfig, icq_kv_append,
                                   icq_kv_decode_attention,
                                   init_icq_kv_cache)
-
-
-class AnnEngine:
-    """A serving handle over one index: callable for query batches and
-    growable via ``add`` (DESIGN.md §9).
-
-    ``engine(queries)`` (or ``engine.search(queries)``) runs the jitted
-    batched search — the historical ``build_ann_engine`` contract.
-    ``engine.add(new_vectors)`` encodes the new embeddings through the
-    tiled ICM engine, appends/routes them into the index *without
-    retraining*, and refreshes the jitted search (re-sharding over the
-    engine's mesh if one was given); the engine keeps the unsharded
-    source index precisely so sharded serving stays growable.  Returns
-    ``self`` so calls chain."""
-
-    def __init__(self, index, mesh=None):
-        self.index = index                   # the unsharded source index
-        self.mesh = mesh
-        self._refresh()
-
-    def _refresh(self):
-        if self.mesh is not None:
-            self._serve = self.index.shard(self.mesh).search
-        else:
-            idx = self.index
-            self._serve = jax.jit(lambda queries: idx.search(queries))
-
-    def __call__(self, queries):
-        return self._serve(queries)
-
-    def search(self, queries):
-        return self._serve(queries)
-
-    @property
-    def n(self) -> int:
-        return self.index.codes.shape[0]
-
-    def add(self, new_vectors, **encode_opts) -> "AnnEngine":
-        self.index = self.index.add(new_vectors, **encode_opts)
-        self._refresh()
-        return self
-
-
-def build_ann_engine(codes, C, structure, *, topk: int = 50,
-                     backend: str = "auto", block_q=None, block_n=None,
-                     query_chunk=None, index: str = "two-step", mesh=None,
-                     emb_db=None, n_lists: int = 64, n_probe: int = 8,
-                     refine_cap=None, key=None, lut_dtype: str = "f32"):
-    """Batched ANN serving entry: returns an ``AnnEngine`` — call it
-    with an (nq, d) query batch for a ``repro.index.SearchResult``,
-    and grow it in place with ``engine.add(new_vectors)`` (incremental
-    encode + append, no retraining).
-
-    ``index`` selects the implementation ("flat" | "two-step" | "ivf");
-    "ivf" additionally needs ``emb_db`` (the database embeddings the
-    codes encode) and takes ``n_lists`` / ``n_probe`` / ``key``.
-    ``mesh`` (optional, with a "data" axis) shards the index for
-    data-parallel serving.  ``codes`` stay device-resident across calls
-    (packed uint8; widened at the kernel boundary).  ``backend`` follows
-    the unified dispatch: "pallas" fused kernels on TPU, vectorized jnp
-    elsewhere.  ``lut_dtype`` ("f32" | "int8") selects the crude-pass
-    LUT precision (DESIGN.md §8; honored by the sharded engines too).
-    """
-    from repro.index import make_index
-
-    opts: Dict[str, Any] = dict(topk=topk, backend=backend,
-                                query_chunk=query_chunk,
-                                lut_dtype=lut_dtype)
-    # None = keep the index class's own tile defaults (they differ
-    # between the flat engines and the IVF slab kernels)
-    if block_q is not None:
-        opts["block_q"] = block_q
-    if block_n is not None:
-        opts["block_n"] = block_n
-    if index != "flat":
-        opts["refine_cap"] = refine_cap
-    if index == "ivf":
-        if emb_db is None:
-            raise ValueError("index='ivf' needs emb_db= to fit the "
-                             "coarse quantizer")
-        opts.update(emb_db=emb_db, n_lists=n_lists, n_probe=n_probe,
-                    key=key)
-    idx = make_index(index, jax.device_put(codes), jax.device_put(C),
-                     structure, **opts)
-    return AnnEngine(idx, mesh=mesh)
 
 
 def supports_icq_kv(cfg) -> bool:

@@ -10,6 +10,10 @@ mesh-sharded) epoch driver, and the tiled database encoder.
 
 ``core.train`` and ``core.baselines.*`` re-export everything here for
 backward compatibility; new code should import from ``repro.trainer``.
+The config-driven facade over this layer (``repro.api.icq_session``:
+one ``ICQConfig`` drives fit → index → search → save, docs/api.md)
+re-exports ``fit`` / ``make_quantizer`` / ``encode_database`` at the
+package root.
 """
 from repro.trainer.base import ICQModel, Quantizer, plain_structure
 from repro.trainer.encode import encode_database

@@ -1,0 +1,278 @@
+"""Front-door api layer (repro.api, docs/api.md): config round-trip +
+validation, fit→save→load→search bitwise identity for every index type
+/ code width / LUT dtype, and corruption/version rejection."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (AnnEngine, ArtifactError, Artifacts, ConfigError,
+                       EncodeConfig, ICQConfig, ICQSession, IndexConfig,
+                       ServeConfig, TrainConfig, build_ann_engine,
+                       icq_session, load_ann_engine)
+
+
+# ---------------------------------------------------------------- config ----
+
+def test_config_json_round_trip():
+    cfg = ICQConfig(train=TrainConfig(codebook_size=64, epochs=7),
+                    index=IndexConfig(kind="ivf", n_lists=32, n_probe=4),
+                    serve=ServeConfig(lut_dtype="int8", query_chunk=16))
+    cfg2 = ICQConfig.from_json(cfg.to_json())
+    assert cfg2 == cfg
+    assert cfg2.config_hash() == cfg.config_hash()
+
+
+def test_config_file_round_trip(tmp_path):
+    cfg = ICQConfig(train=TrainConfig(epochs=3))
+    path = str(tmp_path / "cfg.json")
+    cfg.save(path)
+    assert ICQConfig.load(path) == cfg
+
+
+def test_config_overrides():
+    cfg = ICQConfig().with_overrides({"train.epochs": 9,
+                                      "serve.lut_dtype": "int8"})
+    assert cfg.train.epochs == 9 and cfg.serve.lut_dtype == "int8"
+    # hash tracks content
+    assert cfg.config_hash() != ICQConfig().config_hash()
+    with pytest.raises(ConfigError, match="unknown override field"):
+        ICQConfig().with_overrides({"train.epochz": 9})
+    with pytest.raises(ConfigError, match="section.field"):
+        ICQConfig().with_overrides({"epochs": 9})
+
+
+@pytest.mark.parametrize("bad,match", [
+    ({"schema_version": 99}, "schema_version=99"),
+    ({}, "missing 'schema_version'"),
+    ({"schema_version": 1, "trian": {}}, "unknown config section"),
+    ({"schema_version": 1, "train": {"epochz": 1}}, "unknown field"),
+    ({"schema_version": 1, "train": {"epochs": "six"}}, "must be int"),
+    ({"schema_version": 1, "serve": {"lut_dtype": "int4"}}, "not one of"),
+    ({"schema_version": 1, "index": {"kind": "hnsw"}}, "not one of"),
+    ({"schema_version": 1,
+      "train": {"num_fast": 8, "num_codebooks": 8}}, "num_fast"),
+    ({"schema_version": 1,
+      "index": {"n_probe": 99, "n_lists": 4}}, "n_probe"),
+    ({"schema_version": 1, "train": {"epochs": 0}}, "positive int"),
+    ({"schema_version": 1, "train": {"lr": -0.001}}, "must be > 0"),
+    ({"schema_version": 1, "train": {"pi1": -0.1}}, "must be >= 0"),
+])
+def test_config_rejections(bad, match):
+    with pytest.raises(ConfigError, match=match):
+        ICQConfig.from_dict(bad)
+
+
+def test_config_not_json():
+    with pytest.raises(ConfigError, match="not valid JSON"):
+        ICQConfig.from_json("{nope")
+
+
+# ------------------------------------------------------------- artifacts ----
+
+def _synthetic(n=2000, d=16, K=8, m=64, seed=0):
+    from repro.data.synthetic import make_synthetic_index
+    key = jax.random.PRNGKey(seed)
+    codes, C, structure = make_synthetic_index(key, n, d=d, K=K, m=m)
+    from repro.core import codebooks as cb
+    return codes, C, structure, cb.decode(C, codes)
+
+
+def _cfg_for(kind, lut_dtype="f32", topk=20):
+    return ICQConfig(index=IndexConfig(kind=kind, n_lists=16, n_probe=4),
+                     serve=ServeConfig(topk=topk, backend="jnp",
+                                       lut_dtype=lut_dtype))
+
+
+@pytest.mark.parametrize("kind", ["flat", "two-step", "ivf"])
+@pytest.mark.parametrize("lut_dtype", ["f32", "int8"])
+def test_artifacts_index_bitwise_round_trip(tmp_path, kind, lut_dtype):
+    """save→load serves bitwise-identical ids AND distances for every
+    index type and LUT dtype (the api layer's headline guarantee)."""
+    codes, C, structure, emb_db = _synthetic()
+    engine = build_ann_engine(codes, C, structure, topk=20, backend="jnp",
+                              index=kind, emb_db=emb_db, n_lists=16,
+                              n_probe=4, lut_dtype=lut_dtype,
+                              key=jax.random.PRNGKey(1))
+    q = jax.random.normal(jax.random.PRNGKey(2), (8, 16))
+    r0 = engine(q)
+    path = str(tmp_path / f"art_{kind}_{lut_dtype}")
+    Artifacts(config=_cfg_for(kind, lut_dtype),
+              index=engine.index).save(path)
+    r1 = load_ann_engine(path)(q)
+    assert np.array_equal(np.asarray(r0.indices), np.asarray(r1.indices))
+    assert np.array_equal(np.asarray(r0.distances),
+                          np.asarray(r1.distances))
+
+
+@pytest.mark.parametrize("m,dtype", [(64, np.uint8), (300, np.uint16)])
+def test_artifacts_preserve_code_width(tmp_path, m, dtype):
+    """uint8 and uint16 packed codes survive the round trip in their
+    stored dtype (no silent widening) and serve identically."""
+    codes, C, structure, _ = _synthetic(n=500, m=m)
+    assert np.asarray(codes).dtype == dtype
+    engine = build_ann_engine(codes, C, structure, topk=10, backend="jnp")
+    q = jax.random.normal(jax.random.PRNGKey(2), (4, 16))
+    r0 = engine(q)
+    path = str(tmp_path / f"art_m{m}")
+    Artifacts(config=_cfg_for("two-step", topk=10),
+              index=engine.index).save(path)
+    loaded = load_ann_engine(path)
+    assert np.asarray(loaded.index.codes).dtype == dtype
+    r1 = loaded(q)
+    assert np.array_equal(np.asarray(r0.indices), np.asarray(r1.indices))
+    assert np.array_equal(np.asarray(r0.distances),
+                          np.asarray(r1.distances))
+
+
+def test_session_fit_save_load_search_identity(tmp_path):
+    """The full lifecycle: fit → index → search, save, reload in a
+    'fresh process' (new objects from disk only) → bitwise-identical
+    ids and distances, embed params included."""
+    from repro.data import make_table1_dataset
+    xtr, ytr, xte, _ = make_table1_dataset("dataset2")
+    xtr, ytr = xtr[:600], ytr[:600]
+    cfg = ICQConfig(train=TrainConfig(codebook_size=32, epochs=1),
+                    index=IndexConfig(kind="ivf", n_lists=8, n_probe=4),
+                    serve=ServeConfig(topk=10, backend="jnp"))
+    session = icq_session(cfg)
+    session.fit(xtr, ytr, key=jax.random.PRNGKey(0))
+    searcher = session.index()
+    r0 = searcher.search(xte[:8])
+    path = str(tmp_path / "sess")
+    searcher.save(path)
+
+    engine = load_ann_engine(path)
+    session2 = ICQSession.from_artifacts(path)
+    emb_q = session2.model.embed(jnp.asarray(xte[:8]))
+    r1 = engine(emb_q)
+    assert np.array_equal(np.asarray(r0.indices), np.asarray(r1.indices))
+    assert np.array_equal(np.asarray(r0.distances),
+                          np.asarray(r1.distances))
+    # the reloaded model embeds identically (params round-tripped)
+    assert np.array_equal(
+        np.asarray(searcher.model.embed(jnp.asarray(xte[:8]))),
+        np.asarray(emb_q))
+
+
+def test_artifacts_reject_missing_and_corrupt(tmp_path):
+    codes, C, structure, _ = _synthetic(n=300)
+    engine = build_ann_engine(codes, C, structure, topk=10, backend="jnp")
+    path = str(tmp_path / "art")
+    Artifacts(config=_cfg_for("two-step"), index=engine.index).save(path)
+
+    # not an artifacts dir
+    with pytest.raises(ArtifactError, match="not an artifacts directory"):
+        Artifacts.load(str(tmp_path / "nowhere"))
+
+    # unsupported / old format version
+    manifest_path = os.path.join(path, "manifest.json")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    old = dict(manifest, format_version=0)
+    with open(manifest_path, "w") as f:
+        json.dump(old, f)
+    with pytest.raises(ArtifactError, match="format_version=0"):
+        Artifacts.load(path)
+
+    # corrupt manifest json
+    with open(manifest_path, "w") as f:
+        f.write("{truncated")
+    with pytest.raises(ArtifactError, match="corrupt manifest.json"):
+        Artifacts.load(path)
+
+    # inventory mismatch (tampered dtype)
+    bad = json.loads(json.dumps(manifest))
+    bad["arrays"]["index/codes"]["dtype"] = "float64"
+    with open(manifest_path, "w") as f:
+        json.dump(bad, f)
+    with pytest.raises(ArtifactError, match="corrupt or tampered"):
+        Artifacts.load(path)
+
+    # missing arrays file
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f)
+    os.remove(os.path.join(path, "arrays.npz"))
+    with pytest.raises(ArtifactError, match="missing arrays.npz"):
+        Artifacts.load(path)
+
+
+def test_artifacts_manifest_contents(tmp_path):
+    codes, C, structure, _ = _synthetic(n=300)
+    cfg = _cfg_for("two-step")
+    engine = build_ann_engine(codes, C, structure, topk=10, backend="jnp")
+    path = str(tmp_path / "art")
+    Artifacts(config=cfg, index=engine.index).save(path)
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["format_version"] == 1
+    assert manifest["config_hash"] == cfg.config_hash()
+    assert ICQConfig.from_dict(manifest["config"]) == cfg
+    inv = manifest["arrays"]
+    assert inv["index/codes"]["dtype"] == "uint8"
+    assert inv["index/codes"]["shape"] == [300, 8]
+
+
+def test_load_ann_engine_overrides_and_errors(tmp_path):
+    codes, C, structure, _ = _synthetic(n=300)
+    engine = build_ann_engine(codes, C, structure, topk=10, backend="jnp")
+    path = str(tmp_path / "art")
+    Artifacts(config=_cfg_for("two-step"), index=engine.index).save(path)
+    eng = load_ann_engine(path, overrides={"serve.topk": 5})
+    q = jax.random.normal(jax.random.PRNGKey(2), (4, 16))
+    assert eng(q).indices.shape == (4, 5)
+    # the stored layout cannot be overridden away
+    with pytest.raises(ArtifactError, match="index.kind cannot be"):
+        load_ann_engine(path, overrides={"index.kind": "flat"})
+    # model-only artifacts refuse to serve
+    with pytest.raises(ArtifactError, match="nothing to save"):
+        Artifacts(config=_cfg_for("two-step")).save(str(tmp_path / "e"))
+
+
+def test_load_ann_engine_ivf_n_probe_override(tmp_path):
+    """index.n_probe overrides actually change the probe count of a
+    reloaded IVF index (and an inconsistent save is rejected)."""
+    codes, C, structure, emb_db = _synthetic(n=600)
+    engine = build_ann_engine(codes, C, structure, topk=10, backend="jnp",
+                              index="ivf", emb_db=emb_db, n_lists=16,
+                              n_probe=4, key=jax.random.PRNGKey(1))
+    path = str(tmp_path / "art")
+    Artifacts(config=_cfg_for("ivf", topk=10), index=engine.index).save(path)
+    eng = load_ann_engine(path, overrides={"index.n_probe": 16})
+    assert eng.index.n_probe == 16
+    q = jax.random.normal(jax.random.PRNGKey(2), (4, 16))
+    r_all = eng(q)                       # probes all 16 lists
+    loaded_plain = load_ann_engine(path)
+    assert loaded_plain.index.n_probe == 4      # plain reload unchanged
+    assert r_all.indices.shape == loaded_plain(q).indices.shape
+    # save refuses a config that misdescribes the index
+    with pytest.raises(ArtifactError, match="n_probe"):
+        Artifacts(config=_cfg_for("ivf", topk=10).with_overrides(
+            {"index.n_probe": 8}),
+            index=engine.index).save(str(tmp_path / "bad"))
+
+
+def test_searcher_add_encode_opts():
+    """Searcher.add's encode_opts override the config (no kwarg
+    collision with the config-derived defaults)."""
+    from repro.data import make_table1_dataset
+    xtr, ytr, _, _ = make_table1_dataset("dataset2")
+    cfg = ICQConfig(train=TrainConfig(codebook_size=32, epochs=1),
+                    serve=ServeConfig(topk=10, backend="jnp"))
+    session = icq_session(cfg)
+    session.fit(xtr[:400], ytr[:400], key=jax.random.PRNGKey(0))
+    searcher = session.index()
+    n0 = searcher.n
+    searcher.add(xtr[400:432], icm_iters=1)
+    assert searcher.n == n0 + 32
+
+
+def test_session_guards():
+    session = icq_session(ICQConfig())
+    with pytest.raises(ConfigError, match="before session.fit"):
+        session.index()
+    with pytest.raises(ConfigError, match="needs an api ICQConfig"):
+        icq_session({"train": {}})
