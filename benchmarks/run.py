@@ -19,6 +19,7 @@ reproducible from a checked-in config
     PYTHONPATH=src python -m benchmarks.run --only lutq     # BENCH_lutq.json
     PYTHONPATH=src python -m benchmarks.run --only encode   # BENCH_encode.json
     PYTHONPATH=src python -m benchmarks.run --only train    # BENCH_train.json
+    PYTHONPATH=src python -m benchmarks.run --only faults   # BENCH_faults.json
 """
 from __future__ import annotations
 
@@ -28,6 +29,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks import (beyond_ivf, fig1_synthetic_pq, fig2_synthetic_cq,
                         fig3_realworld_sq, fig4_code_length, fig5_pqn,
@@ -536,6 +538,68 @@ def train_bench(full: bool = False, *, out_path: str = "BENCH_train.json",
     return out
 
 
+def faults_bench(full: bool = False, *, out_path: str = "BENCH_faults.json",
+                 n: int = 20_000, nq: int = 32, batches: int = 12,
+                 topk: int = 10, seed: int = 0):
+    """Chaos target (docs/robustness.md): serve a deterministic fault
+    schedule through the resilient engine and report degraded-rate and
+    recall-under-faults, written to ``out_path``.
+
+    A seeded ``FaultInjector`` raises inside the Pallas kernel stages
+    (forcing the engine's pallas→jnp failover) while the batch stream
+    cycles budgets — unbounded, a deadline far below the full path's
+    warm time (forcing the ladder down), and crude-only.  Recall is
+    measured per batch against a clean full-search engine on the same
+    index: the run proves degradation stays *approximate* (recall
+    reported), never wrong (no exceptions reach the caller).
+    """
+    from repro.api import build_ann_engine
+    from repro.data.synthetic import make_synthetic_index
+    from repro.resilience import FaultInjector, FaultSpec, SearchBudget
+
+    if full:
+        n, batches = max(n, 100_000), max(batches, 48)
+    key = jax.random.PRNGKey(seed)
+    codes, C, structure = make_synthetic_index(key, n, d=16, K=8, m=64,
+                                               num_fast=2)
+    clean = build_ann_engine(codes, C, structure, topk=topk, backend="jnp")
+    inj = FaultInjector(seed=seed,
+                        spec=FaultSpec(p_raise=0.3, targets=("kernels.",)))
+    chaos = build_ann_engine(codes, C, structure, topk=topk,
+                             backend="pallas", fault_injector=inj)
+    budgets = (None,
+               SearchBudget(deadline_ms=1e-3),     # forces the ladder down
+               SearchBudget(allow_refine=False))   # crude floor outright
+    recalls, degraded = [], 0
+    with inj.installed():
+        for i in range(batches):
+            q = jax.random.normal(jax.random.fold_in(key, 100 + i),
+                                  (nq, structure.xi.shape[0]))
+            r = chaos.search(q, budget=budgets[i % len(budgets)])
+            ref = clean.search(q)
+            hit = np.mean([len(np.intersect1d(a, b)) / topk
+                           for a, b in zip(np.asarray(r.indices),
+                                           np.asarray(ref.indices))])
+            recalls.append(float(hit))
+            degraded += int(r.meta.degraded)
+    out = {"n": n, "nq": nq, "batches": batches, "topk": topk,
+           "seed": seed, "injector_counts": dict(inj.counts),
+           "engine_stats": dict(chaos.stats),
+           "degraded_rate": degraded / batches,
+           "recall_under_faults": float(np.mean(recalls)),
+           "recall_worst_batch": float(np.min(recalls))}
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"faults,chaos,n={n},batches={batches},"
+          f"degraded_rate={out['degraded_rate']:.2f},"
+          f"recall={out['recall_under_faults']:.3f},"
+          f"failovers={chaos.stats.get('failovers', 0)},,", flush=True)
+    print(f"# faults: degraded_rate {out['degraded_rate']:.2f}, "
+          f"recall-under-faults {out['recall_under_faults']:.3f} "
+          f"-> {out_path}", flush=True)
+    return out
+
+
 def config_overrides(cfg, target: str):
     """Kwargs for one engine-bench ``--only`` target from an api
     ``ICQConfig`` (repro.api, docs/api.md) — a checked-in config (e.g.
@@ -574,6 +638,7 @@ FIGURES = {
     "lutq": lutq_bench,
     "encode": encode_bench,
     "train": train_bench,
+    "faults": faults_bench,
 }
 
 

@@ -19,6 +19,10 @@ over all of them:
   - **Serving** — ``AnnEngine`` (jitted, growable, mesh-shardable) and
     ``build_ann_engine`` (the historical kwarg entry, now a shim over
     the config path).
+  - **Resilience** — ``SearchBudget`` / ``ResultMeta`` (deadline-aware
+    degraded search), ``ResilienceConfig`` (failover + verification
+    knobs), and the deterministic ``FaultInjector`` harness
+    (docs/robustness.md).
 
 Everything here re-exports from the submodules; ``from repro.api
 import *`` pulls exactly ``__all__``.
@@ -27,10 +31,12 @@ from repro.api.artifacts import (FORMAT_VERSION, ArtifactError, Artifacts,
                                  load_artifacts, save_artifacts)
 from repro.api.config import (CHOICES, SCHEMA_VERSION, ConfigError,
                               EncodeConfig, ICQConfig, IndexConfig,
-                              ServeConfig, TrainConfig)
+                              ResilienceConfig, ServeConfig, TrainConfig)
 from repro.api.serving import (AnnEngine, build_ann_engine, build_index,
                                load_ann_engine)
 from repro.api.session import ICQSession, Searcher, icq_session
+from repro.resilience import (FaultInjector, FaultSpec, ResultMeta,
+                              SearchBudget)
 
 __all__ = [
     # config tree
@@ -43,4 +49,7 @@ __all__ = [
     "FORMAT_VERSION",
     # serving
     "AnnEngine", "build_ann_engine", "build_index", "load_ann_engine",
+    # resilience (docs/robustness.md)
+    "ResilienceConfig", "SearchBudget", "ResultMeta", "FaultInjector",
+    "FaultSpec",
 ]

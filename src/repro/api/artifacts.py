@@ -14,9 +14,15 @@ Guarantees:
     TwoStep / IVFTwoStep, uint8 + uint16 codes, f32 + int8 LUTs in
     ``tests/test_api.py``).
   - **Self-describing** — the manifest's array inventory (name →
-    dtype/shape) is checked against the npz on load, so truncated or
-    tampered artifacts fail with a clear ``ArtifactError`` instead of
-    serving garbage.
+    dtype/shape/sha256) and the recorded npz byte size are checked
+    against the files on load, so truncated or tampered artifacts fail
+    with a clear ``ArtifactError`` instead of serving garbage;
+    ``load(verify_checksums=True)`` recomputes every tensor hash and
+    names the corrupted tensor (docs/robustness.md).
+  - **Atomic saves** — a save stages into ``<path>.tmp`` and swaps via
+    renames, so a crash mid-save never destroys the previous artifact
+    directory; ``load`` auto-recovers the ``<path>.old`` left by a
+    crash inside the swap itself.
   - **Versioned** — ``format_version`` gates the directory layout and
     the embedded config re-validates against its own
     ``schema_version``; both mismatches raise with instructions.
@@ -32,8 +38,10 @@ halving the artifact size.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
+import shutil
 from typing import Any, Dict, Optional
 
 import jax.numpy as jnp
@@ -44,6 +52,8 @@ from repro.api.config import ICQConfig
 FORMAT_VERSION = 1
 _MANIFEST = "manifest.json"
 _ARRAYS = "arrays.npz"
+_TMP_SUFFIX = ".tmp"
+_OLD_SUFFIX = ".old"
 
 # embedders reconstructible from a recorded kind (core/embed.py)
 _EMBED_KINDS = ("linear", "cnn", "identity")
@@ -51,8 +61,15 @@ _EMBED_KINDS = ("linear", "cnn", "identity")
 
 class ArtifactError(RuntimeError):
     """An artifact directory failed to load: wrong format version,
-    missing/corrupt files, or an inventory mismatch.  The message says
-    which check failed and on what."""
+    missing/corrupt/truncated files, or an inventory/checksum mismatch.
+    The message says which check failed and on what."""
+
+
+def tensor_sha256(a: np.ndarray) -> str:
+    """Content hash of one tensor's raw bytes (C-contiguous layout) —
+    what the manifest inventory records and load-time verification
+    recomputes, so same-dtype/same-shape bit rot is caught and named."""
+    return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()
 
 
 def _embed_apply_for(kind: str):
@@ -112,8 +129,16 @@ class Artifacts:
 
     # ------------------------------------------------------------- save --
     def save(self, path: str) -> str:
-        """Write the artifact directory (atomic: ``.tmp`` then rename).
-        Returns ``path``."""
+        """Write the artifact directory atomically (docs/robustness.md).
+
+        Everything is staged into ``<path>.tmp``; the live directory is
+        replaced only by two renames (``path`` → ``<path>.old``,
+        ``.tmp`` → ``path``) once the stage is fully written.  A crash
+        at *any* point while data is being written leaves the previous
+        ``path`` untouched and loadable; a crash inside the rename pair
+        leaves it intact at ``<path>.old``, which ``load`` recovers
+        automatically.  Stale ``.tmp``/``.old`` leftovers from crashed
+        saves are cleared first.  Returns ``path``."""
         arrays: Dict[str, np.ndarray] = {}
         manifest: Dict[str, Any] = {
             "format_version": FORMAT_VERSION,
@@ -128,22 +153,36 @@ class Artifacts:
         if self.model is None and self.index is None:
             raise ArtifactError("nothing to save: artifacts need a model, "
                                 "an index, or both")
+        arrays = {k: np.asarray(a) for k, a in arrays.items()}
         manifest["arrays"] = {
-            k: {"dtype": str(a.dtype), "shape": list(a.shape)}
+            k: {"dtype": str(a.dtype), "shape": list(a.shape),
+                "sha256": tensor_sha256(a)}
             for k, a in arrays.items()}
 
-        tmp = path.rstrip("/") + ".tmp"
-        if os.path.exists(tmp):
-            import shutil
-            shutil.rmtree(tmp)
+        base = path.rstrip("/")
+        tmp, old = base + _TMP_SUFFIX, base + _OLD_SUFFIX
+        for stale in (tmp, old):
+            if os.path.exists(stale):
+                shutil.rmtree(stale)
         os.makedirs(tmp)
         np.savez(os.path.join(tmp, _ARRAYS), **arrays)
+        # the npz byte size joins the manifest so a truncated copy is
+        # caught with an expected-vs-found message before np.load
+        manifest["arrays_bytes"] = os.path.getsize(
+            os.path.join(tmp, _ARRAYS))
         with open(os.path.join(tmp, _MANIFEST), "w") as f:
             json.dump(manifest, f, indent=2, sort_keys=True)
+
         if os.path.exists(path):
-            import shutil
-            shutil.rmtree(path)
-        os.rename(tmp, path)
+            os.rename(path, old)
+        try:
+            os.rename(tmp, path)
+        except OSError:
+            if os.path.exists(old):      # put the previous version back
+                os.rename(old, path)
+            raise
+        if os.path.exists(old):
+            shutil.rmtree(old)
         self.manifest = manifest
         return path
 
@@ -199,17 +238,24 @@ class Artifacts:
 
     # ------------------------------------------------------------- load --
     @classmethod
-    def load(cls, path: str, *, overrides=None) -> "Artifacts":
+    def load(cls, path: str, *, overrides=None,
+             verify_checksums: bool = False) -> "Artifacts":
         """Read + verify an artifact directory.  Raises ``ArtifactError``
-        on any structural problem (missing files, version mismatch,
-        inventory mismatch) and ``ConfigError`` if the embedded config
-        fails its own schema validation.
+        on any structural problem (missing/truncated files, version
+        mismatch, inventory mismatch) and ``ConfigError`` if the
+        embedded config fails its own schema validation.
+
+        Dtype/shape and the npz byte size are always checked;
+        ``verify_checksums=True`` additionally recomputes every
+        tensor's sha256 against the manifest (catches same-shape bit
+        rot; the error names the corrupted tensor).
 
         ``overrides`` (dotted-path dict, e.g. ``{"serve.backend":
         "jnp"}``) is applied to the embedded config *before* the index
         is rebuilt, so a saved index can be re-served under different
         engine options — except ``index.kind``, which names the stored
         layout and cannot be overridden on load."""
+        cls._recover(path)
         manifest = cls._read_manifest(path)
         config = ICQConfig.from_dict(manifest["config"])
         if overrides:
@@ -221,13 +267,26 @@ class Artifacts:
                     "rebuild and re-save to change the index kind")
             config = config.with_overrides(overrides)
 
-        arrays = cls._load_arrays(path, manifest)
+        arrays = cls._load_arrays(path, manifest,
+                                  verify_checksums=verify_checksums)
         model = (cls._load_model(arrays, manifest["model"], config)
                  if "model" in manifest else None)
         index = (cls._load_index(arrays, manifest["index"], config)
                  if "index" in manifest else None)
         return cls(config=config, model=model, index=index,
                    manifest=manifest)
+
+    @staticmethod
+    def _recover(path: str) -> None:
+        """Finish a save that crashed between its two renames: if
+        ``path`` is gone but the previous version sits at
+        ``<path>.old``, move it back.  No-op otherwise (an existing
+        ``path`` always wins; its stale ``.old`` sibling is just a
+        leftover the next save clears)."""
+        old = path.rstrip("/") + _OLD_SUFFIX
+        if (not os.path.exists(path)
+                and os.path.isfile(os.path.join(old, _MANIFEST))):
+            os.rename(old, path)
 
     @staticmethod
     def _read_manifest(path: str) -> Dict[str, Any]:
@@ -252,10 +311,18 @@ class Artifacts:
         return manifest
 
     @staticmethod
-    def _load_arrays(path: str, manifest: Dict) -> Dict[str, np.ndarray]:
+    def _load_arrays(path: str, manifest: Dict, *,
+                     verify_checksums: bool = False) -> Dict[str, np.ndarray]:
         npz_path = os.path.join(path, _ARRAYS)
         if not os.path.isfile(npz_path):
             raise ArtifactError(f"{path}: missing {_ARRAYS}")
+        expected_bytes = manifest.get("arrays_bytes")
+        if expected_bytes is not None:
+            found = os.path.getsize(npz_path)
+            if found != expected_bytes:
+                raise ArtifactError(
+                    f"{path}: {_ARRAYS} is truncated or padded — expected "
+                    f"{expected_bytes} bytes, found {found}")
         try:
             with np.load(npz_path) as z:
                 arrays = {k: z[k] for k in z.files}
@@ -275,6 +342,13 @@ class Artifacts:
                     f"{path}: array {name!r} is {a.dtype}{list(a.shape)} "
                     f"but the manifest records {spec['dtype']}"
                     f"{spec['shape']} — artifact is corrupt or tampered")
+            if verify_checksums and "sha256" in spec:
+                got = tensor_sha256(a)
+                if got != spec["sha256"]:
+                    raise ArtifactError(
+                        f"{path}: array {name!r} failed checksum "
+                        f"verification (sha256 {got[:12]}… != manifest "
+                        f"{spec['sha256'][:12]}…) — tensor is corrupted")
         return arrays
 
     @staticmethod
@@ -355,6 +429,6 @@ def save_artifacts(path: str, *, config: ICQConfig, model=None,
     return Artifacts(config=config, model=model, index=index).save(path)
 
 
-def load_artifacts(path: str) -> Artifacts:
+def load_artifacts(path: str, *, verify_checksums: bool = False) -> Artifacts:
     """One-call load: ``Artifacts.load(path)``."""
-    return Artifacts.load(path)
+    return Artifacts.load(path, verify_checksums=verify_checksums)

@@ -1,7 +1,8 @@
 """The frozen config tree behind ``repro.api`` (docs/api.md): one
 JSON-round-trippable ``ICQConfig`` covering the whole lifecycle —
 training (``TrainConfig``), database encoding (``EncodeConfig``), index
-construction (``IndexConfig``), and serving (``ServeConfig``).
+construction (``IndexConfig``), serving (``ServeConfig``), and
+behavior under faults and deadlines (``ResilienceConfig``).
 
 Every entry point that used to take its own ad-hoc kwarg set
 (``trainer.fit``, ``Index.build``, ``build_ann_engine``, the
@@ -52,10 +53,14 @@ JOINT_MODES = {"icq": "icq", "sq": "cq", "pqn": "pq"}
 
 # float fields with a sign constraint (everything else — alpha2, the
 # loss weights' theoretical range — is intentionally unconstrained)
-_POSITIVE_FLOATS = {"train.lr", "train.tau"}
+_POSITIVE_FLOATS = {"train.lr", "train.tau",
+                    "resilience.backoff_base_ms",
+                    "resilience.backoff_max_ms"}
 _NONNEG_FLOATS = {"train.pi1", "train.pi2", "train.gamma_p",
                   "train.gamma_icq", "train.gamma_cq",
                   "train.margin_scale"}
+# int fields where 0 is meaningful (exceptions to the positive-int rule)
+_NONNEG_INTS = {"resilience.max_retries"}
 
 
 class ConfigError(ValueError):
@@ -140,14 +145,33 @@ class ServeConfig:
     block_n: Optional[int] = None
 
 
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """How serving behaves under pressure and faults
+    (docs/robustness.md): the default search deadline, the degradation
+    ladder's knobs, Pallas→jnp failover retries, and artifact checksum
+    policy.  Configs written before this section existed load with
+    these defaults (``from_dict`` treats a missing section as ``{}``)."""
+    deadline_ms: Optional[float] = None   # default per-batch deadline
+    degraded_refine_cap: Optional[int] = None  # "capped" rung's cap
+    min_n_probe: int = 1                  # "probes" rung's floor (ivf)
+    max_retries: int = 2                  # failover retry budget (0 = none)
+    backoff_base_ms: float = 10.0         # retry backoff schedule
+    backoff_max_ms: float = 1000.0
+    pallas_failover: bool = True          # blacklist pallas on fault
+    verify_artifacts: bool = False        # full checksum pass on load
+
+
 _SECTIONS = {"train": TrainConfig, "encode": EncodeConfig,
-             "index": IndexConfig, "serve": ServeConfig}
+             "index": IndexConfig, "serve": ServeConfig,
+             "resilience": ResilienceConfig}
 
 
 @dataclasses.dataclass(frozen=True)
 class ICQConfig:
     """The one front door's config: ``train`` + ``encode`` + ``index``
-    + ``serve`` (docs/api.md has the field-by-field reference).
+    + ``serve`` + ``resilience`` (docs/api.md has the field-by-field
+    reference).
 
     Build programmatically (``ICQConfig(train=TrainConfig(epochs=8))``),
     from JSON (``ICQConfig.load(path)`` / ``from_json``), or from a base
@@ -160,6 +184,8 @@ class ICQConfig:
     encode: EncodeConfig = dataclasses.field(default_factory=EncodeConfig)
     index: IndexConfig = dataclasses.field(default_factory=IndexConfig)
     serve: ServeConfig = dataclasses.field(default_factory=ServeConfig)
+    resilience: ResilienceConfig = dataclasses.field(
+        default_factory=ResilienceConfig)
 
     def __post_init__(self):
         _validate(self)
@@ -301,7 +327,10 @@ def _check_field(section: str, f: dataclasses.Field, value):
             f"{where}={value!r} is not one of {list(choices)}")
     if value is None or optional:
         return
-    if py_type is int and value <= 0:
+    if py_type is int and where in _NONNEG_INTS:
+        if value < 0:
+            raise ConfigError(f"{where} must be >= 0, got {value!r}")
+    elif py_type is int and value <= 0:
         raise ConfigError(f"{where} must be a positive int, got {value!r}")
     if where in _POSITIVE_FLOATS and value <= 0:
         raise ConfigError(f"{where} must be > 0, got {value!r}")
@@ -358,3 +387,16 @@ def _validate(cfg: "ICQConfig"):
                                      or cfg.train.channels is None):
         raise ConfigError(
             "train.embed='cnn' needs train.img_hw and train.channels")
+    res = cfg.resilience
+    if res.deadline_ms is not None and res.deadline_ms <= 0:
+        raise ConfigError(
+            f"resilience.deadline_ms must be > 0 (or null), got "
+            f"{res.deadline_ms!r}")
+    if res.degraded_refine_cap is not None and res.degraded_refine_cap < 1:
+        raise ConfigError(
+            f"resilience.degraded_refine_cap must be >= 1 (or null), got "
+            f"{res.degraded_refine_cap!r}")
+    if res.backoff_max_ms < res.backoff_base_ms:
+        raise ConfigError(
+            f"resilience.backoff_max_ms={res.backoff_max_ms} cannot be "
+            f"smaller than resilience.backoff_base_ms={res.backoff_base_ms}")

@@ -10,15 +10,40 @@ shim over these (its kwargs are folded into a config), so every serving
 caller — ``launch/serve.py``, the examples, the benchmarks — now goes
 through the same door, and ``load_ann_engine`` opens that door from a
 saved artifact directory.
+
+Resilient serving (docs/robustness.md): ``AnnEngine`` is also the
+executor of the degradation ladder and the backend failover —
+
+  - ``search(queries, budget=SearchBudget(...))`` picks a ladder level
+    (full → capped → probes → crude) per batch from *measured* warm
+    wall times against the budget's deadline, and attaches a
+    ``ResultMeta`` (level, stages, wall time, coverage, backend) to
+    every ``SearchResult``;
+  - a Pallas kernel failure blacklists that backend for the engine and
+    transparently retries the batch on the jnp engines (bounded
+    retries + exponential backoff, ``repro.resilience.retry``);
+  - sharded engines survive dead shards (``mark_shard_dead``): the
+    surviving shards' merged top-k is returned and ``meta.coverage``
+    reports the reachable fraction instead of the call raising.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 
 from repro.api.artifacts import ArtifactError, Artifacts
-from repro.api.config import ConfigError, IndexConfig, ServeConfig
+from repro.api.config import (ConfigError, IndexConfig, ResilienceConfig,
+                              ServeConfig)
+from repro.resilience.budget import (DEGRADE_LEVELS, ResultMeta,
+                                     SearchBudget, validate_budget)
+from repro.resilience.retry import BackoffPolicy, retry_with_backoff
+
+# warm-timing EMA weight: recent batches dominate but one outlier
+# doesn't whipsaw the ladder choice
+_EMA_ALPHA = 0.3
 
 
 class AnnEngine:
@@ -28,34 +53,288 @@ class AnnEngine:
     ``engine(queries)`` (or ``engine.search(queries)``) runs the jitted
     batched search — the historical ``build_ann_engine`` contract.
     ``engine.add(new_vectors)`` encodes the new embeddings through the
-    tiled ICM engine, appends/routes them into the index *without
-    retraining*, and refreshes the jitted search (re-sharding over the
+    tiled ICM engine, appends/routes them into the index *without*
+    retraining, and refreshes the jitted search (re-sharding over the
     engine's mesh if one was given); the engine keeps the unsharded
     source index precisely so sharded serving stays growable.  Returns
-    ``self`` so calls chain."""
+    ``self`` so calls chain.
 
-    def __init__(self, index, mesh=None):
+    Resilience surface (docs/robustness.md):
+
+    ``resilience``      a ``ResilienceConfig`` — default deadline,
+                        degraded-rung knobs, failover retry policy.
+    ``fault_injector``  a ``repro.resilience.faults.FaultInjector``;
+                        when set the engine serves *eagerly* (no outer
+                        jit) so the injector's kernel hooks fire per
+                        batch, and checks the ``"engine.search"`` stage
+                        itself before each batch.
+    ``search(..., budget=)``  per-batch ``SearchBudget``; every result
+                        carries ``result.meta`` (a ``ResultMeta``).
+    ``mark_shard_dead(s, ...)``  (sharded engines) fail shards over:
+                        subsequent searches merge the survivors and
+                        report ``meta.coverage`` < 1.0.
+    ``stats``           served/degraded counters per ladder level and
+                        the failover count — the chaos benchmark's
+                        degraded-rate source.
+    """
+
+    def __init__(self, index, mesh=None, *,
+                 resilience: Optional[ResilienceConfig] = None,
+                 fault_injector=None):
         self.index = index                   # the unsharded source index
         self.mesh = mesh
+        self.resilience = resilience or ResilienceConfig()
+        self.fault_injector = fault_injector
+        self._blacklist: set = set()         # backends failed over from
+        self._ema: Dict[str, float] = {}     # level -> warm wall-ms EMA
+        self._warmed: set = set()            # fn cache keys that compiled
+        self.stats: Dict[str, int] = {"degraded": 0, "failovers": 0}
         self._refresh()
 
+    # ---------------------------------------------------------- plumbing --
     def _refresh(self):
         if self.mesh is not None:
-            self._view = self.index.shard(self.mesh)
-            self._serve = self._view.search
+            view = self.index.shard(self.mesh)
+            # a refresh (engine.add) must not resurrect failed shards
+            dead = (getattr(self._view, "dead_shards", frozenset())
+                    if hasattr(self, "_view") else frozenset())
+            if dead:
+                view.mark_shard_dead(*dead)
+            self._view = view
         else:
-            self._view = idx = self.index
-            self._serve = jax.jit(lambda queries: idx.search(queries))
+            self._view = self.index
+        self._fns: Dict[Tuple, Any] = {}
+        self._warmed = set()
 
-    def __call__(self, queries):
-        return self._serve(queries)
+    def _backend_eff(self) -> str:
+        """The backend the engine currently dispatches to, after
+        failover blacklisting (sharded bodies are jnp-only)."""
+        from repro.index.base import resolve_backend
 
-    def search(self, queries, k: Optional[int] = None):
+        if self.mesh is not None:
+            return "jnp"
+        be = resolve_backend(getattr(self.index, "backend", "auto"))
+        return "jnp" if be in self._blacklist else be
+
+    def _levels(self) -> Tuple[str, ...]:
+        """Ladder rungs this engine can serve, least → most degraded."""
+        from repro.index import FlatADC, IVFTwoStep, TwoStep
+
+        if self.mesh is not None:
+            return ("full",)                 # sharded: full search only
+        idx = self.index
+        if isinstance(idx, FlatADC):
+            return ("full", "crude")         # crude == full (no refine)
+        capped = () if self._backend_eff() == "pallas" else ("capped",)
+        if isinstance(idx, IVFTwoStep):
+            return ("full",) + capped + ("probes", "crude")
+        if isinstance(idx, TwoStep):
+            return ("full",) + capped + ("crude",)
+        # custom Index implementations: full only (plus crude when they
+        # provide the protocol's optional search_crude)
+        return (("full", "crude") if hasattr(idx, "search_crude")
+                else ("full",))
+
+    def _level_index(self, level: str, budget: SearchBudget):
+        """The index variant serving one ladder rung — built from the
+        frozen source index via ``dataclasses.replace`` (cheap: array
+        fields are shared, only engine options change)."""
+        idx = self.index
+        repl: Dict[str, Any] = {}
+        be = self._backend_eff()
+        if getattr(idx, "backend", None) is not None and \
+                be != getattr(idx, "backend"):
+            repl["backend"] = be
+        if level == "capped":
+            cap = (budget.refine_cap
+                   if budget.refine_cap is not None
+                   else self.resilience.degraded_refine_cap)
+            repl["refine_cap"] = cap if cap is not None else \
+                max(4 * self._topk_default(), 64)
+        if hasattr(idx, "n_probe"):
+            np_eff = int(idx.n_probe)
+            if level == "probes":
+                np_eff = max(self.resilience.min_n_probe, np_eff // 2)
+            if budget.max_n_probe is not None:
+                np_eff = min(np_eff, budget.max_n_probe)
+            np_eff = max(1, np_eff)
+            if np_eff != int(idx.n_probe):
+                repl["n_probe"] = np_eff
+        return dataclasses.replace(idx, **repl) if repl else idx
+
+    def _topk_default(self) -> int:
+        return int(getattr(self.index, "topk", 50))
+
+    def _level_fn(self, level: str, topk: Optional[int],
+                  budget: SearchBudget):
+        lidx = (self._view if self.mesh is not None
+                else self._level_index(level, budget))
+        key = (level, topk, self._backend_eff(),
+               getattr(lidx, "refine_cap", None),
+               getattr(lidx, "n_probe", None),
+               getattr(self._view, "dead_shards", None))
+        if key in self._fns:
+            return key, self._fns[key]
+        if level == "crude" and hasattr(lidx, "search_crude"):
+            call = (lambda q: lidx.search_crude(q)) if topk is None \
+                else (lambda q: lidx.search_crude(q, topk))
+        else:
+            call = (lambda q: lidx.search(q)) if topk is None \
+                else (lambda q: lidx.search(q, topk))
+        # under a fault injector the engine must stay eager: kernel
+        # hooks fire at trace time only inside jit, so a jitted fn
+        # would check faults once per compile instead of per batch
+        # (sharded views run their own inner jit either way)
+        if self.fault_injector is None and self.mesh is None:
+            call = jax.jit(call)
+        self._fns[key] = call
+        return key, call
+
+    # ------------------------------------------------------ level choice --
+    def _estimate_ms(self, level: str, order: Tuple[str, ...]):
+        """Expected warm wall time for a rung: its own EMA, else the
+        best measured less-degraded rung as an upper bound (a more
+        degraded rung never runs slower), else None (unknown)."""
+        if level in self._ema:
+            return self._ema[level]
+        upper = [self._ema[l] for l in order[:order.index(level)]
+                 if l in self._ema]
+        return min(upper) if upper else None
+
+    def _pick_level(self, budget: SearchBudget) -> str:
+        order = self._levels()
+        if budget.force_level is not None:
+            if budget.force_level not in order:
+                raise ValueError(
+                    f"force_level={budget.force_level!r} is not servable "
+                    f"by this engine (available: {list(order)})")
+            return budget.force_level
+        if not budget.allow_refine:
+            return "crude" if "crude" in order else order[-1]
+        # hard caps promote their rung outright (deterministic, no
+        # timing involved): a refine_cap asks for the capped rung, a
+        # max_n_probe below the index's n_probe asks for probes
+        floor_i = 0
+        if budget.refine_cap is not None and "capped" in order:
+            floor_i = max(floor_i, order.index("capped"))
+        if (budget.max_n_probe is not None and "probes" in order
+                and budget.max_n_probe < int(getattr(self.index,
+                                                     "n_probe", 1))):
+            floor_i = max(floor_i, order.index("probes"))
+        order = order[floor_i:]
+        deadline = (budget.deadline_ms if budget.deadline_ms is not None
+                    else self.resilience.deadline_ms)
+        if deadline is None:
+            return order[0]
+        # measured choice: least-degraded rung whose estimate fits; a
+        # rung with no estimate at all (cold engine) is taken
+        # optimistically — the measurement it produces steers the next
+        # batch; the crude floor is always eligible
+        for name in order:
+            est = self._estimate_ms(name, self._levels())
+            if est is None or est <= deadline:
+                return name
+        return order[-1]
+
+    # ------------------------------------------------------------ serving --
+    def _stages(self, level: str) -> Tuple[str, ...]:
+        from repro.index import FlatADC, IVFTwoStep
+
+        idx = self.index
+        probe = ("probe",) if (isinstance(idx, IVFTwoStep)
+                               or hasattr(idx, "n_probe")) else ()
+        if isinstance(idx, FlatADC):
+            return probe + ("adc",)
+        if level == "crude":
+            return probe + ("crude",)
+        if level == "capped":
+            return probe + ("crude", "refine-capped")
+        return probe + ("crude", "refine")
+
+    def _attempt(self, fn, queries):
+        if self.fault_injector is not None:
+            self.fault_injector.check("engine.search")
+        r = fn(queries)
+        jax.block_until_ready((r.indices, r.distances))
+        return r
+
+    def _serve_with_failover(self, level, topk, budget, queries):
+        """One batch at one rung, with backend failover: a failure on
+        the pallas backend blacklists it for the whole engine and the
+        batch retries on the jnp engines under the configured backoff;
+        jnp/sharded failures retry in place (transient-fault model)."""
+        res = self.resilience
+        policy = BackoffPolicy(max_retries=res.max_retries,
+                               base_ms=res.backoff_base_ms,
+                               max_ms=res.backoff_max_ms)
+        key, fn = self._level_fn(level, topk, budget)
+        try:
+            return key, self._attempt(fn, queries)
+        except Exception:
+            if res.pallas_failover and self._backend_eff() == "pallas":
+                # kernel path failed: fail the backend over, not the
+                # query — rebuild this rung on jnp and retry bounded
+                self._blacklist.add("pallas")
+                self.stats["failovers"] += 1
+                self._fns.clear()
+                self._warmed.discard(key)
+                key, fn = self._level_fn(level, topk, budget)
+            return key, retry_with_backoff(
+                lambda: self._attempt(fn, queries), policy=policy)
+
+    def __call__(self, queries, budget: Optional[SearchBudget] = None):
+        return self.search(queries, budget=budget)
+
+    def search(self, queries, k: Optional[int] = None, *,
+               budget: Optional[SearchBudget] = None):
         """Serve one query batch; ``k`` overrides the index's built-in
-        ``topk`` for this call (off the jitted default path)."""
-        if k is None:
-            return self._serve(queries)
-        return self._view.search(queries, topk=k)
+        ``topk`` for this call.  ``budget`` (docs/robustness.md) bounds
+        the batch — the engine picks the degradation-ladder rung that
+        fits and reports what it did on ``result.meta``."""
+        budget = validate_budget(budget) if budget is not None \
+            else SearchBudget()
+        level = self._pick_level(budget)
+        deadline = (budget.deadline_ms if budget.deadline_ms is not None
+                    else self.resilience.deadline_ms)
+        t0 = time.perf_counter()
+        key, result = self._serve_with_failover(level, k, budget, queries)
+        wall_ms = (time.perf_counter() - t0) * 1000.0
+        # warm-only timing: the first call through a compiled fn pays
+        # tracing + compilation and would poison the ladder's estimates
+        if key in self._warmed:
+            prev = self._ema.get(level)
+            self._ema[level] = wall_ms if prev is None else \
+                (1 - _EMA_ALPHA) * prev + _EMA_ALPHA * wall_ms
+        else:
+            self._warmed.add(key)
+        coverage = float(getattr(self._view, "coverage", 1.0))
+        li = DEGRADE_LEVELS.index(level)
+        meta = ResultMeta(
+            level=li, level_name=level,
+            degraded=li > 0 or coverage < 1.0,
+            stages=self._stages(level), wall_ms=wall_ms,
+            deadline_ms=deadline,
+            deadline_exceeded=(deadline is not None and wall_ms > deadline),
+            coverage=coverage, backend=self._backend_eff())
+        self.stats[level] = self.stats.get(level, 0) + 1
+        if meta.degraded:
+            self.stats["degraded"] += 1
+        return result._replace(meta=meta)
+
+    # ------------------------------------------------------------- shards --
+    def mark_shard_dead(self, *shards: int) -> "AnnEngine":
+        """Fail shards over (sharded engines only): subsequent searches
+        merge the surviving shards' top-k and report the reachable
+        fraction on ``meta.coverage`` instead of raising."""
+        if self.mesh is None:
+            raise ValueError("mark_shard_dead needs a sharded engine "
+                             "(AnnEngine(mesh=...))")
+        self._view.mark_shard_dead(*shards)
+        return self
+
+    @property
+    def coverage(self) -> float:
+        return float(getattr(self._view, "coverage", 1.0))
 
     @property
     def n(self) -> int:
@@ -107,7 +386,9 @@ def build_ann_engine(codes, C, structure, *, topk: int = 50,
                      backend: str = "auto", block_q=None, block_n=None,
                      query_chunk=None, index: str = "two-step", mesh=None,
                      emb_db=None, n_lists: int = 64, n_probe: int = 8,
-                     refine_cap=None, key=None, lut_dtype: str = "f32"):
+                     refine_cap=None, key=None, lut_dtype: str = "f32",
+                     resilience: Optional[ResilienceConfig] = None,
+                     fault_injector=None):
     """Batched ANN serving entry: returns an ``AnnEngine`` — call it
     with an (nq, d) query batch for a ``repro.index.SearchResult``,
     and grow it in place with ``engine.add(new_vectors)`` (incremental
@@ -127,6 +408,8 @@ def build_ann_engine(codes, C, structure, *, topk: int = 50,
     the unified dispatch: "pallas" fused kernels on TPU, vectorized jnp
     elsewhere.  ``lut_dtype`` ("f32" | "int8") selects the crude-pass
     LUT precision (DESIGN.md §8; honored by the sharded engines too).
+    ``resilience`` / ``fault_injector`` configure the engine's failure
+    behavior (docs/robustness.md).
     """
     # n_lists/n_probe only describe an IVF; for the flat kinds they were
     # historically ignored, so keep them out of the validated config
@@ -139,11 +422,14 @@ def build_ann_engine(codes, C, structure, *, topk: int = 50,
                             block_n=block_n)
     idx = build_index(codes, C, structure, index_cfg=index_cfg,
                       serve_cfg=serve_cfg, emb_db=emb_db, key=key)
-    return AnnEngine(idx, mesh=mesh)
+    return AnnEngine(idx, mesh=mesh, resilience=resilience,
+                     fault_injector=fault_injector)
 
 
 def load_ann_engine(path: str, *, mesh=None,
-                    overrides: Optional[Dict[str, Any]] = None) -> AnnEngine:
+                    overrides: Optional[Dict[str, Any]] = None,
+                    verify_checksums: Optional[bool] = None,
+                    fault_injector=None) -> AnnEngine:
     """Open a saved artifact directory as a live serving engine.
 
     The artifacts must contain an index (``Artifacts.save`` with
@@ -153,10 +439,25 @@ def load_ann_engine(path: str, *, mesh=None,
     engine options without re-exporting (``index.kind`` names the
     stored layout and is rejected).  ``mesh`` shards the loaded index
     for data-parallel serving, exactly like ``build_ann_engine(mesh=)``.
+
+    ``verify_checksums`` forces the full per-tensor sha256 pass on load
+    (None defers to the embedded config's
+    ``resilience.verify_artifacts``); the engine inherits the embedded
+    ``ResilienceConfig``.
     """
-    art = Artifacts.load(path, overrides=overrides)
+    if verify_checksums is None:
+        # peek: the embedded config decides, unless the caller forces it
+        art = Artifacts.load(path, overrides=overrides)
+        if art.config.resilience.verify_artifacts:
+            art = Artifacts.load(path, overrides=overrides,
+                                 verify_checksums=True)
+    else:
+        art = Artifacts.load(path, overrides=overrides,
+                             verify_checksums=verify_checksums)
     if art.index is None:
         raise ArtifactError(
             f"{path}: artifacts hold no index (model-only save); build "
             "one with ICQSession.index and save again")
-    return AnnEngine(art.index, mesh=mesh)
+    return AnnEngine(art.index, mesh=mesh,
+                     resilience=art.config.resilience,
+                     fault_injector=fault_injector)

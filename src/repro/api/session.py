@@ -52,12 +52,15 @@ class Searcher:
     def n(self) -> int:
         return self.engine.n
 
-    def search(self, queries, k: Optional[int] = None):
+    def search(self, queries, k: Optional[int] = None, *, budget=None):
         """Embed ``queries`` ((nq, ...) raw inputs) and search.  ``k``
-        overrides ``config.serve.topk`` for this call.  Returns a
-        ``repro.index.SearchResult``."""
+        overrides ``config.serve.topk`` for this call; ``budget`` (a
+        ``repro.resilience.SearchBudget``) bounds the batch and is
+        passed through to the engine (docs/robustness.md).  Returns a
+        ``repro.index.SearchResult`` whose ``meta`` reports what the
+        engine actually did."""
         emb = self.model.embed(jnp.asarray(queries))
-        return self.engine.search(emb, k)
+        return self.engine.search(emb, k, budget=budget)
 
     def add(self, new_x, **encode_opts) -> "Searcher":
         """Encode raw-space ``new_x`` through the model + tiled ICM

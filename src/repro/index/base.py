@@ -41,6 +41,10 @@ class SearchResult(NamedTuple):
     distances: jnp.ndarray   # (nq, topk) LUT-sum distances (monotone in L2)
     avg_ops: jnp.ndarray     # scalar — average LUT adds per database point
     pass_rate: jnp.ndarray   # scalar — fraction refined (phase-2 survivors)
+    # Host-side resilience metadata (repro.resilience.budget.ResultMeta),
+    # attached by the serving engine *outside* jit; None inside traced
+    # index code (an empty pytree leaf-wise, so jit treats it as static).
+    meta: Optional[object] = None
 
 
 @runtime_checkable

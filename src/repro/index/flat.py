@@ -278,6 +278,72 @@ def two_step_search_compact(queries, codes, C, structure, topk: int,
                            refine_cap=refine_cap)
 
 
+def _two_step_crude_block_jnp(qs, codes, C, fast, sigma, topk: int,
+                              quantized: bool = False):
+    """Crude-only ranking over one query block: the exact crude top-k
+    the full jnp path bootstraps eq. 2 candidates from
+    (``_eq2_passed``'s ``top_k(-crude, topk)``), with no refinement."""
+    luts = build_lut(qs, C)
+    crude = lut_sum(_crude_tables(luts, fast, quantized), codes, fast)
+    neg_c, cand = jax.lax.top_k(-crude, topk)
+    return cand, -neg_c, jnp.zeros(qs.shape[0], dtype=jnp.float32)
+
+
+def _two_step_crude_pallas(qs, codes, C, fast, topk: int, block_q: int,
+                           block_n: int, interpret,
+                           quantized: bool = False):
+    """Crude-only ranking via the phase-1 kernel: ``batched_crude_topk``
+    already emits the crude top-k (its candidate list); skip the dense
+    crude matrix and phase 2 entirely."""
+    from repro.kernels import ops
+    nq = qs.shape[0]
+    K, m = C.shape[0], C.shape[1]
+    luts = build_lut(qs, C)
+    if quantized:
+        q_flat, scale, offset = quantized_kernel_operands(luts, fast)
+        _, cand_vals, cand_idx = ops.batched_crude_topk(
+            codes, q_flat, topk, block_q=block_q, block_n=block_n,
+            interpret=interpret, want_crude=False,
+            lut_scale=scale, lut_offset=offset)
+    else:
+        fast_f = fast.astype(luts.dtype)[None, :, None]
+        lut_fast = (luts * fast_f).reshape(nq, K * m)
+        _, cand_vals, cand_idx = ops.batched_crude_topk(
+            codes, lut_fast, topk, block_q=block_q, block_n=block_n,
+            interpret=interpret, want_crude=False)
+    return cand_idx, cand_vals, jnp.zeros(nq, dtype=jnp.float32)
+
+
+def two_step_crude_search(queries, codes, C, structure, topk: int, *,
+                          backend: str = "auto", block_q: int = 64,
+                          block_n: int = 512, interpret=None,
+                          query_chunk: Optional[int] = None,
+                          lut_dtype: str = "f32"):
+    """The degradation ladder's crude floor (docs/robustness.md): rank
+    by the fast-subset crude distance only, skipping eq. 2 and the
+    refine pass.  Bitwise-identical to the crude top-k the full path
+    computes internally (the eq. 2 bootstrap candidates), on either
+    backend.  ``pass_rate`` is 0 (nothing refined); ``avg_ops`` is
+    |K_fast| per point."""
+    fast = structure.fast_mask
+    kf = jnp.sum(fast.astype(jnp.float32))
+    be = resolve_backend(backend)
+    quantized = resolve_lut_dtype(lut_dtype) == "int8"
+
+    if be == "pallas":
+        fn = functools.partial(_two_step_crude_pallas, codes=codes, C=C,
+                               fast=fast, topk=topk, block_q=block_q,
+                               block_n=block_n, interpret=interpret,
+                               quantized=quantized)
+    else:
+        fn = functools.partial(_two_step_crude_block_jnp,
+                               codes=codes.astype(jnp.int32), C=C,
+                               fast=fast, sigma=structure.sigma, topk=topk,
+                               quantized=quantized)
+    idx, dist, pf = chunked_over_queries(fn, queries, query_chunk)
+    return SearchResult(idx, dist, kf, jnp.mean(pf))
+
+
 # -------------------------------------------------------------- indexes ----
 
 def _encode_new_rows(new_vectors, C, codes_dtype, *, icm_iters: int,
@@ -320,6 +386,12 @@ class FlatADC:
                           block_n=self.block_n, interpret=self.interpret,
                           query_chunk=self.query_chunk,
                           lut_dtype=self.lut_dtype)
+
+    def search_crude(self, queries,
+                     topk: Optional[int] = None) -> SearchResult:
+        """One-step ADC has no cheap/refine split — the crude floor of
+        the degradation ladder is the full search itself."""
+        return self.search(queries, topk)
 
     def add(self, new_vectors, *, icm_iters: int = 3,
             encode_backend: str = "auto",
@@ -368,6 +440,18 @@ class TwoStep:
                                query_chunk=self.query_chunk,
                                refine_cap=self.refine_cap,
                                lut_dtype=self.lut_dtype)
+
+    def search_crude(self, queries,
+                     topk: Optional[int] = None) -> SearchResult:
+        """Crude-only floor (docs/robustness.md): the fast-subset crude
+        ranking, bitwise-identical to the full path's internal eq. 2
+        bootstrap candidates on the same backend."""
+        return two_step_crude_search(
+            queries, self.codes, self.C, self.structure,
+            topk if topk is not None else self.topk,
+            backend=self.backend, block_q=self.block_q,
+            block_n=self.block_n, interpret=self.interpret,
+            query_chunk=self.query_chunk, lut_dtype=self.lut_dtype)
 
     def add(self, new_vectors, *, icm_iters: int = 3,
             encode_backend: str = "auto",

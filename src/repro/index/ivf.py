@@ -216,26 +216,21 @@ def _ivf_bootstrap_threshold(luts, crude, cand_codes, topk: int, sigma,
     return t + sigma
 
 
-def _ivf_block_jnp(qs, codes, C, fast, sigma, topk: int, centroids, lists,
-                   n_probe: int, refine_cap: Optional[int],
-                   list_codes=None, quantized: bool = False):
-    """Batched IVF two-step over one query block.  Returns (ids
-    (nq,topk), dist (nq,topk), n_cand (nq,), n_pass (nq,))."""
-    luts = build_lut(qs, C)                              # (nq, K, m)
-    probes = coarse_probe(qs, centroids, n_probe)
-    cand_ids, valid, cand_codes = gather_candidates(probes, lists, codes,
-                                                    topk, list_codes)
-    safe = jnp.where(valid, cand_ids, 0)
+def _ivf_crude_scores(luts, cand_codes, valid, fast, *,
+                      quantized: bool, need_slow: bool):
+    """Crude (and optionally slow) LUT sums over the candidate slab —
+    the shared scoring core of the full jnp engine and the crude-only
+    floor (so the two are bitwise-identical by construction).
 
-    # one unrolled pass over the K (static, small) codebooks feeds both
-    # the crude and the slow accumulators via per-codebook (nq, nc)
-    # gathers — never materializing the (nq, K, nc) parts tensor (which
-    # blows the cache at serving slab sizes) or a transposed codes copy;
-    # masking the gathered value == masking the LUT before the gather
+    One unrolled pass over the K (static, small) codebooks feeds both
+    accumulators via per-codebook (nq, nc) gathers — never
+    materializing the (nq, K, nc) parts tensor (which blows the cache
+    at serving slab sizes) or a transposed codes copy; masking the
+    gathered value == masking the LUT before the gather.  Returns
+    (crude (nq, nc) with invalid +inf, slow (nq, nc))."""
     fvals = fast.astype(luts.dtype)                          # (K,)
-    need_slow = refine_cap is None
     K = luts.shape[1]
-    nq, nc = cand_ids.shape
+    nq, nc = valid.shape
     slow = jnp.zeros((nq, nc), luts.dtype)
     if quantized:
         # int8 crude accumulation (DESIGN.md §8): masked codebooks are
@@ -260,7 +255,22 @@ def _ivf_block_jnp(qs, codes, C, fast, sigma, topk: int, centroids, lists,
             crude = crude + fvals[k] * v
             if need_slow:
                 slow = slow + (1.0 - fvals[k]) * v
-    crude = jnp.where(valid, crude, jnp.inf)
+    return jnp.where(valid, crude, jnp.inf), slow
+
+
+def _ivf_block_jnp(qs, codes, C, fast, sigma, topk: int, centroids, lists,
+                   n_probe: int, refine_cap: Optional[int],
+                   list_codes=None, quantized: bool = False):
+    """Batched IVF two-step over one query block.  Returns (ids
+    (nq,topk), dist (nq,topk), n_cand (nq,), n_pass (nq,))."""
+    luts = build_lut(qs, C)                              # (nq, K, m)
+    probes = coarse_probe(qs, centroids, n_probe)
+    cand_ids, valid, cand_codes = gather_candidates(probes, lists, codes,
+                                                    topk, list_codes)
+    safe = jnp.where(valid, cand_ids, 0)
+    crude, slow = _ivf_crude_scores(luts, cand_codes, valid, fast,
+                                    quantized=quantized,
+                                    need_slow=refine_cap is None)
     thr = _ivf_bootstrap_threshold(luts, crude, cand_codes, topk, sigma,
                                    fast if quantized else None)
     passed = crude < thr[:, None]                        # invalid -> inf -> F
@@ -397,6 +407,98 @@ def ivf_two_step_search(queries, codes, C, structure, ivf: IVFIndex,
                           K=K, kf=kf)
 
 
+def _ivf_crude_block_jnp(qs, codes, C, fast, topk: int, centroids, lists,
+                         n_probe: int, list_codes=None,
+                         quantized: bool = False):
+    """Crude-only IVF ranking over one query block: probe + gather +
+    the shared crude scoring + top-k, skipping eq. 2 and refinement.
+    The ranking is exactly the crude top-k the full jnp path bootstraps
+    its eq. 2 candidates from."""
+    luts = build_lut(qs, C)
+    probes = coarse_probe(qs, centroids, n_probe)
+    cand_ids, valid, cand_codes = gather_candidates(probes, lists, codes,
+                                                    topk, list_codes)
+    safe = jnp.where(valid, cand_ids, 0)
+    crude, _ = _ivf_crude_scores(luts, cand_codes, valid, fast,
+                                 quantized=quantized, need_slow=False)
+    neg_c, pos = jax.lax.top_k(-crude, topk)
+    ids = jnp.take_along_axis(safe, pos, axis=1)
+    n_cand = jnp.sum(valid.astype(jnp.float32), axis=1)
+    return ids, -neg_c, n_cand, jnp.zeros_like(n_cand)
+
+
+def _ivf_crude_block_pallas(qs, codes, C, fast, topk: int, centroids,
+                            lists, n_probe: int, block_q: int, block_n: int,
+                            interpret, list_codes=None,
+                            quantized: bool = False):
+    """Crude-only IVF via the phase-1 kernel: ``ivf_crude_topk``'s
+    running top-k over the slab *is* the crude ranking; phase 2 is
+    skipped."""
+    from repro.kernels import ops
+    nq = qs.shape[0]
+    K, m = C.shape[0], C.shape[1]
+    luts = build_lut(qs, C)
+    probes = coarse_probe(qs, centroids, n_probe)
+    cand_ids, valid, cand_codes = gather_candidates(probes, lists, codes,
+                                                    topk, list_codes)
+    safe = jnp.where(valid, cand_ids, 0)
+    if quantized:
+        q_flat, scale, offset = quantized_kernel_operands(luts, fast)
+        _, cand_vals, cand_pos = ops.ivf_crude_topk(
+            cand_codes, cand_ids, q_flat, topk,
+            block_q=block_q, block_n=block_n, interpret=interpret,
+            lut_scale=scale, lut_offset=offset)
+    else:
+        fast_f = fast.astype(luts.dtype)[None, :, None]
+        lut_fast = (luts * fast_f).reshape(nq, K * m)
+        _, cand_vals, cand_pos = ops.ivf_crude_topk(
+            cand_codes, cand_ids, lut_fast, topk, block_q=block_q,
+            block_n=block_n, interpret=interpret)
+    pos_safe = jnp.where(jnp.isfinite(cand_vals), cand_pos, 0)
+    ids = jnp.take_along_axis(safe, pos_safe, axis=1)
+    n_cand = jnp.sum(valid.astype(jnp.float32), axis=1)
+    return ids, cand_vals, n_cand, jnp.zeros_like(n_cand)
+
+
+def ivf_crude_search(queries, codes, C, structure, ivf: IVFIndex,
+                     topk: int, n_probe: int, *, backend: str = "auto",
+                     block_q: int = 4, block_n: int = 128, interpret=None,
+                     query_chunk: Optional[int] = None, list_codes=None,
+                     lut_dtype: str = "f32"):
+    """The IVF rung of the degradation ladder's crude floor
+    (docs/robustness.md): probe + crude-only ranking over the candidate
+    slab.  Bitwise-identical ids/values to the crude top-k the full
+    path computes internally on the same backend.  ``avg_ops`` drops
+    the pass-rate term (nothing refined)."""
+    K = C.shape[0]
+    fast = structure.fast_mask
+    kf = jnp.sum(fast.astype(jnp.float32))
+    n_lists = ivf.lists.shape[0]
+    n = codes.shape[0]
+    if not 1 <= n_probe <= n_lists:
+        raise ValueError(f"n_probe={n_probe} outside [1, {n_lists}]")
+    be = resolve_backend(backend)
+    quantized = resolve_lut_dtype(lut_dtype) == "int8"
+
+    if be == "pallas":
+        fn = functools.partial(_ivf_crude_block_pallas, codes=codes, C=C,
+                               fast=fast, topk=topk,
+                               centroids=ivf.centroids, lists=ivf.lists,
+                               n_probe=n_probe, block_q=block_q,
+                               block_n=block_n, interpret=interpret,
+                               list_codes=list_codes, quantized=quantized)
+    else:
+        fn = functools.partial(_ivf_crude_block_jnp, codes=codes, C=C,
+                               fast=fast, topk=topk,
+                               centroids=ivf.centroids, lists=ivf.lists,
+                               n_probe=n_probe, list_codes=list_codes,
+                               quantized=quantized)
+    ids, dist, n_cand, n_pass = chunked_over_queries(fn, queries,
+                                                     query_chunk)
+    return ivf_ops_result(ids, dist, n_cand, n_pass, n=n, n_lists=n_lists,
+                          K=K, kf=kf)
+
+
 # --------------------------------------------------------------- index ----
 
 @dataclasses.dataclass(frozen=True)
@@ -438,6 +540,22 @@ class IVFTwoStep:
             block_n=self.block_n, interpret=self.interpret,
             query_chunk=self.query_chunk, refine_cap=self.refine_cap,
             list_codes=self.list_codes, lut_dtype=self.lut_dtype)
+
+    def search_crude(self, queries, topk: Optional[int] = None,
+                     n_probe: Optional[int] = None) -> SearchResult:
+        """Crude-only floor (docs/robustness.md): probe + crude ranking
+        with no refinement, bitwise-identical to the full path's
+        internal crude top-k on the same backend.  ``n_probe`` lets the
+        ladder's "probes" rung reuse this entry with a reduced probe
+        count."""
+        return ivf_crude_search(
+            queries, self.codes, self.C, self.structure, self.ivf,
+            topk if topk is not None else self.topk,
+            n_probe if n_probe is not None else self.n_probe,
+            backend=self.backend, block_q=self.block_q,
+            block_n=self.block_n, interpret=self.interpret,
+            query_chunk=self.query_chunk, list_codes=self.list_codes,
+            lut_dtype=self.lut_dtype)
 
     def add(self, new_vectors, *, icm_iters: int = 3,
             encode_backend: str = "auto",

@@ -50,6 +50,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed.sharding import shard_map_compat
@@ -96,9 +97,72 @@ def _data_size(mesh) -> int:
     return mesh.shape["data"]
 
 
+def _sanitize(dist):
+    """Defensive NaN/Inf scrub for per-shard distances: a poisoned
+    shard's garbage must sort dead-last, never win a top-k or wedge the
+    two-key merge sort (NaN ordering is unspecified).  Bitwise no-op on
+    finite data, so the healthy path keeps single-device parity."""
+    return jnp.nan_to_num(dist, nan=jnp.inf, posinf=jnp.inf,
+                          neginf=jnp.inf)
+
+
+class _DeadShardMixin:
+    """Shard-failover surface shared by the sharded serving clones
+    (docs/robustness.md).
+
+    ``mark_shard_dead(s, ...)`` excludes shards from serving: every
+    compiled body masks a dead shard's contributions to +inf before the
+    global merge, so ``search`` returns the surviving shards' merged
+    top-k instead of raising — results are exactly the single-device
+    ranking restricted to the surviving shards' rows (flat/two-step row
+    sharding; for list-sharded IVF, restricted to the surviving shards'
+    inverted lists).  ``coverage`` reports the reachable fraction of
+    the database; the serving engine surfaces it on ``ResultMeta`` and
+    flags the result degraded.
+
+    The dead set is *static* per compiled function — it joins the jit
+    cache key — so failover costs one recompile, not a per-batch
+    branch.  Marking is in-place (serving clones hold device buffers;
+    callers keep their reference) and monotone; a replacement shard
+    means re-sharding the source index."""
+
+    dead_shards: frozenset = frozenset()
+
+    def mark_shard_dead(self, *shards: int):
+        D = _data_size(self.mesh)
+        for s in shards:
+            if not 0 <= s < D:
+                raise ValueError(f"shard {s} outside [0, {D})")
+        dead = self.dead_shards | set(shards)
+        if len(dead) >= D:
+            raise ValueError(
+                f"cannot mark all {D} shards dead — no data would remain "
+                "(re-shard the source index instead)")
+        self.dead_shards = frozenset(dead)
+        return self
+
+    def _dead_key(self):
+        return tuple(sorted(self.dead_shards))
+
+    def _alive_arr(self):
+        """(D,) bool, True where the shard still serves."""
+        D = _data_size(self.mesh)
+        alive = np.ones(D, bool)
+        alive[list(self.dead_shards)] = False
+        return jnp.asarray(alive)
+
+    @property
+    def coverage(self) -> float:
+        """Reachable fraction of the database's real rows (1.0 = no
+        dead shards)."""
+        if not self.dead_shards:
+            return 1.0
+        return self._alive_rows() / max(self.n, 1)
+
+
 # ------------------------------------------------------------- flat ADC ----
 
-class ShardedFlatADC:
+class ShardedFlatADC(_DeadShardMixin):
     """Row-sharded one-step ADC: local full LUT sums + local top-k,
     merged by (distance, global row id).
 
@@ -120,23 +184,34 @@ class ShardedFlatADC:
         self.lut_dtype = resolve_lut_dtype(getattr(base, "lut_dtype", "f32"))
         self.codes = _put(mesh, _pad_rows(base.codes, D * self.ns),
                           P("data"))
+        self.dead_shards = frozenset()
         self._fns = {}
 
+    def _alive_rows(self) -> int:
+        # shard s owns real rows [s*ns, min((s+1)*ns, n))
+        return sum(max(0, min((s + 1) * self.ns, self.n) - s * self.ns)
+                   for s in range(_data_size(self.mesh))
+                   if s not in self.dead_shards)
+
     def _fn(self, topk: int):
-        if topk in self._fns:
-            return self._fns[topk]
+        key = (topk, self._dead_key())
+        if key in self._fns:
+            return self._fns[key]
         C, n, ns = self.C, self.n, self.ns
         K = C.shape[0]
         k_loc = min(topk, ns)
         quantized = self.lut_dtype == "int8"
+        alive = self._alive_arr()
 
         def body(qs, codes_shard):
-            off = jax.lax.axis_index("data") * ns
+            si = jax.lax.axis_index("data")
+            off = si * ns
             luts = build_lut(qs, C)
             lut = quantize_lut(luts) if quantized else luts
             dist = lut_sum(lut, codes_shard)               # (nq, ns)
             gids = off + jnp.arange(ns, dtype=jnp.int32)
-            dist = jnp.where(gids[None, :] < n, dist, jnp.inf)
+            dist = jnp.where((gids[None, :] < n) & alive[si],
+                             _sanitize(dist), jnp.inf)
             neg, li = jax.lax.top_k(-dist, k_loc)
             mv, mg = _gather_sorted((-neg, jnp.take(gids, li)), "data")
             return mg[:, :topk], mv[:, :topk]
@@ -144,7 +219,7 @@ class ShardedFlatADC:
         fn = jax.jit(shard_map_compat(
             body, self.mesh, in_specs=(P(), P("data")),
             out_specs=(P(), P())))
-        self._fns[topk] = fn
+        self._fns[key] = fn
         return fn
 
     def search(self, queries, topk: Optional[int] = None) -> SearchResult:
@@ -164,7 +239,7 @@ class ShardedFlatADC:
 
 # ------------------------------------------------------------- two-step ----
 
-class ShardedTwoStep:
+class ShardedTwoStep(_DeadShardMixin):
     """Row-sharded ICQ two-step.  The eq. 2 threshold is bootstrapped
     from the *merged* global crude top-k (each shard refines its local
     crude candidates, shards exchange (crude, gid, full) triples), so
@@ -188,24 +263,34 @@ class ShardedTwoStep:
         self.lut_dtype = resolve_lut_dtype(getattr(base, "lut_dtype", "f32"))
         self.codes = _put(mesh, _pad_rows(base.codes, D * self.ns),
                           P("data"))
+        self.dead_shards = frozenset()
         self._fns = {}
 
+    def _alive_rows(self) -> int:
+        return sum(max(0, min((s + 1) * self.ns, self.n) - s * self.ns)
+                   for s in range(_data_size(self.mesh))
+                   if s not in self.dead_shards)
+
     def _fn(self, topk: int):
-        if topk in self._fns:
-            return self._fns[topk]
+        key = (topk, self._dead_key())
+        if key in self._fns:
+            return self._fns[key]
         C, n, ns = self.C, self.n, self.ns
         fast = self.structure.fast_mask
         sigma = self.structure.sigma
         k_loc = min(topk, ns)
         quantized = self.lut_dtype == "int8"
+        alive = self._alive_arr()
 
         def body(qs, codes_shard):
-            off = jax.lax.axis_index("data") * ns
+            si = jax.lax.axis_index("data")
+            off = si * ns
             luts = build_lut(qs, C)
             crude_lut = quantize_lut(luts, fast) if quantized else luts
             crude = lut_sum(crude_lut, codes_shard, fast)  # (nq, ns)
             gids = off + jnp.arange(ns, dtype=jnp.int32)
-            crude = jnp.where(gids[None, :] < n, crude, jnp.inf)
+            crude = jnp.where((gids[None, :] < n) & alive[si],
+                              _sanitize(crude), jnp.inf)
 
             # phase 1: local crude top-k + local full distances, merged
             # globally before the threshold bootstrap (quantized mode
@@ -220,7 +305,11 @@ class ShardedTwoStep:
             sv, _, sf = _gather_sorted(
                 (-neg_c, jnp.take(gids, li), full_cand), "data")
             sv, sf = sv[:, :topk], sf[:, :topk]
-            far = jnp.argmax(sf, axis=1)
+            # +inf crude slots (dead shards / tiny dbs) carry garbage
+            # full distances — exclude them from the far-element argmax
+            # (no-op when the merged top-k is fully populated)
+            far = jnp.argmax(jnp.where(jnp.isfinite(sv), sf, -jnp.inf),
+                             axis=1)
             t = jnp.take_along_axis(sv, far[:, None], axis=1)[:, 0]
             thr = t + sigma
 
@@ -259,7 +348,7 @@ class ShardedTwoStep:
 
 # ------------------------------------------------------------------ IVF ----
 
-class ShardedIVFTwoStep:
+class ShardedIVFTwoStep(_DeadShardMixin):
     """List-sharded batched IVF: shard s owns list rows
     [s*Ls, (s+1)*Ls) and their packed codes slab.  Candidate keys are
     slab positions (probe-slot major), identical to the single-device
@@ -298,11 +387,26 @@ class ShardedIVFTwoStep:
         slab = _pad_rows(slab, D * self.Ls)
         self.lists = _put(mesh, lists_p, P("data"))
         self.list_codes = _put(mesh, slab, P("data"))
+        # host-side per-list sizes (padded rows own 0 points) so
+        # ``coverage`` under dead shards is computable without a gather
+        lens = np.zeros(D * self.Ls, np.int64)
+        lens[:n_lists] = np.asarray(base.ivf.list_lens)
+        self._list_lens = lens
+        self.dead_shards = frozenset()
         self._fns = {}
 
+    def _alive_rows(self) -> int:
+        # shard s owns list rows [s*Ls, (s+1)*Ls); its reachable points
+        # are the sizes of those inverted lists
+        Ls = self.Ls
+        return int(sum(self._list_lens[s * Ls:(s + 1) * Ls].sum()
+                       for s in range(_data_size(self.mesh))
+                       if s not in self.dead_shards))
+
     def _fn(self, topk: int):
-        if topk in self._fns:
-            return self._fns[topk]
+        key = (topk, self._dead_key())
+        if key in self._fns:
+            return self._fns[key]
         C, centroids = self.C, self.centroids
         fast = self.structure.fast_mask
         sigma = self.structure.sigma
@@ -323,6 +427,7 @@ class ShardedIVFTwoStep:
                else min(max(refine_cap, topk), nc))
         cap_loc = None if cap is None else min(cap, nc_loc)
         quantized = self.lut_dtype == "int8"
+        alive = self._alive_arr()
 
         def body(qs, lists_sh, slab_sh):
             si = jax.lax.axis_index("data")
@@ -358,12 +463,12 @@ class ShardedIVFTwoStep:
                     [pos, jnp.broadcast_to(
                         nc0 + jnp.arange(extra, dtype=jnp.int32)[None],
                         (nq, extra))], axis=1)
-            valid = owned & (ids >= 0)
+            valid = owned & (ids >= 0) & alive[si]
             safe = jnp.where(valid, ids, 0)
 
             crude_lut = quantize_lut(luts, fast) if quantized else luts
             crude = lut_sum(crude_lut, codes, fast)        # (nq, nc_loc)
-            crude = jnp.where(valid, crude, jnp.inf)
+            crude = jnp.where(valid, _sanitize(crude), jnp.inf)
             # a slab position is contributed by its owning shard only;
             # everywhere else it sorts dead last
             pos_key = jnp.where(owned, pos, _I32_MAX)

@@ -24,8 +24,33 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# ----------------------------------------------------------- fault hook ----
+# The resilience layer's injection point (repro.resilience.faults): every
+# public op calls the hook with its stage name before dispatching to the
+# kernel, so a seeded FaultInjector can deterministically fail "Pallas"
+# stages and drive the engine's jnp failover.  None (the default) is
+# free; note that under an outer jit the hook fires at trace time only —
+# the serving engine runs eager whenever an injector is attached.
+_FAULT_HOOK = None
+
+
+def set_fault_hook(hook):
+    """Install ``hook(stage: str)`` (or None to clear).  Returns the
+    previous hook so callers can restore it."""
+    global _FAULT_HOOK
+    prev = _FAULT_HOOK
+    _FAULT_HOOK = hook
+    return prev
+
+
+def _check_faults(stage: str) -> None:
+    if _FAULT_HOOK is not None:
+        _FAULT_HOOK("kernels." + stage)
+
+
 def adc(codes, lut, *, block_n: int = 512, interpret=None):
     """ADC LUT sum: codes (n,K) int32, lut (K,m) -> dists (n,) f32."""
+    _check_faults("adc")
     it = _default_interpret() if interpret is None else interpret
     return adc_pallas(codes, lut, block_n=block_n, interpret=it)
 
@@ -33,6 +58,7 @@ def adc(codes, lut, *, block_n: int = 512, interpret=None):
 def two_step(codes, lut, fast_mask, threshold, *, block_n: int = 512,
              interpret=None):
     """Fused crude ADC + eq. 2 margin test -> (crude, passed)."""
+    _check_faults("two_step")
     it = _default_interpret() if interpret is None else interpret
     return two_step_pallas(codes, lut, fast_mask, threshold,
                            block_n=block_n, interpret=it)
@@ -51,6 +77,7 @@ def batched_crude_topk(codes, lut_flat, topk: int, *, block_q: int = 64,
     (crude (nq, n) | None, cand_vals (nq, topk), cand_idx (nq, topk));
     ``want_crude=False`` skips the dense matrix.
     """
+    _check_faults("batched_crude_topk")
     it = _default_interpret() if interpret is None else interpret
     return crude_topk_pallas(codes, lut_flat, lut_scale, lut_offset,
                              topk=topk, block_q=block_q,
@@ -66,6 +93,7 @@ def batched_refine_topk(codes, lut_flat, crude, thresholds, topk: int, *,
     codes (n, K) int, lut_flat (nq, K*m) f32 (slow-masked), crude (nq, n),
     thresholds (nq,) -> (dist (nq, topk), idx (nq, topk)).
     """
+    _check_faults("batched_refine_topk")
     it = _default_interpret() if interpret is None else interpret
     return refine_topk_pallas(codes, lut_flat, crude, thresholds, topk=topk,
                               block_q=block_q, block_n=block_n, interpret=it)
@@ -83,6 +111,7 @@ def ivf_crude_topk(cand_codes, cand_ids, lut_flat, topk: int, *,
     mode; crude output is dequantized f32) -> (crude (nq, nc) with
     invalid +inf, vals (nq, topk), pos (nq, topk)).
     """
+    _check_faults("ivf_crude_topk")
     it = _default_interpret() if interpret is None else interpret
     return ivf_crude_topk_pallas(cand_codes, cand_ids, lut_flat, lut_scale,
                                  lut_offset, topk=topk,
@@ -94,6 +123,7 @@ def ivf_refine_topk(cand_codes, lut_flat, crude, thresholds, topk: int, *,
                     block_q: int = 4, block_n: int = 128, interpret=None):
     """IVF phase 2: fused eq. 2 test + slow-codebook sum + top-k merge
     over the candidate slab -> (dist (nq, topk), pos (nq, topk))."""
+    _check_faults("ivf_refine_topk")
     it = _default_interpret() if interpret is None else interpret
     return ivf_refine_topk_pallas(cand_codes, lut_flat, crude, thresholds,
                                   topk=topk, block_q=block_q,
@@ -104,6 +134,7 @@ def icm_encode(x, init_codes, C, *, iters: int = 3, block_n: int = 1024,
                interpret=None):
     """Point-tiled ICM encode (DESIGN.md §9): x (n, d), init_codes
     (n, K) warm start, C (K, m, d) -> codes (n, K) int32."""
+    _check_faults("icm_encode")
     it = _default_interpret() if interpret is None else interpret
     return icm_encode_pallas(x, init_codes, C, iters=iters,
                              block_n=block_n, interpret=it)
@@ -111,6 +142,7 @@ def icm_encode(x, init_codes, C, *, iters: int = 3, block_n: int = 1024,
 
 def kmeans_assign(x, cent, *, block_n: int = 1024, interpret=None):
     """Nearest-centroid assignment -> (ids, sq-dists)."""
+    _check_faults("kmeans_assign")
     it = _default_interpret() if interpret is None else interpret
     return kmeans_assign_pallas(x, cent, block_n=block_n, interpret=it)
 
@@ -123,6 +155,7 @@ def flash_attention(q, k, v, *, causal: bool = True, blk_q: int = 128,
     Query heads are grouped with their KV head and folded into the
     kernel's flat batch*heads axis.
     """
+    _check_faults("flash_attention")
     it = _default_interpret() if interpret is None else interpret
     b, sq, h, dh = q.shape
     sk, kvh = k.shape[1], k.shape[2]

@@ -136,17 +136,28 @@ def serve_ann(cfg, n: int, nq: int, *, batches: int = 3, shards: int = 1,
 
 
 def serve_loaded(path: str, nq: int, *, batches: int = 3, shards: int = 1,
-                 overrides=None):
+                 overrides=None, verify: bool = False):
     """Serve a saved artifact directory end-to-end: load + verify the
     manifest, rebuild the index (``repro.api.load_ann_engine``), and
     stream random query batches through it — the fresh-process half of
     the fit→save→load→search contract (CI runs this against artifacts
     written by ``launch/train.py --save-artifacts`` and by
-    ``--ann --save-artifacts``)."""
-    from repro.api import load_ann_engine
+    ``--ann --save-artifacts``).
 
-    engine = load_ann_engine(path, mesh=_serve_mesh(shards),
-                             overrides=overrides or None)
+    ``verify`` forces the full per-tensor sha256 pass
+    (``--verify-artifacts``, docs/robustness.md).  Malformed artifacts
+    — missing directory, missing/truncated files, checksum mismatches —
+    exit with a one-line actionable error instead of a traceback."""
+    from repro.api import ArtifactError, load_ann_engine
+
+    try:
+        engine = load_ann_engine(path, mesh=_serve_mesh(shards),
+                                 overrides=overrides or None,
+                                 verify_checksums=verify or None)
+    except (ArtifactError, FileNotFoundError, OSError) as e:
+        # the artifact layer's messages already name the file and the
+        # expected-vs-found sizes/hashes — surface them, not the stack
+        raise SystemExit(f"--load-artifacts {path}: {e}") from e
     d = engine.index.C.shape[-1]
     print(f"loaded artifacts {path}: index n={engine.n} d={d} "
           f"(kind from manifest)")
@@ -175,6 +186,10 @@ def main():
                     help="serve a saved artifact directory instead of "
                          "building one (repro.api.load_ann_engine); "
                          "engine flags act as overrides")
+    ap.add_argument("--verify-artifacts", action="store_true",
+                    help="with --load-artifacts: verify every tensor's "
+                         "sha256 against the manifest before serving "
+                         "(docs/robustness.md)")
     ap.add_argument("--ann-n", type=int, default=100_000)
     ap.add_argument("--ann-queries", type=int, default=64)
     ap.add_argument("--ann-backend", default=None,
@@ -218,8 +233,11 @@ def main():
                          "own config and index layout); remaining "
                          "engine flags act as overrides")
         serve_loaded(args.load_artifacts, args.ann_queries,
-                     shards=args.ann_shards, overrides=overrides)
+                     shards=args.ann_shards, overrides=overrides,
+                     verify=args.verify_artifacts)
         return
+    if args.verify_artifacts:
+        ap.error("--verify-artifacts only applies to --load-artifacts")
     if args.ann:
         from repro.api import ICQConfig
 

@@ -1,0 +1,31 @@
+"""``repro.resilience`` — the robustness substrate under the serving
+and artifact stack (docs/robustness.md, DESIGN.md §11).
+
+Three orthogonal pieces, deliberately free of engine imports so the
+index / api layers can depend on them without cycles:
+
+  ``budget``  — ``SearchBudget`` (deadline + stage caps) and
+      ``ResultMeta`` (degraded level, stages run, wall time, coverage):
+      the vocabulary of deadline-aware degraded search.  The ladder
+      itself (full → capped refine → reduced probes → crude-only) is
+      executed by ``repro.api.serving.AnnEngine``.
+  ``retry``   — ``retry_with_backoff`` / ``BackoffPolicy``: bounded
+      retries with exponential backoff, used by the engine's
+      Pallas→jnp failover and anything else that faces transient
+      faults.
+  ``faults``  — ``FaultInjector``: a *seeded, deterministic* chaos
+      harness that raises, delays, or corrupts bytes at configured
+      probabilities.  Tests and the ``benchmarks/run.py --only faults``
+      chaos target drive every failover path through it.
+"""
+from repro.resilience.budget import (DEGRADE_LEVELS, ResultMeta,
+                                     SearchBudget)
+from repro.resilience.faults import FaultInjector, FaultSpec, InjectedFault
+from repro.resilience.retry import BackoffPolicy, RetriesExhausted, \
+    retry_with_backoff
+
+__all__ = [
+    "SearchBudget", "ResultMeta", "DEGRADE_LEVELS",
+    "BackoffPolicy", "retry_with_backoff", "RetriesExhausted",
+    "FaultInjector", "FaultSpec", "InjectedFault",
+]

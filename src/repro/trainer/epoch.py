@@ -89,7 +89,9 @@ def fit(key, xs, ys, icq_cfg, *, embed_kind="linear", num_classes=10,
         img_hw=None, channels=None, mode="icq", epochs=5, batch_size=256,
         lr=1e-3, tau=1.0, verbose=False, mesh=None,
         encode_batch: int = 8192, encode_backend: str = "auto",
-        donate: bool = True) -> ICQModel:
+        donate: bool = True, ckpt_dir: Optional[str] = None,
+        save_every: int = 1, max_restarts: int = 3, heartbeat=None,
+        fault_hook=None) -> ICQModel:
     """Scan-compiled training over (xs, ys) arrays -> fitted ICQModel.
 
     The drop-in successor of the seed host loop: same losses, same
@@ -102,6 +104,19 @@ def fit(key, xs, ys, icq_cfg, *, embed_kind="linear", num_classes=10,
            via shard_map with pmean'd gradients; ``batch_size`` must
            divide by the axis size.  Results match single-device
            training up to float reassociation.
+
+    ckpt_dir (docs/robustness.md): supervised training — the epoch
+    loop runs under ``distributed.TrainSupervisor`` with per-epoch
+    checkpoints every ``save_every`` epochs, NaN-epoch quarantine, and
+    up to ``max_restarts`` restore-and-replay restarts.  A killed fit
+    re-invoked with the *same key and data* resumes from the newest
+    checkpoint and produces bitwise-identical final codebooks: the
+    checkpointed state carries the post-epoch rng, so the replayed
+    shuffle chain is exactly the uninterrupted one.  Donation is
+    disabled (restart replay needs the pre-epoch buffers alive).
+    ``heartbeat`` (a ``distributed.HeartbeatMonitor``) gets a
+    ``beat(0, epoch_seconds)`` per epoch; ``fault_hook(epoch)`` may
+    raise to inject node loss (the chaos tests drive it).
     """
     n = xs.shape[0]
     d_raw = xs.shape[-1] if xs.ndim == 2 else None
@@ -119,19 +134,68 @@ def fit(key, xs, ys, icq_cfg, *, embed_kind="linear", num_classes=10,
             "-way 'data' axis for the sharded epoch driver")
     step = joint.make_train_step(icq_cfg, state["embed_apply"], state["opt"],
                                  mode, state["pq_mask"], tau, axis_name=axis)
+    if ckpt_dir is not None:
+        donate = False        # restart replay needs pre-epoch buffers
     epoch_fn = compile_epoch(step, icq_cfg.d, mesh=mesh, donate=donate)
 
-    params, opt_state = state["params"], state["opt_state"]
-    var_state = state["var_state"]
-    rng = k_shuffle
-    for ep in range(epochs):
-        rng, k = jax.random.split(rng)
-        xb, yb = epoch_batches(k, xs, ys, bs)
-        params, opt_state, var_state, mets = epoch_fn(params, opt_state,
-                                                      xb, yb)
-        if verbose:
-            print(f"  epoch {ep}: " + " ".join(
-                f"{name}={float(v):.4f}" for name, v in mets.items()))
+    if ckpt_dir is not None:
+        params, var_state = _supervised_loop(
+            ckpt_dir, epoch_fn, state, k_shuffle, xs, ys, bs, epochs,
+            save_every=save_every, max_restarts=max_restarts,
+            heartbeat=heartbeat, fault_hook=fault_hook, verbose=verbose)
+    else:
+        params, opt_state = state["params"], state["opt_state"]
+        var_state = state["var_state"]
+        rng = k_shuffle
+        for ep in range(epochs):
+            rng, k = jax.random.split(rng)
+            xb, yb = epoch_batches(k, xs, ys, bs)
+            params, opt_state, var_state, mets = epoch_fn(params, opt_state,
+                                                          xb, yb)
+            if verbose:
+                print(f"  epoch {ep}: " + " ".join(
+                    f"{name}={float(v):.4f}" for name, v in mets.items()))
     return joint.finalize(params, state["embed_apply"], var_state, icq_cfg,
                           xs, mode=mode, encode_batch=encode_batch,
                           encode_backend=encode_backend)
+
+
+def _supervised_loop(ckpt_dir, epoch_fn, state, k_shuffle, xs, ys, bs,
+                     epochs, *, save_every, max_restarts, heartbeat,
+                     fault_hook, verbose):
+    """Run the epoch loop under ``TrainSupervisor`` (one supervisor
+    step == one epoch).  Returns (params, var_state) after the final
+    epoch — resumed or not, the state transitions are the ones the
+    plain loop would have made."""
+    import time
+
+    from repro.distributed import CheckpointManager, TrainSupervisor
+
+    sup = TrainSupervisor(CheckpointManager(ckpt_dir),
+                          save_every=save_every,
+                          max_restarts=max_restarts, async_save=False)
+
+    def step_fn(s, ep):
+        t0 = time.perf_counter()
+        rng, k = jax.random.split(s["rng"])
+        xb, yb = epoch_batches(k, xs, ys, bs)
+        params, opt_state, var_state, mets = epoch_fn(
+            s["params"], s["opt_state"], xb, yb)
+        jax.block_until_ready(params)
+        if heartbeat is not None:
+            heartbeat.beat(0, time.perf_counter() - t0)
+        if verbose:
+            print(f"  epoch {ep}: " + " ".join(
+                f"{name}={float(v):.4f}" for name, v in mets.items()))
+        # the supervisor's NaN quarantine reads 'loss'; the joint
+        # trainer calls its total 'total'
+        metrics = dict(mets)
+        metrics["loss"] = metrics.get("total", 0.0)
+        return ({"params": params, "opt_state": opt_state,
+                 "var_state": var_state, "rng": rng}, metrics)
+
+    state0 = {"params": state["params"], "opt_state": state["opt_state"],
+              "var_state": state["var_state"], "rng": k_shuffle}
+    final, _report = sup.run(state0, step_fn, epochs,
+                             fault_hook=fault_hook)
+    return final["params"], final["var_state"]

@@ -119,6 +119,40 @@ def test_supervisor_resume(tmp_path):
     assert float(state["params"]["w"]) == 44.0    # steps 4,5 applied
 
 
+def test_supervisor_restart_budget_exhausted(tmp_path):
+    """A permanent fault propagates once ``max_restarts`` is spent —
+    the supervisor never spins forever on a dead fleet."""
+    mgr = CheckpointManager(str(tmp_path))
+    sup = TrainSupervisor(mgr, save_every=1, max_restarts=2,
+                          async_save=False)
+    attempts = {"n": 0}
+
+    def fault_hook(step):
+        attempts["n"] += 1
+        raise RuntimeError("permanent node loss")
+
+    def step_fn(state, idx):
+        return state, {"loss": 0.1}
+
+    with pytest.raises(RuntimeError, match="permanent node loss"):
+        sup.run({"params": {"w": jnp.zeros(())}}, step_fn, 4,
+                fault_hook=fault_hook)
+    assert attempts["n"] == 3          # initial try + max_restarts
+
+
+def test_supervisor_always_writes_final_checkpoint(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    sup = TrainSupervisor(mgr, save_every=100, async_save=False)
+
+    def step_fn(state, idx):
+        return ({"params": {"w": state["params"]["w"] + 1.0}},
+                {"loss": 0.1})
+
+    sup.run({"params": {"w": jnp.zeros(())}}, step_fn, 3)
+    # save_every never fired, but the final state is still durable
+    assert 2 in mgr.all_steps()
+
+
 # -------------------------------------------------------------- heartbeat --
 
 def test_heartbeat_straggler_detection():
@@ -127,6 +161,20 @@ def test_heartbeat_straggler_detection():
         for h in range(4):
             mon.beat(h, 1.0 if h != 2 else 5.0)
     assert mon.stragglers() == [2]
+
+
+def test_heartbeat_window_trims_history():
+    mon = HeartbeatMonitor(num_hosts=1, window=8)
+    for i in range(50):
+        mon.beat(0, float(i))
+    assert len(mon._latency[0]) == 8
+    assert mon._latency[0][-1] == 49.0
+
+
+def test_heartbeat_no_beats_no_stragglers():
+    # median of an empty fleet must not divide by zero or flag anyone
+    mon = HeartbeatMonitor(num_hosts=3)
+    assert mon.stragglers() == [] and mon.fleet_median() == 0.0
 
 
 def test_heartbeat_dead_host():

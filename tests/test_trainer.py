@@ -170,6 +170,7 @@ def test_data_parallel_fit_matches_single_device():
     env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
     proc = subprocess.run([sys.executable, "-c", _DP_SCRIPT],
                           capture_output=True, text=True, env=env,
+                          timeout=600,
                           cwd=os.path.dirname(os.path.dirname(
                               os.path.abspath(__file__))))
     assert proc.returncode == 0, proc.stderr
