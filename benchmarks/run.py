@@ -1,10 +1,11 @@
 """Benchmark entry point: one section per paper figure + kernel
 microbenchmarks + the engine benchmarks for cross-PR perf tracking —
 batched search (``BENCH_search.json``), batched IVF
-(``BENCH_ivf.json``), quantized LUTs (``BENCH_lutq.json``), the tiled
-ICM encoding engine (``BENCH_encode.json``), and the scan-compiled
-trainer (``BENCH_train.json``) — plus the roofline table (if dry-run
-artifacts exist).  See docs/benchmarks.md for every ``--only`` target.
+(``BENCH_ivf.json``), quantized LUTs (``BENCH_lutq.json``), the 4-bit
+fast-scan crude pass (``BENCH_fastscan.json``), the tiled ICM encoding
+engine (``BENCH_encode.json``), and the scan-compiled trainer
+(``BENCH_train.json``) — plus the roofline table (if dry-run artifacts
+exist).  See docs/benchmarks.md for every ``--only`` target.
 
 Engine targets accept ``--config path.json`` (a ``repro.api.ICQConfig``,
 docs/api.md) pinning geometry and engine options, so a BENCH run is
@@ -17,6 +18,7 @@ reproducible from a checked-in config
         --config benchmarks/configs/bench_small.json
     PYTHONPATH=src python -m benchmarks.run --only ivf      # BENCH_ivf.json
     PYTHONPATH=src python -m benchmarks.run --only lutq     # BENCH_lutq.json
+    PYTHONPATH=src python -m benchmarks.run --only fastscan # BENCH_fastscan.json
     PYTHONPATH=src python -m benchmarks.run --only encode   # BENCH_encode.json
     PYTHONPATH=src python -m benchmarks.run --only train    # BENCH_train.json
     PYTHONPATH=src python -m benchmarks.run --only faults   # BENCH_faults.json
@@ -350,6 +352,163 @@ def lutq_bench(full: bool = False, *, out_path: str = "BENCH_lutq.json",
     return out
 
 
+def fastscan_bench(full: bool = False, *,
+                   out_path: str = "BENCH_fastscan.json",
+                   n: int = 100_000, nq: int = 64, K: int = 8, m: int = 16,
+                   num_fast: int = 2, topk: int = 50, d: int = 16,
+                   repeats: int = 9, pallas_n: int = 4096,
+                   pallas_nq: int = 8):
+    """4-bit fast-scan crude pass (``code_bits=4``, DESIGN.md §12) vs
+    the int8 and f32 crude passes on the jnp backend, written to
+    ``out_path``.
+
+    Geometry is pinned to ``m <= 16`` (nibble-addressable codebooks).
+    The crude rows time exactly the phase-1 work — LUT build
+    (+ calibration where quantized) and the fast-masked LUT sum over
+    all n points; the 4-bit row reads half the code bytes and gathers
+    per *packed byte* from a paired 256-entry table, which is the
+    bandwidth win being tracked (acceptance gate: >= 1.3x vs the int8
+    8-bit crude pass).  recall@10 is measured against the full f32 ADC
+    ranking for the f32/8-bit and int8/4-bit two-step engines
+    (acceptance gate: delta <= 0.01), and code-memory bytes per row are
+    reported for both layouts.
+    """
+    from repro.core.encode import pack_nibbles
+    from repro.core.search import adc_search, recall_at, two_step_search
+    from repro.data.synthetic import make_synthetic_index
+    from repro.index.base import (build_lut, lut_sum, nibble_lut_sum,
+                                  quantize_lut)
+
+    if full:
+        n, nq = max(n, 1_000_000), max(nq, 256)
+    key = jax.random.PRNGKey(0)
+    codes, C, structure = make_synthetic_index(key, n, d=d, K=K, m=m,
+                                               num_fast=num_fast)
+    queries = jax.random.normal(jax.random.fold_in(key, 2), (nq, d))
+    fast = structure.fast_mask
+    codes_i32 = codes.astype(jnp.int32)
+    packed = pack_nibbles(codes, K)
+    gt = adc_search(queries, codes, C, 10, backend="jnp",
+                    query_chunk=32).indices
+
+    def timed(fn, *args):
+        out = fn(*args)                          # compile + warm
+        jax.block_until_ready(out)
+        ts = []
+        for _ in range(repeats):
+            t0 = time.time()
+            jax.block_until_ready(fn(*args))
+            ts.append(time.time() - t0)
+        # min-of-repeats: see ivf_bench (cpu-share throttled container)
+        return out, min(ts)
+
+    @jax.jit
+    def crude_f32(q):
+        return lut_sum(build_lut(q, C), codes_i32, fast)
+
+    @jax.jit
+    def crude_int8(q):
+        return lut_sum(quantize_lut(build_lut(q, C), fast), codes_i32, fast)
+
+    @jax.jit
+    def crude_nib(q):
+        return nibble_lut_sum(quantize_lut(build_lut(q, C), fast), packed,
+                              K, cb_mask=fast)
+
+    # interleave all three crude variants and take medians of paired
+    # ratios (see lutq_bench: common-mode cpu-share interference cancels
+    # inside each round on this throttled container); per-row latencies
+    # still report min-of-repeats like the other benches
+    ref = crude_f32(queries)
+    out8 = crude_int8(queries)
+    out4 = crude_nib(queries)
+    jax.block_until_ready((ref, out8, out4))     # compile + warm all
+    ts_f, ts_q, ts_n = [], [], []
+    for _ in range(3 * repeats):
+        t0 = time.time()
+        jax.block_until_ready(crude_f32(queries))
+        ts_f.append(time.time() - t0)
+        t0 = time.time()
+        jax.block_until_ready(crude_int8(queries))
+        ts_q.append(time.time() - t0)
+        t0 = time.time()
+        jax.block_until_ready(crude_nib(queries))
+        ts_n.append(time.time() - t0)
+    dt_f, dt_q, dt_n = min(ts_f), min(ts_q), min(ts_n)
+
+    def median_ratio(num, den):
+        r = sorted(a / b for a, b in zip(num, den))
+        return r[len(r) // 2]
+
+    speedup_4bit_vs_int8 = median_ratio(ts_q, ts_n)
+    speedup_4bit_vs_f32 = median_ratio(ts_f, ts_n)
+    # the 4-bit kernel must be *bitwise* the int8 crude pass (same
+    # calibration, same dequant expression; DESIGN.md §12)
+    bitwise_4bit_vs_int8 = bool(jnp.all(out4 == out8))
+    rows = [
+        dict(stage="crude", variant="f32", n=n, nq=nq,
+             search_us=round(dt_f / nq * 1e6, 2)),
+        dict(stage="crude", variant="int8", n=n, nq=nq,
+             search_us=round(dt_q / nq * 1e6, 2),
+             max_abs_err=round(float(jnp.max(jnp.abs(out8 - ref))), 5)),
+        dict(stage="crude", variant="int8_4bit", n=n, nq=nq,
+             search_us=round(dt_n / nq * 1e6, 2),
+             bitwise_match_int8=bitwise_4bit_vs_int8),
+    ]
+
+    recalls = {}
+    for label, kw in (("f32_8bit", dict(lut_dtype="f32")),
+                      ("int8_4bit", dict(lut_dtype="int8", code_bits=4))):
+        cds = packed if kw.get("code_bits") == 4 else codes
+        res, dt = timed(jax.jit(
+            lambda q, c=cds, k=dict(kw): two_step_search(
+                q, c, C, structure, topk, backend="jnp", **k)), queries)
+        recalls[label] = float(recall_at(res.indices[:, :10], gt))
+        rows.append(dict(stage="two_step", variant=label, n=n, nq=nq,
+                         search_us=round(dt / nq * 1e6, 2),
+                         recall10=round(recalls[label], 4),
+                         avg_ops=round(float(res.avg_ops), 4),
+                         pass_rate=round(float(res.pass_rate), 4)))
+    # pallas interpret: reduced size, correctness/overhead tracking only
+    packed_s, codes_s, q_s = packed[:pallas_n], codes[:pallas_n], \
+        queries[:pallas_nq]
+    res_j = two_step_search(q_s, packed_s, C, structure, topk,
+                            backend="jnp", lut_dtype="int8", code_bits=4)
+    res_p, dt_p = timed(lambda q: two_step_search(
+        q, packed_s, C, structure, topk, backend="pallas", interpret=True,
+        lut_dtype="int8", code_bits=4), q_s)
+    rows.append(dict(stage="two_step_pallas_interpret", variant="int8_4bit",
+                     n=pallas_n, nq=pallas_nq,
+                     search_us=round(dt_p / pallas_nq * 1e6, 2),
+                     pass_rate=round(float(res_p.pass_rate), 4),
+                     indices_match_jnp=bool(
+                         jnp.all(res_p.indices == res_j.indices))))
+
+    out = dict(topk=topk, K=K, m=m, num_fast=num_fast, d=d, rows=rows,
+               bytes_per_row_8bit=K,
+               bytes_per_row_4bit=(K + 1) // 2,
+               speedup_crude_4bit_vs_int8=round(speedup_4bit_vs_int8, 3),
+               speedup_crude_4bit_vs_f32=round(speedup_4bit_vs_f32, 3),
+               bitwise_crude_4bit_vs_int8=bitwise_4bit_vs_int8,
+               recall10_f32=round(recalls["f32_8bit"], 4),
+               recall10_int8_4bit=round(recalls["int8_4bit"], 4),
+               recall10_delta=round(abs(recalls["f32_8bit"]
+                                        - recalls["int8_4bit"]), 4))
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+    for r in rows:
+        print(f"fastscan,{r['stage']},{r['variant']},n={r['n']},"
+              f"nq={r['nq']},recall10={r.get('recall10', '')},"
+              f"{r['search_us']}", flush=True)
+    print(f"# fastscan crude 4bit-vs-int8 speedup "
+          f"{out['speedup_crude_4bit_vs_int8']}x (vs f32 "
+          f"{out['speedup_crude_4bit_vs_f32']}x, bitwise "
+          f"{bitwise_4bit_vs_int8}, recall@10 delta "
+          f"{out['recall10_delta']}, bytes/row {out['bytes_per_row_8bit']}"
+          f"->{out['bytes_per_row_4bit']}) -> {out_path}", flush=True)
+    return out
+
+
 def encode_bench(full: bool = False, *, out_path: str = "BENCH_encode.json",
                  n: int = 100_000, d: int = 16, K: int = 8, m: int = 256,
                  iters: int = 3, chunk: int = 8192, repeats: int = 3,
@@ -614,6 +773,7 @@ def config_overrides(cfg, target: str):
                     **({"query_chunk": s.query_chunk}
                        if s.query_chunk is not None else {})),
         "lutq": dict(geom, topk=s.topk),
+        "fastscan": dict(geom, topk=s.topk),
         "encode": dict(d=t.d, K=t.num_codebooks, m=t.codebook_size,
                        iters=e.icm_iters, chunk=e.chunk,
                        **({"point_chunk": e.point_chunk}
@@ -623,7 +783,7 @@ def config_overrides(cfg, target: str):
     return table.get(target)
 
 
-CONFIG_TARGETS = ("search", "ivf", "lutq", "encode", "train")
+CONFIG_TARGETS = ("search", "ivf", "lutq", "fastscan", "encode", "train")
 
 FIGURES = {
     "fig1": fig1_synthetic_pq.run,
@@ -636,6 +796,7 @@ FIGURES = {
     "search": search_bench,
     "ivf": ivf_bench,
     "lutq": lutq_bench,
+    "fastscan": fastscan_bench,
     "encode": encode_bench,
     "train": train_bench,
     "faults": faults_bench,

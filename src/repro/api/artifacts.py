@@ -114,6 +114,10 @@ def _index_opts(config: ICQConfig) -> Dict[str, Any]:
         opts["block_n"] = serve.block_n
     if index.kind != "flat":
         opts["refine_cap"] = index.refine_cap
+    # configs written before code_bits existed load with the 8-bit
+    # default (from_dict fills missing fields), so old artifacts keep
+    # serving byte-packed codes unchanged
+    opts["code_bits"] = index.code_bits
     return opts
 
 
@@ -215,9 +219,17 @@ class Artifacts:
                 f"cannot serialize index type {type(idx).__name__}; "
                 "supported: FlatADC, TwoStep, IVFTwoStep (shard clones "
                 "are serving views — save the unsharded source index)")
+        code_bits = int(getattr(idx, "code_bits", 8))
+        if code_bits != self.config.index.code_bits:
+            raise ArtifactError(
+                f"index.code_bits={code_bits} on the index being saved "
+                f"disagrees with the config's "
+                f"index.code_bits={self.config.index.code_bits}; the "
+                "embedded config describes the reload, so align them")
         arrays["index/codes"] = np.asarray(idx.codes)
         arrays["index/C"] = np.asarray(idx.C)
-        meta: Dict[str, Any] = {"kind": kind, "n": int(idx.codes.shape[0])}
+        meta: Dict[str, Any] = {"kind": kind, "n": int(idx.codes.shape[0]),
+                                "code_bits": code_bits}
         if kind != "flat":
             for k, a in _structure_arrays(idx.structure).items():
                 arrays[f"index/{k}"] = a
@@ -385,6 +397,14 @@ class Artifacts:
             raise ArtifactError(
                 f"manifest index kind {kind!r} disagrees with the embedded "
                 f"config's index.kind={config.index.kind!r}")
+        # manifests written before code_bits existed store byte-packed
+        # codes: the 8-bit default on both sides keeps them loading
+        stored_bits = int(meta.get("code_bits", 8))
+        if stored_bits != config.index.code_bits:
+            raise ArtifactError(
+                f"index.code_bits cannot be overridden on load (artifacts "
+                f"store the {stored_bits}-bit packed layout); re-encode "
+                "and re-save to change the code width")
         codes = jnp.asarray(arrays["index/codes"])
         C = jnp.asarray(arrays["index/C"])
         opts = _index_opts(config)

@@ -42,6 +42,7 @@ CHOICES = {
     "train.embed": ("linear", "cnn", "identity"),
     "encode.backend": ("auto", "jnp", "pallas"),
     "index.kind": ("flat", "two-step", "ivf"),
+    "index.code_bits": (8, 4),
     "serve.backend": ("auto", "jnp", "pallas"),
     "serve.lut_dtype": ("f32", "int8"),
 }
@@ -130,6 +131,7 @@ class IndexConfig:
     n_probe: int = 8             # ivf probed cells per query
     kmeans_iters: int = 20       # ivf coarse k-means iterations
     refine_cap: Optional[int] = None      # static survivor compaction
+    code_bits: int = 8           # 8 | 4 (nibble-packed fast-scan, §12)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -383,6 +385,12 @@ def _validate(cfg: "ICQConfig"):
         raise ConfigError(
             f"index.n_probe={cfg.index.n_probe} cannot exceed "
             f"index.n_lists={cfg.index.n_lists}")
+    if cfg.index.code_bits == 4 and cfg.train.codebook_size > 16:
+        raise ConfigError(
+            f"index.code_bits=4 requires "
+            f"train.codebook_size={cfg.train.codebook_size} <= 16 (4-bit "
+            "codes address at most 16 codewords per codebook); set "
+            "train.codebook_size <= 16 or keep index.code_bits=8")
     if cfg.train.embed == "cnn" and (cfg.train.img_hw is None
                                      or cfg.train.channels is None):
         raise ConfigError(

@@ -355,13 +355,31 @@ def build_index(codes, C, structure, *, index_cfg: IndexConfig,
 
     ``emb_db`` (the embeddings the codes encode) is required for
     ``index_cfg.kind == "ivf"``; ``key`` seeds its coarse k-means.
+
+    ``index_cfg.code_bits == 4`` stores the database nibble-packed
+    (DESIGN.md §12): byte-per-code ``codes`` arriving here (the
+    ``encode_database`` output) are packed two-per-byte before
+    device_put; codes already in the (n, ceil(K/2)) layout are taken
+    as-is, so a loaded artifact round-trips bitwise.
     """
-    from repro.index import make_index
+    from repro.core.encode import pack_nibbles
+    from repro.index import make_index, resolve_code_bits
+
+    code_bits = resolve_code_bits(index_cfg.code_bits)
+    if code_bits == 4:
+        if C.shape[1] > 16:
+            raise ConfigError(
+                f"index.code_bits=4 requires codebook_size <= 16 "
+                f"codewords (4-bit codes), got m={C.shape[1]}; set "
+                "train.codebook_size <= 16 or keep index.code_bits=8")
+        if codes.shape[-1] == C.shape[0] and C.shape[0] > 1:
+            codes = pack_nibbles(codes, C.shape[0])
 
     opts: Dict[str, Any] = dict(topk=serve_cfg.topk,
                                 backend=serve_cfg.backend,
                                 query_chunk=serve_cfg.query_chunk,
-                                lut_dtype=serve_cfg.lut_dtype)
+                                lut_dtype=serve_cfg.lut_dtype,
+                                code_bits=code_bits)
     # None = keep the index class's own tile defaults (they differ
     # between the flat engines and the IVF slab kernels)
     if serve_cfg.block_q is not None:
@@ -387,6 +405,7 @@ def build_ann_engine(codes, C, structure, *, topk: int = 50,
                      query_chunk=None, index: str = "two-step", mesh=None,
                      emb_db=None, n_lists: int = 64, n_probe: int = 8,
                      refine_cap=None, key=None, lut_dtype: str = "f32",
+                     code_bits: int = 8,
                      resilience: Optional[ResilienceConfig] = None,
                      fault_injector=None):
     """Batched ANN serving entry: returns an ``AnnEngine`` — call it
@@ -408,15 +427,18 @@ def build_ann_engine(codes, C, structure, *, topk: int = 50,
     the unified dispatch: "pallas" fused kernels on TPU, vectorized jnp
     elsewhere.  ``lut_dtype`` ("f32" | "int8") selects the crude-pass
     LUT precision (DESIGN.md §8; honored by the sharded engines too).
+    ``code_bits`` (8 | 4) selects the code storage width — 4 serves the
+    fast-scan nibble-packed layout (DESIGN.md §12, needs m <= 16).
     ``resilience`` / ``fault_injector`` configure the engine's failure
     behavior (docs/robustness.md).
     """
     # n_lists/n_probe only describe an IVF; for the flat kinds they were
     # historically ignored, so keep them out of the validated config
     index_cfg = (IndexConfig(kind=index, n_lists=n_lists, n_probe=n_probe,
-                             refine_cap=refine_cap)
+                             refine_cap=refine_cap, code_bits=code_bits)
                  if index == "ivf"
-                 else IndexConfig(kind=index, refine_cap=refine_cap))
+                 else IndexConfig(kind=index, refine_cap=refine_cap,
+                                  code_bits=code_bits))
     serve_cfg = ServeConfig(topk=topk, backend=backend, lut_dtype=lut_dtype,
                             query_chunk=query_chunk, block_q=block_q,
                             block_n=block_n)

@@ -162,3 +162,41 @@ def pack_codes(codes, m: int):
 
 def unpack_codes(codes):
     return codes.astype(jnp.int32)
+
+
+def pack_nibbles(codes, K: int):
+    """Pack 4-bit codes two-per-byte along the codebook axis (the
+    ``code_bits=4`` storage format, DESIGN.md §12).
+
+    codes: (..., K) integer codes with every value < 16 -> (..., ceil(K/2))
+    uint8 where byte kp holds codebook 2*kp in its low nibble and
+    codebook 2*kp+1 in its high nibble.  Odd K is padded with one
+    sentinel column (value 0) in the final byte's high nibble; the
+    sentinel never reaches ``lut_sum`` — ``unpack_nibbles`` slices it
+    off, and the fast-scan kernels give it an all-zero LUT column.
+
+    The round trip ``unpack_nibbles(pack_nibbles(c, K), K) == c`` is
+    exact for any valid codes, mirroring the uint8/uint16
+    ``pack_codes``/``unpack_codes`` contract.
+    """
+    if K != codes.shape[-1]:
+        raise ValueError(f"pack_nibbles: codes have {codes.shape[-1]} "
+                         f"codebooks, got K={K}")
+    c = codes.astype(jnp.int32)
+    if K % 2:
+        pad = [(0, 0)] * (c.ndim - 1) + [(0, 1)]
+        c = jnp.pad(c, pad)                       # sentinel column = 0
+    lo = c[..., 0::2]
+    hi = c[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_nibbles(packed, K: int):
+    """Inverse of ``pack_nibbles``: (..., ceil(K/2)) uint8 -> (..., K)
+    int32, dropping the sentinel column when K is odd."""
+    p = packed.astype(jnp.int32)
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    codes = jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1],
+                                                 2 * p.shape[-1])
+    return codes[..., :K]

@@ -15,10 +15,13 @@ artifacts, ``load_ann_engine`` — is ``repro.api`` (docs/api.md), which
 re-exports the names most callers need (``make_index``,
 ``SearchResult``, the three index classes) at the package root.
 """
-from repro.index.base import (Index, LUT_DTYPES, QuantizedLUT, SearchResult,
-                              build_lut, chunked_over_queries, exact_search,
-                              lut_sum, mean_average_precision, quantize_lut,
-                              recall_at, resolve_backend, resolve_lut_dtype)
+from repro.index.base import (CODE_BITS, Index, LUT_DTYPES, QuantizedLUT,
+                              SearchResult, build_lut, chunked_over_queries,
+                              exact_search, fastscan_kernel_operands,
+                              lut_sum, mean_average_precision,
+                              nibble_lut_sum, pad_luts_even, quantize_lut,
+                              recall_at, resolve_backend, resolve_code_bits,
+                              resolve_lut_dtype)
 from repro.index.flat import (FlatADC, TwoStep, adc_search, two_step_search,
                               two_step_search_compact)
 from repro.index.ivf import (IVFIndex, IVFTwoStep, build_ivf, ivf_assign,
@@ -46,11 +49,13 @@ def make_index(kind: str, codes, C, structure=None, **opts):
 
 __all__ = [
     "Index", "SearchResult", "FlatADC", "TwoStep", "IVFTwoStep",
-    "IVFIndex", "INDEX_KINDS", "LUT_DTYPES", "QuantizedLUT", "make_index",
+    "IVFIndex", "INDEX_KINDS", "CODE_BITS", "LUT_DTYPES", "QuantizedLUT",
+    "make_index",
     "adc_search", "two_step_search", "two_step_search_compact",
     "ivf_two_step_search", "build_ivf", "ivf_assign", "ivf_extend",
     "ivf_list_codes", "build_lut",
-    "lut_sum", "quantize_lut", "exact_search", "chunked_over_queries",
-    "resolve_backend", "resolve_lut_dtype", "mean_average_precision",
-    "recall_at",
+    "lut_sum", "nibble_lut_sum", "pad_luts_even",
+    "fastscan_kernel_operands", "quantize_lut", "exact_search",
+    "chunked_over_queries", "resolve_backend", "resolve_code_bits",
+    "resolve_lut_dtype", "mean_average_precision", "recall_at",
 ]

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 LUT_DTYPES = ("f32", "int8")
+CODE_BITS = (8, 4)
 
 
 class SearchResult(NamedTuple):
@@ -108,6 +109,14 @@ def resolve_lut_dtype(lut_dtype: str) -> str:
         raise ValueError(f"unknown lut_dtype {lut_dtype!r}; "
                          f"expected one of {LUT_DTYPES}")
     return lut_dtype
+
+
+def resolve_code_bits(code_bits) -> int:
+    """Validate the ``code_bits`` storage option (8 | 4, DESIGN.md §12)."""
+    if code_bits not in CODE_BITS:
+        raise ValueError(f"unknown code_bits {code_bits!r}; "
+                         f"expected one of {CODE_BITS}")
+    return code_bits
 
 
 def quantize_lut(lut, cb_mask=None) -> QuantizedLUT:
@@ -271,6 +280,91 @@ def _lut_sum_quantized(qlut: QuantizedLUT, codes, cb_mask=None):
     parts = jnp.take_along_axis(q, idx, axis=-1)             # (..., K, n)
     acc = jnp.sum(parts.astype(acc_dt), axis=-2)
     return dequantize_acc(qlut, acc, cb_mask)
+
+
+def pad_luts_even(luts):
+    """Zero-pad the codebook axis of ``luts`` ((..., K, m) f32 or int8)
+    to even K — the sentinel codebook of the nibble format (DESIGN.md
+    §12).  Its entries are all zero, so a sentinel nibble (always code
+    0) contributes nothing to any sum; bias/offset accounting keeps
+    counting the *real* codebooks only."""
+    K = luts.shape[-2]
+    if K % 2 == 0:
+        return luts
+    pad = [(0, 0)] * (luts.ndim - 2) + [(0, 1), (0, 0)]
+    return jnp.pad(luts, pad)
+
+
+def fastscan_kernel_operands(luts, cb_mask=None):
+    """Calibrate ``luts`` ((nq, K, m) f32, m <= 16) into the fast-scan
+    kernels' operand triple: ``(q_flat (nq, Keven*m) int8, scale (nq,),
+    offset (nq,))`` where Keven = K rounded up to even with an all-zero
+    sentinel codebook.  scale/offset are identical to
+    ``quantized_kernel_operands`` (the sentinel never enters the bias
+    count), so the dequant expression — and therefore the ranking —
+    matches the 8-bit int8 path bitwise."""
+    qlut = quantize_lut(luts, cb_mask)
+    nq, K, m = qlut.q.shape
+    q_pad = pad_luts_even(qlut.q)
+    return (q_pad.reshape(nq, -1), qlut.scale,
+            _bias_count(K, cb_mask) * qlut.bias)
+
+
+def nibble_lut_sum(lut, packed, K: int, cb_mask=None):
+    """``lut_sum`` over nibble-packed codes (``code_bits=4``,
+    DESIGN.md §12).
+
+    packed: (n, ceil(K/2)) or (nq, t, ceil(K/2)) uint8 from
+    ``pack_nibbles``; K is the real codebook count (the sentinel column
+    of odd K never contributes).
+
+    f32 ``lut``: unpack and defer to ``lut_sum`` — values identical to
+    the 8-bit path.  ``QuantizedLUT`` with shared database codes: the
+    fast path — a per-query *paired-byte* table ``pair[kp, b] =
+    q[2kp, b & 15] + q[2kp+1, b >> 4]`` ((nq, ceil(K/2), 256) int16,
+    exact: two int8 entries always fit int16) turns the K-gather scan
+    into a ceil(K/2)-gather scan directly over the packed bytes.  The
+    integer accumulator equals the unpack-then-``lut_sum`` accumulator
+    term for term, and the final ``dequantize_acc`` rescale is the same
+    expression in the same order, so jnp / pallas / sharded rankings
+    stay bitwise-identical across code_bits.
+    """
+    from repro.core.encode import unpack_nibbles
+    if not isinstance(lut, QuantizedLUT):
+        return lut_sum(lut, unpack_nibbles(packed, K), cb_mask)
+    q = lut.q
+    if q.ndim != 3 or packed.ndim != 2:
+        # per-query candidate codes (small t) or single-query tables:
+        # the widened path is already cheap there
+        return _lut_sum_quantized(lut, unpack_nibbles(packed, K), cb_mask)
+    nq, Kq, m = q.shape
+    if Kq != K:
+        raise ValueError(f"nibble_lut_sum: table has {Kq} codebooks, "
+                         f"got K={K}")
+    if m > 16:
+        raise ValueError(f"nibble_lut_sum needs m <= 16 codewords "
+                         f"(4-bit codes), got m={m}")
+    q_pad = pad_luts_even(q)
+    if m < 16:
+        # pad the codeword axis to 16 so every nibble value indexes
+        # in-range (codes < m, so pad entries are never selected)
+        q_pad = jnp.pad(q_pad, ((0, 0), (0, 0), (0, 16 - m)))
+    lo_q = q_pad[:, 0::2, :].astype(jnp.int16)           # (nq, Kp, 16)
+    hi_q = q_pad[:, 1::2, :].astype(jnp.int16)
+    pair = (hi_q[:, :, :, None]
+            + lo_q[:, :, None, :]).reshape(nq, -1, 256)  # (nq, Kp, 256)
+    acc_dt = _int_acc_dtype(K)
+    codes = packed.astype(jnp.int32)
+
+    def step(acc, pair_and_codes):
+        pair_kp, codes_kp = pair_and_codes               # (nq,256), (n,)
+        return acc + jnp.take(pair_kp, codes_kp,
+                              axis=1).astype(acc_dt), None
+
+    acc0 = jnp.zeros((nq, codes.shape[0]), acc_dt)
+    acc, _ = jax.lax.scan(step, acc0,
+                          (jnp.swapaxes(pair, 0, 1), codes.T))
+    return dequantize_acc(lut, acc, cb_mask)
 
 
 # ------------------------------------------------------------- dispatch ----

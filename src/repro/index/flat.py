@@ -49,26 +49,50 @@ import jax
 import jax.numpy as jnp
 
 from repro.index.base import (SearchResult, build_lut, chunked_over_queries,
-                              lut_sum, quantize_lut,
+                              fastscan_kernel_operands, lut_sum,
+                              nibble_lut_sum, pad_luts_even, quantize_lut,
                               quantized_kernel_operands, resolve_backend,
-                              resolve_lut_dtype)
+                              resolve_code_bits, resolve_lut_dtype)
 
 
 # -------------------------------------------------------------- engines ----
 
+def _check_fastscan_geometry(code_bits: int, m: int):
+    """``code_bits=4`` stores two codes per byte, so every code must be
+    a nibble: m <= 16 codewords per codebook (DESIGN.md §12)."""
+    code_bits = resolve_code_bits(code_bits)
+    if code_bits == 4 and m > 16:
+        raise ValueError(f"code_bits=4 requires codebook_size <= 16 "
+                         f"codewords (4-bit codes), got m={m}")
+    return code_bits
+
+
+def _widen_codes(codes, K: int, code_bits: int):
+    """Stored codes -> int32 (n, K) gather indices: plain widening for
+    byte codes, shift/mask nibble unpack (sentinel column dropped) for
+    ``code_bits=4``."""
+    if code_bits == 4:
+        from repro.core.encode import unpack_nibbles
+        return unpack_nibbles(codes, K)
+    return codes.astype(jnp.int32)
+
 def adc_search(queries, codes, C, topk: int, *, backend: str = "auto",
                block_q: int = 64, block_n: int = 512, interpret=None,
-               query_chunk: Optional[int] = None, lut_dtype: str = "f32"):
+               query_chunk: Optional[int] = None, lut_dtype: str = "f32",
+               code_bits: int = 8):
     """Baseline one-step ADC: full K-codebook LUT sum for every point,
     batched over the whole query block.
 
-    queries (nq, d) f32; codes (n, K) packed int; C (K, m, d) f32.
-    ``lut_dtype="int8"`` quantizes the whole table per query (no fast
-    subset here — the one-step ranking itself becomes approximate, with
-    per-point error <= K * scale / 2)."""
+    queries (nq, d) f32; codes (n, K) packed int — nibble-packed
+    (n, ceil(K/2)) uint8 under ``code_bits=4`` (DESIGN.md §12); C
+    (K, m, d) f32.  ``lut_dtype="int8"`` quantizes the whole table per
+    query (no fast subset here — the one-step ranking itself becomes
+    approximate, with per-point error <= K * scale / 2)."""
     K, m = C.shape[0], C.shape[1]
     be = resolve_backend(backend)
     quantized = resolve_lut_dtype(lut_dtype) == "int8"
+    code_bits = _check_fastscan_geometry(code_bits, m)
+    nibble = code_bits == 4
 
     if be == "pallas":
         # codes stay packed into the kernel (widened per-tile in VMEM)
@@ -78,24 +102,31 @@ def adc_search(queries, codes, C, topk: int, *, backend: str = "auto",
             luts = build_lut(qs, C)
             nq = qs.shape[0]
             if quantized:
-                q_flat, scale, offset = quantized_kernel_operands(luts)
+                q_flat, scale, offset = (
+                    fastscan_kernel_operands(luts) if nibble
+                    else quantized_kernel_operands(luts))
                 _, vals, ids = ops.batched_crude_topk(
                     codes, q_flat, topk,
                     block_q=block_q, block_n=block_n, interpret=interpret,
-                    want_crude=False, lut_scale=scale, lut_offset=offset)
+                    want_crude=False, lut_scale=scale, lut_offset=offset,
+                    code_bits=code_bits)
             else:
+                lut_flat = (pad_luts_even(luts) if nibble
+                            else luts).reshape(nq, -1)
                 _, vals, ids = ops.batched_crude_topk(
-                    codes, luts.reshape(nq, K * m), topk,
+                    codes, lut_flat, topk,
                     block_q=block_q, block_n=block_n, interpret=interpret,
-                    want_crude=False)
+                    want_crude=False, code_bits=code_bits)
             return ids, vals
     else:
-        codes = codes.astype(jnp.int32)              # widen packed codes
+        if not nibble:
+            codes = codes.astype(jnp.int32)          # widen packed codes
 
         def one_block(qs):
             luts = build_lut(qs, C)                  # (nq,K,m)
             lut = quantize_lut(luts) if quantized else luts
-            dist = lut_sum(lut, codes)               # (nq,n)
+            dist = (nibble_lut_sum(lut, codes, K) if nibble
+                    else lut_sum(lut, codes))        # (nq,n)
             neg, ids = jax.lax.top_k(-dist, topk)
             return ids, -neg
 
@@ -103,7 +134,8 @@ def adc_search(queries, codes, C, topk: int, *, backend: str = "auto",
     return SearchResult(idx, vals, jnp.asarray(float(K)), jnp.asarray(1.0))
 
 
-def _eq2_passed(luts, codes, crude, topk: int, sigma, fast=None):
+def _eq2_passed(luts, codes, crude, topk: int, sigma, fast=None,
+                code_bits: int = 8):
     """Eq. 2 margin test, shared by the jnp engines: bootstrap the
     neighbor list from the crude top-k, rank it by full distance; the
     threshold compares *crude vs crude of the furthest list element*
@@ -115,6 +147,8 @@ def _eq2_passed(luts, codes, crude, topk: int, sigma, fast=None):
     identical thresholds under ``lut_dtype="int8"``."""
     neg_c, cand = jax.lax.top_k(-crude, topk)            # (nq,topk)
     cand_codes = jnp.take(codes, cand, axis=0)           # (nq,topk,K)
+    if code_bits == 4:
+        cand_codes = _widen_codes(cand_codes, luts.shape[1], code_bits)
     if fast is None:
         full_cand = lut_sum(luts, cand_codes)            # (nq,topk)
     else:
@@ -131,35 +165,47 @@ def _crude_tables(luts, fast, quantized: bool):
 
 
 def _two_step_block_jnp(qs, codes, C, fast, sigma, topk: int,
-                        quantized: bool = False):
+                        quantized: bool = False, code_bits: int = 8):
     """Vectorized two-step over one query block.  Returns
     (idx (nq,topk), dist (nq,topk), passed_frac (nq,))."""
+    nibble = code_bits == 4
+    K = C.shape[0]
     luts = build_lut(qs, C)                              # (nq,K,m)
-    crude = lut_sum(_crude_tables(luts, fast, quantized), codes, fast)
+    ct = _crude_tables(luts, fast, quantized)
+    crude = (nibble_lut_sum(ct, codes, K, fast) if nibble
+             else lut_sum(ct, codes, fast))
     passed = _eq2_passed(luts, codes, crude, topk, sigma,
-                         fast if quantized else None)
+                         fast if quantized else None, code_bits)
     # refine passers only; pruned points are excluded from the ranking
-    slow = lut_sum(luts, codes, ~fast)
+    slow = (nibble_lut_sum(luts, codes, K, ~fast) if nibble
+            else lut_sum(luts, codes, ~fast))
     ranked = jnp.where(passed, crude + slow, jnp.inf)
     neg, idx = jax.lax.top_k(-ranked, topk)
     return idx, -neg, jnp.mean(passed.astype(jnp.float32), axis=1)
 
 
 def _two_step_block_compact(qs, codes, C, fast, sigma, topk: int,
-                            refine_cap: int, quantized: bool = False):
+                            refine_cap: int, quantized: bool = False,
+                            code_bits: int = 8):
     """Two-step with the static survivor compaction: the refine_cap best
     crude survivors are gathered and refined by full LUT sum (always
     exact f32 — under ``lut_dtype="int8"`` quantization only affects
     which points survive and their selection order)."""
+    nibble = code_bits == 4
+    K = C.shape[0]
     luts = build_lut(qs, C)
-    crude = lut_sum(_crude_tables(luts, fast, quantized), codes, fast)
+    ct = _crude_tables(luts, fast, quantized)
+    crude = (nibble_lut_sum(ct, codes, K, fast) if nibble
+             else lut_sum(ct, codes, fast))
     passed = _eq2_passed(luts, codes, crude, topk, sigma,
-                         fast if quantized else None)
+                         fast if quantized else None, code_bits)
     # compact: best-crude survivors first, capped
     masked = jnp.where(passed, crude, jnp.inf)
     neg_s, surv = jax.lax.top_k(-masked, refine_cap)
     valid = jnp.isfinite(-neg_s)
     surv_codes = jnp.take(codes, surv, axis=0)           # (nq,cap,K)
+    if nibble:
+        surv_codes = _widen_codes(surv_codes, K, code_bits)
     full_surv = lut_sum(luts, surv_codes)
     ranked = jnp.where(valid, full_surv, jnp.inf)
     neg, pos = jax.lax.top_k(-ranked, topk)
@@ -169,30 +215,40 @@ def _two_step_block_compact(qs, codes, C, fast, sigma, topk: int,
 
 def _two_step_pallas(queries, codes, C, fast, sigma, topk: int,
                      block_q: int, block_n: int, interpret,
-                     quantized: bool = False):
+                     quantized: bool = False, code_bits: int = 8):
     """Fused-kernel two-step: phase-1 crude + candidate top-k in one
     kernel, tiny candidate refinement in jnp, fused phase-2 kernel.
     ``quantized`` feeds phase 1 int8 tables (dequantized in-kernel);
     phase 2 keeps the exact f32 slow tables either way."""
     from repro.kernels import ops
+    nibble = code_bits == 4
     nq = queries.shape[0]
     K, m = C.shape[0], C.shape[1]
     luts = build_lut(queries, C)                         # (nq,K,m)
     fast_f = fast.astype(luts.dtype)[None, :, None]
-    lut_slow = (luts * (1.0 - fast_f)).reshape(nq, K * m)
+    lut_slow = luts * (1.0 - fast_f)
+    lut_slow = (pad_luts_even(lut_slow) if nibble
+                else lut_slow).reshape(nq, -1)
 
     if quantized:
-        q_flat, scale, offset = quantized_kernel_operands(luts, fast)
+        q_flat, scale, offset = (
+            fastscan_kernel_operands(luts, fast) if nibble
+            else quantized_kernel_operands(luts, fast))
         crude, cand_vals, cand_idx = ops.batched_crude_topk(
             codes, q_flat, topk, block_q=block_q, block_n=block_n,
-            interpret=interpret, lut_scale=scale, lut_offset=offset)
+            interpret=interpret, lut_scale=scale, lut_offset=offset,
+            code_bits=code_bits)
     else:
-        lut_fast = (luts * fast_f).reshape(nq, K * m)
+        lut_fast = luts * fast_f
+        lut_fast = (pad_luts_even(lut_fast) if nibble
+                    else lut_fast).reshape(nq, -1)
         crude, cand_vals, cand_idx = ops.batched_crude_topk(
             codes, lut_fast, topk, block_q=block_q, block_n=block_n,
-            interpret=interpret)
+            interpret=interpret, code_bits=code_bits)
     # threshold bootstrap on the (nq, topk) candidate set — tiny, jnp
     cand_codes = jnp.take(codes, cand_idx, axis=0)       # (nq,topk,K)
+    if nibble:
+        cand_codes = _widen_codes(cand_codes, K, code_bits)
     full_cand = cand_vals + lut_sum(luts, cand_codes, ~fast)
     far = jnp.argmax(full_cand, axis=1)
     t = jnp.take_along_axis(cand_vals, far[:, None], axis=1)[:, 0]
@@ -200,7 +256,7 @@ def _two_step_pallas(queries, codes, C, fast, sigma, topk: int,
 
     dist, idx = ops.batched_refine_topk(
         codes, lut_slow, crude, thr, topk, block_q=block_q,
-        block_n=block_n, interpret=interpret)
+        block_n=block_n, interpret=interpret, code_bits=code_bits)
     passed_frac = jnp.mean((crude < thr[:, None]).astype(jnp.float32), axis=1)
     return idx, dist, passed_frac
 
@@ -210,13 +266,17 @@ def two_step_search(queries, codes, C, structure, topk: int, *,
                     block_n: int = 512, interpret=None,
                     query_chunk: Optional[int] = None,
                     refine_cap: Optional[int] = None,
-                    lut_dtype: str = "f32"):
+                    lut_dtype: str = "f32", code_bits: int = 8):
     """ICQ two-step search (eq. 2 crude test -> eq. 1 refinement),
     batched over the whole query block.
 
     structure:  core.icq.ICQStructure (xi, fast_mask, sigma).
     backend:    "jnp" | "pallas" | "auto" (pallas on TPU) — see module
                 docstring; both produce identical rankings.
+    code_bits:  8 (byte codes) | 4 (fast-scan mode, DESIGN.md §12:
+                ``codes`` arrive nibble-packed (n, ceil(K/2)) uint8,
+                requires codebook_size <= 16; rankings match the 8-bit
+                path bitwise for either lut_dtype).
     refine_cap: optional static survivor compaction (jnp engine): at
                 most this many best-crude survivors are refined.  Under
                 lut_dtype="f32", semantically identical to the dense
@@ -238,6 +298,10 @@ def two_step_search(queries, codes, C, structure, topk: int, *,
     kf = jnp.sum(fast.astype(jnp.float32))
     be = resolve_backend(backend)
     quantized = resolve_lut_dtype(lut_dtype) == "int8"
+    code_bits = _check_fastscan_geometry(code_bits, C.shape[1])
+    # nibble codes stay packed through both backends (the jnp blocks
+    # unpack on the fly; the kernels unpack in-VMEM)
+    codes_j = codes if code_bits == 4 else codes.astype(jnp.int32)
 
     if be == "pallas":
         if refine_cap is not None:
@@ -249,19 +313,20 @@ def two_step_search(queries, codes, C, structure, topk: int, *,
         fn = functools.partial(_two_step_pallas, codes=codes, C=C,
                                fast=fast, sigma=sigma, topk=topk,
                                block_q=block_q, block_n=block_n,
-                               interpret=interpret, quantized=quantized)
+                               interpret=interpret, quantized=quantized,
+                               code_bits=code_bits)
     elif refine_cap is not None:
         fn = functools.partial(_two_step_block_compact,
-                               codes=codes.astype(jnp.int32), C=C,
+                               codes=codes_j, C=C,
                                fast=fast, sigma=sigma, topk=topk,
                                refine_cap=min(max(refine_cap, topk),
                                               codes.shape[0]),
-                               quantized=quantized)
+                               quantized=quantized, code_bits=code_bits)
     else:
         fn = functools.partial(_two_step_block_jnp,
-                               codes=codes.astype(jnp.int32), C=C,
+                               codes=codes_j, C=C,
                                fast=fast, sigma=sigma, topk=topk,
-                               quantized=quantized)
+                               quantized=quantized, code_bits=code_bits)
     idx, dist, pf = chunked_over_queries(fn, queries, query_chunk)
     pass_rate = jnp.mean(pf)
     avg_ops = kf + pass_rate * (K - kf)
@@ -279,38 +344,45 @@ def two_step_search_compact(queries, codes, C, structure, topk: int,
 
 
 def _two_step_crude_block_jnp(qs, codes, C, fast, sigma, topk: int,
-                              quantized: bool = False):
+                              quantized: bool = False, code_bits: int = 8):
     """Crude-only ranking over one query block: the exact crude top-k
     the full jnp path bootstraps eq. 2 candidates from
     (``_eq2_passed``'s ``top_k(-crude, topk)``), with no refinement."""
     luts = build_lut(qs, C)
-    crude = lut_sum(_crude_tables(luts, fast, quantized), codes, fast)
+    ct = _crude_tables(luts, fast, quantized)
+    crude = (nibble_lut_sum(ct, codes, C.shape[0], fast)
+             if code_bits == 4 else lut_sum(ct, codes, fast))
     neg_c, cand = jax.lax.top_k(-crude, topk)
     return cand, -neg_c, jnp.zeros(qs.shape[0], dtype=jnp.float32)
 
 
 def _two_step_crude_pallas(qs, codes, C, fast, topk: int, block_q: int,
                            block_n: int, interpret,
-                           quantized: bool = False):
+                           quantized: bool = False, code_bits: int = 8):
     """Crude-only ranking via the phase-1 kernel: ``batched_crude_topk``
     already emits the crude top-k (its candidate list); skip the dense
     crude matrix and phase 2 entirely."""
     from repro.kernels import ops
+    nibble = code_bits == 4
     nq = qs.shape[0]
     K, m = C.shape[0], C.shape[1]
     luts = build_lut(qs, C)
     if quantized:
-        q_flat, scale, offset = quantized_kernel_operands(luts, fast)
+        q_flat, scale, offset = (
+            fastscan_kernel_operands(luts, fast) if nibble
+            else quantized_kernel_operands(luts, fast))
         _, cand_vals, cand_idx = ops.batched_crude_topk(
             codes, q_flat, topk, block_q=block_q, block_n=block_n,
             interpret=interpret, want_crude=False,
-            lut_scale=scale, lut_offset=offset)
+            lut_scale=scale, lut_offset=offset, code_bits=code_bits)
     else:
         fast_f = fast.astype(luts.dtype)[None, :, None]
-        lut_fast = (luts * fast_f).reshape(nq, K * m)
+        lut_fast = luts * fast_f
+        lut_fast = (pad_luts_even(lut_fast) if nibble
+                    else lut_fast).reshape(nq, -1)
         _, cand_vals, cand_idx = ops.batched_crude_topk(
             codes, lut_fast, topk, block_q=block_q, block_n=block_n,
-            interpret=interpret, want_crude=False)
+            interpret=interpret, want_crude=False, code_bits=code_bits)
     return cand_idx, cand_vals, jnp.zeros(nq, dtype=jnp.float32)
 
 
@@ -318,28 +390,31 @@ def two_step_crude_search(queries, codes, C, structure, topk: int, *,
                           backend: str = "auto", block_q: int = 64,
                           block_n: int = 512, interpret=None,
                           query_chunk: Optional[int] = None,
-                          lut_dtype: str = "f32"):
+                          lut_dtype: str = "f32", code_bits: int = 8):
     """The degradation ladder's crude floor (docs/robustness.md): rank
     by the fast-subset crude distance only, skipping eq. 2 and the
     refine pass.  Bitwise-identical to the crude top-k the full path
     computes internally (the eq. 2 bootstrap candidates), on either
     backend.  ``pass_rate`` is 0 (nothing refined); ``avg_ops`` is
-    |K_fast| per point."""
+    |K_fast| per point.  Under ``code_bits=4`` this rung serves
+    directly from the packed nibbles (fast-scan crude pass)."""
     fast = structure.fast_mask
     kf = jnp.sum(fast.astype(jnp.float32))
     be = resolve_backend(backend)
     quantized = resolve_lut_dtype(lut_dtype) == "int8"
+    code_bits = _check_fastscan_geometry(code_bits, C.shape[1])
 
     if be == "pallas":
         fn = functools.partial(_two_step_crude_pallas, codes=codes, C=C,
                                fast=fast, topk=topk, block_q=block_q,
                                block_n=block_n, interpret=interpret,
-                               quantized=quantized)
+                               quantized=quantized, code_bits=code_bits)
     else:
+        codes_j = codes if code_bits == 4 else codes.astype(jnp.int32)
         fn = functools.partial(_two_step_crude_block_jnp,
-                               codes=codes.astype(jnp.int32), C=C,
+                               codes=codes_j, C=C,
                                fast=fast, sigma=structure.sigma, topk=topk,
-                               quantized=quantized)
+                               quantized=quantized, code_bits=code_bits)
     idx, dist, pf = chunked_over_queries(fn, queries, query_chunk)
     return SearchResult(idx, dist, kf, jnp.mean(pf))
 
@@ -347,16 +422,21 @@ def two_step_crude_search(queries, codes, C, structure, topk: int, *,
 # -------------------------------------------------------------- indexes ----
 
 def _encode_new_rows(new_vectors, C, codes_dtype, *, icm_iters: int,
-                     encode_backend: str, point_chunk: Optional[int]):
+                     encode_backend: str, point_chunk: Optional[int],
+                     code_bits: int = 8):
     """Shared ``Index.add`` encode step (DESIGN.md §9): run the tiled
     ICM engine over the new embeddings (PQ warm start; for
     orthogonal-support PQ codebooks the interaction terms vanish, so
     ICM reproduces the independent assignment exactly) and pack to the
-    stored codes dtype."""
+    stored codes format (``codes_dtype`` for byte codes; nibble rows
+    under ``code_bits=4`` — the dtype is uint8 either way, but the
+    packed row width differs)."""
     from repro.core import encode as enc
 
     new = enc.icm_encode(jnp.asarray(new_vectors), C, icm_iters,
                          backend=encode_backend, point_chunk=point_chunk)
+    if code_bits == 4:
+        return enc.pack_nibbles(new, C.shape[0])
     return new.astype(codes_dtype)
 
 @dataclasses.dataclass(frozen=True)
@@ -374,6 +454,7 @@ class FlatADC:
     interpret: Optional[bool] = None
     query_chunk: Optional[int] = None
     lut_dtype: str = "f32"
+    code_bits: int = 8
 
     @classmethod
     def build(cls, codes, C, structure=None, **opts) -> "FlatADC":
@@ -385,7 +466,8 @@ class FlatADC:
                           backend=self.backend, block_q=self.block_q,
                           block_n=self.block_n, interpret=self.interpret,
                           query_chunk=self.query_chunk,
-                          lut_dtype=self.lut_dtype)
+                          lut_dtype=self.lut_dtype,
+                          code_bits=self.code_bits)
 
     def search_crude(self, queries,
                      topk: Optional[int] = None) -> SearchResult:
@@ -403,7 +485,8 @@ class FlatADC:
         new = _encode_new_rows(new_vectors, self.C, self.codes.dtype,
                                icm_iters=icm_iters,
                                encode_backend=encode_backend,
-                               point_chunk=point_chunk)
+                               point_chunk=point_chunk,
+                               code_bits=self.code_bits)
         return dataclasses.replace(
             self, codes=jnp.concatenate([self.codes, new], axis=0))
 
@@ -427,6 +510,7 @@ class TwoStep:
     query_chunk: Optional[int] = None
     refine_cap: Optional[int] = None
     lut_dtype: str = "f32"
+    code_bits: int = 8
 
     @classmethod
     def build(cls, codes, C, structure, **opts) -> "TwoStep":
@@ -439,7 +523,8 @@ class TwoStep:
                                block_n=self.block_n, interpret=self.interpret,
                                query_chunk=self.query_chunk,
                                refine_cap=self.refine_cap,
-                               lut_dtype=self.lut_dtype)
+                               lut_dtype=self.lut_dtype,
+                               code_bits=self.code_bits)
 
     def search_crude(self, queries,
                      topk: Optional[int] = None) -> SearchResult:
@@ -451,7 +536,8 @@ class TwoStep:
             topk if topk is not None else self.topk,
             backend=self.backend, block_q=self.block_q,
             block_n=self.block_n, interpret=self.interpret,
-            query_chunk=self.query_chunk, lut_dtype=self.lut_dtype)
+            query_chunk=self.query_chunk, lut_dtype=self.lut_dtype,
+            code_bits=self.code_bits)
 
     def add(self, new_vectors, *, icm_iters: int = 3,
             encode_backend: str = "auto",
@@ -463,7 +549,8 @@ class TwoStep:
         new = _encode_new_rows(new_vectors, self.C, self.codes.dtype,
                                icm_iters=icm_iters,
                                encode_backend=encode_backend,
-                               point_chunk=point_chunk)
+                               point_chunk=point_chunk,
+                               code_bits=self.code_bits)
         return dataclasses.replace(
             self, codes=jnp.concatenate([self.codes, new], axis=0))
 

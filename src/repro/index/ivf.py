@@ -41,9 +41,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.index.base import (SearchResult, _int_acc_dtype, build_lut,
-                              chunked_over_queries, dequantize_acc, lut_sum,
-                              quantize_lut, quantized_kernel_operands,
-                              resolve_backend, resolve_lut_dtype)
+                              chunked_over_queries, dequantize_acc,
+                              fastscan_kernel_operands, lut_sum,
+                              pad_luts_even, quantize_lut,
+                              quantized_kernel_operands, resolve_backend,
+                              resolve_lut_dtype)
 
 
 class IVFIndex(NamedTuple):
@@ -192,8 +194,27 @@ def gather_candidates(probes, lists, codes, topk: int, list_codes=None):
     return cand_ids, valid, cand_codes
 
 
+def _slab_codes(cand_codes, k: int, code_bits: int):
+    """Codebook k's codes from the candidate slab, widened to int32.
+    Under ``code_bits=4`` the slab stays nibble-packed — the byte column
+    is gathered once and the right nibble shifted out (DESIGN.md §12)."""
+    if code_bits == 4:
+        byte = cand_codes[:, :, k // 2].astype(jnp.int32)
+        return (byte >> (4 * (k % 2))) & 0xF
+    return cand_codes[:, :, k].astype(jnp.int32)
+
+
+def _widen_slab(cand_codes, K: int, code_bits: int):
+    """Widen a gathered candidate-slab to (nq, t, K) int32 codes (the
+    boundary where nibble-packed slabs unpack; 8-bit slabs just cast)."""
+    if code_bits == 4:
+        from repro.core.encode import unpack_nibbles
+        return unpack_nibbles(cand_codes, K)
+    return cand_codes.astype(jnp.int32)
+
+
 def _ivf_bootstrap_threshold(luts, crude, cand_codes, topk: int, sigma,
-                             fast=None):
+                             fast=None, code_bits: int = 8):
     """Eq. 2 threshold over the candidate slab: bootstrap the neighbor
     list from the crude top-k (slab may hold fewer than topk valid
     candidates — invalid entries rank +inf and are excluded from the
@@ -206,6 +227,7 @@ def _ivf_bootstrap_threshold(luts, crude, cand_codes, topk: int, sigma,
     neg_c, cand = jax.lax.top_k(-crude, topk)            # (nq, topk)
     cand_top = jnp.take_along_axis(
         cand_codes, cand[:, :, None], axis=1)            # (nq, topk, K)
+    cand_top = _widen_slab(cand_top, luts.shape[1], code_bits)
     if fast is None:
         full_cand = lut_sum(luts, cand_top)
     else:
@@ -217,7 +239,8 @@ def _ivf_bootstrap_threshold(luts, crude, cand_codes, topk: int, sigma,
 
 
 def _ivf_crude_scores(luts, cand_codes, valid, fast, *,
-                      quantized: bool, need_slow: bool):
+                      quantized: bool, need_slow: bool,
+                      code_bits: int = 8):
     """Crude (and optionally slow) LUT sums over the candidate slab —
     the shared scoring core of the full jnp engine and the crude-only
     floor (so the two are bitwise-identical by construction).
@@ -240,7 +263,7 @@ def _ivf_crude_scores(luts, cand_codes, valid, fast, *,
         qlut = quantize_lut(luts, fast)
         acc = jnp.zeros((nq, nc), _int_acc_dtype(K))
         for k in range(K):
-            ck = cand_codes[:, :, k].astype(jnp.int32)
+            ck = _slab_codes(cand_codes, k, code_bits)
             acc = acc + jnp.take_along_axis(qlut.q[:, k, :], ck,
                                             axis=1).astype(acc.dtype)
             if need_slow:
@@ -251,7 +274,7 @@ def _ivf_crude_scores(luts, cand_codes, valid, fast, *,
         crude = jnp.zeros((nq, nc), luts.dtype)
         for k in range(K):
             v = jnp.take_along_axis(
-                luts[:, k, :], cand_codes[:, :, k].astype(jnp.int32), axis=1)
+                luts[:, k, :], _slab_codes(cand_codes, k, code_bits), axis=1)
             crude = crude + fvals[k] * v
             if need_slow:
                 slow = slow + (1.0 - fvals[k]) * v
@@ -260,7 +283,8 @@ def _ivf_crude_scores(luts, cand_codes, valid, fast, *,
 
 def _ivf_block_jnp(qs, codes, C, fast, sigma, topk: int, centroids, lists,
                    n_probe: int, refine_cap: Optional[int],
-                   list_codes=None, quantized: bool = False):
+                   list_codes=None, quantized: bool = False,
+                   code_bits: int = 8):
     """Batched IVF two-step over one query block.  Returns (ids
     (nq,topk), dist (nq,topk), n_cand (nq,), n_pass (nq,))."""
     luts = build_lut(qs, C)                              # (nq, K, m)
@@ -270,9 +294,11 @@ def _ivf_block_jnp(qs, codes, C, fast, sigma, topk: int, centroids, lists,
     safe = jnp.where(valid, cand_ids, 0)
     crude, slow = _ivf_crude_scores(luts, cand_codes, valid, fast,
                                     quantized=quantized,
-                                    need_slow=refine_cap is None)
+                                    need_slow=refine_cap is None,
+                                    code_bits=code_bits)
     thr = _ivf_bootstrap_threshold(luts, crude, cand_codes, topk, sigma,
-                                   fast if quantized else None)
+                                   fast if quantized else None,
+                                   code_bits=code_bits)
     passed = crude < thr[:, None]                        # invalid -> inf -> F
 
     if refine_cap is None:
@@ -286,7 +312,8 @@ def _ivf_block_jnp(qs, codes, C, fast, sigma, topk: int, centroids, lists,
         alive = jnp.isfinite(-neg_s)
         surv_codes = jnp.take_along_axis(cand_codes, surv[:, :, None],
                                          axis=1)         # (nq, cap, K)
-        full_surv = lut_sum(luts, surv_codes)
+        full_surv = lut_sum(luts, _widen_slab(surv_codes, luts.shape[1],
+                                              code_bits))
         ranked = jnp.where(alive, full_surv, jnp.inf)
         neg, cpos = jax.lax.top_k(-ranked, topk)
         pos = jnp.take_along_axis(surv, cpos, axis=1)
@@ -298,7 +325,8 @@ def _ivf_block_jnp(qs, codes, C, fast, sigma, topk: int, centroids, lists,
 
 def _ivf_block_pallas(qs, codes, C, fast, sigma, topk: int, centroids,
                       lists, n_probe: int, block_q: int, block_n: int,
-                      interpret, list_codes=None, quantized: bool = False):
+                      interpret, list_codes=None, quantized: bool = False,
+                      code_bits: int = 8):
     """Fused-kernel batched IVF: the (query-tile x candidate-tile)
     kernels from ``kernels/batched_search.py`` sweep the gathered slab
     (phase-1 crude + running top-k, then fused eq. 2 + refine + top-k
@@ -313,24 +341,32 @@ def _ivf_block_pallas(qs, codes, C, fast, sigma, topk: int, centroids,
     cand_ids, valid, cand_codes = gather_candidates(probes, lists, codes,
                                                     topk, list_codes)
     safe = jnp.where(valid, cand_ids, 0)
+    nibble = code_bits == 4
     fast_f = fast.astype(luts.dtype)[None, :, None]
-    lut_slow = (luts * (1.0 - fast_f)).reshape(nq, K * m)
+    lut_slow = luts * (1.0 - fast_f)
+    lut_slow = (pad_luts_even(lut_slow) if nibble
+                else lut_slow).reshape(nq, -1)
 
     if quantized:
-        q_flat, scale, offset = quantized_kernel_operands(luts, fast)
+        q_flat, scale, offset = (fastscan_kernel_operands(luts, fast)
+                                 if nibble else
+                                 quantized_kernel_operands(luts, fast))
         crude, cand_vals, cand_pos = ops.ivf_crude_topk(
             cand_codes, cand_ids, q_flat, topk,
             block_q=block_q, block_n=block_n, interpret=interpret,
-            lut_scale=scale, lut_offset=offset)
+            lut_scale=scale, lut_offset=offset, code_bits=code_bits)
     else:
-        lut_fast = (luts * fast_f).reshape(nq, K * m)
+        lut_fast = luts * fast_f
+        lut_fast = (pad_luts_even(lut_fast) if nibble
+                    else lut_fast).reshape(nq, -1)
         crude, cand_vals, cand_pos = ops.ivf_crude_topk(
             cand_codes, cand_ids, lut_fast, topk, block_q=block_q,
-            block_n=block_n, interpret=interpret)
+            block_n=block_n, interpret=interpret, code_bits=code_bits)
     # threshold bootstrap on the (nq, topk) crude candidates — tiny, jnp
     ok = jnp.isfinite(cand_vals)
     pos_safe = jnp.where(ok, cand_pos, 0)
     cand_top = jnp.take_along_axis(cand_codes, pos_safe[:, :, None], axis=1)
+    cand_top = _widen_slab(cand_top, K, code_bits)
     full_cand = cand_vals + lut_sum(luts, cand_top, ~fast)
     far = jnp.argmax(jnp.where(ok, full_cand, -jnp.inf), axis=1)
     t = jnp.take_along_axis(cand_vals, far[:, None], axis=1)[:, 0]
@@ -338,7 +374,7 @@ def _ivf_block_pallas(qs, codes, C, fast, sigma, topk: int, centroids,
 
     dist, pos = ops.ivf_refine_topk(
         cand_codes, lut_slow, crude, thr, topk, block_q=block_q,
-        block_n=block_n, interpret=interpret)
+        block_n=block_n, interpret=interpret, code_bits=code_bits)
     # merged positions are always real slab columns (the slab is padded
     # to >= topk columns); clip only guards the take_along_axis bounds
     ids = jnp.take_along_axis(
@@ -365,15 +401,20 @@ def ivf_two_step_search(queries, codes, C, structure, ivf: IVFIndex,
                         block_q: int = 4, block_n: int = 128,
                         interpret=None, query_chunk: Optional[int] = None,
                         refine_cap: Optional[int] = None, list_codes=None,
-                        lut_dtype: str = "f32"):
+                        lut_dtype: str = "f32", code_bits: int = 8):
     """Batched IVF + ICQ two-step.  Returns SearchResult with the
     generalized ops accounting (see module docstring).
 
     ``list_codes`` (optional, from ``ivf_list_codes``) serves from the
     in-list codes slab — same results, faster gather.  ``lut_dtype``
     ("f32" | "int8") selects the crude-pass table precision (DESIGN.md
-    §8); the refine pass is always f32."""
+    §8); the refine pass is always f32.  ``code_bits=4`` serves from
+    nibble-packed codes/list_codes (DESIGN.md §12) — the fast-scan slab
+    variant — with identical rankings to the 8-bit layout."""
+    from repro.index.flat import _check_fastscan_geometry
+
     K = C.shape[0]
+    code_bits = _check_fastscan_geometry(code_bits, C.shape[1])
     fast = structure.fast_mask
     sigma = structure.sigma
     kf = jnp.sum(fast.astype(jnp.float32))
@@ -394,13 +435,15 @@ def ivf_two_step_search(queries, codes, C, structure, ivf: IVFIndex,
                                centroids=ivf.centroids, lists=ivf.lists,
                                n_probe=n_probe, block_q=block_q,
                                block_n=block_n, interpret=interpret,
-                               list_codes=list_codes, quantized=quantized)
+                               list_codes=list_codes, quantized=quantized,
+                               code_bits=code_bits)
     else:
         fn = functools.partial(_ivf_block_jnp, codes=codes, C=C, fast=fast,
                                sigma=sigma, topk=topk,
                                centroids=ivf.centroids, lists=ivf.lists,
                                n_probe=n_probe, refine_cap=refine_cap,
-                               list_codes=list_codes, quantized=quantized)
+                               list_codes=list_codes, quantized=quantized,
+                               code_bits=code_bits)
     ids, dist, n_cand, n_pass = chunked_over_queries(fn, queries,
                                                      query_chunk)
     return ivf_ops_result(ids, dist, n_cand, n_pass, n=n, n_lists=n_lists,
@@ -409,7 +452,7 @@ def ivf_two_step_search(queries, codes, C, structure, ivf: IVFIndex,
 
 def _ivf_crude_block_jnp(qs, codes, C, fast, topk: int, centroids, lists,
                          n_probe: int, list_codes=None,
-                         quantized: bool = False):
+                         quantized: bool = False, code_bits: int = 8):
     """Crude-only IVF ranking over one query block: probe + gather +
     the shared crude scoring + top-k, skipping eq. 2 and refinement.
     The ranking is exactly the crude top-k the full jnp path bootstraps
@@ -420,7 +463,8 @@ def _ivf_crude_block_jnp(qs, codes, C, fast, topk: int, centroids, lists,
                                                     topk, list_codes)
     safe = jnp.where(valid, cand_ids, 0)
     crude, _ = _ivf_crude_scores(luts, cand_codes, valid, fast,
-                                 quantized=quantized, need_slow=False)
+                                 quantized=quantized, need_slow=False,
+                                 code_bits=code_bits)
     neg_c, pos = jax.lax.top_k(-crude, topk)
     ids = jnp.take_along_axis(safe, pos, axis=1)
     n_cand = jnp.sum(valid.astype(jnp.float32), axis=1)
@@ -430,30 +474,35 @@ def _ivf_crude_block_jnp(qs, codes, C, fast, topk: int, centroids, lists,
 def _ivf_crude_block_pallas(qs, codes, C, fast, topk: int, centroids,
                             lists, n_probe: int, block_q: int, block_n: int,
                             interpret, list_codes=None,
-                            quantized: bool = False):
+                            quantized: bool = False, code_bits: int = 8):
     """Crude-only IVF via the phase-1 kernel: ``ivf_crude_topk``'s
     running top-k over the slab *is* the crude ranking; phase 2 is
-    skipped."""
+    skipped.  ``code_bits=4`` streams the nibble-packed slab through the
+    fast-scan variant."""
     from repro.kernels import ops
     nq = qs.shape[0]
-    K, m = C.shape[0], C.shape[1]
+    nibble = code_bits == 4
     luts = build_lut(qs, C)
     probes = coarse_probe(qs, centroids, n_probe)
     cand_ids, valid, cand_codes = gather_candidates(probes, lists, codes,
                                                     topk, list_codes)
     safe = jnp.where(valid, cand_ids, 0)
     if quantized:
-        q_flat, scale, offset = quantized_kernel_operands(luts, fast)
+        q_flat, scale, offset = (fastscan_kernel_operands(luts, fast)
+                                 if nibble else
+                                 quantized_kernel_operands(luts, fast))
         _, cand_vals, cand_pos = ops.ivf_crude_topk(
             cand_codes, cand_ids, q_flat, topk,
             block_q=block_q, block_n=block_n, interpret=interpret,
-            lut_scale=scale, lut_offset=offset)
+            lut_scale=scale, lut_offset=offset, code_bits=code_bits)
     else:
         fast_f = fast.astype(luts.dtype)[None, :, None]
-        lut_fast = (luts * fast_f).reshape(nq, K * m)
+        lut_fast = luts * fast_f
+        lut_fast = (pad_luts_even(lut_fast) if nibble
+                    else lut_fast).reshape(nq, -1)
         _, cand_vals, cand_pos = ops.ivf_crude_topk(
             cand_codes, cand_ids, lut_fast, topk, block_q=block_q,
-            block_n=block_n, interpret=interpret)
+            block_n=block_n, interpret=interpret, code_bits=code_bits)
     pos_safe = jnp.where(jnp.isfinite(cand_vals), cand_pos, 0)
     ids = jnp.take_along_axis(safe, pos_safe, axis=1)
     n_cand = jnp.sum(valid.astype(jnp.float32), axis=1)
@@ -464,13 +513,17 @@ def ivf_crude_search(queries, codes, C, structure, ivf: IVFIndex,
                      topk: int, n_probe: int, *, backend: str = "auto",
                      block_q: int = 4, block_n: int = 128, interpret=None,
                      query_chunk: Optional[int] = None, list_codes=None,
-                     lut_dtype: str = "f32"):
+                     lut_dtype: str = "f32", code_bits: int = 8):
     """The IVF rung of the degradation ladder's crude floor
     (docs/robustness.md): probe + crude-only ranking over the candidate
     slab.  Bitwise-identical ids/values to the crude top-k the full
     path computes internally on the same backend.  ``avg_ops`` drops
-    the pass-rate term (nothing refined)."""
+    the pass-rate term (nothing refined).  ``code_bits=4`` serves the
+    floor straight from the nibble-packed slab."""
+    from repro.index.flat import _check_fastscan_geometry
+
     K = C.shape[0]
+    code_bits = _check_fastscan_geometry(code_bits, C.shape[1])
     fast = structure.fast_mask
     kf = jnp.sum(fast.astype(jnp.float32))
     n_lists = ivf.lists.shape[0]
@@ -486,13 +539,14 @@ def ivf_crude_search(queries, codes, C, structure, ivf: IVFIndex,
                                centroids=ivf.centroids, lists=ivf.lists,
                                n_probe=n_probe, block_q=block_q,
                                block_n=block_n, interpret=interpret,
-                               list_codes=list_codes, quantized=quantized)
+                               list_codes=list_codes, quantized=quantized,
+                               code_bits=code_bits)
     else:
         fn = functools.partial(_ivf_crude_block_jnp, codes=codes, C=C,
                                fast=fast, topk=topk,
                                centroids=ivf.centroids, lists=ivf.lists,
                                n_probe=n_probe, list_codes=list_codes,
-                               quantized=quantized)
+                               quantized=quantized, code_bits=code_bits)
     ids, dist, n_cand, n_pass = chunked_over_queries(fn, queries,
                                                      query_chunk)
     return ivf_ops_result(ids, dist, n_cand, n_pass, n=n, n_lists=n_lists,
@@ -505,7 +559,8 @@ def ivf_crude_search(queries, codes, C, structure, ivf: IVFIndex,
 class IVFTwoStep:
     """IVF-pruned ICQ two-step index: coarse partition probe + batched
     candidate-slab two-step."""
-    codes: jnp.ndarray                  # (n, K) packed
+    codes: jnp.ndarray                  # (n, K) packed ((n, ceil(K/2))
+                                        # nibble-packed at code_bits=4)
     C: jnp.ndarray                      # (K, m, d)
     structure: object                   # core.icq.ICQStructure
     ivf: IVFIndex
@@ -518,6 +573,7 @@ class IVFTwoStep:
     query_chunk: Optional[int] = None
     refine_cap: Optional[int] = None
     lut_dtype: str = "f32"
+    code_bits: int = 8
     list_codes: Optional[jnp.ndarray] = None     # (n_lists, max_len, K)
 
     @classmethod
@@ -539,7 +595,8 @@ class IVFTwoStep:
             backend=self.backend, block_q=self.block_q,
             block_n=self.block_n, interpret=self.interpret,
             query_chunk=self.query_chunk, refine_cap=self.refine_cap,
-            list_codes=self.list_codes, lut_dtype=self.lut_dtype)
+            list_codes=self.list_codes, lut_dtype=self.lut_dtype,
+            code_bits=self.code_bits)
 
     def search_crude(self, queries, topk: Optional[int] = None,
                      n_probe: Optional[int] = None) -> SearchResult:
@@ -555,7 +612,7 @@ class IVFTwoStep:
             backend=self.backend, block_q=self.block_q,
             block_n=self.block_n, interpret=self.interpret,
             query_chunk=self.query_chunk, list_codes=self.list_codes,
-            lut_dtype=self.lut_dtype)
+            lut_dtype=self.lut_dtype, code_bits=self.code_bits)
 
     def add(self, new_vectors, *, icm_iters: int = 3,
             encode_backend: str = "auto",
@@ -573,7 +630,8 @@ class IVFTwoStep:
         new = _encode_new_rows(new_vectors, self.C, self.codes.dtype,
                                icm_iters=icm_iters,
                                encode_backend=encode_backend,
-                               point_chunk=point_chunk)
+                               point_chunk=point_chunk,
+                               code_bits=self.code_bits)
         codes = jnp.concatenate([self.codes, new], axis=0)
         ivf = ivf_extend(self.ivf, new_vectors,
                          start_id=self.codes.shape[0])

@@ -53,10 +53,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.encode import unpack_nibbles
 from repro.distributed.sharding import shard_map_compat
 from repro.index import ivf as ivf_mod
 from repro.index.base import (SearchResult, build_lut, lut_sum,
-                              quantize_lut, resolve_lut_dtype)
+                              quantize_lut, resolve_code_bits,
+                              resolve_lut_dtype)
 
 _I32_MAX = jnp.iinfo(jnp.int32).max
 
@@ -182,6 +184,7 @@ class ShardedFlatADC(_DeadShardMixin):
         self.ns = -(-n // D)
         self.topk = base.topk
         self.lut_dtype = resolve_lut_dtype(getattr(base, "lut_dtype", "f32"))
+        self.code_bits = resolve_code_bits(getattr(base, "code_bits", 8))
         self.codes = _put(mesh, _pad_rows(base.codes, D * self.ns),
                           P("data"))
         self.dead_shards = frozenset()
@@ -201,11 +204,14 @@ class ShardedFlatADC(_DeadShardMixin):
         K = C.shape[0]
         k_loc = min(topk, ns)
         quantized = self.lut_dtype == "int8"
+        code_bits = self.code_bits
         alive = self._alive_arr()
 
         def body(qs, codes_shard):
             si = jax.lax.axis_index("data")
             off = si * ns
+            if code_bits == 4:      # nibble slab: unpack once per shard
+                codes_shard = unpack_nibbles(codes_shard, K)
             luts = build_lut(qs, C)
             lut = quantize_lut(luts) if quantized else luts
             dist = lut_sum(lut, codes_shard)               # (nq, ns)
@@ -261,6 +267,7 @@ class ShardedTwoStep(_DeadShardMixin):
         self.ns = -(-n // D)
         self.topk = base.topk
         self.lut_dtype = resolve_lut_dtype(getattr(base, "lut_dtype", "f32"))
+        self.code_bits = resolve_code_bits(getattr(base, "code_bits", 8))
         self.codes = _put(mesh, _pad_rows(base.codes, D * self.ns),
                           P("data"))
         self.dead_shards = frozenset()
@@ -276,15 +283,19 @@ class ShardedTwoStep(_DeadShardMixin):
         if key in self._fns:
             return self._fns[key]
         C, n, ns = self.C, self.n, self.ns
+        K = C.shape[0]
         fast = self.structure.fast_mask
         sigma = self.structure.sigma
         k_loc = min(topk, ns)
         quantized = self.lut_dtype == "int8"
+        code_bits = self.code_bits
         alive = self._alive_arr()
 
         def body(qs, codes_shard):
             si = jax.lax.axis_index("data")
             off = si * ns
+            if code_bits == 4:      # nibble slab: unpack once per shard
+                codes_shard = unpack_nibbles(codes_shard, K)
             luts = build_lut(qs, C)
             crude_lut = quantize_lut(luts, fast) if quantized else luts
             crude = lut_sum(crude_lut, codes_shard, fast)  # (nq, ns)
@@ -378,6 +389,7 @@ class ShardedIVFTwoStep(_DeadShardMixin):
         self.topk = base.topk
         self.refine_cap = base.refine_cap
         self.lut_dtype = resolve_lut_dtype(getattr(base, "lut_dtype", "f32"))
+        self.code_bits = resolve_code_bits(getattr(base, "code_bits", 8))
         lists_p = _pad_rows(base.ivf.lists, D * self.Ls, fill=-1)
         # codes live inside the inverted lists (ivf_list_codes slab) so
         # serving never touches the flat codes array; pad rows are
@@ -427,6 +439,7 @@ class ShardedIVFTwoStep(_DeadShardMixin):
                else min(max(refine_cap, topk), nc))
         cap_loc = None if cap is None else min(cap, nc_loc)
         quantized = self.lut_dtype == "int8"
+        code_bits = self.code_bits
         alive = self._alive_arr()
 
         def body(qs, lists_sh, slab_sh):
@@ -446,6 +459,8 @@ class ShardedIVFTwoStep(_DeadShardMixin):
             ids = jnp.where(sel_local[:, :, None], lists_sh[rows], -1)
             ids = ids.reshape(nq, nc_loc0)
             codes = slab_sh[rows].reshape(nq, nc_loc0, -1)  # packed dtype
+            if code_bits == 4:  # nibble slab: unpack the gathered rows
+                codes = unpack_nibbles(codes, C.shape[0])
             owned = jnp.repeat(sel_local, max_len, axis=1)  # (nq, nc_loc0)
             # global slab positions (probe-slot major — the
             # single-device candidate order) of the compacted columns

@@ -47,6 +47,19 @@ f32, doubling-and-more the LUT capacity that can stay VMEM-pinned per
 query tile.  The refine kernels are f32-only on purpose: eq. 2's exact
 re-ranking (the slow/full pass) must not be quantized.
 
+Fast-scan mode (``code_bits=4``, DESIGN.md §12): with 16-codeword
+codebooks two codes pack into one byte, so the codes stream halves
+again — every kernel accepts ``code_bits=4`` with nibble-packed codes
+((n, ceil(K/2)) uint8) and unpacks them in-VMEM via shift/mask before
+the one-hot dot.  The LUT operand covers the *even-padded* K (odd K
+gets an all-zero sentinel codebook — ``index.base.pad_luts_even`` /
+``fastscan_kernel_operands``), so sentinel nibbles contribute exactly
+zero and the dequant affine (offset counts real codebooks only) is
+unchanged from the 8-bit int8 path; the 16-entry int8 LUT columns
+accumulate through the same ``preferred_element_type=int32`` dot with
+one rescale at tile end.  ``fastscan_crude_topk_pallas`` /
+``ivf_fastscan_crude_topk_pallas`` are the named crude entry points.
+
 IVF variants (``ivf_crude_topk_pallas`` / ``ivf_refine_topk_pallas``):
 same two-phase structure, but the codes operand is the *gathered
 candidate slab* (nq, nc, K) — per-query candidates, so the distance
@@ -70,6 +83,35 @@ from repro.kernels.adc import flat_onehot
 _I32_MAX = jnp.iinfo(jnp.int32).max
 
 
+def _unpack_nibble_tile(packed):
+    """In-VMEM shift/mask unpack of a nibble-packed codes tile
+    (DESIGN.md §12): (..., Kp) int32 bytes -> (..., 2*Kp) int32 codes,
+    byte kp -> (low nibble, high nibble) = codebooks (2kp, 2kp+1).  The
+    sentinel column of odd K stays in place — its LUT column is all
+    zero (``index.base.pad_luts_even``), so it adds nothing to any
+    dot."""
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+
+
+def _resolve_kernel_code_bits(code_bits: int, Kc: int, Km: int):
+    """Shared wrapper-side geometry: the stored code columns ``Kc``
+    widen to ``K = 2 * Kc`` codebook columns under the nibble format
+    (``code_bits=4``); the flattened LUT width ``Km`` must then be an
+    even-K multiple (sentinel codebook included)."""
+    if code_bits not in (8, 4):
+        raise ValueError(f"unknown code_bits {code_bits!r}; "
+                         f"expected one of (8, 4)")
+    K = 2 * Kc if code_bits == 4 else Kc
+    if Km % K:
+        raise ValueError(
+            f"lut_flat width {Km} is not a multiple of K={K}"
+            + (" (pad odd-K tables with index.base.pad_luts_even)"
+               if code_bits == 4 else ""))
+    return K, Km // K
+
+
 def _merge_topk(vals_ref, idx_ref, tile_vals, tile_idx, topk: int):
     """Merge a (blk_q, blk_n) tile into the running (blk_q, topk) lists.
 
@@ -90,9 +132,12 @@ def _init_topk(vals_ref, idx_ref):
 
 def _crude_topk_kernel(codes_ref, lut_ref, *refs,
                        K: int, m: int, topk: int, n: int, blk_n: int,
-                       want_crude: bool, quantized: bool):
+                       want_crude: bool, quantized: bool,
+                       nibble: bool = False):
     ni = pl.program_id(1)
     codes = codes_ref[...].astype(jnp.int32)     # widen packed codes per-tile
+    if nibble:
+        codes = _unpack_nibble_tile(codes)       # (blk_n, K) fast-scan mode
     lut = lut_ref[...]                  # (blk_q, K*m) f32 | int8, fast-masked
     blk_q = lut.shape[0]
     if quantized:
@@ -127,9 +172,12 @@ def _crude_topk_kernel(codes_ref, lut_ref, *refs,
 
 def _refine_topk_kernel(codes_ref, lut_ref, crude_ref, thr_ref,
                         vals_ref, idx_ref,
-                        *, K: int, m: int, topk: int, n: int, blk_n: int):
+                        *, K: int, m: int, topk: int, n: int, blk_n: int,
+                        nibble: bool = False):
     ni = pl.program_id(1)
     codes = codes_ref[...].astype(jnp.int32)     # widen packed codes per-tile
+    if nibble:
+        codes = _unpack_nibble_tile(codes)
     lut = lut_ref[...]                           # (blk_q, K*m) f32, slow-masked
     crude = crude_ref[...]                       # (blk_q, blk_n) f32
     thr = thr_ref[...]                           # (blk_q, 1) f32 = t + sigma
@@ -177,10 +225,11 @@ def _check_quantized_args(lut_flat, lut_scale, lut_offset):
 
 @functools.partial(jax.jit,
                    static_argnames=("topk", "block_q", "block_n", "interpret",
-                                    "want_crude"))
+                                    "want_crude", "code_bits"))
 def crude_topk_pallas(codes, lut_flat, lut_scale=None, lut_offset=None, *,
                       topk: int, block_q: int = 64, block_n: int = 512,
-                      interpret: bool = True, want_crude: bool = True):
+                      interpret: bool = True, want_crude: bool = True,
+                      code_bits: int = 8):
     """Phase 1.  codes (n, K) int (packed dtypes welcome — widened
     per-tile in-kernel), lut_flat (nq, K*m) fast-masked flattened
     tables, f32 *or* int8 (quantized-LUT mode, DESIGN.md §8: int8
@@ -190,6 +239,13 @@ def crude_topk_pallas(codes, lut_flat, lut_scale=None, lut_offset=None, *,
     cand_idx (nq, topk) i32).  Crude values are always returned in
     true-distance f32 units, whatever the LUT dtype.
 
+    ``code_bits=4`` is fast-scan mode (DESIGN.md §12): codes arrive
+    nibble-packed (n, ceil(K/2)) uint8 and are unpacked in-VMEM via
+    shift/mask; ``lut_flat`` must cover the even-padded K (an all-zero
+    sentinel codebook for odd K — ``index.base.pad_luts_even`` /
+    ``fastscan_kernel_operands``), so the dot and dequant are otherwise
+    identical to the 8-bit path and rankings match it bitwise.
+
     ``want_crude=False`` skips writing the dense (nq, n) crude matrix
     to HBM (one-step ADC only needs the top-k) and returns crude=None.
 
@@ -197,9 +253,9 @@ def crude_topk_pallas(codes, lut_flat, lut_scale=None, lut_offset=None, *,
     (``_pad_to``); pad point columns are masked to +inf before the
     in-kernel merge and all outputs are sliced back to (nq, ...)."""
     quantized = _check_quantized_args(lut_flat, lut_scale, lut_offset)
-    n, K = codes.shape
+    n, Kc = codes.shape
     nq, Km = lut_flat.shape
-    m = Km // K
+    K, m = _resolve_kernel_code_bits(code_bits, Kc, Km)
     n_pad = pl.cdiv(n, block_n) * block_n
     nq_pad = pl.cdiv(nq, block_q) * block_q
     grid = (nq_pad // block_q, n_pad // block_n)
@@ -210,7 +266,7 @@ def crude_topk_pallas(codes, lut_flat, lut_scale=None, lut_offset=None, *,
     crude_shape = (jax.ShapeDtypeStruct((nq_pad, n_pad), jnp.float32),)
     crude_spec = (pl.BlockSpec((block_q, block_n), lambda qi, ni: (qi, ni)),)
     in_specs = [
-        pl.BlockSpec((block_n, K), lambda qi, ni: (ni, 0)),
+        pl.BlockSpec((block_n, Kc), lambda qi, ni: (ni, 0)),
         pl.BlockSpec((block_q, Km), lambda qi, ni: (qi, 0)),  # pinned
     ]
     operands = [_pad_to(codes, n_pad),
@@ -225,7 +281,7 @@ def crude_topk_pallas(codes, lut_flat, lut_scale=None, lut_offset=None, *,
     outs = pl.pallas_call(
         functools.partial(_crude_topk_kernel, K=K, m=m, topk=topk, n=n,
                           blk_n=block_n, want_crude=want_crude,
-                          quantized=quantized),
+                          quantized=quantized, nibble=code_bits == 4),
         out_shape=(crude_shape if want_crude else ()) + topk_shapes,
         grid=grid,
         in_specs=in_specs,
@@ -264,9 +320,11 @@ def _slab_distances(codes, lut, K: int, m: int):
 
 def _ivf_crude_kernel(codes_ref, ids_ref, lut_ref, *refs,
                       K: int, m: int, topk: int, nc: int, blk_n: int,
-                      quantized: bool):
+                      quantized: bool, nibble: bool = False):
     ni = pl.program_id(1)
     codes = codes_ref[...].astype(jnp.int32)     # (blk_q, blk_n, K)
+    if nibble:
+        codes = _unpack_nibble_tile(codes)
     ids = ids_ref[...]                           # (blk_q, blk_n) global ids
     lut = lut_ref[...]                  # (blk_q, K*m) fast-masked f32 | int8
     if quantized:
@@ -294,9 +352,11 @@ def _ivf_crude_kernel(codes_ref, ids_ref, lut_ref, *refs,
 
 def _ivf_refine_kernel(codes_ref, lut_ref, crude_ref, thr_ref, vals_ref,
                        idx_ref, *, K: int, m: int, topk: int, nc: int,
-                       blk_n: int):
+                       blk_n: int, nibble: bool = False):
     ni = pl.program_id(1)
     codes = codes_ref[...].astype(jnp.int32)
+    if nibble:
+        codes = _unpack_nibble_tile(codes)
     lut = lut_ref[...]                           # (blk_q, K*m) slow-masked
     crude = crude_ref[...]                       # (blk_q, blk_n) inf-masked
     thr = thr_ref[...]                           # (blk_q, 1)
@@ -316,10 +376,12 @@ def _ivf_refine_kernel(codes_ref, lut_ref, crude_ref, thr_ref, vals_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("topk", "block_q", "block_n", "interpret"))
+                   static_argnames=("topk", "block_q", "block_n", "interpret",
+                                    "code_bits"))
 def ivf_crude_topk_pallas(cand_codes, cand_ids, lut_flat, lut_scale=None,
                           lut_offset=None, *, topk: int, block_q: int = 4,
-                          block_n: int = 128, interpret: bool = True):
+                          block_n: int = 128, interpret: bool = True,
+                          code_bits: int = 8):
     """IVF phase 1 over the gathered candidate slab.
 
     cand_codes (nq, nc, K) int (packed dtypes welcome — widened
@@ -330,14 +392,19 @@ def ivf_crude_topk_pallas(cand_codes, cand_ids, lut_flat, lut_scale=None,
     invalid columns +inf, cand_vals (nq, topk) f32, cand_pos (nq, topk)
     i32 slab positions).  Crude values are always true-distance f32.
 
+    ``code_bits=4`` is the fast-scan slab variant: cand_codes arrive
+    nibble-packed (nq, nc, ceil(K/2)) uint8, unpacked in-VMEM via
+    shift/mask against an even-K-padded ``lut_flat`` (see
+    ``crude_topk_pallas``).
+
     Padding: nq and nc are padded up to the (block_q, block_n) grid
     (``_pad_to`` on the query axis; the slab pad columns carry id -1 so
     they mask to +inf like in-slab invalid candidates); outputs are
     sliced back to (nq, nc)/(nq, topk)."""
     quantized = _check_quantized_args(lut_flat, lut_scale, lut_offset)
-    nq, nc, K = cand_codes.shape
+    nq, nc, Kc = cand_codes.shape
     Km = lut_flat.shape[1]
-    m = Km // K
+    K, m = _resolve_kernel_code_bits(code_bits, Kc, Km)
     nc_pad = pl.cdiv(nc, block_n) * block_n
     nq_pad = pl.cdiv(nq, block_q) * block_q
     grid = (nq_pad // block_q, nc_pad // block_n)
@@ -346,7 +413,7 @@ def ivf_crude_topk_pallas(cand_codes, cand_ids, lut_flat, lut_scale=None,
     ids_p = jnp.pad(cand_ids, ((0, nq_pad - nq), (0, nc_pad - nc)),
                     constant_values=-1)
     in_specs = [
-        pl.BlockSpec((block_q, block_n, K), lambda qi, ni: (qi, ni, 0)),
+        pl.BlockSpec((block_q, block_n, Kc), lambda qi, ni: (qi, ni, 0)),
         pl.BlockSpec((block_q, block_n), lambda qi, ni: (qi, ni)),
         pl.BlockSpec((block_q, Km), lambda qi, ni: (qi, 0)),   # pinned
     ]
@@ -361,7 +428,8 @@ def ivf_crude_topk_pallas(cand_codes, cand_ids, lut_flat, lut_scale=None,
             _pad_to(jnp.asarray(lut_offset, jnp.float32)[:, None], nq_pad)]
     crude, vals, idx = pl.pallas_call(
         functools.partial(_ivf_crude_kernel, K=K, m=m, topk=topk, nc=nc,
-                          blk_n=block_n, quantized=quantized),
+                          blk_n=block_n, quantized=quantized,
+                          nibble=code_bits == 4),
         out_shape=(jax.ShapeDtypeStruct((nq_pad, nc_pad), jnp.float32),
                    jax.ShapeDtypeStruct((nq_pad, topk), jnp.float32),
                    jax.ShapeDtypeStruct((nq_pad, topk), jnp.int32)),
@@ -378,24 +446,26 @@ def ivf_crude_topk_pallas(cand_codes, cand_ids, lut_flat, lut_scale=None,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("topk", "block_q", "block_n", "interpret"))
+                   static_argnames=("topk", "block_q", "block_n", "interpret",
+                                    "code_bits"))
 def ivf_refine_topk_pallas(cand_codes, lut_flat, crude, thresholds, *,
                            topk: int, block_q: int = 4, block_n: int = 128,
-                           interpret: bool = True):
+                           interpret: bool = True, code_bits: int = 8):
     """IVF phase 2 over the candidate slab.  cand_codes (nq, nc, K) int
-    (packed dtypes welcome), lut_flat (nq, K*m) f32 (slow-masked —
-    always f32: the refine pass is eq. 2's exact re-ranking and is
-    never quantized), crude (nq, nc) f32 from phase 1 (invalid columns
-    +inf; a quantized phase 1 already emits dequantized f32), thresholds
-    (nq,) f32 = t + sigma -> (dist (nq, topk) f32, pos (nq, topk) i32
-    slab positions).
+    (packed dtypes welcome; nibble-packed (nq, nc, ceil(K/2)) under
+    ``code_bits=4`` with an even-K-padded lut_flat), lut_flat (nq, K*m)
+    f32 (slow-masked — always f32: the refine pass is eq. 2's exact
+    re-ranking and is never quantized), crude (nq, nc) f32 from phase 1
+    (invalid columns +inf; a quantized phase 1 already emits dequantized
+    f32), thresholds (nq,) f32 = t + sigma -> (dist (nq, topk) f32, pos
+    (nq, topk) i32 slab positions).
 
     Padding: nq/nc padded up to the grid; the crude matrix is embedded
     in a +inf canvas so pad columns can never pass the margin test, and
     outputs are sliced back to (nq, topk)."""
-    nq, nc, K = cand_codes.shape
+    nq, nc, Kc = cand_codes.shape
     Km = lut_flat.shape[1]
-    m = Km // K
+    K, m = _resolve_kernel_code_bits(code_bits, Kc, Km)
     nc_pad = pl.cdiv(nc, block_n) * block_n
     nq_pad = pl.cdiv(nq, block_q) * block_q
     grid = (nq_pad // block_q, nc_pad // block_n)
@@ -407,12 +477,12 @@ def ivf_refine_topk_pallas(cand_codes, lut_flat, crude, thresholds, *,
     thr = _pad_to(jnp.asarray(thresholds, jnp.float32)[:, None], nq_pad)
     vals, idx = pl.pallas_call(
         functools.partial(_ivf_refine_kernel, K=K, m=m, topk=topk, nc=nc,
-                          blk_n=block_n),
+                          blk_n=block_n, nibble=code_bits == 4),
         out_shape=(jax.ShapeDtypeStruct((nq_pad, topk), jnp.float32),
                    jax.ShapeDtypeStruct((nq_pad, topk), jnp.int32)),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_q, block_n, K), lambda qi, ni: (qi, ni, 0)),
+            pl.BlockSpec((block_q, block_n, Kc), lambda qi, ni: (qi, ni, 0)),
             pl.BlockSpec((block_q, Km), lambda qi, ni: (qi, 0)),   # pinned
             pl.BlockSpec((block_q, block_n), lambda qi, ni: (qi, ni)),
             pl.BlockSpec((block_q, 1), lambda qi, ni: (qi, 0)),
@@ -427,23 +497,26 @@ def ivf_refine_topk_pallas(cand_codes, lut_flat, crude, thresholds, *,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("topk", "block_q", "block_n", "interpret"))
+                   static_argnames=("topk", "block_q", "block_n", "interpret",
+                                    "code_bits"))
 def refine_topk_pallas(codes, lut_flat, crude, thresholds, *, topk: int,
                        block_q: int = 64, block_n: int = 512,
-                       interpret: bool = True):
+                       interpret: bool = True, code_bits: int = 8):
     """Phase 2.  codes (n, K) int (packed dtypes welcome — widened
-    per-tile in-kernel), lut_flat (nq, K*m) f32 (slow-masked — always
-    f32: the refine pass is eq. 2's exact re-ranking and is never
-    quantized), crude (nq, n) f32 from phase 1 (a quantized phase 1
-    already emits dequantized f32), thresholds (nq,) f32 = t + sigma ->
-    (dist (nq, topk) f32, idx (nq, topk) i32); pruned points rank +inf.
+    per-tile in-kernel; nibble-packed (n, ceil(K/2)) under
+    ``code_bits=4`` with an even-K-padded lut_flat), lut_flat (nq, K*m)
+    f32 (slow-masked — always f32: the refine pass is eq. 2's exact
+    re-ranking and is never quantized), crude (nq, n) f32 from phase 1
+    (a quantized phase 1 already emits dequantized f32), thresholds
+    (nq,) f32 = t + sigma -> (dist (nq, topk) f32, idx (nq, topk) i32);
+    pruned points rank +inf.
 
     Padding: n/nq padded up to the grid (``_pad_to``); the crude matrix
     is embedded in a +inf canvas so pad columns can never pass the
     margin test, and outputs are sliced back to (nq, topk)."""
-    n, K = codes.shape
+    n, Kc = codes.shape
     nq, Km = lut_flat.shape
-    m = Km // K
+    K, m = _resolve_kernel_code_bits(code_bits, Kc, Km)
     n_pad = pl.cdiv(n, block_n) * block_n
     nq_pad = pl.cdiv(nq, block_q) * block_q
     grid = (nq_pad // block_q, n_pad // block_n)
@@ -454,12 +527,12 @@ def refine_topk_pallas(codes, lut_flat, crude, thresholds, *, topk: int,
     thr = _pad_to(jnp.asarray(thresholds, jnp.float32)[:, None], nq_pad)
     vals, idx = pl.pallas_call(
         functools.partial(_refine_topk_kernel, K=K, m=m, topk=topk, n=n,
-                          blk_n=block_n),
+                          blk_n=block_n, nibble=code_bits == 4),
         out_shape=(jax.ShapeDtypeStruct((nq_pad, topk), jnp.float32),
                    jax.ShapeDtypeStruct((nq_pad, topk), jnp.int32)),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_n, K), lambda qi, ni: (ni, 0)),
+            pl.BlockSpec((block_n, Kc), lambda qi, ni: (ni, 0)),
             pl.BlockSpec((block_q, Km), lambda qi, ni: (qi, 0)),  # pinned
             pl.BlockSpec((block_q, block_n), lambda qi, ni: (qi, ni)),
             pl.BlockSpec((block_q, 1), lambda qi, ni: (qi, 0)),
@@ -472,3 +545,23 @@ def refine_topk_pallas(codes, lut_flat, crude, thresholds, *, topk: int,
     )(_pad_to(codes, n_pad),
       _pad_to(lut_flat.astype(jnp.float32), nq_pad), crude_p, thr)
     return vals[:nq], idx[:nq]
+
+
+def fastscan_crude_topk_pallas(packed_codes, lut_flat, lut_scale=None,
+                               lut_offset=None, **opts):
+    """The 4-bit fast-scan crude kernel (DESIGN.md §12):
+    ``crude_topk_pallas`` over nibble-packed codes ((n, ceil(K/2))
+    uint8, in-VMEM shift/mask unpack).  ``lut_flat`` must be the
+    even-K-padded operand from ``index.base.fastscan_kernel_operands``
+    (int8) or ``pad_luts_even`` (f32)."""
+    return crude_topk_pallas(packed_codes, lut_flat, lut_scale,
+                             lut_offset, code_bits=4, **opts)
+
+
+def ivf_fastscan_crude_topk_pallas(packed_cand_codes, cand_ids, lut_flat,
+                                   lut_scale=None, lut_offset=None, **opts):
+    """The 4-bit fast-scan IVF slab crude kernel:
+    ``ivf_crude_topk_pallas`` over a nibble-packed candidate slab
+    ((nq, nc, ceil(K/2)) uint8); see ``fastscan_crude_topk_pallas``."""
+    return ivf_crude_topk_pallas(packed_cand_codes, cand_ids, lut_flat,
+                                 lut_scale, lut_offset, code_bits=4, **opts)

@@ -11,7 +11,9 @@ import jax.numpy as jnp
 
 from repro.kernels.adc import adc_pallas
 from repro.kernels.batched_search import (crude_topk_pallas,
+                                          fastscan_crude_topk_pallas,
                                           ivf_crude_topk_pallas,
+                                          ivf_fastscan_crude_topk_pallas,
                                           ivf_refine_topk_pallas,
                                           refine_topk_pallas)
 from repro.kernels.icm_encode import icm_encode_pallas
@@ -67,7 +69,7 @@ def two_step(codes, lut, fast_mask, threshold, *, block_n: int = 512,
 def batched_crude_topk(codes, lut_flat, topk: int, *, block_q: int = 64,
                        block_n: int = 512, interpret=None,
                        want_crude: bool = True, lut_scale=None,
-                       lut_offset=None):
+                       lut_offset=None, code_bits: int = 8):
     """Batched phase 1: crude LUT sums for every (query, point) pair plus
     the in-kernel running top-k of crude distances.
 
@@ -75,19 +77,21 @@ def batched_crude_topk(codes, lut_flat, topk: int, *, block_q: int = 64,
     flattened tables — f32, or int8 with ``lut_scale``/``lut_offset``
     (nq,) f32 (quantized-LUT mode; crude output is dequantized f32) ->
     (crude (nq, n) | None, cand_vals (nq, topk), cand_idx (nq, topk));
-    ``want_crude=False`` skips the dense matrix.
+    ``want_crude=False`` skips the dense matrix.  ``code_bits=4`` is
+    fast-scan mode: nibble-packed codes (n, ceil(K/2)) uint8 against an
+    even-K-padded lut_flat (DESIGN.md §12).
     """
     _check_faults("batched_crude_topk")
     it = _default_interpret() if interpret is None else interpret
     return crude_topk_pallas(codes, lut_flat, lut_scale, lut_offset,
                              topk=topk, block_q=block_q,
                              block_n=block_n, interpret=it,
-                             want_crude=want_crude)
+                             want_crude=want_crude, code_bits=code_bits)
 
 
 def batched_refine_topk(codes, lut_flat, crude, thresholds, topk: int, *,
                         block_q: int = 64, block_n: int = 512,
-                        interpret=None):
+                        interpret=None, code_bits: int = 8):
     """Batched phase 2: fused eq. 2 test + slow-codebook sum + top-k merge.
 
     codes (n, K) int, lut_flat (nq, K*m) f32 (slow-masked), crude (nq, n),
@@ -96,12 +100,13 @@ def batched_refine_topk(codes, lut_flat, crude, thresholds, topk: int, *,
     _check_faults("batched_refine_topk")
     it = _default_interpret() if interpret is None else interpret
     return refine_topk_pallas(codes, lut_flat, crude, thresholds, topk=topk,
-                              block_q=block_q, block_n=block_n, interpret=it)
+                              block_q=block_q, block_n=block_n, interpret=it,
+                              code_bits=code_bits)
 
 
 def ivf_crude_topk(cand_codes, cand_ids, lut_flat, topk: int, *,
                    block_q: int = 4, block_n: int = 128, interpret=None,
-                   lut_scale=None, lut_offset=None):
+                   lut_scale=None, lut_offset=None, code_bits: int = 8):
     """IVF phase 1 over the gathered candidate slab: crude LUT sums +
     in-kernel running top-k of crude distances (slab positions).
 
@@ -116,18 +121,20 @@ def ivf_crude_topk(cand_codes, cand_ids, lut_flat, topk: int, *,
     return ivf_crude_topk_pallas(cand_codes, cand_ids, lut_flat, lut_scale,
                                  lut_offset, topk=topk,
                                  block_q=block_q, block_n=block_n,
-                                 interpret=it)
+                                 interpret=it, code_bits=code_bits)
 
 
 def ivf_refine_topk(cand_codes, lut_flat, crude, thresholds, topk: int, *,
-                    block_q: int = 4, block_n: int = 128, interpret=None):
+                    block_q: int = 4, block_n: int = 128, interpret=None,
+                    code_bits: int = 8):
     """IVF phase 2: fused eq. 2 test + slow-codebook sum + top-k merge
     over the candidate slab -> (dist (nq, topk), pos (nq, topk))."""
     _check_faults("ivf_refine_topk")
     it = _default_interpret() if interpret is None else interpret
     return ivf_refine_topk_pallas(cand_codes, lut_flat, crude, thresholds,
                                   topk=topk, block_q=block_q,
-                                  block_n=block_n, interpret=it)
+                                  block_n=block_n, interpret=it,
+                                  code_bits=code_bits)
 
 
 def icm_encode(x, init_codes, C, *, iters: int = 3, block_n: int = 1024,
@@ -169,3 +176,50 @@ def flash_attention(q, k, v, *, causal: bool = True, blk_q: int = 128,
                                 blk_k=blk_k, interpret=it)
     o = of.reshape(b, kvh, g, sq, dh).transpose(0, 3, 1, 2, 4)
     return o.reshape(b, sq, h, dh)
+
+
+def fastscan_crude_topk(packed_codes, lut_flat, topk: int, *,
+                        block_q: int = 64, block_n: int = 512,
+                        interpret=None, want_crude: bool = True,
+                        lut_scale=None, lut_offset=None):
+    """The 4-bit fast-scan crude pass (DESIGN.md §12): phase 1 over
+    nibble-packed codes (n, ceil(K/2)) uint8, unpacked in-VMEM via
+    shift/mask; lut_flat must cover the even-padded K
+    (``index.base.fastscan_kernel_operands`` / ``pad_luts_even``).
+    Same outputs as ``batched_crude_topk``."""
+    _check_faults("fastscan_crude_topk")
+    it = _default_interpret() if interpret is None else interpret
+    return fastscan_crude_topk_pallas(packed_codes, lut_flat, lut_scale,
+                                      lut_offset, topk=topk,
+                                      block_q=block_q, block_n=block_n,
+                                      interpret=it, want_crude=want_crude)
+
+
+def ivf_fastscan_crude_topk(packed_cand_codes, cand_ids, lut_flat,
+                            topk: int, *, block_q: int = 4,
+                            block_n: int = 128, interpret=None,
+                            lut_scale=None, lut_offset=None):
+    """The 4-bit fast-scan IVF slab crude pass: ``ivf_crude_topk`` over
+    a nibble-packed candidate slab (nq, nc, ceil(K/2)) uint8 (see
+    ``fastscan_crude_topk``)."""
+    _check_faults("ivf_fastscan_crude_topk")
+    it = _default_interpret() if interpret is None else interpret
+    return ivf_fastscan_crude_topk_pallas(packed_cand_codes, cand_ids,
+                                          lut_flat, lut_scale, lut_offset,
+                                          topk=topk, block_q=block_q,
+                                          block_n=block_n, interpret=it)
+
+
+def pack_nibbles(codes, K: int):
+    """Nibble-pack 4-bit codes two-per-byte along the codebook axis
+    (the ``code_bits=4`` storage format) — re-export of
+    ``core.encode.pack_nibbles`` at the kernel-ops surface."""
+    from repro.core.encode import pack_nibbles as _pack
+    return _pack(codes, K)
+
+
+def unpack_nibbles(packed, K: int):
+    """Inverse of ``pack_nibbles`` (exact round trip; drops the odd-K
+    sentinel column) — re-export of ``core.encode.unpack_nibbles``."""
+    from repro.core.encode import unpack_nibbles as _unpack
+    return _unpack(packed, K)

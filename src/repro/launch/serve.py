@@ -15,7 +15,10 @@ the front-door api (``repro.api.build_ann_engine``, docs/api.md),
 reporting per-query latency, pass rate, and Average Ops.  The run is
 driven by an api config tree — ``--config path.json`` loads one, and
 the engine flags (``--ann-index``, ``--ann-backend``, ``--ann-lists``,
-``--ann-probe``, ``--lut-dtype``) are dotted overrides on top of it.
+``--ann-probe``, ``--lut-dtype``, ``--code-bits``, ``--ann-m``) are
+dotted overrides on top of it (``--code-bits 4`` serves the
+nibble-packed fast-scan layout, DESIGN.md §12 — pair it with
+``--ann-m 16`` or a config whose ``train.codebook_size`` <= 16).
 ``--save-artifacts DIR`` persists the built index
 (``repro.api.Artifacts``); ``--load-artifacts DIR`` serves a saved
 directory in a fresh process instead of building one.  ``--ann-shards
@@ -107,12 +110,13 @@ def serve_ann(cfg, n: int, nq: int, *, batches: int = 3, shards: int = 1,
                               n_probe=cfg.index.n_probe,
                               query_chunk=cfg.serve.query_chunk,
                               lut_dtype=cfg.serve.lut_dtype,
+                              code_bits=cfg.index.code_bits,
                               key=jax.random.fold_in(key, 1))
     queries, _ = _serve_batches(
         engine, nq, d, batches,
         f"ann: index={cfg.index.kind} n={n} nq={nq} topk={cfg.serve.topk} "
         f"backend={cfg.serve.backend} lut={cfg.serve.lut_dtype} "
-        f"shards={shards}")
+        f"bits={cfg.index.code_bits} shards={shards}")
 
     if n_add > 0:
         from repro.core import codebooks as cb
@@ -207,6 +211,13 @@ def main():
     ap.add_argument("--lut-dtype", default=None, choices=["f32", "int8"],
                     help="override serve.lut_dtype (int8 = quantized "
                          "tables, DESIGN.md §8)")
+    ap.add_argument("--code-bits", type=int, default=None, choices=[8, 4],
+                    help="override index.code_bits (4 = nibble-packed "
+                         "fast-scan codes, DESIGN.md §12; needs "
+                         "codebook_size <= 16, e.g. --ann-m 16)")
+    ap.add_argument("--ann-m", type=int, default=None,
+                    help="override train.codebook_size (the synthetic "
+                         "index's codewords per codebook)")
     ap.add_argument("--ann-add", type=int, default=0,
                     help="after serving, grow the index by N vectors via "
                          "AnnEngine.add (incremental encode, DESIGN.md §9)")
@@ -218,6 +229,8 @@ def main():
         "index.n_lists": args.ann_lists,
         "index.n_probe": args.ann_probe,
         "serve.lut_dtype": args.lut_dtype,
+        "index.code_bits": args.code_bits,
+        "train.codebook_size": args.ann_m,
     }.items() if v is not None}
 
     if args.load_artifacts:

@@ -24,8 +24,9 @@ def encode_database(xs, C, *, embed_apply=None, embed_params=None,
                     mode: str = "icm", icm_iters: int = 3,
                     chunk: int = 8192, backend: str = "auto",
                     block_n: int = 1024, interpret=None,
-                    pack: bool = True):
-    """Encode a database against codebooks ``C`` -> (n, K) packed codes.
+                    pack: bool = True, code_bits: int = 8):
+    """Encode a database against codebooks ``C`` -> (n, K) packed codes
+    ((n, ceil(K/2)) nibble-packed under ``code_bits=4``).
 
     xs:           (n, ...) raw inputs (numpy or jnp); embedded per chunk
                   with ``embed_apply(embed_params, chunk)`` when given,
@@ -41,9 +42,23 @@ def encode_database(xs, C, *, embed_apply=None, embed_params=None,
     block_n:      pallas point-tile size.
     pack:         pack to the narrowest dtype that fits m
                   (``encode.pack_codes``); False returns int32.
+    code_bits:    8 (default) packs one code per byte/uint16; 4 packs
+                  two codes per byte (``encode.pack_nibbles``, requires
+                  m <= 16 and pack=True) — the fast-scan storage format
+                  (DESIGN.md §12).
     """
+    from repro.index.base import resolve_code_bits
+
+    code_bits = resolve_code_bits(code_bits)
     n = xs.shape[0]
     m = C.shape[1]
+    if code_bits == 4:
+        if not pack:
+            raise ValueError("code_bits=4 requires pack=True (nibble "
+                             "packing is the 4-bit storage format)")
+        if m > 16:
+            raise ValueError(f"code_bits=4 requires codebook_size <= 16 "
+                             f"codewords (4-bit codes), got m={m}")
     chunk = max(min(chunk, n), 1)
 
     @jax.jit
@@ -64,4 +79,6 @@ def encode_database(xs, C, *, embed_apply=None, embed_params=None,
                   else jnp.pad(xc, pad))
         parts.append(enc_chunk(jnp.asarray(xc)))
     codes = jnp.concatenate(parts, axis=0)[:n]  # mask pad rows out
+    if code_bits == 4:
+        return enc.pack_nibbles(codes, C.shape[0])
     return enc.pack_codes(codes, m) if pack else codes

@@ -1,0 +1,394 @@
+"""4-bit fast-scan stack (``code_bits=4``, DESIGN.md §12): nibble
+pack/unpack round trips (odd-K sentinel), paired-byte nibble_lut_sum vs
+the widened int8 reference, 4-bit == 8-bit engine identity (fast-mask
+edges included), pallas==jnp parity on non-divisible shapes, sharded
+merge identity (subprocess under 4 forced host devices), artifact
+bitwise round trips, config validation, and the trainer/encoder m<=16
+path."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codebooks as cb
+from repro.core import icq as icq_mod
+from repro.core.encode import pack_nibbles, unpack_nibbles
+from repro.index import (adc_search, build_ivf, build_lut,
+                         ivf_two_step_search, lut_sum, nibble_lut_sum,
+                         quantize_lut, two_step_search)
+
+
+def _problem(key, n, nq, K=4, m=16, kf=2, d=8, sigma=1.0):
+    C = jax.random.normal(key, (K, m, d)) * 0.3
+    codes = jax.random.randint(jax.random.fold_in(key, 1), (n, K), 0,
+                               m).astype(jnp.uint8)
+    fast = jnp.zeros((K,), bool).at[:kf].set(True)
+    st = icq_mod.ICQStructure(xi=jnp.ones((d,), bool), fast_mask=fast,
+                              sigma=jnp.asarray(sigma))
+    q = jax.random.normal(jax.random.fold_in(key, 2), (nq, d))
+    return q, codes, C, st
+
+
+# ------------------------------------------------------------- packing ----
+
+@pytest.mark.parametrize("K", [1, 2, 4, 7, 8, 15])
+def test_pack_nibbles_round_trip(key, K):
+    """(n, K) -> (n, ceil(K/2)) uint8 -> (n, K), exact for any valid
+    codes; odd K stores a zero sentinel in the last byte's high nibble."""
+    codes = jax.random.randint(key, (53, K), 0, 16)
+    packed = pack_nibbles(codes, K)
+    assert packed.shape == (53, (K + 1) // 2)
+    assert packed.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(unpack_nibbles(packed, K)),
+                                  np.asarray(codes))
+    if K % 2:
+        assert int(jnp.max(packed[:, -1] >> 4)) == 0   # sentinel nibble
+    # batched candidate shape (nq, t, K) round-trips too
+    cand = jax.random.randint(jax.random.fold_in(key, 1), (5, 9, K), 0, 16)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_nibbles(pack_nibbles(cand, K), K)),
+        np.asarray(cand))
+
+
+def test_pack_nibbles_rejects_wrong_k(key):
+    codes = jax.random.randint(key, (10, 4), 0, 16)
+    with pytest.raises(ValueError, match="pack_nibbles"):
+        pack_nibbles(codes, 6)
+
+
+# -------------------------------------------------------- nibble lut sum ----
+
+@pytest.mark.parametrize("K,kf", [(4, 2), (7, 3), (5, 1)])
+def test_nibble_lut_sum_matches_widened(key, K, kf):
+    """Paired-byte gather over packed codes == plain lut_sum over the
+    widened codes — *bitwise* for the quantized path (both accumulate
+    the same int8 entries in the same integer width before one rescale),
+    and to f32 tolerance for the f32 fallback.  Odd K exercises the
+    sentinel column."""
+    k2 = jax.random.fold_in(key, K)
+    q, codes, C, st = _problem(k2, 211, 6, K=K, kf=kf)
+    packed = pack_nibbles(codes, K)
+    luts = build_lut(q, C)
+    for cb_mask in (None, st.fast_mask):
+        want_f = lut_sum(luts, codes.astype(jnp.int32), cb_mask)
+        got_f = nibble_lut_sum(luts, packed, K, cb_mask)
+        np.testing.assert_allclose(np.asarray(got_f), np.asarray(want_f),
+                                   atol=1e-5)
+        ql = quantize_lut(luts, cb_mask)
+        want_q = lut_sum(ql, codes.astype(jnp.int32), cb_mask)
+        got_q = nibble_lut_sum(ql, packed, K, cb_mask)
+        np.testing.assert_array_equal(np.asarray(got_q), np.asarray(want_q))
+    # per-query candidate codes (nq, t, K)
+    cand = jax.random.randint(jax.random.fold_in(k2, 9), (6, 8, K), 0, 16)
+    ql = quantize_lut(luts, st.fast_mask)
+    np.testing.assert_array_equal(
+        np.asarray(nibble_lut_sum(ql, pack_nibbles(cand, K), K,
+                                  st.fast_mask)),
+        np.asarray(lut_sum(ql, cand, st.fast_mask)))
+
+
+# ------------------------------------------------- 4-bit == 8-bit engine ----
+
+@pytest.mark.parametrize("kf", [1, 3])          # |K_fast| in {1, K-1}
+@pytest.mark.parametrize("lut_dtype", ["f32", "int8"])
+def test_two_step_4bit_matches_8bit(key, kf, lut_dtype):
+    """The nibble-packed engine returns bitwise-identical ids,
+    distances, and pass accounting to the 8-bit engine on the same
+    codes, at both fast-mask edges."""
+    q, codes, C, st = _problem(jax.random.fold_in(key, kf), 317, 7, K=4,
+                               kf=kf)
+    packed = pack_nibbles(codes, 4)
+    r8 = two_step_search(q, codes, C, st, 13, backend="jnp",
+                         lut_dtype=lut_dtype)
+    r4 = two_step_search(q, packed, C, st, 13, backend="jnp",
+                         lut_dtype=lut_dtype, code_bits=4)
+    np.testing.assert_array_equal(np.asarray(r4.indices),
+                                  np.asarray(r8.indices))
+    np.testing.assert_array_equal(np.asarray(r4.distances),
+                                  np.asarray(r8.distances))
+    assert float(r4.pass_rate) == float(r8.pass_rate)
+
+
+def test_ivf_4bit_matches_8bit(key):
+    q, codes, C, st = _problem(key, 911, 6, K=7, m=16, kf=3, sigma=2.0)
+    emb = cb.decode(C, codes)
+    ivf = build_ivf(jax.random.fold_in(key, 3), emb, 16)
+    packed = pack_nibbles(codes, 7)
+    r8 = ivf_two_step_search(q, codes, C, st, ivf, 17, 4, backend="jnp",
+                             lut_dtype="int8")
+    r4 = ivf_two_step_search(q, packed, C, st, ivf, 17, 4, backend="jnp",
+                             lut_dtype="int8", code_bits=4)
+    np.testing.assert_array_equal(np.asarray(r4.indices),
+                                  np.asarray(r8.indices))
+    np.testing.assert_array_equal(np.asarray(r4.distances),
+                                  np.asarray(r8.distances))
+
+
+def test_code_bits_validation(key):
+    q, codes, C, st = _problem(key, 64, 3, K=4, m=32)
+    with pytest.raises(ValueError, match="code_bits"):
+        two_step_search(q, codes, C, st, 5, backend="jnp", code_bits=5)
+    # m > 16 cannot be nibble-addressed
+    with pytest.raises(ValueError, match="16"):
+        two_step_search(q, pack_nibbles(codes % 16, 4), C, st, 5,
+                        backend="jnp", code_bits=4)
+
+
+# --------------------------------------------------------------- parity ----
+
+@pytest.mark.parametrize("n,nq,K,m,kf", [
+    (257, 5, 7, 16, 3),      # non-divisible n/nq, odd K (sentinel)
+    (530, 7, 8, 16, 7),      # |K_fast| = K - 1
+])
+@pytest.mark.parametrize("lut_dtype", ["f32", "int8"])
+def test_two_step_4bit_pallas_matches_jnp(key, n, nq, K, m, kf, lut_dtype):
+    """Fast-scan crude kernel == jnp nibble engine at code_bits=4:
+    exact ids, 1e-4 distances, identical pass accounting, on tile
+    shapes that do not divide the block sizes."""
+    q, codes, C, st = _problem(jax.random.fold_in(key, n), n, nq, K=K,
+                               m=m, kf=kf)
+    packed = pack_nibbles(codes, K)
+    topk = 17
+    r_j = two_step_search(q, packed, C, st, topk, backend="jnp",
+                          lut_dtype=lut_dtype, code_bits=4)
+    r_p = two_step_search(q, packed, C, st, topk, backend="pallas",
+                          interpret=True, block_q=3, block_n=200,
+                          lut_dtype=lut_dtype, code_bits=4)
+    np.testing.assert_array_equal(np.asarray(r_p.indices),
+                                  np.asarray(r_j.indices))
+    np.testing.assert_allclose(np.asarray(r_p.distances),
+                               np.asarray(r_j.distances), atol=1e-4)
+    assert float(r_p.pass_rate) == pytest.approx(float(r_j.pass_rate),
+                                                 abs=1e-6)
+
+
+def test_adc_4bit_pallas_matches_jnp(key):
+    q, codes, C, st = _problem(key, 300, 6, K=5)
+    packed = pack_nibbles(codes, 5)
+    r_j = adc_search(q, packed, C, 12, backend="jnp", lut_dtype="int8",
+                     code_bits=4)
+    r_p = adc_search(q, packed, C, 12, backend="pallas", interpret=True,
+                     block_q=4, block_n=128, lut_dtype="int8", code_bits=4)
+    np.testing.assert_array_equal(np.asarray(r_j.indices),
+                                  np.asarray(r_p.indices))
+    np.testing.assert_allclose(np.asarray(r_j.distances),
+                               np.asarray(r_p.distances), atol=1e-4)
+
+
+def test_ivf_4bit_pallas_matches_jnp(key):
+    q, codes, C, st = _problem(key, 911, 6, K=7, kf=3, sigma=2.0)
+    emb = cb.decode(C, codes)
+    ivf = build_ivf(jax.random.fold_in(key, 3), emb, 16)
+    packed = pack_nibbles(codes, 7)
+    r_j = ivf_two_step_search(q, packed, C, st, ivf, 17, 4, backend="jnp",
+                              lut_dtype="int8", code_bits=4)
+    r_p = ivf_two_step_search(q, packed, C, st, ivf, 17, 4,
+                              backend="pallas", interpret=True,
+                              block_q=4, block_n=96, lut_dtype="int8",
+                              code_bits=4)
+    np.testing.assert_array_equal(np.asarray(r_p.indices),
+                                  np.asarray(r_j.indices))
+    np.testing.assert_allclose(np.asarray(r_p.distances),
+                               np.asarray(r_j.distances), atol=1e-4)
+    assert float(r_p.pass_rate) == pytest.approx(float(r_j.pass_rate),
+                                                 abs=1e-6)
+
+
+# ------------------------------------------------------------- sharding ----
+
+_SHARDED_4BIT_SCRIPT = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    assert len(jax.devices()) == 4, jax.devices()
+    from repro.core import codebooks as cb
+    from repro.core import icq as icq_mod
+    from repro.core.encode import pack_nibbles
+    from repro.index import FlatADC, IVFTwoStep, TwoStep
+
+    key = jax.random.PRNGKey(0)
+    n, nq, K, m, d, kf = 1237, 9, 7, 16, 8, 3
+    C = jax.random.normal(key, (K, m, d)) * 0.3
+    codes = jax.random.randint(jax.random.fold_in(key, 1), (n, K), 0,
+                               m).astype(jnp.uint8)
+    packed = pack_nibbles(codes, K)
+    fast = jnp.zeros((K,), bool).at[:kf].set(True)
+    st = icq_mod.ICQStructure(xi=jnp.ones((d,), bool), fast_mask=fast,
+                              sigma=jnp.asarray(1.0))
+    q = jax.random.normal(jax.random.fold_in(key, 2), (nq, d))
+    emb = cb.decode(C, codes)
+    mesh = jax.make_mesh((4,), ("data",))
+
+    def check(idx, tag):
+        r1, r4 = idx.search(q), idx.shard(mesh).search(q)
+        np.testing.assert_array_equal(np.asarray(r1.indices),
+                                      np.asarray(r4.indices), err_msg=tag)
+        np.testing.assert_allclose(np.asarray(r1.distances),
+                                   np.asarray(r4.distances), atol=1e-5,
+                                   err_msg=tag)
+        assert float(r1.pass_rate) == float(r4.pass_rate), tag
+
+    check(FlatADC.build(packed, C, topk=17, backend="jnp",
+                        lut_dtype="int8", code_bits=4), "flat-4bit")
+    check(TwoStep.build(packed, C, st, topk=17, backend="jnp",
+                        lut_dtype="int8", code_bits=4), "two-step-4bit")
+    idx = IVFTwoStep.build(packed, C, st, emb_db=emb,
+                           key=jax.random.fold_in(key, 3),
+                           n_lists=16, n_probe=4, topk=17,
+                           backend="jnp", lut_dtype="int8", code_bits=4)
+    check(idx, "ivf-4bit")
+    print("SHARDED_4BIT_OK")
+""")
+
+
+def test_sharded_4bit_merge_identity():
+    """Sharded serving at code_bits=4: ids and distances bitwise match
+    the single-device nibble engines for all three index kinds
+    (each shard unpacks its slice once at body entry).  Subprocess: the
+    in-process suite must keep seeing one device (conftest)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _SHARDED_4BIT_SCRIPT],
+                          capture_output=True, text=True, timeout=600,
+                          env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "SHARDED_4BIT_OK" in proc.stdout
+
+
+# ----------------------------------------------------------- api layer ----
+
+def test_config_code_bits_validation():
+    from repro.api import ConfigError, ICQConfig
+
+    with pytest.raises(ConfigError, match="index.code_bits=4"):
+        ICQConfig.from_dict({"schema_version": 1,
+                             "index": {"code_bits": 4},
+                             "train": {"codebook_size": 64}})
+    with pytest.raises(ConfigError, match="not one of"):
+        ICQConfig.from_dict({"schema_version": 1,
+                             "index": {"code_bits": 5}})
+    # old configs without the field keep serving 8-bit
+    cfg = ICQConfig.from_dict({"schema_version": 1,
+                               "index": {"kind": "flat"}})
+    assert cfg.index.code_bits == 8
+    ok = ICQConfig.from_dict({"schema_version": 1,
+                              "index": {"code_bits": 4},
+                              "train": {"codebook_size": 16}})
+    assert ok.index.code_bits == 4
+
+
+@pytest.mark.parametrize("kind", ["flat", "two-step", "ivf"])
+def test_artifacts_4bit_bitwise_round_trip(tmp_path, kind):
+    """fit→save→load→search at code_bits=4: the stored codes stay
+    nibble-packed uint8 and the reloaded engine serves bitwise-identical
+    ids and distances for every index kind."""
+    from repro.api import (Artifacts, ICQConfig, IndexConfig, ServeConfig,
+                           TrainConfig, build_ann_engine, load_ann_engine)
+    from repro.data.synthetic import make_synthetic_index
+
+    key = jax.random.PRNGKey(0)
+    n, K = 1500, 8
+    codes, C, structure = make_synthetic_index(key, n, d=16, K=K, m=16,
+                                               num_fast=2)
+    emb_db = cb.decode(C, codes)
+    engine = build_ann_engine(codes, C, structure, topk=20, backend="jnp",
+                              index=kind, emb_db=emb_db, n_lists=16,
+                              n_probe=4, lut_dtype="int8", code_bits=4,
+                              key=jax.random.PRNGKey(1))
+    assert np.asarray(engine.index.codes).shape[-1] == (K + 1) // 2
+    q = jax.random.normal(jax.random.PRNGKey(2), (8, 16))
+    r0 = engine(q)
+    cfg = ICQConfig(train=TrainConfig(codebook_size=16),
+                    index=IndexConfig(kind=kind, n_lists=16, n_probe=4,
+                                      code_bits=4),
+                    serve=ServeConfig(topk=20, backend="jnp",
+                                      lut_dtype="int8"))
+    path = str(tmp_path / f"art4_{kind}")
+    Artifacts(config=cfg, index=engine.index).save(path)
+    loaded = load_ann_engine(path)
+    stored = np.asarray(loaded.index.codes)
+    assert stored.dtype == np.uint8 and stored.shape[-1] == (K + 1) // 2
+    r1 = loaded(q)
+    assert np.array_equal(np.asarray(r0.indices), np.asarray(r1.indices))
+    assert np.array_equal(np.asarray(r0.distances),
+                          np.asarray(r1.distances))
+
+
+def test_artifacts_code_bits_override_rejected(tmp_path):
+    """code_bits is a storage property, not a serving knob: loading a
+    4-bit artifact with index.code_bits=8 overridden must fail (the
+    bytes on disk are nibble-packed)."""
+    from repro.api import (ArtifactError, Artifacts, ICQConfig,
+                          IndexConfig, ServeConfig, TrainConfig,
+                          build_ann_engine, load_ann_engine)
+    from repro.data.synthetic import make_synthetic_index
+
+    key = jax.random.PRNGKey(0)
+    codes, C, structure = make_synthetic_index(key, 600, d=16, K=4, m=16,
+                                               num_fast=2)
+    engine = build_ann_engine(codes, C, structure, topk=10, backend="jnp",
+                              code_bits=4)
+    cfg = ICQConfig(train=TrainConfig(codebook_size=16),
+                    index=IndexConfig(kind="two-step", code_bits=4),
+                    serve=ServeConfig(topk=10, backend="jnp"))
+    path = str(tmp_path / "art4_override")
+    Artifacts(config=cfg, index=engine.index).save(path)
+    with pytest.raises(ArtifactError, match="code_bits"):
+        load_ann_engine(path, overrides={"index.code_bits": 8})
+
+
+# ------------------------------------------------------ trainer/encoder ----
+
+def test_encode_database_4bit(key):
+    """The tiled encoder emits nibble-packed codes under code_bits=4 —
+    exactly pack_nibbles of its 8-bit output — and rejects geometries
+    the nibble format cannot address."""
+    from repro.trainer import encode_database
+
+    K, m, d = 5, 16, 8
+    C = jax.random.normal(key, (K, m, d)) * 0.3
+    emb = jax.random.normal(jax.random.fold_in(key, 1), (333, d))
+    codes8 = encode_database(emb, C, icm_iters=2)
+    codes4 = encode_database(emb, C, icm_iters=2, code_bits=4)
+    assert codes4.shape == (333, (K + 1) // 2) and codes4.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(codes4),
+                                  np.asarray(pack_nibbles(codes8, K)))
+    C_wide = jax.random.normal(key, (K, 32, d))
+    with pytest.raises(ValueError, match="16"):
+        encode_database(emb, C_wide, code_bits=4)
+    with pytest.raises(ValueError, match="pack"):
+        encode_database(emb, C, code_bits=4, pack=False)
+
+
+def test_trainer_m16_end_to_end(key):
+    """A K=8, m=16 quantizer fits, encodes within nibble range, and the
+    4-bit engine over its packed codes matches the 8-bit engine
+    bitwise — the full train→encode→search path at code_bits=4."""
+    from repro.configs.base import ICQConfig as CoreICQConfig
+    from repro.core import fit
+    from repro.data import make_table1_dataset
+
+    xtr, ytr, xte, _ = make_table1_dataset("dataset2")
+    xtr, ytr, xte = xtr[:600], ytr[:600], xte[:16]
+    cfg = CoreICQConfig(d=16, num_codebooks=8, codebook_size=16,
+                        num_fast=2)
+    model = fit(jax.random.PRNGKey(0), xtr, ytr, cfg, mode="icq",
+                epochs=2, batch_size=128)
+    assert model.C.shape == (8, 16, 16)
+    assert int(jnp.max(model.codes)) < 16
+    emb_q = model.embed(xte)
+    packed = pack_nibbles(model.codes, 8)
+    r8 = two_step_search(emb_q, model.codes, model.C, model.structure,
+                         15, backend="jnp", lut_dtype="int8")
+    r4 = two_step_search(emb_q, packed, model.C, model.structure, 15,
+                         backend="jnp", lut_dtype="int8", code_bits=4)
+    np.testing.assert_array_equal(np.asarray(r4.indices),
+                                  np.asarray(r8.indices))
+    np.testing.assert_array_equal(np.asarray(r4.distances),
+                                  np.asarray(r8.distances))
