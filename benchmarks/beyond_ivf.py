@@ -13,7 +13,7 @@ from repro.core.ivf import build_ivf, ivf_two_step_search
 from repro.data import make_table1_dataset
 
 
-def run(full: bool = False):
+def run(full: bool = False, seed: int = 0):
     rows = []
     n = 10000 if full else 4000
     nq = 500 if full else 150
@@ -22,11 +22,11 @@ def run(full: bool = False):
     cfg = ICQConfig(d=16, num_codebooks=8,
                     codebook_size=256 if full else 64, num_fast=2)
     t0 = time.time()
-    m = fit(jax.random.PRNGKey(0), xtr, ytr, cfg, mode="icq",
+    m = fit(jax.random.PRNGKey(seed), xtr, ytr, cfg, mode="icq",
             epochs=8 if full else 5)
     fit_s = time.time() - t0
     emb_db, emb_q = m.embed(xtr), m.embed(xte)
-    ivf = build_ivf(jax.random.PRNGKey(1), emb_db,
+    ivf = build_ivf(jax.random.PRNGKey(seed + 1), emb_db,
                     n_lists=128 if full else 64)
     for n_probe in (4, 8, 16):
         t0 = time.time()

@@ -24,6 +24,32 @@ def code_bits(cfg: ICQConfig) -> int:
     return int(cfg.num_codebooks * np.log2(cfg.codebook_size))
 
 
+def recall_at_k(retrieved, truth, k=None) -> float:
+    """THE benchmark recall: delegates to the oracle-tested
+    ``repro.eval.recall_at_k`` (set overlap, -1 padding aware, k > n
+    measured against the neighbors that exist) so every figure script
+    and engine bench scores identically."""
+    from repro import eval as eval_mod
+
+    return eval_mod.recall_at_k(np.asarray(retrieved), np.asarray(truth),
+                                k)
+
+
+def engine_ground_truth(queries, codes, C, k: int = 10, *,
+                        query_chunk: int = 32):
+    """The engine benches' shared reference ranking: the full f32
+    quantized-ADC top-k over the coded database.  This isolates engine
+    pruning/precision loss (IVF probing, eq. 2, int8 LUTs, 4-bit slabs)
+    from quantization error — random synthetic codes make exact-L2
+    recall meaningless for engine comparisons.  For recall against the
+    *exact* brute-force neighbors (the pareto sweep), use
+    ``repro.eval.ground_truth`` instead."""
+    from repro.core.search import adc_search
+
+    return adc_search(queries, codes, C, k, backend="jnp",
+                      query_chunk=query_chunk).indices
+
+
 def evaluate(model, xte, yte, ytr, topk: int = 50, backend: str = "jnp"):
     """(map, avg_ops, pass_rate, search_us_per_query).
 

@@ -20,7 +20,8 @@ def fit_sq_pq(key, xtr, ytr, cfg, *, epochs, **kw):
     return fit(key, xtr, ytr, cfg, mode="pq", epochs=epochs)
 
 
-def run(full: bool = False, datasets=("dataset1", "dataset2", "dataset3")):
+def run(full: bool = False, datasets=("dataset1", "dataset2", "dataset3"),
+        seed: int = 0):
     rows = []
     n = 10000 if full else 3000
     nq = 1000 if full else 150
@@ -32,7 +33,7 @@ def run(full: bool = False, datasets=("dataset1", "dataset2", "dataset3")):
             cfg = ICQConfig(d=16, num_codebooks=K,
                             codebook_size=256 if full else 32,
                             num_fast=max(K // 4, 1))
-            key = jax.random.PRNGKey(K)
+            key = jax.random.PRNGKey(K + 100_000 * seed)
             rows.append(bench_row("fig1", ds, "icq", cfg, key, xtr, ytr,
                                   xte, yte, epochs=epochs))
             # SQ+PQ baseline: same code length, same quantizer size

@@ -9,7 +9,8 @@ from repro.configs.base import ICQConfig
 from repro.data import make_table1_dataset
 
 
-def run(full: bool = False, datasets=("dataset1", "dataset2", "dataset3")):
+def run(full: bool = False, datasets=("dataset1", "dataset2", "dataset3"),
+        seed: int = 0):
     rows = []
     n = 10000 if full else 3000
     nq = 1000 if full else 150
@@ -21,7 +22,7 @@ def run(full: bool = False, datasets=("dataset1", "dataset2", "dataset3")):
             cfg = ICQConfig(d=16, num_codebooks=K,
                             codebook_size=256 if full else 32,
                             num_fast=max(K // 4, 1))
-            key = jax.random.PRNGKey(100 + K)
+            key = jax.random.PRNGKey(100 + K + 100_000 * seed)
             rows.append(bench_row("fig2", ds, "icq", cfg, key, xtr, ytr,
                                   xte, yte, epochs=epochs))
             rows.append(bench_row("fig2", ds, "sq", cfg, key, xtr, ytr,

@@ -15,7 +15,7 @@ from repro.configs.base import ICQConfig
 from repro.data import pseudo_cifar, pseudo_mnist
 
 
-def run(full: bool = False):
+def run(full: bool = False, seed: int = 0):
     rows = []
     n = 10000 if full else 2000
     nq = 1000 if full else 150
@@ -27,7 +27,7 @@ def run(full: bool = False):
             cfg = ICQConfig(d=16, num_codebooks=K,
                             codebook_size=256 if full else 32,
                             num_fast=max(K // 4, 1))
-            key = jax.random.PRNGKey(200 + K)
+            key = jax.random.PRNGKey(200 + K + 100_000 * seed)
             rows.append(bench_row("fig3", name, "icq", cfg, key, xtr, ytr,
                                   xte, yte, epochs=epochs))
             rows.append(bench_row("fig3", name, "sq", cfg, key, xtr, ytr,

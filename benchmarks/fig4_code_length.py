@@ -25,7 +25,7 @@ LITERATURE = {
 }
 
 
-def run(full: bool = False):
+def run(full: bool = False, seed: int = 0):
     rows = []
     n = 10000 if full else 2000
     nq = 1000 if full else 150
@@ -35,7 +35,7 @@ def run(full: bool = False):
         cfg = ICQConfig(d=16, num_codebooks=K,
                         codebook_size=256 if full else 32,
                         num_fast=max(K // 4, 1))
-        key = jax.random.PRNGKey(300 + K)
+        key = jax.random.PRNGKey(300 + K + 100_000 * seed)
         icq_row = bench_row("fig4", "pseudo_cifar", "icq", cfg, key, xtr,
                             ytr, xte, yte, epochs=epochs)
         sq_row = bench_row("fig4", "pseudo_cifar", "sq", cfg, key, xtr,

@@ -11,7 +11,7 @@ from repro.configs.base import ICQConfig
 from repro.data import pseudo_cifar, pseudo_mnist
 
 
-def run(full: bool = False):
+def run(full: bool = False, seed: int = 0):
     rows = []
     n = 8000 if full else 1500
     nq = 800 if full else 120
@@ -25,7 +25,7 @@ def run(full: bool = False):
             cfg = ICQConfig(d=16, num_codebooks=K,
                             codebook_size=256 if full else 32,
                             num_fast=max(K // 4, 1))
-            key = jax.random.PRNGKey(400 + K)
+            key = jax.random.PRNGKey(400 + K + 100_000 * seed)
             rows.append(bench_row("fig5", name, "icq_cnn", cfg, key, xtr,
                                   ytr, xte, yte, epochs=epochs, img_hw=hw,
                                   channels=ch))

@@ -16,12 +16,12 @@ def split_unseen(x, y, holdout, seed=0):
     return (x[~held], y[~held]), (x[held], y[held])
 
 
-def run(full: bool = False):
+def run(full: bool = False, seed: int = 0):
     rows = []
     n = 8000 if full else 2000
     nq = 1500 if full else 400
     epochs = 8 if full else 3
-    rng = np.random.default_rng(7)
+    rng = np.random.default_rng(7 + seed)
     for name, gen in (("pseudo_mnist", pseudo_mnist),
                       ("pseudo_cifar", pseudo_cifar)):
         xtr, ytr, xte, yte = gen(n_train=n, n_test=nq)
@@ -36,7 +36,7 @@ def run(full: bool = False):
             cfg = ICQConfig(d=16, num_codebooks=K,
                             codebook_size=256 if full else 32,
                             num_fast=max(K // 4, 1))
-            key = jax.random.PRNGKey(500 + K)
+            key = jax.random.PRNGKey(500 + K + 100_000 * seed)
             for method in ("icq", "sq"):
                 # fit on seen classes, index + query the unseen ones
                 from benchmarks import common

@@ -22,6 +22,10 @@ reproducible from a checked-in config
     PYTHONPATH=src python -m benchmarks.run --only encode   # BENCH_encode.json
     PYTHONPATH=src python -m benchmarks.run --only train    # BENCH_train.json
     PYTHONPATH=src python -m benchmarks.run --only faults   # BENCH_faults.json
+    PYTHONPATH=src python -m benchmarks.run --only pareto   # BENCH_pareto.json
+
+Every target accepts ``--seed N`` (default 0), threaded through its
+data generation — two same-seed runs report identical recall numbers.
 """
 from __future__ import annotations
 
@@ -35,20 +39,23 @@ import numpy as np
 
 from benchmarks import (beyond_ivf, fig1_synthetic_pq, fig2_synthetic_cq,
                         fig3_realworld_sq, fig4_code_length, fig5_pqn,
-                        fig6_unseen)
+                        fig6_unseen, sweep)
 from benchmarks.common import header
 
 
 def search_bench(full: bool = False, *, out_path: str = "BENCH_search.json",
                  n: int = 100_000, nq: int = 64, K: int = 8, m: int = 256,
                  num_fast: int = 2, topk: int = 50, d: int = 16,
-                 repeats: int = 3, pallas_n: int = 4096, pallas_nq: int = 8):
+                 repeats: int = 3, pallas_n: int = 4096, pallas_nq: int = 8,
+                 seed: int = 0):
     """Batched two-step engine vs the per-query ``lax.map`` baseline on a
     synthetic index (n points, nq-query batches), written to
     ``out_path`` so the perf trajectory is machine-readable across PRs.
 
     The pallas row runs interpret mode (CPU container) at a reduced size
-    — it tracks correctness/call overhead, not TPU latency.
+    — it tracks correctness/call overhead, not TPU latency.  ``seed``
+    drives every PRNG key (data + queries): two runs with the same seed
+    report identical recall/avg_ops numbers.
     """
     from repro.core.search import two_step_search
     from repro.data.synthetic import make_synthetic_index
@@ -56,7 +63,7 @@ def search_bench(full: bool = False, *, out_path: str = "BENCH_search.json",
 
     if full:
         n, nq = max(n, 1_000_000), max(nq, 256)
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(seed)
     codes, C, structure = make_synthetic_index(key, n, d=d, K=K, m=m,
                                                num_fast=num_fast)
     queries = jax.random.normal(jax.random.fold_in(key, 2), (nq, d))
@@ -114,7 +121,7 @@ def ivf_bench(full: bool = False, *, out_path: str = "BENCH_ivf.json",
               num_fast: int = 2, topk: int = 50, d: int = 16,
               n_lists: int = 256, probes=(4, 8, 16), repeats: int = 9,
               query_chunk: int = 32, pallas_n_probe: int = 4,
-              pallas_nq: int = 8):
+              pallas_nq: int = 8, seed: int = 0):
     """Batched IVF engine vs the per-query ``lax.map`` IVF baseline
     (and the flat two-step engine) on a synthetic index, written to
     ``out_path`` for cross-PR perf tracking.
@@ -124,8 +131,9 @@ def ivf_bench(full: bool = False, *, out_path: str = "BENCH_ivf.json",
     visible device (CPU: XLA_FLAGS=--xla_force_host_platform_device_
     count=N); with one device only shards=1 is recorded.
     """
+    from benchmarks.common import engine_ground_truth, recall_at_k
     from repro.core import codebooks as cb
-    from repro.core.search import adc_search, recall_at, two_step_search
+    from repro.core.search import two_step_search
     from repro.data.synthetic import make_synthetic_index
     from repro.index import (IVFTwoStep, build_ivf, ivf_list_codes,
                              ivf_two_step_search)
@@ -133,18 +141,16 @@ def ivf_bench(full: bool = False, *, out_path: str = "BENCH_ivf.json",
 
     if full:
         n, nq = max(n, 1_000_000), max(nq, 256)
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(seed)
     codes, C, structure = make_synthetic_index(key, n, d=d, K=K, m=m,
                                                num_fast=num_fast)
     emb_db = cb.decode(C, codes)                 # reconstructed db points
     queries = jax.random.normal(jax.random.fold_in(key, 2), (nq, d))
     ivf = build_ivf(jax.random.fold_in(key, 3), emb_db, n_lists)
     slab = ivf_list_codes(ivf, codes)
-    # recall@10 vs the *full quantized ADC ranking* — isolates the IVF
-    # pruning + eq. 2 loss from quantization error (random synthetic
-    # codes make exact-L2 recall meaningless for engine comparisons)
-    gt = adc_search(queries, codes, C, 10, backend="jnp",
-                    query_chunk=32).indices
+    # recall@10 vs the *full quantized ADC ranking* — see
+    # benchmarks.common.engine_ground_truth for why not exact-L2
+    gt = engine_ground_truth(queries, codes, C, 10)
 
     def timed(fn, *args, **kw):
         # min-of-repeats: this container is cpu-share throttled and
@@ -163,8 +169,8 @@ def ivf_bench(full: bool = False, *, out_path: str = "BENCH_ivf.json",
         return dict(engine=engine, n=n_run, nq=nq_run, n_probe=n_probe,
                     shards=shards,
                     search_us=round(dt / nq_run * 1e6, 2),
-                    recall10=round(float(recall_at(res.indices[:, :10],
-                                                   gt[:nq_run])), 4),
+                    recall10=round(recall_at_k(res.indices[:, :10],
+                                               gt[:nq_run], 10), 4),
                     avg_ops=round(float(res.avg_ops), 4),
                     pass_rate=round(float(res.pass_rate), 4))
 
@@ -236,7 +242,8 @@ def ivf_bench(full: bool = False, *, out_path: str = "BENCH_ivf.json",
 def lutq_bench(full: bool = False, *, out_path: str = "BENCH_lutq.json",
                n: int = 100_000, nq: int = 64, K: int = 8, m: int = 256,
                num_fast: int = 2, topk: int = 50, d: int = 16,
-               repeats: int = 9, pallas_n: int = 4096, pallas_nq: int = 8):
+               repeats: int = 9, pallas_n: int = 4096, pallas_nq: int = 8,
+               seed: int = 0):
     """Quantized-LUT (int8) crude pass vs the f32 crude pass on the jnp
     backend, plus end-to-end two-step rows per ``lut_dtype`` and a
     pallas-interpret int8 tracking row, written to ``out_path``
@@ -250,20 +257,20 @@ def lutq_bench(full: bool = False, *, out_path: str = "BENCH_lutq.json",
     for engine comparisons) for the f32 and int8 two-step engines; the
     acceptance gate is a delta <= 0.01.
     """
-    from repro.core.search import adc_search, recall_at, two_step_search
+    from benchmarks.common import engine_ground_truth, recall_at_k
+    from repro.core.search import two_step_search
     from repro.data.synthetic import make_synthetic_index
     from repro.index.base import build_lut, lut_sum, quantize_lut
 
     if full:
         n, nq = max(n, 1_000_000), max(nq, 256)
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(seed)
     codes, C, structure = make_synthetic_index(key, n, d=d, K=K, m=m,
                                                num_fast=num_fast)
     queries = jax.random.normal(jax.random.fold_in(key, 2), (nq, d))
     fast = structure.fast_mask
     codes_i32 = codes.astype(jnp.int32)
-    gt = adc_search(queries, codes, C, 10, backend="jnp",
-                    query_chunk=32).indices
+    gt = engine_ground_truth(queries, codes, C, 10)
 
     def timed(fn, *args):
         out = fn(*args)                          # compile + warm
@@ -319,7 +326,7 @@ def lutq_bench(full: bool = False, *, out_path: str = "BENCH_lutq.json",
             lambda q, lt=lut_dtype: two_step_search(
                 q, codes, C, structure, topk, backend="jnp",
                 lut_dtype=lt)), queries)
-        recalls[lut_dtype] = float(recall_at(res.indices[:, :10], gt))
+        recalls[lut_dtype] = recall_at_k(res.indices[:, :10], gt, 10)
         rows.append(dict(stage="two_step", lut_dtype=lut_dtype, n=n, nq=nq,
                          search_us=round(dt / nq * 1e6, 2),
                          recall10=round(recalls[lut_dtype], 4),
@@ -357,7 +364,7 @@ def fastscan_bench(full: bool = False, *,
                    n: int = 100_000, nq: int = 64, K: int = 8, m: int = 16,
                    num_fast: int = 2, topk: int = 50, d: int = 16,
                    repeats: int = 9, pallas_n: int = 4096,
-                   pallas_nq: int = 8):
+                   pallas_nq: int = 8, seed: int = 0):
     """4-bit fast-scan crude pass (``code_bits=4``, DESIGN.md §12) vs
     the int8 and f32 crude passes on the jnp backend, written to
     ``out_path``.
@@ -373,23 +380,23 @@ def fastscan_bench(full: bool = False, *,
     (acceptance gate: delta <= 0.01), and code-memory bytes per row are
     reported for both layouts.
     """
+    from benchmarks.common import engine_ground_truth, recall_at_k
     from repro.core.encode import pack_nibbles
-    from repro.core.search import adc_search, recall_at, two_step_search
+    from repro.core.search import two_step_search
     from repro.data.synthetic import make_synthetic_index
     from repro.index.base import (build_lut, lut_sum, nibble_lut_sum,
                                   quantize_lut)
 
     if full:
         n, nq = max(n, 1_000_000), max(nq, 256)
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(seed)
     codes, C, structure = make_synthetic_index(key, n, d=d, K=K, m=m,
                                                num_fast=num_fast)
     queries = jax.random.normal(jax.random.fold_in(key, 2), (nq, d))
     fast = structure.fast_mask
     codes_i32 = codes.astype(jnp.int32)
     packed = pack_nibbles(codes, K)
-    gt = adc_search(queries, codes, C, 10, backend="jnp",
-                    query_chunk=32).indices
+    gt = engine_ground_truth(queries, codes, C, 10)
 
     def timed(fn, *args):
         out = fn(*args)                          # compile + warm
@@ -463,7 +470,7 @@ def fastscan_bench(full: bool = False, *,
         res, dt = timed(jax.jit(
             lambda q, c=cds, k=dict(kw): two_step_search(
                 q, c, C, structure, topk, backend="jnp", **k)), queries)
-        recalls[label] = float(recall_at(res.indices[:, :10], gt))
+        recalls[label] = recall_at_k(res.indices[:, :10], gt, 10)
         rows.append(dict(stage="two_step", variant=label, n=n, nq=nq,
                          search_us=round(dt / nq * 1e6, 2),
                          recall10=round(recalls[label], 4),
@@ -513,7 +520,7 @@ def encode_bench(full: bool = False, *, out_path: str = "BENCH_encode.json",
                  n: int = 100_000, d: int = 16, K: int = 8, m: int = 256,
                  iters: int = 3, chunk: int = 8192, repeats: int = 3,
                  point_chunk: int = 8192, pallas_n: int = 8192,
-                 block_n: int = 1024):
+                 block_n: int = 1024, seed: int = 0):
     """Tiled ICM encoding engine vs the seed per-chunk host loop
     (cross-Gram formulation, ragged last chunk re-jitted), written to
     ``out_path`` for cross-PR perf tracking (DESIGN.md §9).
@@ -533,7 +540,7 @@ def encode_bench(full: bool = False, *, out_path: str = "BENCH_encode.json",
 
     if full:
         n = max(n, 1_000_000)
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(seed)
     x = (jax.random.normal(key, (n, d))
          * jnp.linspace(0.3, 2.0, d)[None, :])
     C = cb.init_residual(jax.random.fold_in(key, 1), x[:4096], K, m,
@@ -602,7 +609,7 @@ def encode_bench(full: bool = False, *, out_path: str = "BENCH_encode.json",
 
 def train_bench(full: bool = False, *, out_path: str = "BENCH_train.json",
                 n: int = 8192, epochs: int = 2, batch_size: int = 256,
-                repeats: int = 3):
+                repeats: int = 3, seed: int = 0):
     """Scan-compiled epoch driver vs the seed per-batch host-dispatch
     loop on the joint ICQ trainer, written to ``out_path`` for cross-PR
     perf tracking (DESIGN.md §9).
@@ -623,7 +630,7 @@ def train_bench(full: bool = False, *, out_path: str = "BENCH_train.json",
     xtr, ytr, _, _ = make_table1_dataset("dataset2")
     xtr, ytr = xtr[:n], ytr[:n]
     cfg = ICQConfig(d=16, num_codebooks=8, codebook_size=64, num_fast=2)
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(seed)
     state = init_train_state(key, cfg, embed_kind="linear", d_raw=64,
                              mode="icq",
                              sample_batch=(xtr[:4096], ytr[:4096]))
@@ -635,7 +642,7 @@ def train_bench(full: bool = False, *, out_path: str = "BENCH_train.json",
 
     def host_loop():
         params, opt_state = state["params"], state["opt_state"]
-        rng = jax.random.PRNGKey(1)
+        rng = jax.random.PRNGKey(seed + 1)
         for ep in range(epochs):
             rng, k = jax.random.split(rng)
             perm = jax.random.permutation(k, n)
@@ -651,7 +658,7 @@ def train_bench(full: bool = False, *, out_path: str = "BENCH_train.json",
 
     def scan_loop():
         params, opt_state = state["params"], state["opt_state"]
-        rng = jax.random.PRNGKey(1)
+        rng = jax.random.PRNGKey(seed + 1)
         for ep in range(epochs):
             rng, k = jax.random.split(rng)
             xb, yb = epoch_batches(k, xtr, ytr, batch_size)
@@ -800,6 +807,7 @@ FIGURES = {
     "encode": encode_bench,
     "train": train_bench,
     "faults": faults_bench,
+    "pareto": sweep.run,
 }
 
 
@@ -844,6 +852,10 @@ def main():
                          "geometry/engine options (engine targets only: "
                          f"{', '.join(CONFIG_TARGETS)}); e.g. the "
                          "checked-in benchmarks/configs/bench_small.json")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed threaded through every target's data "
+                         "generation; same seed => identical "
+                         "recall/avg_ops numbers across runs")
     args = ap.parse_args()
 
     if args.only is not None and args.only not in FIGURES:
@@ -867,7 +879,8 @@ def main():
     for name, run_fn in FIGURES.items():
         if args.only and name != args.only:
             continue
-        run_fn(full=args.full, **(overrides if name == args.only else {}))
+        run_fn(full=args.full, seed=args.seed,
+               **(overrides if name == args.only else {}))
     if not args.only:
         kernel_micro()
     print(f"# total {time.time() - t0:.0f}s", flush=True)

@@ -1,0 +1,167 @@
+"""Recall/QPS Pareto sweep (``--only pareto`` -> ``BENCH_pareto.json``).
+
+Grid-sweeps the serving-time knobs — (n_probe, num_fast, refine_cap,
+lut_dtype, code_bits) — on a real-shaped workload (``pseudo_sift``:
+d=128, clustered, heavy-tailed; queries drawn power-law-skewed like
+production traffic), measuring recall@k against the *exact* brute-force
+neighbors (``repro.eval.cached_ground_truth`` — unlike the engine
+benches, which score against the full ADC ranking) and QPS
+(min-of-repeats wall time) per grid point.  The Pareto frontier is
+extracted with ``repro.eval.pareto_frontier`` and written alongside the
+raw rows; ``repro.api.ICQSession.tune`` is the programmatic face of the
+same search (docs/api.md).
+
+    PYTHONPATH=src python -m benchmarks.run --only pareto [--seed N]
+
+JSON schema (docs/benchmarks.md):
+    workload, n, nq, d, K, m, k, seed, gt_cache_hit,
+    rows:     [{kind, n_probe, num_fast, refine_cap, lut_dtype,
+                code_bits, recall, qps, search_us, avg_ops, pass_rate}],
+    frontier: [rows on the Pareto frontier, descending qps],
+    frontier_monotone: bool (recall non-decreasing as qps decreases)
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _default_grid(n_lists: int, K: int, k: int):
+    """>= 12 serving configurations spanning every swept knob.
+
+    IVF rows sweep (n_probe x num_fast), then refine_cap / int8-LUT /
+    4-bit-code variants at the headline probe counts; two flat two-step
+    rows anchor the n_probe=None end of the frontier.
+    """
+    base = dict(kind="ivf", n_probe=None, num_fast=None, refine_cap=None,
+                lut_dtype="f32", code_bits=8)
+    grid = []
+    nf_lo, nf_hi = max(1, K // 4), max(2, K // 2)
+    for n_probe in (2, 4, 8, 16):
+        for nf in (nf_lo, nf_hi):
+            grid.append(dict(base, n_probe=min(n_probe, n_lists),
+                             num_fast=nf))
+    for cap in (4 * k, 16 * k):
+        grid.append(dict(base, n_probe=8, num_fast=nf_lo, refine_cap=cap))
+    grid.append(dict(base, n_probe=8, num_fast=nf_lo, lut_dtype="int8"))
+    grid.append(dict(base, n_probe=16, num_fast=nf_lo, lut_dtype="int8"))
+    grid.append(dict(base, n_probe=8, num_fast=nf_lo, lut_dtype="int8",
+                     code_bits=4))
+    grid.append(dict(base, kind="two_step", num_fast=nf_lo))
+    grid.append(dict(base, kind="two_step", num_fast=nf_hi))
+    return grid
+
+
+def run(full: bool = False, *, out_path: str = "BENCH_pareto.json",
+        n: int = 20_000, nq: int = 128, d: int = 128, n_clusters: int = 64,
+        K: int = 16, m: int = 16, k: int = 10, n_lists: int = 64,
+        icm_iters: int = 3, margin_scale: float = 0.5, repeats: int = 3,
+        grid=None, cache_dir: str = ".gt_cache", workload: str = "sift",
+        seed: int = 0):
+    """The recall/QPS sweep.  Geometry is pinned to m <= 16 so the same
+    trained quantizer serves both the byte-coded and the nibble-packed
+    (``code_bits=4``) grid points; ``margin_scale`` sets the eq. 2
+    sigma from the db's out-of-psi variance mass (smaller = more
+    selective crude filter).  Same seed => identical JSON.
+    """
+    from benchmarks.common import recall_at_k
+    from repro import eval as eval_mod
+    from repro.core import codebooks as cb
+    from repro.core import icq as icq_mod
+    from repro.core.encode import icm_encode, pack_codes, pack_nibbles
+    from repro.data.pseudo_real import (pseudo_glove, pseudo_sift,
+                                        skewed_queries)
+    from repro.index import (IVFTwoStep, TwoStep, build_ivf,
+                             ivf_list_codes)
+
+    if full:
+        n, nq = max(n, 100_000), max(nq, 256)
+    gen = pseudo_sift if workload == "sift" else pseudo_glove
+    if workload == "glove":
+        d = 300
+    db, _, cid = gen(n, nq, d=d, n_clusters=n_clusters, seed=seed)
+    queries, _ = skewed_queries(db, cid, nq, seed=seed)
+    gt_ids, _, gt_hit = eval_mod.cached_ground_truth(db, queries, k,
+                                                     cache_dir=cache_dir)
+
+    # train the quantizer once; every grid point is a serving-time
+    # reconfiguration of the same codes (exactly what session.tune does)
+    key = jax.random.PRNGKey(seed)
+    db_j = jnp.asarray(db)
+    q_j = jnp.asarray(queries)
+    C = cb.init_residual(key, db_j[:8192], K, m, iters=10)
+    codes_i = icm_encode(db_j, C, icm_iters, backend="jnp",
+                         point_chunk=8192).astype(jnp.int32)
+    codes8 = pack_codes(codes_i, m)
+    codes4 = pack_nibbles(codes_i, K)
+    # psi = the top-variance half of the dims; sigma = eq. 11 over the
+    # variance mass outside psi (the identity-embedding analogue of the
+    # trained prior)
+    lam = jnp.var(db_j, axis=0)
+    xi = jnp.zeros((d,), bool).at[jnp.argsort(-lam)[: d // 2]].set(True)
+    sigma = icq_mod.margin_sigma(lam, xi, margin_scale)
+    structures = {}
+
+    def structure(num_fast):
+        if num_fast not in structures:
+            mask = icq_mod.fast_set_topk(C, xi, num_fast)
+            structures[num_fast] = icq_mod.ICQStructure(
+                xi=xi, fast_mask=mask, sigma=sigma)
+        return structures[num_fast]
+
+    ivf = build_ivf(jax.random.fold_in(key, 3), db_j, n_lists)
+    slabs = {8: ivf_list_codes(ivf, codes8), 4: ivf_list_codes(ivf, codes4)}
+
+    def build_point(g):
+        cds = codes4 if g["code_bits"] == 4 else codes8
+        kw = dict(codes=cds, C=C, structure=structure(g["num_fast"]),
+                  topk=k, backend="jnp", refine_cap=g["refine_cap"],
+                  lut_dtype=g["lut_dtype"], code_bits=g["code_bits"])
+        if g["kind"] == "ivf":
+            return IVFTwoStep(ivf=ivf, n_probe=g["n_probe"],
+                              list_codes=slabs[g["code_bits"]], **kw)
+        return TwoStep(**kw)
+
+    rows = []
+    for g in grid if grid is not None else _default_grid(n_lists, K, k):
+        idx = build_point(g)
+        call = jax.jit(lambda q, i=idx: i.search(q, k))
+        res = call(q_j)
+        jax.block_until_ready(res.indices)       # compile + warm
+        ts = []
+        for _ in range(repeats):
+            t0 = time.time()
+            jax.block_until_ready(call(q_j).indices)
+            ts.append(time.time() - t0)
+        # min-of-repeats: cpu-share throttled container (see run.py)
+        dt = min(ts)
+        row = dict(g, recall=round(recall_at_k(res.indices, gt_ids, k), 4),
+                   qps=round(nq / dt, 1),
+                   search_us=round(dt / nq * 1e6, 2),
+                   avg_ops=round(float(res.avg_ops), 4),
+                   pass_rate=round(float(res.pass_rate), 4))
+        rows.append(row)
+        print(f"pareto,{row['kind']},probe={row['n_probe']},"
+              f"nf={row['num_fast']},cap={row['refine_cap']},"
+              f"lut={row['lut_dtype']},bits={row['code_bits']},"
+              f"recall={row['recall']},qps={row['qps']},"
+              f"{row['search_us']}", flush=True)
+
+    front_idx = eval_mod.pareto_frontier(rows)
+    frontier = [rows[i] for i in front_idx]
+    out = dict(workload=workload, n=n, nq=nq, d=d, K=K, m=m, k=k,
+               seed=seed, n_lists=n_lists, margin_scale=margin_scale,
+               gt_cache_hit=bool(gt_hit), rows=rows, frontier=frontier,
+               frontier_monotone=eval_mod.is_monotone_frontier(frontier))
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# pareto: {len(rows)} configs, frontier {len(frontier)} "
+          f"(monotone {out['frontier_monotone']}), recall "
+          f"{frontier[-1]['recall']}@{frontier[-1]['qps']}qps .. "
+          f"{frontier[0]['recall']}@{frontier[0]['qps']}qps -> {out_path}",
+          flush=True)
+    return out

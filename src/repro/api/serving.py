@@ -166,16 +166,26 @@ class AnnEngine:
         return int(getattr(self.index, "topk", 50))
 
     def _level_fn(self, level: str, topk: Optional[int],
-                  budget: SearchBudget):
+                  budget: SearchBudget, has_filter: bool = False):
         lidx = (self._view if self.mesh is not None
                 else self._level_index(level, budget))
         key = (level, topk, self._backend_eff(),
                getattr(lidx, "refine_cap", None),
                getattr(lidx, "n_probe", None),
-               getattr(self._view, "dead_shards", None))
+               getattr(self._view, "dead_shards", None), has_filter)
         if key in self._fns:
             return key, self._fns[key]
-        if level == "crude" and hasattr(lidx, "search_crude"):
+        crude = level == "crude" and hasattr(lidx, "search_crude")
+        if has_filter:
+            if crude:
+                call = (lambda q, f: lidx.search_crude(q, filter=f)) \
+                    if topk is None \
+                    else (lambda q, f: lidx.search_crude(q, topk, filter=f))
+            else:
+                call = (lambda q, f: lidx.search(q, filter=f)) \
+                    if topk is None \
+                    else (lambda q, f: lidx.search(q, topk, filter=f))
+        elif crude:
             call = (lambda q: lidx.search_crude(q)) if topk is None \
                 else (lambda q: lidx.search_crude(q, topk))
         else:
@@ -251,14 +261,15 @@ class AnnEngine:
             return probe + ("crude", "refine-capped")
         return probe + ("crude", "refine")
 
-    def _attempt(self, fn, queries):
+    def _attempt(self, fn, *args):
         if self.fault_injector is not None:
             self.fault_injector.check("engine.search")
-        r = fn(queries)
+        r = fn(*args)
         jax.block_until_ready((r.indices, r.distances))
         return r
 
-    def _serve_with_failover(self, level, topk, budget, queries):
+    def _serve_with_failover(self, level, topk, budget, queries,
+                             filter=None):
         """One batch at one rung, with backend failover: a failure on
         the pallas backend blacklists it for the whole engine and the
         batch retries on the jnp engines under the configured backoff;
@@ -267,9 +278,11 @@ class AnnEngine:
         policy = BackoffPolicy(max_retries=res.max_retries,
                                base_ms=res.backoff_base_ms,
                                max_ms=res.backoff_max_ms)
-        key, fn = self._level_fn(level, topk, budget)
+        has_filter = filter is not None
+        args = (queries,) if filter is None else (queries, filter)
+        key, fn = self._level_fn(level, topk, budget, has_filter)
         try:
-            return key, self._attempt(fn, queries)
+            return key, self._attempt(fn, *args)
         except Exception:
             if res.pallas_failover and self._backend_eff() == "pallas":
                 # kernel path failed: fail the backend over, not the
@@ -278,26 +291,37 @@ class AnnEngine:
                 self.stats["failovers"] += 1
                 self._fns.clear()
                 self._warmed.discard(key)
-                key, fn = self._level_fn(level, topk, budget)
+                key, fn = self._level_fn(level, topk, budget, has_filter)
             return key, retry_with_backoff(
-                lambda: self._attempt(fn, queries), policy=policy)
+                lambda: self._attempt(fn, *args), policy=policy)
 
     def __call__(self, queries, budget: Optional[SearchBudget] = None):
         return self.search(queries, budget=budget)
 
     def search(self, queries, k: Optional[int] = None, *,
-               budget: Optional[SearchBudget] = None):
+               budget: Optional[SearchBudget] = None, filter=None):
         """Serve one query batch; ``k`` overrides the index's built-in
         ``topk`` for this call.  ``budget`` (docs/robustness.md) bounds
         the batch — the engine picks the degradation-ladder rung that
-        fits and reports what it did on ``result.meta``."""
+        fits and reports what it did on ``result.meta``.  ``filter``: an
+        optional (n,) boolean row predicate — only rows where it is
+        True can be returned; absent slots are id -1 / dist +inf
+        (jnp engines only)."""
+        if filter is not None:
+            from repro.index.base import as_filter
+            if self._backend_eff() == "pallas":
+                raise ValueError(
+                    "filtered search requires backend='jnp' (the fused "
+                    "kernels cannot mask rows by predicate)")
+            filter = as_filter(filter, self.n)
         budget = validate_budget(budget) if budget is not None \
             else SearchBudget()
         level = self._pick_level(budget)
         deadline = (budget.deadline_ms if budget.deadline_ms is not None
                     else self.resilience.deadline_ms)
         t0 = time.perf_counter()
-        key, result = self._serve_with_failover(level, k, budget, queries)
+        key, result = self._serve_with_failover(level, k, budget, queries,
+                                                filter)
         wall_ms = (time.perf_counter() - t0) * 1000.0
         # warm-only timing: the first call through a compiled fn pays
         # tracing + compilation and would poison the ladder's estimates

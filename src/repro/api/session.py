@@ -21,10 +21,13 @@ every search, so callers never touch embeddings, codes, or LUTs.
 """
 from __future__ import annotations
 
-from typing import Optional
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api.artifacts import Artifacts
 from repro.api.config import (JOINT_MODES, ConfigError, ICQConfig)
@@ -52,15 +55,18 @@ class Searcher:
     def n(self) -> int:
         return self.engine.n
 
-    def search(self, queries, k: Optional[int] = None, *, budget=None):
+    def search(self, queries, k: Optional[int] = None, *, budget=None,
+               filter=None):
         """Embed ``queries`` ((nq, ...) raw inputs) and search.  ``k``
         overrides ``config.serve.topk`` for this call; ``budget`` (a
         ``repro.resilience.SearchBudget``) bounds the batch and is
-        passed through to the engine (docs/robustness.md).  Returns a
-        ``repro.index.SearchResult`` whose ``meta`` reports what the
+        passed through to the engine (docs/robustness.md); ``filter``
+        (an (n,) boolean row predicate) restricts results to rows where
+        it is True — absent slots come back id -1 / dist +inf.  Returns
+        a ``repro.index.SearchResult`` whose ``meta`` reports what the
         engine actually did."""
         emb = self.model.embed(jnp.asarray(queries))
-        return self.engine.search(emb, k, budget=budget)
+        return self.engine.search(emb, k, budget=budget, filter=filter)
 
     def add(self, new_x, **encode_opts) -> "Searcher":
         """Encode raw-space ``new_x`` through the model + tiled ICM
@@ -177,6 +183,198 @@ class ICQSession:
                           emb_db=emb_db,
                           key=jax.random.PRNGKey(0) if key is None else key)
         return Searcher(self.model, AnnEngine(idx, mesh=mesh), cfg)
+
+    # ------------------------------------------------------------- tune --
+    def _tuning_structure(self, num_fast: int):
+        """The trained structure with the fast set re-selected to
+        ``num_fast`` codebooks over the *same* trained codebooks and psi
+        split (eq. 8's top-k fallback re-ranks by in-psi energy), so
+        |K_fast| is sweepable without retraining.  sigma depends only on
+        the psi split and is unchanged."""
+        st = self.model.structure
+        if int(st.fast_mask.sum()) == num_fast:
+            return st
+        from repro.core import icq as icq_mod
+
+        mask = icq_mod.fast_set_topk(self.model.C, st.xi, num_fast)
+        return st._replace(fast_mask=mask)
+
+    def _tune_grid(self) -> List[Dict[str, Any]]:
+        """Coarse candidate grid of dotted config overrides for the
+        configured index kind — search-time knobs only, so every
+        candidate is a cheap ``dataclasses.replace`` on one built
+        index."""
+        cfg = self.config
+        K = cfg.train.num_codebooks
+        kind = cfg.index.kind
+        if kind == "flat":
+            return [{}, {"serve.lut_dtype": "int8"}]
+        nf_opts = sorted({max(1, K // 2), K - 1})
+        grid: List[Dict[str, Any]] = []
+        if kind == "ivf":
+            probes, p = [], 1
+            while p < cfg.index.n_lists:
+                probes.append(p)
+                p *= 4
+            probes.append(cfg.index.n_lists)
+            for np_ in probes:
+                for nf in nf_opts:
+                    grid.append({"index.n_probe": np_,
+                                 "train.num_fast": nf})
+        else:                                            # two-step
+            for nf in nf_opts:
+                grid.append({"train.num_fast": nf})
+                grid.append({"train.num_fast": nf,
+                             "index.refine_cap":
+                                 max(4 * cfg.serve.topk, 64)})
+            grid.append({"train.num_fast": nf_opts[0],
+                         "serve.lut_dtype": "int8"})
+        return grid
+
+    def _refine_candidates(self, best_ov: Dict[str, Any]):
+        """Local refinement around the coarse winner (faiss-style):
+        neighboring n_probe values and num_fast +/- 1."""
+        cfg = self.config
+        out: List[Dict[str, Any]] = []
+        if cfg.index.kind == "ivf":
+            np0 = best_ov.get("index.n_probe", cfg.index.n_probe)
+            for np_ in sorted({max(1, (3 * np0) // 4),
+                               np0 + max(1, np0 // 2)}):
+                if 1 <= np_ <= cfg.index.n_lists and np_ != np0:
+                    out.append({**best_ov, "index.n_probe": np_})
+        if cfg.index.kind != "flat":
+            nf0 = best_ov.get("train.num_fast", cfg.train.num_fast)
+            for nf in (nf0 - 1, nf0 + 1):
+                if 1 <= nf <= cfg.train.num_codebooks - 1 and nf != nf0:
+                    out.append({**best_ov, "train.num_fast": nf})
+        return out
+
+    def _measure_point(self, ov: Dict[str, Any], base_idx, q_emb,
+                       gt_ids, k: int, repeats: int) -> Dict[str, Any]:
+        """Recall@k + QPS (min-of-repeats warm timing) for one override
+        candidate, served from a ``dataclasses.replace`` of the built
+        base index."""
+        from repro import eval as eval_mod
+
+        self.config.with_overrides(ov)       # validate the candidate
+        repl: Dict[str, Any] = {}
+        if "train.num_fast" in ov:
+            repl["structure"] = self._tuning_structure(
+                ov["train.num_fast"])
+        if "index.n_probe" in ov:
+            repl["n_probe"] = ov["index.n_probe"]
+        if "index.refine_cap" in ov:
+            repl["refine_cap"] = ov["index.refine_cap"]
+        if "serve.lut_dtype" in ov:
+            repl["lut_dtype"] = ov["serve.lut_dtype"]
+        idx = dataclasses.replace(base_idx, **repl) if repl else base_idx
+        call = jax.jit(lambda q: idx.search(q, k))
+        r = call(q_emb)                      # compile + warm
+        jax.block_until_ready((r.indices, r.distances))
+        recall = eval_mod.recall_at_k(np.asarray(r.indices)[:, :k],
+                                      gt_ids, k)
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            r = call(q_emb)
+            jax.block_until_ready((r.indices, r.distances))
+            best = min(best, time.perf_counter() - t0)
+        qps = q_emb.shape[0] / max(best, 1e-9)
+        return {"overrides": dict(ov), "recall": recall, "qps": qps}
+
+    def tune(self, db=None, queries=None, *, target_recall: float = 0.9,
+             k: int = 10, grid: Optional[List[Dict[str, Any]]] = None,
+             repeats: int = 3, cache_dir: Optional[str] = None,
+             key=None, apply: bool = True) -> ICQConfig:
+        """Autotune the search-time knobs to ``target_recall`` at max
+        QPS and return the tuned ``ICQConfig`` (docs/api.md).
+
+        Measures recall@``k`` against the exact (cached) ground truth
+        and warm QPS for a coarse grid of candidates over the knobs the
+        configured index kind exposes (n_probe, num_fast, refine_cap,
+        lut_dtype), then locally refines around the winner — the
+        faiss-style operating-point search.  Selection: the max-QPS
+        point with recall >= ``target_recall``; when no candidate
+        reaches the target, the max-recall point (the full sweep is
+        kept on ``self.last_tune``).
+
+        db:       raw-space database to tune over (None = the fit data,
+                  reusing the codes ``fit`` exported).
+        queries:  raw-space query sample (required) — recall/QPS are
+                  measured on these.
+        grid:     explicit override-dict candidates (CI uses a reduced
+                  grid); None = the kind's default coarse grid.
+        cache_dir:  ground-truth npz cache directory (content-keyed).
+        apply:    adopt the tuned config on this session (and re-select
+                  the fast set when the winning num_fast differs), so a
+                  following ``session.index()`` + ``save`` persist the
+                  tuned operating point into Artifacts — a tuned config
+                  reloads bitwise like any other.
+        """
+        if self.model is None:
+            raise ConfigError("session.tune() before session.fit(); fit "
+                              "a model first (or load artifacts with "
+                              "ICQSession.from_artifacts)")
+        if queries is None:
+            raise ConfigError("session.tune() needs queries= (a raw-space "
+                              "query sample to measure recall/QPS on)")
+        cfg = self.config
+        if db is None:
+            codes, emb_db = self.model.codes, self._fit_emb
+        else:
+            from repro.trainer import encode_database
+
+            emb_db = self.model.embed(jnp.asarray(db))
+            codes = encode_database(
+                emb_db, self.model.C,
+                mode="pq" if self.model.mode == "pq" else "icm",
+                icm_iters=cfg.encode.icm_iters, chunk=cfg.encode.chunk,
+                backend=cfg.encode.backend)
+        from repro import eval as eval_mod
+
+        q_emb = self.model.embed(jnp.asarray(queries))
+        gt_ids, _, _ = eval_mod.cached_ground_truth(
+            np.asarray(emb_db), np.asarray(q_emb), k,
+            cache_dir=cache_dir)
+        base_idx = build_index(
+            codes, self.model.C, self.model.structure,
+            index_cfg=cfg.index, serve_cfg=cfg.serve, emb_db=emb_db,
+            key=jax.random.PRNGKey(0) if key is None else key)
+
+        points: List[Dict[str, Any]] = []
+        seen = set()
+
+        def measure(ov):
+            sig = tuple(sorted(ov.items()))
+            if sig in seen:
+                return
+            seen.add(sig)
+            points.append(self._measure_point(ov, base_idx, q_emb,
+                                              gt_ids, k, repeats))
+
+        for ov in (grid if grid is not None else self._tune_grid()):
+            measure(ov)
+        sel, _ = eval_mod.select_operating_point(points, target_recall)
+        for ov in self._refine_candidates(points[sel]["overrides"]):
+            measure(ov)
+        sel, met = eval_mod.select_operating_point(points, target_recall)
+        best = points[sel]
+        frontier = eval_mod.pareto_frontier(points)
+        tuned = cfg.with_overrides(best["overrides"])
+        self.last_tune = {
+            "points": points,
+            "frontier": [points[i] for i in frontier],
+            "selected": best, "met_target": met,
+            "target_recall": target_recall, "k": k,
+        }
+        if apply:
+            self.config = tuned
+            nf = tuned.train.num_fast
+            if int(self.model.structure.fast_mask.sum()) != nf:
+                self.model.structure = self._tuning_structure(nf)
+                self.model.icq_cfg = dataclasses.replace(
+                    self.model.icq_cfg, num_fast=nf)
+        return tuned
 
     # ------------------------------------------------------------- save --
     def save(self, path: str) -> str:

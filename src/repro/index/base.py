@@ -400,20 +400,49 @@ def chunked_over_queries(fn, queries, query_chunk: Optional[int]):
         lambda a: a.reshape((-1,) + a.shape[2:])[:nq], outs)
 
 
+def as_filter(filter, n: int):
+    """Validate a per-row metadata predicate: a length-``n`` boolean
+    vector (True = row eligible).  Any array-like of shape (n,) is
+    accepted and cast to bool; wrong shapes raise by name."""
+    f = jnp.asarray(filter)
+    if f.ndim != 1 or f.shape[0] != n:
+        raise ValueError(f"filter must be a ({n},) boolean predicate "
+                         f"(one entry per database row), got shape "
+                         f"{tuple(f.shape)}")
+    return f.astype(bool)
+
+
+def mask_filtered_ids(ids, dist):
+    """Post-filter result convention: slots whose distance is +inf (no
+    eligible row left to fill them) report id ``-1``.  Applied only on
+    filtered searches so unfiltered results stay bitwise unchanged."""
+    return jnp.where(jnp.isinf(dist), -1, ids)
+
+
 def exact_search(queries, X, topk: int, *,
-                 query_chunk: Optional[int] = None):
+                 query_chunk: Optional[int] = None, filter=None):
     """Brute-force L2 ground truth.  queries: (nq,d), X: (n,d).
 
     ``query_chunk`` bounds the dense (nq, n) distance matrix to
     (query_chunk, n) blocks — ground-truth computation at benchmark
     sizes (nq x n = 64 x 1M) OOMs without it.
+
+    ``filter``: optional (n,) bool per-row predicate — rows where it is
+    False are excluded (the filtered-search oracle).  When fewer than
+    ``topk`` rows pass, the tail slots report id ``-1`` at distance
+    ``+inf``.
     """
     xsq = jnp.sum(jnp.square(X), -1)[None, :]
+    pred = None if filter is None else as_filter(filter, X.shape[0])
 
     def one_block(qs):
         d2 = (jnp.sum(jnp.square(qs), -1)[:, None]
               - 2.0 * qs @ X.T + xsq)
+        if pred is not None:
+            d2 = jnp.where(pred[None, :], d2, jnp.inf)
         neg, idx = jax.lax.top_k(-d2, topk)
+        if pred is not None:
+            idx = mask_filtered_ids(idx, -neg)
         return idx, -neg
 
     return chunked_over_queries(one_block, queries, query_chunk)

@@ -48,9 +48,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.index.base import (SearchResult, build_lut, chunked_over_queries,
+from repro.index.base import (SearchResult, as_filter, build_lut,
+                              chunked_over_queries,
                               fastscan_kernel_operands, lut_sum,
-                              nibble_lut_sum, pad_luts_even, quantize_lut,
+                              mask_filtered_ids, nibble_lut_sum,
+                              pad_luts_even, quantize_lut,
                               quantized_kernel_operands, resolve_backend,
                               resolve_code_bits, resolve_lut_dtype)
 
@@ -76,10 +78,27 @@ def _widen_codes(codes, K: int, code_bits: int):
         return unpack_nibbles(codes, K)
     return codes.astype(jnp.int32)
 
+
+def _check_filter(filter, n: int, backend: str):
+    """Resolve the per-row predicate of a filtered search (docs/api.md).
+
+    Filtered search is a jnp-engine capability — the fused kernels
+    bound their candidate sets in-kernel and cannot drop rows by
+    predicate (mirroring the ``refine_cap`` restriction), so
+    ``backend="pallas"`` + ``filter`` raises by name."""
+    if filter is None:
+        return None
+    if backend == "pallas":
+        raise ValueError("filtered search requires backend='jnp' (the "
+                         "fused kernels cannot mask rows by predicate; "
+                         "like refine_cap, filter is a jnp-engine "
+                         "option)")
+    return as_filter(filter, n)
+
 def adc_search(queries, codes, C, topk: int, *, backend: str = "auto",
                block_q: int = 64, block_n: int = 512, interpret=None,
                query_chunk: Optional[int] = None, lut_dtype: str = "f32",
-               code_bits: int = 8):
+               code_bits: int = 8, filter=None):
     """Baseline one-step ADC: full K-codebook LUT sum for every point,
     batched over the whole query block.
 
@@ -87,12 +106,17 @@ def adc_search(queries, codes, C, topk: int, *, backend: str = "auto",
     (n, ceil(K/2)) uint8 under ``code_bits=4`` (DESIGN.md §12); C
     (K, m, d) f32.  ``lut_dtype="int8"`` quantizes the whole table per
     query (no fast subset here — the one-step ranking itself becomes
-    approximate, with per-point error <= K * scale / 2)."""
+    approximate, with per-point error <= K * scale / 2).
+
+    ``filter``: optional (n,) bool per-row predicate (jnp engine only)
+    — excluded rows never appear in results; slots with no eligible row
+    left report id -1 at distance +inf."""
     K, m = C.shape[0], C.shape[1]
     be = resolve_backend(backend)
     quantized = resolve_lut_dtype(lut_dtype) == "int8"
     code_bits = _check_fastscan_geometry(code_bits, m)
     nibble = code_bits == 4
+    pred = _check_filter(filter, codes.shape[0], be)
 
     if be == "pallas":
         # codes stay packed into the kernel (widened per-tile in VMEM)
@@ -127,7 +151,11 @@ def adc_search(queries, codes, C, topk: int, *, backend: str = "auto",
             lut = quantize_lut(luts) if quantized else luts
             dist = (nibble_lut_sum(lut, codes, K) if nibble
                     else lut_sum(lut, codes))        # (nq,n)
+            if pred is not None:
+                dist = jnp.where(pred[None, :], dist, jnp.inf)
             neg, ids = jax.lax.top_k(-dist, topk)
+            if pred is not None:
+                ids = mask_filtered_ids(ids, -neg)
             return ids, -neg
 
     idx, vals = chunked_over_queries(one_block, queries, query_chunk)
@@ -165,15 +193,23 @@ def _crude_tables(luts, fast, quantized: bool):
 
 
 def _two_step_block_jnp(qs, codes, C, fast, sigma, topk: int,
-                        quantized: bool = False, code_bits: int = 8):
+                        quantized: bool = False, code_bits: int = 8,
+                        pred=None):
     """Vectorized two-step over one query block.  Returns
-    (idx (nq,topk), dist (nq,topk), passed_frac (nq,))."""
+    (idx (nq,topk), dist (nq,topk), passed_frac (nq,)).
+
+    ``pred`` (filtered search): excluded rows get crude = +inf *before*
+    the eq. 2 bootstrap, so they can neither become candidates, set the
+    threshold, nor pass the margin test — recall is measured against
+    the filtered oracle, not a post-hoc drop."""
     nibble = code_bits == 4
     K = C.shape[0]
     luts = build_lut(qs, C)                              # (nq,K,m)
     ct = _crude_tables(luts, fast, quantized)
     crude = (nibble_lut_sum(ct, codes, K, fast) if nibble
              else lut_sum(ct, codes, fast))
+    if pred is not None:
+        crude = jnp.where(pred[None, :], crude, jnp.inf)
     passed = _eq2_passed(luts, codes, crude, topk, sigma,
                          fast if quantized else None, code_bits)
     # refine passers only; pruned points are excluded from the ranking
@@ -181,22 +217,27 @@ def _two_step_block_jnp(qs, codes, C, fast, sigma, topk: int,
             else lut_sum(luts, codes, ~fast))
     ranked = jnp.where(passed, crude + slow, jnp.inf)
     neg, idx = jax.lax.top_k(-ranked, topk)
+    if pred is not None:
+        idx = mask_filtered_ids(idx, -neg)
     return idx, -neg, jnp.mean(passed.astype(jnp.float32), axis=1)
 
 
 def _two_step_block_compact(qs, codes, C, fast, sigma, topk: int,
                             refine_cap: int, quantized: bool = False,
-                            code_bits: int = 8):
+                            code_bits: int = 8, pred=None):
     """Two-step with the static survivor compaction: the refine_cap best
     crude survivors are gathered and refined by full LUT sum (always
     exact f32 — under ``lut_dtype="int8"`` quantization only affects
-    which points survive and their selection order)."""
+    which points survive and their selection order).  ``pred``: see
+    ``_two_step_block_jnp`` — excluded rows are +inf pre-bootstrap."""
     nibble = code_bits == 4
     K = C.shape[0]
     luts = build_lut(qs, C)
     ct = _crude_tables(luts, fast, quantized)
     crude = (nibble_lut_sum(ct, codes, K, fast) if nibble
              else lut_sum(ct, codes, fast))
+    if pred is not None:
+        crude = jnp.where(pred[None, :], crude, jnp.inf)
     passed = _eq2_passed(luts, codes, crude, topk, sigma,
                          fast if quantized else None, code_bits)
     # compact: best-crude survivors first, capped
@@ -210,6 +251,8 @@ def _two_step_block_compact(qs, codes, C, fast, sigma, topk: int,
     ranked = jnp.where(valid, full_surv, jnp.inf)
     neg, pos = jax.lax.top_k(-ranked, topk)
     idx = jnp.take_along_axis(surv, pos, axis=1)
+    if pred is not None:
+        idx = mask_filtered_ids(idx, -neg)
     return idx, -neg, jnp.mean(passed.astype(jnp.float32), axis=1)
 
 
@@ -266,7 +309,8 @@ def two_step_search(queries, codes, C, structure, topk: int, *,
                     block_n: int = 512, interpret=None,
                     query_chunk: Optional[int] = None,
                     refine_cap: Optional[int] = None,
-                    lut_dtype: str = "f32", code_bits: int = 8):
+                    lut_dtype: str = "f32", code_bits: int = 8,
+                    filter=None):
     """ICQ two-step search (eq. 2 crude test -> eq. 1 refinement),
     batched over the whole query block.
 
@@ -291,6 +335,11 @@ def two_step_search(queries, codes, C, structure, topk: int, *,
                 crude tables, DESIGN.md §8).  The refine pass is always
                 f32; both backends produce identical rankings for
                 either dtype.
+    filter:     optional (n,) bool per-row metadata predicate (jnp
+                engine only, like refine_cap): excluded rows get crude
+                +inf *before* the eq. 2 bootstrap — they can't become
+                candidates, set the threshold, or appear in results;
+                unfilled slots report id -1 at distance +inf.
     """
     K = C.shape[0]
     fast = structure.fast_mask
@@ -299,6 +348,7 @@ def two_step_search(queries, codes, C, structure, topk: int, *,
     be = resolve_backend(backend)
     quantized = resolve_lut_dtype(lut_dtype) == "int8"
     code_bits = _check_fastscan_geometry(code_bits, C.shape[1])
+    pred = _check_filter(filter, codes.shape[0], be)
     # nibble codes stay packed through both backends (the jnp blocks
     # unpack on the fly; the kernels unpack in-VMEM)
     codes_j = codes if code_bits == 4 else codes.astype(jnp.int32)
@@ -321,12 +371,14 @@ def two_step_search(queries, codes, C, structure, topk: int, *,
                                fast=fast, sigma=sigma, topk=topk,
                                refine_cap=min(max(refine_cap, topk),
                                               codes.shape[0]),
-                               quantized=quantized, code_bits=code_bits)
+                               quantized=quantized, code_bits=code_bits,
+                               pred=pred)
     else:
         fn = functools.partial(_two_step_block_jnp,
                                codes=codes_j, C=C,
                                fast=fast, sigma=sigma, topk=topk,
-                               quantized=quantized, code_bits=code_bits)
+                               quantized=quantized, code_bits=code_bits,
+                               pred=pred)
     idx, dist, pf = chunked_over_queries(fn, queries, query_chunk)
     pass_rate = jnp.mean(pf)
     avg_ops = kf + pass_rate * (K - kf)
@@ -344,7 +396,8 @@ def two_step_search_compact(queries, codes, C, structure, topk: int,
 
 
 def _two_step_crude_block_jnp(qs, codes, C, fast, sigma, topk: int,
-                              quantized: bool = False, code_bits: int = 8):
+                              quantized: bool = False, code_bits: int = 8,
+                              pred=None):
     """Crude-only ranking over one query block: the exact crude top-k
     the full jnp path bootstraps eq. 2 candidates from
     (``_eq2_passed``'s ``top_k(-crude, topk)``), with no refinement."""
@@ -352,7 +405,11 @@ def _two_step_crude_block_jnp(qs, codes, C, fast, sigma, topk: int,
     ct = _crude_tables(luts, fast, quantized)
     crude = (nibble_lut_sum(ct, codes, C.shape[0], fast)
              if code_bits == 4 else lut_sum(ct, codes, fast))
+    if pred is not None:
+        crude = jnp.where(pred[None, :], crude, jnp.inf)
     neg_c, cand = jax.lax.top_k(-crude, topk)
+    if pred is not None:
+        cand = mask_filtered_ids(cand, -neg_c)
     return cand, -neg_c, jnp.zeros(qs.shape[0], dtype=jnp.float32)
 
 
@@ -390,19 +447,22 @@ def two_step_crude_search(queries, codes, C, structure, topk: int, *,
                           backend: str = "auto", block_q: int = 64,
                           block_n: int = 512, interpret=None,
                           query_chunk: Optional[int] = None,
-                          lut_dtype: str = "f32", code_bits: int = 8):
+                          lut_dtype: str = "f32", code_bits: int = 8,
+                          filter=None):
     """The degradation ladder's crude floor (docs/robustness.md): rank
     by the fast-subset crude distance only, skipping eq. 2 and the
     refine pass.  Bitwise-identical to the crude top-k the full path
     computes internally (the eq. 2 bootstrap candidates), on either
     backend.  ``pass_rate`` is 0 (nothing refined); ``avg_ops`` is
     |K_fast| per point.  Under ``code_bits=4`` this rung serves
-    directly from the packed nibbles (fast-scan crude pass)."""
+    directly from the packed nibbles (fast-scan crude pass).
+    ``filter`` (jnp only) masks rows pre-top-k like the full path."""
     fast = structure.fast_mask
     kf = jnp.sum(fast.astype(jnp.float32))
     be = resolve_backend(backend)
     quantized = resolve_lut_dtype(lut_dtype) == "int8"
     code_bits = _check_fastscan_geometry(code_bits, C.shape[1])
+    pred = _check_filter(filter, codes.shape[0], be)
 
     if be == "pallas":
         fn = functools.partial(_two_step_crude_pallas, codes=codes, C=C,
@@ -414,7 +474,8 @@ def two_step_crude_search(queries, codes, C, structure, topk: int, *,
         fn = functools.partial(_two_step_crude_block_jnp,
                                codes=codes_j, C=C,
                                fast=fast, sigma=structure.sigma, topk=topk,
-                               quantized=quantized, code_bits=code_bits)
+                               quantized=quantized, code_bits=code_bits,
+                               pred=pred)
     idx, dist, pf = chunked_over_queries(fn, queries, query_chunk)
     return SearchResult(idx, dist, kf, jnp.mean(pf))
 
@@ -460,20 +521,21 @@ class FlatADC:
     def build(cls, codes, C, structure=None, **opts) -> "FlatADC":
         return cls(codes=codes, C=C, **opts)
 
-    def search(self, queries, topk: Optional[int] = None) -> SearchResult:
+    def search(self, queries, topk: Optional[int] = None, *,
+               filter=None) -> SearchResult:
         return adc_search(queries, self.codes, self.C,
                           topk if topk is not None else self.topk,
                           backend=self.backend, block_q=self.block_q,
                           block_n=self.block_n, interpret=self.interpret,
                           query_chunk=self.query_chunk,
                           lut_dtype=self.lut_dtype,
-                          code_bits=self.code_bits)
+                          code_bits=self.code_bits, filter=filter)
 
-    def search_crude(self, queries,
-                     topk: Optional[int] = None) -> SearchResult:
+    def search_crude(self, queries, topk: Optional[int] = None, *,
+                     filter=None) -> SearchResult:
         """One-step ADC has no cheap/refine split — the crude floor of
         the degradation ladder is the full search itself."""
-        return self.search(queries, topk)
+        return self.search(queries, topk, filter=filter)
 
     def add(self, new_vectors, *, icm_iters: int = 3,
             encode_backend: str = "auto",
@@ -516,7 +578,8 @@ class TwoStep:
     def build(cls, codes, C, structure, **opts) -> "TwoStep":
         return cls(codes=codes, C=C, structure=structure, **opts)
 
-    def search(self, queries, topk: Optional[int] = None) -> SearchResult:
+    def search(self, queries, topk: Optional[int] = None, *,
+               filter=None) -> SearchResult:
         return two_step_search(queries, self.codes, self.C, self.structure,
                                topk if topk is not None else self.topk,
                                backend=self.backend, block_q=self.block_q,
@@ -524,10 +587,10 @@ class TwoStep:
                                query_chunk=self.query_chunk,
                                refine_cap=self.refine_cap,
                                lut_dtype=self.lut_dtype,
-                               code_bits=self.code_bits)
+                               code_bits=self.code_bits, filter=filter)
 
-    def search_crude(self, queries,
-                     topk: Optional[int] = None) -> SearchResult:
+    def search_crude(self, queries, topk: Optional[int] = None, *,
+                     filter=None) -> SearchResult:
         """Crude-only floor (docs/robustness.md): the fast-subset crude
         ranking, bitwise-identical to the full path's internal eq. 2
         bootstrap candidates on the same backend."""
@@ -537,7 +600,7 @@ class TwoStep:
             backend=self.backend, block_q=self.block_q,
             block_n=self.block_n, interpret=self.interpret,
             query_chunk=self.query_chunk, lut_dtype=self.lut_dtype,
-            code_bits=self.code_bits)
+            code_bits=self.code_bits, filter=filter)
 
     def add(self, new_vectors, *, icm_iters: int = 3,
             encode_backend: str = "auto",

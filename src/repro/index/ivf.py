@@ -43,9 +43,9 @@ import numpy as np
 from repro.index.base import (SearchResult, _int_acc_dtype, build_lut,
                               chunked_over_queries, dequantize_acc,
                               fastscan_kernel_operands, lut_sum,
-                              pad_luts_even, quantize_lut,
-                              quantized_kernel_operands, resolve_backend,
-                              resolve_lut_dtype)
+                              mask_filtered_ids, pad_luts_even,
+                              quantize_lut, quantized_kernel_operands,
+                              resolve_backend, resolve_lut_dtype)
 
 
 class IVFIndex(NamedTuple):
@@ -284,7 +284,7 @@ def _ivf_crude_scores(luts, cand_codes, valid, fast, *,
 def _ivf_block_jnp(qs, codes, C, fast, sigma, topk: int, centroids, lists,
                    n_probe: int, refine_cap: Optional[int],
                    list_codes=None, quantized: bool = False,
-                   code_bits: int = 8):
+                   code_bits: int = 8, pred=None):
     """Batched IVF two-step over one query block.  Returns (ids
     (nq,topk), dist (nq,topk), n_cand (nq,), n_pass (nq,))."""
     luts = build_lut(qs, C)                              # (nq, K, m)
@@ -292,6 +292,10 @@ def _ivf_block_jnp(qs, codes, C, fast, sigma, topk: int, centroids, lists,
     cand_ids, valid, cand_codes = gather_candidates(probes, lists, codes,
                                                     topk, list_codes)
     safe = jnp.where(valid, cand_ids, 0)
+    if pred is not None:
+        # filtered rows score +inf crude (below): they can't pass eq. 2,
+        # can't set the bootstrap threshold, and rank last
+        valid = valid & pred[safe]
     crude, slow = _ivf_crude_scores(luts, cand_codes, valid, fast,
                                     quantized=quantized,
                                     need_slow=refine_cap is None,
@@ -318,6 +322,8 @@ def _ivf_block_jnp(qs, codes, C, fast, sigma, topk: int, centroids, lists,
         neg, cpos = jax.lax.top_k(-ranked, topk)
         pos = jnp.take_along_axis(surv, cpos, axis=1)
     ids = jnp.take_along_axis(safe, pos, axis=1)
+    if pred is not None:
+        ids = mask_filtered_ids(ids, -neg)
     n_cand = jnp.sum(valid.astype(jnp.float32), axis=1)
     n_pass = jnp.sum(passed.astype(jnp.float32), axis=1)
     return ids, -neg, n_cand, n_pass
@@ -401,7 +407,8 @@ def ivf_two_step_search(queries, codes, C, structure, ivf: IVFIndex,
                         block_q: int = 4, block_n: int = 128,
                         interpret=None, query_chunk: Optional[int] = None,
                         refine_cap: Optional[int] = None, list_codes=None,
-                        lut_dtype: str = "f32", code_bits: int = 8):
+                        lut_dtype: str = "f32", code_bits: int = 8,
+                        filter=None):
     """Batched IVF + ICQ two-step.  Returns SearchResult with the
     generalized ops accounting (see module docstring).
 
@@ -410,8 +417,11 @@ def ivf_two_step_search(queries, codes, C, structure, ivf: IVFIndex,
     ("f32" | "int8") selects the crude-pass table precision (DESIGN.md
     §8); the refine pass is always f32.  ``code_bits=4`` serves from
     nibble-packed codes/list_codes (DESIGN.md §12) — the fast-scan slab
-    variant — with identical rankings to the 8-bit layout."""
-    from repro.index.flat import _check_fastscan_geometry
+    variant — with identical rankings to the 8-bit layout.  ``filter``:
+    optional (n,) boolean row predicate (jnp engine only); excluded
+    rows never appear in results — absent slots are id -1 / dist
+    +inf."""
+    from repro.index.flat import _check_fastscan_geometry, _check_filter
 
     K = C.shape[0]
     code_bits = _check_fastscan_geometry(code_bits, C.shape[1])
@@ -424,6 +434,7 @@ def ivf_two_step_search(queries, codes, C, structure, ivf: IVFIndex,
         raise ValueError(f"n_probe={n_probe} outside [1, {n_lists}]")
     be = resolve_backend(backend)
     quantized = resolve_lut_dtype(lut_dtype) == "int8"
+    pred = _check_filter(filter, n, be)
 
     if be == "pallas":
         if refine_cap is not None:
@@ -443,7 +454,7 @@ def ivf_two_step_search(queries, codes, C, structure, ivf: IVFIndex,
                                centroids=ivf.centroids, lists=ivf.lists,
                                n_probe=n_probe, refine_cap=refine_cap,
                                list_codes=list_codes, quantized=quantized,
-                               code_bits=code_bits)
+                               code_bits=code_bits, pred=pred)
     ids, dist, n_cand, n_pass = chunked_over_queries(fn, queries,
                                                      query_chunk)
     return ivf_ops_result(ids, dist, n_cand, n_pass, n=n, n_lists=n_lists,
@@ -452,7 +463,8 @@ def ivf_two_step_search(queries, codes, C, structure, ivf: IVFIndex,
 
 def _ivf_crude_block_jnp(qs, codes, C, fast, topk: int, centroids, lists,
                          n_probe: int, list_codes=None,
-                         quantized: bool = False, code_bits: int = 8):
+                         quantized: bool = False, code_bits: int = 8,
+                         pred=None):
     """Crude-only IVF ranking over one query block: probe + gather +
     the shared crude scoring + top-k, skipping eq. 2 and refinement.
     The ranking is exactly the crude top-k the full jnp path bootstraps
@@ -462,11 +474,15 @@ def _ivf_crude_block_jnp(qs, codes, C, fast, topk: int, centroids, lists,
     cand_ids, valid, cand_codes = gather_candidates(probes, lists, codes,
                                                     topk, list_codes)
     safe = jnp.where(valid, cand_ids, 0)
+    if pred is not None:
+        valid = valid & pred[safe]
     crude, _ = _ivf_crude_scores(luts, cand_codes, valid, fast,
                                  quantized=quantized, need_slow=False,
                                  code_bits=code_bits)
     neg_c, pos = jax.lax.top_k(-crude, topk)
     ids = jnp.take_along_axis(safe, pos, axis=1)
+    if pred is not None:
+        ids = mask_filtered_ids(ids, -neg_c)
     n_cand = jnp.sum(valid.astype(jnp.float32), axis=1)
     return ids, -neg_c, n_cand, jnp.zeros_like(n_cand)
 
@@ -513,14 +529,15 @@ def ivf_crude_search(queries, codes, C, structure, ivf: IVFIndex,
                      topk: int, n_probe: int, *, backend: str = "auto",
                      block_q: int = 4, block_n: int = 128, interpret=None,
                      query_chunk: Optional[int] = None, list_codes=None,
-                     lut_dtype: str = "f32", code_bits: int = 8):
+                     lut_dtype: str = "f32", code_bits: int = 8,
+                     filter=None):
     """The IVF rung of the degradation ladder's crude floor
     (docs/robustness.md): probe + crude-only ranking over the candidate
     slab.  Bitwise-identical ids/values to the crude top-k the full
     path computes internally on the same backend.  ``avg_ops`` drops
     the pass-rate term (nothing refined).  ``code_bits=4`` serves the
     floor straight from the nibble-packed slab."""
-    from repro.index.flat import _check_fastscan_geometry
+    from repro.index.flat import _check_fastscan_geometry, _check_filter
 
     K = C.shape[0]
     code_bits = _check_fastscan_geometry(code_bits, C.shape[1])
@@ -532,6 +549,7 @@ def ivf_crude_search(queries, codes, C, structure, ivf: IVFIndex,
         raise ValueError(f"n_probe={n_probe} outside [1, {n_lists}]")
     be = resolve_backend(backend)
     quantized = resolve_lut_dtype(lut_dtype) == "int8"
+    pred = _check_filter(filter, n, be)
 
     if be == "pallas":
         fn = functools.partial(_ivf_crude_block_pallas, codes=codes, C=C,
@@ -546,7 +564,8 @@ def ivf_crude_search(queries, codes, C, structure, ivf: IVFIndex,
                                fast=fast, topk=topk,
                                centroids=ivf.centroids, lists=ivf.lists,
                                n_probe=n_probe, list_codes=list_codes,
-                               quantized=quantized, code_bits=code_bits)
+                               quantized=quantized, code_bits=code_bits,
+                               pred=pred)
     ids, dist, n_cand, n_pass = chunked_over_queries(fn, queries,
                                                      query_chunk)
     return ivf_ops_result(ids, dist, n_cand, n_pass, n=n, n_lists=n_lists,
@@ -588,7 +607,8 @@ class IVFTwoStep:
         return cls(codes=codes, C=C, structure=structure, ivf=ivf,
                    list_codes=ivf_list_codes(ivf, codes), **opts)
 
-    def search(self, queries, topk: Optional[int] = None) -> SearchResult:
+    def search(self, queries, topk: Optional[int] = None, *,
+               filter=None) -> SearchResult:
         return ivf_two_step_search(
             queries, self.codes, self.C, self.structure, self.ivf,
             topk if topk is not None else self.topk, self.n_probe,
@@ -596,10 +616,11 @@ class IVFTwoStep:
             block_n=self.block_n, interpret=self.interpret,
             query_chunk=self.query_chunk, refine_cap=self.refine_cap,
             list_codes=self.list_codes, lut_dtype=self.lut_dtype,
-            code_bits=self.code_bits)
+            code_bits=self.code_bits, filter=filter)
 
     def search_crude(self, queries, topk: Optional[int] = None,
-                     n_probe: Optional[int] = None) -> SearchResult:
+                     n_probe: Optional[int] = None, *,
+                     filter=None) -> SearchResult:
         """Crude-only floor (docs/robustness.md): probe + crude ranking
         with no refinement, bitwise-identical to the full path's
         internal crude top-k on the same backend.  ``n_probe`` lets the
@@ -612,7 +633,8 @@ class IVFTwoStep:
             backend=self.backend, block_q=self.block_q,
             block_n=self.block_n, interpret=self.interpret,
             query_chunk=self.query_chunk, list_codes=self.list_codes,
-            lut_dtype=self.lut_dtype, code_bits=self.code_bits)
+            lut_dtype=self.lut_dtype, code_bits=self.code_bits,
+            filter=filter)
 
     def add(self, new_vectors, *, icm_iters: int = 3,
             encode_backend: str = "auto",

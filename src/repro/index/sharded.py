@@ -56,9 +56,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.encode import unpack_nibbles
 from repro.distributed.sharding import shard_map_compat
 from repro.index import ivf as ivf_mod
-from repro.index.base import (SearchResult, build_lut, lut_sum,
-                              quantize_lut, resolve_code_bits,
-                              resolve_lut_dtype)
+from repro.index.base import (SearchResult, as_filter, build_lut,
+                              lut_sum, mask_filtered_ids, quantize_lut,
+                              resolve_code_bits, resolve_lut_dtype)
 
 _I32_MAX = jnp.iinfo(jnp.int32).max
 
@@ -84,6 +84,16 @@ def _sharded_add(self, new_vectors, **kw):
         "sharded indexes are serving clones: call add() on the source "
         "index and re-shard(mesh) (or use build_ann_engine(...).add, "
         "which keeps the source index for you)")
+
+
+def _shard_row_filter(self, filter):
+    """Validate an (n,) row predicate and lay it out P("data") alongside
+    the row-sharded codes (pad rows fill False — a pad row is never a
+    real candidate anyway)."""
+    f = as_filter(filter, self.n)
+    D = _data_size(self.mesh)
+    return _put(self.mesh, _pad_rows(f, D * self.ns, fill=False),
+                P("data"))
 
 
 def _gather_sorted(cols, axis_name: str, num_keys: int = 2):
@@ -196,8 +206,8 @@ class ShardedFlatADC(_DeadShardMixin):
                    for s in range(_data_size(self.mesh))
                    if s not in self.dead_shards)
 
-    def _fn(self, topk: int):
-        key = (topk, self._dead_key())
+    def _fn(self, topk: int, has_filter: bool = False):
+        key = (topk, self._dead_key(), has_filter)
         if key in self._fns:
             return self._fns[key]
         C, n, ns = self.C, self.n, self.ns
@@ -207,7 +217,7 @@ class ShardedFlatADC(_DeadShardMixin):
         code_bits = self.code_bits
         alive = self._alive_arr()
 
-        def body(qs, codes_shard):
+        def body(qs, codes_shard, *rest):
             si = jax.lax.axis_index("data")
             off = si * ns
             if code_bits == 4:      # nibble slab: unpack once per shard
@@ -216,23 +226,33 @@ class ShardedFlatADC(_DeadShardMixin):
             lut = quantize_lut(luts) if quantized else luts
             dist = lut_sum(lut, codes_shard)               # (nq, ns)
             gids = off + jnp.arange(ns, dtype=jnp.int32)
-            dist = jnp.where((gids[None, :] < n) & alive[si],
-                             _sanitize(dist), jnp.inf)
+            keep = (gids[None, :] < n) & alive[si]
+            if has_filter:
+                keep = keep & rest[0][None, :]
+            dist = jnp.where(keep, _sanitize(dist), jnp.inf)
             neg, li = jax.lax.top_k(-dist, k_loc)
             mv, mg = _gather_sorted((-neg, jnp.take(gids, li)), "data")
             return mg[:, :topk], mv[:, :topk]
 
+        specs = (P(), P("data")) + ((P("data"),) if has_filter else ())
         fn = jax.jit(shard_map_compat(
-            body, self.mesh, in_specs=(P(), P("data")),
+            body, self.mesh, in_specs=specs,
             out_specs=(P(), P())))
         self._fns[key] = fn
         return fn
 
-    def search(self, queries, topk: Optional[int] = None) -> SearchResult:
+    def search(self, queries, topk: Optional[int] = None, *,
+               filter=None) -> SearchResult:
         """queries (nq, d) f32 -> SearchResult; ids bitwise-identical
-        to the single-device engine, distances to reassociation ulps."""
+        to the single-device engine, distances to reassociation ulps.
+        ``filter``: optional (n,) boolean row predicate."""
         topk = self.topk if topk is None else topk
-        idx, dist = self._fn(topk)(queries, self.codes)
+        if filter is not None:
+            pred = _shard_row_filter(self, filter)
+            idx, dist = self._fn(topk, True)(queries, self.codes, pred)
+            idx = mask_filtered_ids(idx, dist)
+        else:
+            idx, dist = self._fn(topk)(queries, self.codes)
         K = self.C.shape[0]
         return SearchResult(idx, dist, jnp.asarray(float(K)),
                             jnp.asarray(1.0))
@@ -278,8 +298,8 @@ class ShardedTwoStep(_DeadShardMixin):
                    for s in range(_data_size(self.mesh))
                    if s not in self.dead_shards)
 
-    def _fn(self, topk: int):
-        key = (topk, self._dead_key())
+    def _fn(self, topk: int, has_filter: bool = False):
+        key = (topk, self._dead_key(), has_filter)
         if key in self._fns:
             return self._fns[key]
         C, n, ns = self.C, self.n, self.ns
@@ -291,7 +311,7 @@ class ShardedTwoStep(_DeadShardMixin):
         code_bits = self.code_bits
         alive = self._alive_arr()
 
-        def body(qs, codes_shard):
+        def body(qs, codes_shard, *rest):
             si = jax.lax.axis_index("data")
             off = si * ns
             if code_bits == 4:      # nibble slab: unpack once per shard
@@ -300,8 +320,13 @@ class ShardedTwoStep(_DeadShardMixin):
             crude_lut = quantize_lut(luts, fast) if quantized else luts
             crude = lut_sum(crude_lut, codes_shard, fast)  # (nq, ns)
             gids = off + jnp.arange(ns, dtype=jnp.int32)
-            crude = jnp.where((gids[None, :] < n) & alive[si],
-                              _sanitize(crude), jnp.inf)
+            keep = (gids[None, :] < n) & alive[si]
+            if has_filter:
+                # filtered rows: crude +inf, so they can't bootstrap the
+                # eq. 2 threshold, can't pass it, and rank dead last —
+                # same exclusion semantics as the single-device engine
+                keep = keep & rest[0][None, :]
+            crude = jnp.where(keep, _sanitize(crude), jnp.inf)
 
             # phase 1: local crude top-k + local full distances, merged
             # globally before the threshold bootstrap (quantized mode
@@ -335,17 +360,26 @@ class ShardedTwoStep(_DeadShardMixin):
                 jnp.sum(passed.astype(jnp.float32), axis=1), "data") / n
             return mg[:, :topk], mv[:, :topk], pf
 
+        specs = (P(), P("data")) + ((P("data"),) if has_filter else ())
         fn = jax.jit(shard_map_compat(
-            body, self.mesh, in_specs=(P(), P("data")),
+            body, self.mesh, in_specs=specs,
             out_specs=(P(), P(), P())))
-        self._fns[topk] = fn
+        self._fns[key] = fn
         return fn
 
-    def search(self, queries, topk: Optional[int] = None) -> SearchResult:
+    def search(self, queries, topk: Optional[int] = None, *,
+               filter=None) -> SearchResult:
         """queries (nq, d) f32 -> SearchResult; ids and pass accounting
-        bitwise-identical to the single-device engine."""
+        bitwise-identical to the single-device engine.  ``filter``:
+        optional (n,) boolean row predicate."""
         topk = self.topk if topk is None else topk
-        idx, dist, pf = self._fn(topk)(queries, self.codes)
+        if filter is not None:
+            pred = _shard_row_filter(self, filter)
+            idx, dist, pf = self._fn(topk, True)(queries, self.codes,
+                                                 pred)
+            idx = mask_filtered_ids(idx, dist)
+        else:
+            idx, dist, pf = self._fn(topk)(queries, self.codes)
         K = self.C.shape[0]
         kf = jnp.sum(self.structure.fast_mask.astype(jnp.float32))
         pass_rate = jnp.mean(pf)
@@ -415,8 +449,8 @@ class ShardedIVFTwoStep(_DeadShardMixin):
                        for s in range(_data_size(self.mesh))
                        if s not in self.dead_shards))
 
-    def _fn(self, topk: int):
-        key = (topk, self._dead_key())
+    def _fn(self, topk: int, has_filter: bool = False):
+        key = (topk, self._dead_key(), has_filter)
         if key in self._fns:
             return self._fns[key]
         C, centroids = self.C, self.centroids
@@ -442,7 +476,7 @@ class ShardedIVFTwoStep(_DeadShardMixin):
         code_bits = self.code_bits
         alive = self._alive_arr()
 
-        def body(qs, lists_sh, slab_sh):
+        def body(qs, lists_sh, slab_sh, *rest):
             si = jax.lax.axis_index("data")
             L0 = si * Ls
             nq = qs.shape[0]
@@ -480,6 +514,10 @@ class ShardedIVFTwoStep(_DeadShardMixin):
                         (nq, extra))], axis=1)
             valid = owned & (ids >= 0) & alive[si]
             safe = jnp.where(valid, ids, 0)
+            if has_filter:
+                # replicated (n,) predicate — same exclusion as the
+                # single-device engine's valid &= pred[safe]
+                valid = valid & rest[0][safe]
 
             crude_lut = quantize_lut(luts, fast) if quantized else luts
             crude = lut_sum(crude_lut, codes, fast)        # (nq, nc_loc)
@@ -547,19 +585,29 @@ class ShardedIVFTwoStep(_DeadShardMixin):
                 jnp.sum(passed.astype(jnp.float32), axis=1), "data")
             return idx, dist, n_cand, n_pass
 
+        specs = ((P(), P("data"), P("data"))
+                 + ((P(),) if has_filter else ()))
         fn = jax.jit(shard_map_compat(
-            body, self.mesh, in_specs=(P(), P("data"), P("data")),
+            body, self.mesh, in_specs=specs,
             out_specs=(P(), P(), P(), P())))
-        self._fns[topk] = fn
+        self._fns[key] = fn
         return fn
 
-    def search(self, queries, topk: Optional[int] = None) -> SearchResult:
+    def search(self, queries, topk: Optional[int] = None, *,
+               filter=None) -> SearchResult:
         """queries (nq, d) f32 -> SearchResult with the generalized IVF
         ops accounting; ids and counts bitwise-identical to the
-        single-device engine."""
+        single-device engine.  ``filter``: optional (n,) boolean row
+        predicate (replicated — list-sharded ids are global)."""
         topk = self.topk if topk is None else topk
-        ids, dist, n_cand, n_pass = self._fn(topk)(
-            queries, self.lists, self.list_codes)
+        if filter is not None:
+            pred = _put(self.mesh, as_filter(filter, self.n), P())
+            ids, dist, n_cand, n_pass = self._fn(topk, True)(
+                queries, self.lists, self.list_codes, pred)
+            ids = mask_filtered_ids(ids, dist)
+        else:
+            ids, dist, n_cand, n_pass = self._fn(topk)(
+                queries, self.lists, self.list_codes)
         K = self.C.shape[0]
         kf = jnp.sum(self.structure.fast_mask.astype(jnp.float32))
         return ivf_mod.ivf_ops_result(ids, dist, n_cand, n_pass, n=self.n,

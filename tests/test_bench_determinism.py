@@ -1,0 +1,57 @@
+"""Seed determinism for the benchmark layer (docs/benchmarks.md): every
+``benchmarks/run.py --only`` target takes ``--seed`` and threads it into
+data generation, so two same-seed runs must report identical recall.
+Exercised end-to-end on the pareto sweep (the target with the most
+moving parts: pseudo-real data, skewed queries, ground truth, training,
+grid measurement) with a tiny grid — timing fields (qps, search_us) are
+wall-clock and excluded from the comparison.
+"""
+import numpy as np
+
+from benchmarks import sweep
+from repro.data.pseudo_real import pseudo_sift, skewed_queries
+
+_TINY_GRID = [
+    dict(kind="ivf", n_probe=4, num_fast=2, refine_cap=None,
+         lut_dtype="f32", code_bits=8),
+    dict(kind="two_step", n_probe=None, num_fast=2, refine_cap=None,
+         lut_dtype="f32", code_bits=8),
+]
+
+_DATA_FIELDS = ("kind", "n_probe", "num_fast", "refine_cap", "lut_dtype",
+                "code_bits", "recall", "avg_ops", "pass_rate")
+
+
+def _tiny_sweep(tmp_path, tag, seed):
+    return sweep.run(out_path=str(tmp_path / f"pareto_{tag}.json"),
+                     n=1500, nq=16, d=16, n_clusters=8, K=4, m=8, k=5,
+                     n_lists=8, icm_iters=1, repeats=1, grid=_TINY_GRID,
+                     cache_dir=None, seed=seed)
+
+
+def test_same_seed_sweep_runs_report_identical_recall(tmp_path):
+    a = _tiny_sweep(tmp_path, "a", seed=3)
+    b = _tiny_sweep(tmp_path, "b", seed=3)
+    assert [{f: r[f] for f in _DATA_FIELDS} for r in a["rows"]] \
+        == [{f: r[f] for f in _DATA_FIELDS} for r in b["rows"]]
+    assert [{f: r[f] for f in _DATA_FIELDS} for r in a["frontier"]] \
+        == [{f: r[f] for f in _DATA_FIELDS} for r in b["frontier"]]
+    assert a["frontier_monotone"] == b["frontier_monotone"]
+    assert a["seed"] == b["seed"] == 3
+
+
+def test_seed_threads_into_data_generation():
+    # the seed actually reaches the workload: same seed is bitwise
+    # reproducible, a different seed changes db, queries, and skew
+    db0, q0, cid0 = pseudo_sift(400, 8, d=16, n_clusters=8, seed=0)
+    db0b, q0b, cid0b = pseudo_sift(400, 8, d=16, n_clusters=8, seed=0)
+    np.testing.assert_array_equal(db0, db0b)
+    np.testing.assert_array_equal(q0, q0b)
+    np.testing.assert_array_equal(cid0, cid0b)
+    db1, _, _ = pseudo_sift(400, 8, d=16, n_clusters=8, seed=1)
+    assert not np.array_equal(db0, db1)
+    sq0, _ = skewed_queries(db0, cid0, 8, seed=0)
+    sq0b, _ = skewed_queries(db0, cid0, 8, seed=0)
+    sq1, _ = skewed_queries(db0, cid0, 8, seed=1)
+    np.testing.assert_array_equal(sq0, sq0b)
+    assert not np.array_equal(sq0, sq1)

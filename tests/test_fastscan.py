@@ -1,10 +1,12 @@
-"""4-bit fast-scan stack (``code_bits=4``, DESIGN.md §12): nibble
-pack/unpack round trips (odd-K sentinel), paired-byte nibble_lut_sum vs
+"""4-bit fast-scan stack (``code_bits=4``, DESIGN.md §12): paired-byte
+nibble_lut_sum vs
 the widened int8 reference, 4-bit == 8-bit engine identity (fast-mask
 edges included), pallas==jnp parity on non-divisible shapes, sharded
 merge identity (subprocess under 4 forced host devices), artifact
 bitwise round trips, config validation, and the trainer/encoder m<=16
-path."""
+path.  (Nibble pack/unpack round trips live in
+``tests/test_packing_props.py`` as property tests over arbitrary
+geometries.)"""
 import os
 import subprocess
 import sys
@@ -32,33 +34,6 @@ def _problem(key, n, nq, K=4, m=16, kf=2, d=8, sigma=1.0):
                               sigma=jnp.asarray(sigma))
     q = jax.random.normal(jax.random.fold_in(key, 2), (nq, d))
     return q, codes, C, st
-
-
-# ------------------------------------------------------------- packing ----
-
-@pytest.mark.parametrize("K", [1, 2, 4, 7, 8, 15])
-def test_pack_nibbles_round_trip(key, K):
-    """(n, K) -> (n, ceil(K/2)) uint8 -> (n, K), exact for any valid
-    codes; odd K stores a zero sentinel in the last byte's high nibble."""
-    codes = jax.random.randint(key, (53, K), 0, 16)
-    packed = pack_nibbles(codes, K)
-    assert packed.shape == (53, (K + 1) // 2)
-    assert packed.dtype == jnp.uint8
-    np.testing.assert_array_equal(np.asarray(unpack_nibbles(packed, K)),
-                                  np.asarray(codes))
-    if K % 2:
-        assert int(jnp.max(packed[:, -1] >> 4)) == 0   # sentinel nibble
-    # batched candidate shape (nq, t, K) round-trips too
-    cand = jax.random.randint(jax.random.fold_in(key, 1), (5, 9, K), 0, 16)
-    np.testing.assert_array_equal(
-        np.asarray(unpack_nibbles(pack_nibbles(cand, K), K)),
-        np.asarray(cand))
-
-
-def test_pack_nibbles_rejects_wrong_k(key):
-    codes = jax.random.randint(key, (10, 4), 0, 16)
-    with pytest.raises(ValueError, match="pack_nibbles"):
-        pack_nibbles(codes, 6)
 
 
 # -------------------------------------------------------- nibble lut sum ----

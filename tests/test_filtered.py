@@ -1,0 +1,295 @@
+"""Filtered search (per-row boolean metadata predicate): parity vs the
+filtered brute-force oracle, exclusion invariants across all three index
+kinds, the documented jnp-only contract on the pallas backend, the
+empty/all-pass edge predicates, the AnnEngine/Searcher front door, and
+sharded == single-device identity (subprocess under 4 forced host
+devices)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import eval as ev
+from repro.core import codebooks as cb
+from repro.core import icq as icq_mod
+from repro.index import FlatADC, IVFTwoStep, TwoStep
+
+
+def _problem(key, n=300, nq=6, K=4, m=16, kf=2, d=8, sigma=50.0):
+    """sigma is generous by default so eq. 2 refines everything — the
+    filtered/unfiltered comparisons then exercise the predicate logic,
+    not threshold noise."""
+    C = jax.random.normal(key, (K, m, d)) * 0.5
+    codes = jax.random.randint(jax.random.fold_in(key, 1), (n, K), 0,
+                               m).astype(jnp.uint8)
+    st = icq_mod.ICQStructure(xi=jnp.ones((d,), bool),
+                              fast_mask=jnp.zeros((K,), bool)
+                              .at[:kf].set(True),
+                              sigma=jnp.asarray(sigma))
+    q = jax.random.normal(jax.random.fold_in(key, 2), (nq, d))
+    return q, codes, C, st
+
+
+def _kinds(q, codes, C, st, key, topk=20, **kw):
+    emb = cb.decode(C, codes)
+    return [
+        ("flat", FlatADC.build(codes, C, topk=topk, backend="jnp", **kw)),
+        ("two_step", TwoStep.build(codes, C, st, topk=topk, backend="jnp",
+                                   **kw)),
+        ("ivf", IVFTwoStep.build(codes, C, st, emb_db=emb,
+                                 key=jax.random.fold_in(key, 3),
+                                 n_lists=8, n_probe=8, topk=topk,
+                                 backend="jnp", **kw)),
+    ]
+
+
+# ------------------------------------------------- oracle parity ----
+
+def test_flatadc_filtered_matches_exact_oracle(key):
+    """With a single codebook the ADC distance IS the exact L2 distance
+    to the decoded point, so filtered FlatADC must reproduce the
+    filtered brute-force oracle (``repro.eval.ground_truth``) id for
+    id."""
+    n, d = 200, 6
+    C = jax.random.normal(key, (1, 256, d))
+    # distinct codes -> distinct decoded points (no distance ties to
+    # make the id comparison ambiguous)
+    codes = jax.random.permutation(
+        jax.random.fold_in(key, 1), 256)[:n].reshape(n, 1).astype(jnp.uint8)
+    db = cb.decode(C, codes)
+    q = jax.random.normal(jax.random.fold_in(key, 2), (5, d))
+    pred = np.asarray(jax.random.bernoulli(
+        jax.random.fold_in(key, 4), 0.4, (n,)))
+    idx = FlatADC.build(codes, C, topk=10, backend="jnp")
+    res = idx.search(q, filter=jnp.asarray(pred))
+    gt_ids, _ = ev.ground_truth(db, q, 10, filter=pred)
+    np.testing.assert_array_equal(np.asarray(res.indices, np.int64),
+                                  gt_ids)
+
+
+def test_filtered_equals_physically_compacted_db(key):
+    """Filtering with a predicate == physically deleting the excluded
+    rows (ids mapped back), for the flat engines: excluded rows must
+    influence nothing — not the eq. 2 bootstrap, not the threshold, not
+    the ranking."""
+    q, codes, C, st = _problem(key, sigma=2.0)   # selective eq. 2
+    pred = np.asarray(jax.random.bernoulli(
+        jax.random.fold_in(key, 4), 0.5, (codes.shape[0],)))
+    keep = np.nonzero(pred)[0]
+    assert len(keep) > 25
+    for name, full_idx, sub_idx in [
+        ("flat",
+         FlatADC.build(codes, C, topk=15, backend="jnp"),
+         FlatADC.build(codes[keep], C, topk=15, backend="jnp")),
+        ("two_step",
+         TwoStep.build(codes, C, st, topk=15, backend="jnp"),
+         TwoStep.build(codes[keep], C, st, topk=15, backend="jnp")),
+    ]:
+        r_f = full_idx.search(q, filter=jnp.asarray(pred))
+        r_c = sub_idx.search(q)
+        np.testing.assert_array_equal(
+            np.asarray(r_f.indices), keep[np.asarray(r_c.indices)],
+            err_msg=name)
+        np.testing.assert_allclose(np.asarray(r_f.distances),
+                                   np.asarray(r_c.distances), rtol=1e-5,
+                                   err_msg=name)
+
+
+def test_ivf_filtered_matches_flat_filtered_full_probe(key):
+    """IVF probing every list sees the same candidate set as the flat
+    two-step engine, so their filtered rankings must agree."""
+    q, codes, C, st = _problem(key)
+    pred = np.asarray(jax.random.bernoulli(
+        jax.random.fold_in(key, 4), 0.5, (codes.shape[0],)))
+    flat = TwoStep.build(codes, C, st, topk=15, backend="jnp")
+    ivf = IVFTwoStep.build(codes, C, st, emb_db=cb.decode(C, codes),
+                           key=jax.random.fold_in(key, 3), n_lists=8,
+                           n_probe=8, topk=15, backend="jnp")
+    r_flat = flat.search(q, filter=jnp.asarray(pred))
+    r_ivf = ivf.search(q, filter=jnp.asarray(pred))
+    np.testing.assert_array_equal(np.asarray(r_flat.indices),
+                                  np.asarray(r_ivf.indices))
+
+
+def test_filtered_recall_vs_filtered_oracle(key):
+    """Tie-aware recall of every filtered engine against the filtered
+    exact oracle over the decoded database — the scenario-matrix metric
+    the sweep reports.  All engines refine every candidate here
+    (generous sigma, full probe), so recall is limited only by the
+    cross-codebook ADC approximation; the floor is deliberately
+    conservative."""
+    q, codes, C, st = _problem(key)
+    db = cb.decode(C, codes)
+    pred = np.asarray(jax.random.bernoulli(
+        jax.random.fold_in(key, 4), 0.5, (codes.shape[0],)))
+    for name, idx in _kinds(q, codes, C, st, key):
+        res = idx.search(q, filter=jnp.asarray(pred))
+        rec = ev.tie_aware_recall_at_k(np.asarray(res.indices), q, db,
+                                       10, filter=pred, rtol=0.35)
+        assert rec >= 0.8, (name, rec)
+
+
+# --------------------------------------------------- invariants ----
+
+def test_filtered_ids_respect_predicate(key):
+    q, codes, C, st = _problem(key)
+    pred = np.asarray(jax.random.bernoulli(
+        jax.random.fold_in(key, 4), 0.3, (codes.shape[0],)))
+    for name, idx in _kinds(q, codes, C, st, key):
+        ids = np.asarray(idx.search(q, filter=jnp.asarray(pred)).indices)
+        ok = (ids == -1) | pred[np.clip(ids, 0, None)]
+        assert ok.all(), name
+
+
+def test_all_pass_filter_is_bitwise_unfiltered(key):
+    q, codes, C, st = _problem(key)
+    allpass = jnp.ones((codes.shape[0],), bool)
+    for name, idx in _kinds(q, codes, C, st, key):
+        r0 = idx.search(q)
+        r1 = idx.search(q, filter=allpass)
+        np.testing.assert_array_equal(np.asarray(r0.indices),
+                                      np.asarray(r1.indices), err_msg=name)
+        np.testing.assert_array_equal(np.asarray(r0.distances),
+                                      np.asarray(r1.distances),
+                                      err_msg=name)
+
+
+def test_empty_filter_returns_all_padding(key):
+    q, codes, C, st = _problem(key)
+    none = jnp.zeros((codes.shape[0],), bool)
+    for name, idx in _kinds(q, codes, C, st, key):
+        res = idx.search(q, filter=none)
+        assert np.all(np.asarray(res.indices) == -1), name
+        assert np.all(np.isinf(np.asarray(res.distances))), name
+
+
+def test_fewer_passing_rows_than_topk_pads(key):
+    q, codes, C, st = _problem(key)
+    pred = np.zeros((codes.shape[0],), bool)
+    pred[[3, 71, 208]] = True
+    for name, idx in _kinds(q, codes, C, st, key):
+        ids = np.asarray(idx.search(q, filter=jnp.asarray(pred)).indices)
+        assert ids.shape[1] == 20, name
+        for row in ids:
+            valid = row[row >= 0]
+            assert set(valid) == {3, 71, 208}, name
+            assert np.all(row[3:] == -1), name
+
+
+def test_filter_rejects_pallas_and_bad_shapes(key):
+    q, codes, C, st = _problem(key, n=64)
+    pred = jnp.ones((64,), bool)
+    for idx in (FlatADC.build(codes, C, topk=5, backend="pallas",
+                              interpret=True),
+                TwoStep.build(codes, C, st, topk=5, backend="pallas",
+                              interpret=True)):
+        with pytest.raises(ValueError, match="filtered search requires"):
+            idx.search(q, filter=pred)
+    flat = FlatADC.build(codes, C, topk=5, backend="jnp")
+    with pytest.raises(ValueError, match="filter"):
+        flat.search(q, filter=jnp.ones((63,), bool))    # wrong length
+    with pytest.raises(ValueError, match="filter"):
+        flat.search(q, filter=jnp.ones((8, 8), bool))   # wrong rank
+
+
+# ----------------------------------------------------- front door ----
+
+def test_ann_engine_filtered_search(key):
+    from repro.api import build_ann_engine
+    q, codes, C, st = _problem(key)
+    engine = build_ann_engine(codes, C, st, topk=10, backend="jnp")
+    pred = np.asarray(jax.random.bernoulli(
+        jax.random.fold_in(key, 4), 0.3, (codes.shape[0],)))
+    r = engine.search(q, filter=pred)
+    ids = np.asarray(r.indices)
+    assert ((ids == -1) | pred[np.clip(ids, 0, None)]).all()
+    # crude-only degraded level honors the filter too
+    from repro.resilience import SearchBudget
+    r2 = engine.search(q, budget=SearchBudget(allow_refine=False),
+                       filter=pred)
+    ids2 = np.asarray(r2.indices)
+    assert ((ids2 == -1) | pred[np.clip(ids2, 0, None)]).all()
+
+
+def test_ann_engine_filter_on_pallas_raises_without_blacklisting(key):
+    """A user error (filter + pallas) must raise immediately and must
+    NOT trip the failover machinery: the pallas backend stays usable
+    for unfiltered queries afterwards."""
+    from repro.api import build_ann_engine
+    q, codes, C, st = _problem(key, n=64)
+    engine = build_ann_engine(codes, C, st, topk=5, backend="pallas")
+    with pytest.raises(ValueError, match="filtered search requires"):
+        engine.search(q, filter=np.ones(64, bool))
+    r = engine.search(q)                       # still on pallas, no fallback
+    assert r.indices.shape == (q.shape[0], 5)
+    assert engine.stats.get("failovers", 0) == 0
+
+
+# -------------------------------------------------------- sharded ----
+
+_SHARDED_FILTER_SCRIPT = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    assert len(jax.devices()) == 4, jax.devices()
+    from repro.core import codebooks as cb
+    from repro.core import icq as icq_mod
+    from repro.index import FlatADC, IVFTwoStep, TwoStep
+
+    key = jax.random.PRNGKey(0)
+    n, nq, K, m, d, kf = 1237, 9, 4, 16, 8, 2
+    C = jax.random.normal(key, (K, m, d)) * 0.3
+    codes = jax.random.randint(jax.random.fold_in(key, 1), (n, K), 0,
+                               m).astype(jnp.uint8)
+    st = icq_mod.ICQStructure(xi=jnp.ones((d,), bool),
+                              fast_mask=jnp.zeros((K,), bool)
+                              .at[:kf].set(True),
+                              sigma=jnp.asarray(50.0))
+    q = jax.random.normal(jax.random.fold_in(key, 2), (nq, d))
+    pred = np.asarray(jax.random.bernoulli(jax.random.fold_in(key, 4),
+                                           0.4, (n,)))
+    mesh = jax.make_mesh((4,), ("data",))
+
+    def check(idx, tag):
+        r1 = idx.search(q, filter=jnp.asarray(pred))
+        r4 = idx.shard(mesh).search(q, filter=jnp.asarray(pred))
+        np.testing.assert_array_equal(np.asarray(r1.indices),
+                                      np.asarray(r4.indices), err_msg=tag)
+        d1, d4 = np.asarray(r1.distances), np.asarray(r4.distances)
+        fin = np.isfinite(d1)
+        assert (fin == np.isfinite(d4)).all(), tag
+        np.testing.assert_allclose(d1[fin], d4[fin], atol=1e-5,
+                                   err_msg=tag)
+        # unfiltered path through the same sharded wrapper is untouched
+        s1, s4 = idx.search(q), idx.shard(mesh).search(q)
+        np.testing.assert_array_equal(np.asarray(s1.indices),
+                                      np.asarray(s4.indices), err_msg=tag)
+
+    check(FlatADC.build(codes, C, topk=17, backend="jnp"), "flat")
+    check(TwoStep.build(codes, C, st, topk=17, backend="jnp"), "two-step")
+    check(IVFTwoStep.build(codes, C, st, emb_db=cb.decode(C, codes),
+                           key=jax.random.fold_in(key, 3), n_lists=16,
+                           n_probe=5, topk=17, backend="jnp"),
+          "ivf")
+    print("SHARDED_FILTER_OK")
+""")
+
+
+def test_sharded_filtered_matches_single_device():
+    """Filtered sharded search == filtered single-device search on a
+    forced 4-device host platform (row-sharded predicate layout for
+    flat/two-step, replicated predicate for IVF).  Subprocess: this
+    suite must keep seeing one device (conftest)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _SHARDED_FILTER_SCRIPT],
+                          capture_output=True, text=True, timeout=600,
+                          env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "SHARDED_FILTER_OK" in proc.stdout

@@ -1,0 +1,140 @@
+"""Property tests for the code-packing layer: ``pack_codes`` /
+``unpack_codes`` width selection (uint8 / uint16 / int32) and
+``pack_nibbles`` / ``unpack_nibbles`` round trips over arbitrary
+(n, K, m) geometries, including the odd-K sentinel nibble and batched
+candidate shapes.
+
+Runs under Hypothesis when it is installed (CI installs it); otherwise
+falls back to a seeded random-case shim with the same generators so the
+properties stay exercised in minimal environments — the strategy space,
+not the framework, is the point.
+"""
+import numpy as np
+import pytest
+
+from repro.core.encode import (pack_codes, pack_nibbles, unpack_codes,
+                               unpack_nibbles)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover - CI has it
+    HAVE_HYPOTHESIS = False
+
+    class _Draw:
+        """Minimal stand-in for a Hypothesis draw: seeded numpy rng."""
+
+        def __init__(self, rng):
+            self.rng = rng
+
+        def ints(self, lo, hi):
+            return int(self.rng.integers(lo, hi + 1))
+
+    def _fallback_cases(f, n_cases=100):
+        def wrapper():
+            for case in range(n_cases):
+                f(_Draw(np.random.default_rng(1000 + case)))
+        wrapper.__name__ = f.__name__
+        wrapper.__doc__ = f.__doc__
+        return wrapper
+
+if HAVE_HYPOTHESIS:
+    class _Draw:
+        """Adapter so the same test body serves both frameworks."""
+
+        def __init__(self, data):
+            self.data = data
+
+        def ints(self, lo, hi):
+            return self.data.draw(st.integers(lo, hi))
+
+    def _fallback_cases(f, n_cases=100):
+        @settings(max_examples=n_cases, deadline=None)
+        @given(st.data())
+        def wrapper(data):
+            f(_Draw(data))
+        wrapper.__name__ = f.__name__
+        wrapper.__doc__ = f.__doc__
+        return wrapper
+
+
+def _codes(draw, n, K, m):
+    rng = np.random.default_rng(draw.ints(0, 2 ** 31))
+    return rng.integers(0, m, size=(n, K)).astype(np.int32)
+
+
+@pytest.fixture(scope="module")
+def _jnp():
+    import jax.numpy as jnp
+    return jnp
+
+
+def _pack_codes_round_trip(draw):
+    """pack_codes narrows to the smallest width that fits m and
+    unpack_codes restores the exact values, for any (n, K, m)."""
+    import jax.numpy as jnp
+    n = draw.ints(1, 64)
+    K = draw.ints(1, 12)
+    m = draw.ints(2, 70_000)
+    codes = _codes(draw, n, K, m)
+    packed = pack_codes(jnp.asarray(codes), m)
+    want = jnp.uint8 if m <= 256 else (jnp.uint16 if m <= 65536
+                                       else jnp.int32)
+    assert packed.dtype == want
+    restored = unpack_codes(packed)
+    assert restored.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(restored), codes)
+
+
+def _pack_nibbles_round_trip(draw):
+    """(n, K) -> (n, ceil(K/2)) uint8 -> (n, K) is exact for every
+    K >= 1 and m <= 16; odd K keeps a zero sentinel in the final high
+    nibble."""
+    import jax.numpy as jnp
+    n = draw.ints(1, 64)
+    K = draw.ints(1, 17)
+    m = draw.ints(2, 16)
+    codes = _codes(draw, n, K, m)
+    packed = pack_nibbles(jnp.asarray(codes), K)
+    assert packed.shape == (n, (K + 1) // 2)
+    assert packed.dtype == jnp.uint8
+    np.testing.assert_array_equal(
+        np.asarray(unpack_nibbles(packed, K)), codes)
+    if K % 2:
+        assert int(np.max(np.asarray(packed)[:, -1] >> 4)) == 0
+
+
+def _pack_nibbles_batched_shapes(draw):
+    """The candidate-tensor layout (nq, t, K) round-trips identically —
+    packing is pointwise over the trailing axis."""
+    import jax.numpy as jnp
+    nq = draw.ints(1, 6)
+    t = draw.ints(1, 9)
+    K = draw.ints(1, 11)
+    rng = np.random.default_rng(draw.ints(0, 2 ** 31))
+    cand = rng.integers(0, 16, size=(nq, t, K)).astype(np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_nibbles(pack_nibbles(jnp.asarray(cand), K), K)),
+        cand)
+
+
+def _pack_nibbles_rejects_wrong_k(draw):
+    """K must match the trailing axis — any mismatch raises."""
+    import jax.numpy as jnp
+    K = draw.ints(1, 10)
+    wrong = draw.ints(1, 11)
+    if wrong == K:
+        wrong += 1
+    codes = _codes(draw, 8, K, 16)
+    with pytest.raises(ValueError, match="pack_nibbles"):
+        pack_nibbles(jnp.asarray(codes), wrong)
+
+
+test_pack_codes_round_trip = _fallback_cases(_pack_codes_round_trip, 60)
+test_pack_nibbles_round_trip = _fallback_cases(_pack_nibbles_round_trip,
+                                               100)
+test_pack_nibbles_batched_shapes = _fallback_cases(
+    _pack_nibbles_batched_shapes, 60)
+test_pack_nibbles_rejects_wrong_k = _fallback_cases(
+    _pack_nibbles_rejects_wrong_k, 30)

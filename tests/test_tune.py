@@ -1,0 +1,136 @@
+"""``ICQSession.tune`` acceptance tests (docs/api.md): the autotuner
+must return a config that *actually* meets the recall target when
+independently re-measured on a freshly built index, and the tuned
+config must persist through Artifacts bitwise (config-hash identical
+after a reload).
+
+The workload is built so the quantizer has a real ceiling of 1.0: 24
+well-separated bundles of 10 near-duplicate points each, queries at the
+bundle centers — the top-10 of a query is exactly its bundle, which the
+codebooks represent almost losslessly.  (Isotropic-noise Gaussians are
+useless here: their quantization error floor caps exact-ground-truth
+recall far below any sane target.)
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import eval as ev
+from repro.api import ConfigError, ICQConfig, ICQSession, build_index
+
+
+def _bundle_workload(seed=0, nb=24, per=10, d=16):
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((nb, d)).astype(np.float32) * 4
+    x = (np.repeat(centers, per, axis=0)
+         + 0.05 * rng.standard_normal((nb * per, d))).astype(np.float32)
+    y = np.repeat(np.arange(nb) % 4, per).astype(np.int32)
+    q = (centers[rng.integers(0, nb, nb)]
+         + 0.05 * rng.standard_normal((nb, d))).astype(np.float32)
+    return x, y, q
+
+
+def _cfg():
+    return ICQConfig().with_overrides({
+        "train.d": 16, "train.num_codebooks": 8,
+        "train.codebook_size": 32, "train.num_fast": 2,
+        "train.epochs": 2,
+        "index.kind": "ivf", "index.n_lists": 4, "index.n_probe": 1,
+        "serve.topk": 10, "serve.backend": "jnp"})
+
+
+@pytest.fixture(scope="module")
+def tuned_session():
+    x, y, q = _bundle_workload()
+    s = ICQSession(_cfg())
+    s.fit(x, y)
+    tuned = s.tune(queries=q, target_recall=0.8, k=10, repeats=1,
+                   cache_dir=None)
+    return s, tuned, x, q
+
+
+def test_tune_meets_target_and_reports(tuned_session):
+    s, tuned, _, _ = tuned_session
+    rep = s.last_tune
+    assert rep["met_target"] is True
+    assert rep["target_recall"] == 0.8 and rep["k"] == 10
+    assert rep["selected"]["recall"] >= 0.8
+    assert rep["selected"] in rep["points"]
+    # the report's frontier is a monotone recall-vs-qps curve
+    assert ev.is_monotone_frontier(rep["frontier"])
+    # apply=True adopted the winner on the session
+    assert s.config.config_hash() == tuned.config_hash()
+    nf = tuned.train.num_fast
+    assert int(s.model.structure.fast_mask.sum()) == nf
+
+
+def test_tuned_config_remeasures_at_target(tuned_session):
+    """Independent re-measurement: build a fresh index from the tuned
+    config (not the tuner's internals) and score against freshly
+    computed exact ground truth — the acceptance bar is target - 0.02
+    (timing noise never moves recall; the slack only covers query-draw
+    variance)."""
+    s, tuned, _, q = tuned_session
+    emb_db = np.asarray(s._fit_emb)
+    q_emb = s.model.embed(np.asarray(q))
+    gt_ids, _ = ev.ground_truth(emb_db, np.asarray(q_emb), 10)
+    idx = build_index(s.model.codes, s.model.C, s.model.structure,
+                      index_cfg=tuned.index, serve_cfg=tuned.serve,
+                      emb_db=s._fit_emb, key=jax.random.PRNGKey(0))
+    res = idx.search(q_emb, 10)
+    recall = ev.recall_at_k(np.asarray(res.indices)[:, :10], gt_ids, 10)
+    assert recall >= 0.8 - 0.02
+
+
+def test_tuned_config_round_trips_through_artifacts(tuned_session,
+                                                    tmp_path):
+    s, tuned, x, q = tuned_session
+    s.save(str(tmp_path))
+    s2 = ICQSession.from_artifacts(str(tmp_path))
+    assert s2.config.config_hash() == tuned.config_hash()
+    # the reloaded session serves with the tuned knobs bitwise (the
+    # reloaded model re-encodes the db deterministically)
+    r1 = s.index().search(q, k=10)
+    r2 = s2.index(x).search(q, k=10)
+    np.testing.assert_array_equal(np.asarray(r1.indices),
+                                  np.asarray(r2.indices))
+
+
+def test_tune_apply_false_leaves_session_untouched():
+    x, y, q = _bundle_workload(seed=1)
+    s = ICQSession(_cfg())
+    s.fit(x, y)
+    before = s.config.config_hash()
+    nf_before = int(s.model.structure.fast_mask.sum())
+    tuned = s.tune(queries=q, target_recall=0.8, k=10, repeats=1,
+                   cache_dir=None, apply=False)
+    assert s.config.config_hash() == before
+    assert int(s.model.structure.fast_mask.sum()) == nf_before
+    assert isinstance(tuned, ICQConfig)
+
+
+def test_tune_guards():
+    s = ICQSession(_cfg())
+    with pytest.raises(ConfigError, match="before session.fit"):
+        s.tune(queries=np.zeros((2, 16), np.float32))
+    x, y, q = _bundle_workload(seed=2)
+    s.fit(x, y)
+    with pytest.raises(ConfigError, match="needs queries"):
+        s.tune()
+
+
+def test_tune_explicit_grid_and_unreachable_target():
+    """CI-style reduced grid; an unreachable target falls back to the
+    max-recall point and reports met_target=False."""
+    x, y, q = _bundle_workload(seed=3)
+    s = ICQSession(_cfg())
+    s.fit(x, y)
+    grid = [{"index.n_probe": 1}, {"index.n_probe": 4}]
+    s.tune(queries=q, target_recall=1.1, k=10, grid=grid, repeats=1,
+           cache_dir=None, apply=False)
+    rep = s.last_tune
+    assert rep["met_target"] is False
+    assert rep["selected"]["recall"] == max(p["recall"]
+                                            for p in rep["points"])
