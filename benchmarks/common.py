@@ -24,6 +24,23 @@ def code_bits(cfg: ICQConfig) -> int:
     return int(cfg.num_codebooks * np.log2(cfg.codebook_size))
 
 
+def host_copy(tree):
+    """Copy a warm result pytree to host numpy, releasing its device
+    buffers before a timing loop starts.
+
+    The engine benches warm each search once and keep the result around
+    for the report row (recall, avg_ops).  Holding those jax Arrays
+    across the timed calls pins their device allocations, so every
+    timed batch re-allocates its top-k carry instead of reusing the
+    warm call's freed buffers — and a donating engine (the pipelined
+    executor, DESIGN.md §13) can never actually donate into them.  Copy
+    the warm result out first, then time against released buffers.
+    ``np.array`` both blocks until the value is ready and forces a real
+    host copy (``np.asarray`` may alias the device buffer on CPU).
+    """
+    return jax.tree_util.tree_map(lambda x: np.array(x), tree)
+
+
 def recall_at_k(retrieved, truth, k=None) -> float:
     """THE benchmark recall: delegates to the oracle-tested
     ``repro.eval.recall_at_k`` (set overlap, -1 padding aware, k > n

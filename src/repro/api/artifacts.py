@@ -118,6 +118,9 @@ def _index_opts(config: ICQConfig) -> Dict[str, Any]:
     # default (from_dict fills missing fields), so old artifacts keep
     # serving byte-packed codes unchanged
     opts["code_bits"] = index.code_bits
+    # likewise pre-pipeline configs load with "off" (from_dict default)
+    opts["pipeline"] = serve.pipeline
+    opts["pipeline_tile"] = serve.pipeline_tile
     return opts
 
 

@@ -45,6 +45,7 @@ CHOICES = {
     "index.code_bits": (8, 4),
     "serve.backend": ("auto", "jnp", "pallas"),
     "serve.lut_dtype": ("f32", "int8"),
+    "serve.pipeline": ("off", "tiles", "auto"),
 }
 
 # the joint trainer modes behind the api quantizer names; the remaining
@@ -145,6 +146,8 @@ class ServeConfig:
     query_chunk: Optional[int] = None
     block_q: Optional[int] = None
     block_n: Optional[int] = None
+    pipeline: str = "off"        # off | tiles | auto (DESIGN.md §13)
+    pipeline_tile: Optional[int] = None   # queries per pipeline tile
 
 
 @dataclasses.dataclass(frozen=True)

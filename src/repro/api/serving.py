@@ -194,8 +194,12 @@ class AnnEngine:
         # under a fault injector the engine must stay eager: kernel
         # hooks fire at trace time only inside jit, so a jitted fn
         # would check faults once per compile instead of per batch
-        # (sharded views run their own inner jit either way)
-        if self.fault_injector is None and self.mesh is None:
+        # (sharded views run their own inner jit either way); a
+        # pipelined index also stays eager — the executor runs a
+        # host-level tile loop and owns its own jit/donation boundary,
+        # which an outer trace would unroll and defeat
+        if (self.fault_injector is None and self.mesh is None
+                and getattr(lidx, "pipeline", "off") == "off"):
             call = jax.jit(call)
         self._fns[key] = call
         return key, call
@@ -403,7 +407,9 @@ def build_index(codes, C, structure, *, index_cfg: IndexConfig,
                                 backend=serve_cfg.backend,
                                 query_chunk=serve_cfg.query_chunk,
                                 lut_dtype=serve_cfg.lut_dtype,
-                                code_bits=code_bits)
+                                code_bits=code_bits,
+                                pipeline=serve_cfg.pipeline,
+                                pipeline_tile=serve_cfg.pipeline_tile)
     # None = keep the index class's own tile defaults (they differ
     # between the flat engines and the IVF slab kernels)
     if serve_cfg.block_q is not None:
@@ -429,7 +435,8 @@ def build_ann_engine(codes, C, structure, *, topk: int = 50,
                      query_chunk=None, index: str = "two-step", mesh=None,
                      emb_db=None, n_lists: int = 64, n_probe: int = 8,
                      refine_cap=None, key=None, lut_dtype: str = "f32",
-                     code_bits: int = 8,
+                     code_bits: int = 8, pipeline: str = "off",
+                     pipeline_tile=None,
                      resilience: Optional[ResilienceConfig] = None,
                      fault_injector=None):
     """Batched ANN serving entry: returns an ``AnnEngine`` — call it
@@ -453,8 +460,11 @@ def build_ann_engine(codes, C, structure, *, topk: int = 50,
     LUT precision (DESIGN.md §8; honored by the sharded engines too).
     ``code_bits`` (8 | 4) selects the code storage width — 4 serves the
     fast-scan nibble-packed layout (DESIGN.md §12, needs m <= 16).
-    ``resilience`` / ``fault_injector`` configure the engine's failure
-    behavior (docs/robustness.md).
+    ``pipeline`` ("off" | "tiles" | "auto") enables the overlapped
+    crude/refine tile executor (DESIGN.md §13); ``pipeline_tile``
+    overrides its queries-per-tile default.  ``resilience`` /
+    ``fault_injector`` configure the engine's failure behavior
+    (docs/robustness.md).
     """
     # n_lists/n_probe only describe an IVF; for the flat kinds they were
     # historically ignored, so keep them out of the validated config
@@ -465,7 +475,8 @@ def build_ann_engine(codes, C, structure, *, topk: int = 50,
                                   code_bits=code_bits))
     serve_cfg = ServeConfig(topk=topk, backend=backend, lut_dtype=lut_dtype,
                             query_chunk=query_chunk, block_q=block_q,
-                            block_n=block_n)
+                            block_n=block_n, pipeline=pipeline,
+                            pipeline_tile=pipeline_tile)
     idx = build_index(codes, C, structure, index_cfg=index_cfg,
                       serve_cfg=serve_cfg, emb_db=emb_db, key=key)
     return AnnEngine(idx, mesh=mesh, resilience=resilience,

@@ -208,7 +208,8 @@ class ICQSession:
         K = cfg.train.num_codebooks
         kind = cfg.index.kind
         if kind == "flat":
-            return [{}, {"serve.lut_dtype": "int8"}]
+            return [{}, {"serve.lut_dtype": "int8"},
+                    {"serve.pipeline": "tiles"}]
         nf_opts = sorted({max(1, K // 2), K - 1})
         grid: List[Dict[str, Any]] = []
         if kind == "ivf":
@@ -229,6 +230,11 @@ class ICQSession:
                                  max(4 * cfg.serve.topk, 64)})
             grid.append({"train.num_fast": nf_opts[0],
                          "serve.lut_dtype": "int8"})
+        # the overlapped crude/refine executor (DESIGN.md §13) is a
+        # pure scheduling knob — same results, different wall time — so
+        # one candidate at the default operating point is enough for
+        # the coarse pass; refinement inherits it if it wins
+        grid.append({"serve.pipeline": "tiles"})
         return grid
 
     def _refine_candidates(self, best_ov: Dict[str, Any]):
@@ -267,8 +273,16 @@ class ICQSession:
             repl["refine_cap"] = ov["index.refine_cap"]
         if "serve.lut_dtype" in ov:
             repl["lut_dtype"] = ov["serve.lut_dtype"]
+        if "serve.pipeline" in ov:
+            repl["pipeline"] = ov["serve.pipeline"]
+        if "serve.pipeline_tile" in ov:
+            repl["pipeline_tile"] = ov["serve.pipeline_tile"]
         idx = dataclasses.replace(base_idx, **repl) if repl else base_idx
-        call = jax.jit(lambda q: idx.search(q, k))
+        # a pipelined index runs a host-level tile loop and owns its
+        # own jit/donation boundary — an outer jit would unroll it
+        call = (lambda q: idx.search(q, k)) \
+            if getattr(idx, "pipeline", "off") != "off" \
+            else jax.jit(lambda q: idx.search(q, k))
         r = call(q_emb)                      # compile + warm
         jax.block_until_ready((r.indices, r.distances))
         recall = eval_mod.recall_at_k(np.asarray(r.indices)[:, :k],

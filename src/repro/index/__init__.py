@@ -27,6 +27,9 @@ from repro.index.flat import (FlatADC, TwoStep, adc_search, two_step_search,
 from repro.index.ivf import (IVFIndex, IVFTwoStep, build_ivf, ivf_assign,
                              ivf_extend, ivf_list_codes,
                              ivf_two_step_search)
+from repro.index.pipelined import (PIPELINE_MODES, PipelinedSearch,
+                                   maybe_pipelined, resolve_pipeline,
+                                   resolve_tile)
 
 INDEX_KINDS = {
     "flat": FlatADC,
@@ -58,4 +61,6 @@ __all__ = [
     "fastscan_kernel_operands", "quantize_lut", "exact_search",
     "chunked_over_queries", "resolve_backend", "resolve_code_bits",
     "resolve_lut_dtype", "mean_average_precision", "recall_at",
+    "PIPELINE_MODES", "PipelinedSearch", "maybe_pipelined",
+    "resolve_pipeline", "resolve_tile",
 ]

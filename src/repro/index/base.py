@@ -389,11 +389,11 @@ def chunked_over_queries(fn, queries, query_chunk: Optional[int]):
     here does: a zero query just produces finite distances that are
     discarded by the slice).
     """
+    from repro.kernels.stages import pad_to
     if query_chunk is None or queries.shape[0] <= query_chunk:
         return fn(queries)
     nq = queries.shape[0]
-    pad = (-nq) % query_chunk
-    qp = jnp.pad(queries, ((0, pad), (0, 0)))
+    qp = pad_to(queries, nq + (-nq) % query_chunk)
     blocks = qp.reshape(-1, query_chunk, queries.shape[1])
     outs = jax.lax.map(fn, blocks)
     return jax.tree.map(

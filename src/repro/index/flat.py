@@ -49,12 +49,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.index.base import (SearchResult, as_filter, build_lut,
-                              chunked_over_queries,
-                              fastscan_kernel_operands, lut_sum,
-                              mask_filtered_ids, nibble_lut_sum,
-                              pad_luts_even, quantize_lut,
-                              quantized_kernel_operands, resolve_backend,
+                              chunked_over_queries, lut_sum,
+                              mask_filtered_ids, resolve_backend,
                               resolve_code_bits, resolve_lut_dtype)
+# The search paths are compositions of the stage objects (DESIGN.md
+# §13); the stage module lazily imports index.base inside method
+# bodies, so this top-level import is cycle-free.
+from repro.kernels.stages import (CrudeStage, RefineStage, ThresholdStage,
+                                  widen_codes as _widen_codes)
 
 
 # -------------------------------------------------------------- engines ----
@@ -67,16 +69,6 @@ def _check_fastscan_geometry(code_bits: int, m: int):
         raise ValueError(f"code_bits=4 requires codebook_size <= 16 "
                          f"codewords (4-bit codes), got m={m}")
     return code_bits
-
-
-def _widen_codes(codes, K: int, code_bits: int):
-    """Stored codes -> int32 (n, K) gather indices: plain widening for
-    byte codes, shift/mask nibble unpack (sentinel column dropped) for
-    ``code_bits=4``."""
-    if code_bits == 4:
-        from repro.core.encode import unpack_nibbles
-        return unpack_nibbles(codes, K)
-    return codes.astype(jnp.int32)
 
 
 def _check_filter(filter, n: int, backend: str):
@@ -94,6 +86,30 @@ def _check_filter(filter, n: int, backend: str):
                          "like refine_cap, filter is a jnp-engine "
                          "option)")
     return as_filter(filter, n)
+
+def _adc_block(qs, env, *, topk: int, backend: str, block_q: int = 64,
+               block_n: int = 512, interpret=None, quantized: bool = False,
+               code_bits: int = 8, has_filter: bool = False):
+    """One-step ADC over one query block: a single ``CrudeStage`` with
+    ``fast=None`` (the full table is the crude pass) — there is no
+    threshold or refine stage to compose.  env: {"codes", "C"[, "pred"]}.
+    Returns (ids (nq, topk), dist (nq, topk))."""
+    pred = env["pred"] if has_filter else None
+    stage = CrudeStage(backend=backend, topk=topk, block_q=block_q,
+                       block_n=block_n, interpret=interpret,
+                       quantized=quantized, code_bits=code_bits,
+                       want_crude=False)
+    luts = build_lut(qs, env["C"])
+    if backend == "pallas":
+        # codes stay packed into the kernel (widened per-tile in VMEM)
+        out = stage(env["codes"], luts, None)
+        return out.cand_idx, out.cand_vals
+    dist = stage(env["codes"], luts, None, pred=pred).crude   # (nq, n)
+    neg, ids = jax.lax.top_k(-dist, topk)
+    if pred is not None:
+        ids = mask_filtered_ids(ids, -neg)
+    return ids, -neg
+
 
 def adc_search(queries, codes, C, topk: int, *, backend: str = "auto",
                block_q: int = 64, block_n: int = 512, interpret=None,
@@ -115,138 +131,100 @@ def adc_search(queries, codes, C, topk: int, *, backend: str = "auto",
     be = resolve_backend(backend)
     quantized = resolve_lut_dtype(lut_dtype) == "int8"
     code_bits = _check_fastscan_geometry(code_bits, m)
-    nibble = code_bits == 4
     pred = _check_filter(filter, codes.shape[0], be)
-
-    if be == "pallas":
-        # codes stay packed into the kernel (widened per-tile in VMEM)
-        from repro.kernels import ops
-
-        def one_block(qs):
-            luts = build_lut(qs, C)
-            nq = qs.shape[0]
-            if quantized:
-                q_flat, scale, offset = (
-                    fastscan_kernel_operands(luts) if nibble
-                    else quantized_kernel_operands(luts))
-                _, vals, ids = ops.batched_crude_topk(
-                    codes, q_flat, topk,
-                    block_q=block_q, block_n=block_n, interpret=interpret,
-                    want_crude=False, lut_scale=scale, lut_offset=offset,
-                    code_bits=code_bits)
-            else:
-                lut_flat = (pad_luts_even(luts) if nibble
-                            else luts).reshape(nq, -1)
-                _, vals, ids = ops.batched_crude_topk(
-                    codes, lut_flat, topk,
-                    block_q=block_q, block_n=block_n, interpret=interpret,
-                    want_crude=False, code_bits=code_bits)
-            return ids, vals
-    else:
-        if not nibble:
-            codes = codes.astype(jnp.int32)          # widen packed codes
-
-        def one_block(qs):
-            luts = build_lut(qs, C)                  # (nq,K,m)
-            lut = quantize_lut(luts) if quantized else luts
-            dist = (nibble_lut_sum(lut, codes, K) if nibble
-                    else lut_sum(lut, codes))        # (nq,n)
-            if pred is not None:
-                dist = jnp.where(pred[None, :], dist, jnp.inf)
-            neg, ids = jax.lax.top_k(-dist, topk)
-            if pred is not None:
-                ids = mask_filtered_ids(ids, -neg)
-            return ids, -neg
-
-    idx, vals = chunked_over_queries(one_block, queries, query_chunk)
+    if be != "pallas" and code_bits != 4:
+        codes = codes.astype(jnp.int32)              # widen packed codes
+    env = {"codes": codes, "C": C, "pred": pred}
+    fn = functools.partial(_adc_block, env=env, topk=topk, backend=be,
+                           block_q=block_q, block_n=block_n,
+                           interpret=interpret, quantized=quantized,
+                           code_bits=code_bits, has_filter=pred is not None)
+    idx, vals = chunked_over_queries(fn, queries, query_chunk)
     return SearchResult(idx, vals, jnp.asarray(float(K)), jnp.asarray(1.0))
 
 
-def _eq2_passed(luts, codes, crude, topk: int, sigma, fast=None,
-                code_bits: int = 8):
-    """Eq. 2 margin test, shared by the jnp engines: bootstrap the
-    neighbor list from the crude top-k, rank it by full distance; the
-    threshold compares *crude vs crude of the furthest list element*
-    plus the margin sigma.  Returns the (nq, n) pass mask.
+# The two-step engine as a crude/refine phase pair (DESIGN.md §13).
+# Each phase is a pure function of (queries | carry, env) where env is
+# the borrowed index state {"codes", "C", "fast", "sigma"[, "pred"]};
+# the carry between them is the owned intermediate buffer set
+# (luts, crude, cand_vals, cand_idx) that the refine phase is the last
+# reader of.  The sequential blocks below compose the two phases
+# back-to-back; ``index/pipelined.py`` jits them separately (refine with
+# ``donate_argnums`` on the carry) and overlaps crude(t+1) with
+# refine(t) across query tiles.
 
-    With ``fast`` given (the quantized-crude path) the candidates' full
-    distances are formed as quantized-crude + exact-slow — the same
-    decomposition the fused kernels use — so jnp and pallas bootstrap
-    identical thresholds under ``lut_dtype="int8"``."""
-    neg_c, cand = jax.lax.top_k(-crude, topk)            # (nq,topk)
-    cand_codes = jnp.take(codes, cand, axis=0)           # (nq,topk,K)
-    if code_bits == 4:
-        cand_codes = _widen_codes(cand_codes, luts.shape[1], code_bits)
-    if fast is None:
-        full_cand = lut_sum(luts, cand_codes)            # (nq,topk)
-    else:
-        full_cand = -neg_c + lut_sum(luts, cand_codes, ~fast)
-    far = jnp.argmax(full_cand, axis=1)                  # (nq,)
-    t = -jnp.take_along_axis(neg_c, far[:, None], axis=1)[:, 0]
-    return crude < (t + sigma)[:, None]
+def _flat_crude_phase(qs, env, *, topk: int, backend: str,
+                      block_q: int = 64, block_n: int = 512,
+                      interpret=None, quantized: bool = False,
+                      code_bits: int = 8, has_filter: bool = False):
+    """Phase 1: per-query LUTs + the crude pass.  Returns the carry
+    (luts, crude, cand_vals, cand_idx) — the fused kernel also emits
+    its running crude top-k; the dense jnp path defers the candidate
+    top-k to the threshold bootstrap (cand_* = None).
 
-
-def _crude_tables(luts, fast, quantized: bool):
-    """The crude pass's LUT representation: the f32 tables themselves,
-    or their per-query int8 form calibrated over the fast subset."""
-    return quantize_lut(luts, fast) if quantized else luts
-
-
-def _two_step_block_jnp(qs, codes, C, fast, sigma, topk: int,
-                        quantized: bool = False, code_bits: int = 8,
-                        pred=None):
-    """Vectorized two-step over one query block.  Returns
-    (idx (nq,topk), dist (nq,topk), passed_frac (nq,)).
-
-    ``pred`` (filtered search): excluded rows get crude = +inf *before*
-    the eq. 2 bootstrap, so they can neither become candidates, set the
-    threshold, nor pass the margin test — recall is measured against
-    the filtered oracle, not a post-hoc drop."""
-    nibble = code_bits == 4
-    K = C.shape[0]
-    luts = build_lut(qs, C)                              # (nq,K,m)
-    ct = _crude_tables(luts, fast, quantized)
-    crude = (nibble_lut_sum(ct, codes, K, fast) if nibble
-             else lut_sum(ct, codes, fast))
-    if pred is not None:
-        crude = jnp.where(pred[None, :], crude, jnp.inf)
-    passed = _eq2_passed(luts, codes, crude, topk, sigma,
-                         fast if quantized else None, code_bits)
-    # refine passers only; pruned points are excluded from the ranking
-    slow = (nibble_lut_sum(luts, codes, K, ~fast) if nibble
-            else lut_sum(luts, codes, ~fast))
-    ranked = jnp.where(passed, crude + slow, jnp.inf)
-    neg, idx = jax.lax.top_k(-ranked, topk)
-    if pred is not None:
-        idx = mask_filtered_ids(idx, -neg)
-    return idx, -neg, jnp.mean(passed.astype(jnp.float32), axis=1)
+    ``pred`` (filtered search, jnp): excluded rows get crude = +inf
+    *before* the eq. 2 bootstrap, so they can neither become
+    candidates, set the threshold, nor pass the margin test — recall is
+    measured against the filtered oracle, not a post-hoc drop."""
+    stage = CrudeStage(backend=backend, topk=topk, block_q=block_q,
+                       block_n=block_n, interpret=interpret,
+                       quantized=quantized, code_bits=code_bits)
+    luts = build_lut(qs, env["C"])                       # (nq,K,m)
+    if backend == "pallas":
+        out = stage(env["codes"], luts, env["fast"])
+        return luts, out.crude, out.cand_vals, out.cand_idx
+    pred = env["pred"] if has_filter else None
+    out = stage(env["codes"], luts, env["fast"], pred=pred)
+    return luts, out.crude, None, None
 
 
-def _two_step_block_compact(qs, codes, C, fast, sigma, topk: int,
-                            refine_cap: int, quantized: bool = False,
-                            code_bits: int = 8, pred=None):
-    """Two-step with the static survivor compaction: the refine_cap best
-    crude survivors are gathered and refined by full LUT sum (always
-    exact f32 — under ``lut_dtype="int8"`` quantization only affects
-    which points survive and their selection order).  ``pred``: see
-    ``_two_step_block_jnp`` — excluded rows are +inf pre-bootstrap."""
-    nibble = code_bits == 4
-    K = C.shape[0]
-    luts = build_lut(qs, C)
-    ct = _crude_tables(luts, fast, quantized)
-    crude = (nibble_lut_sum(ct, codes, K, fast) if nibble
-             else lut_sum(ct, codes, fast))
-    if pred is not None:
-        crude = jnp.where(pred[None, :], crude, jnp.inf)
-    passed = _eq2_passed(luts, codes, crude, topk, sigma,
-                         fast if quantized else None, code_bits)
+def _flat_refine_phase(carry, env, *, topk: int, backend: str,
+                       block_q: int = 64, block_n: int = 512,
+                       interpret=None, quantized: bool = False,
+                       code_bits: int = 8,
+                       refine_cap: Optional[int] = None,
+                       has_filter: bool = False):
+    """Phases 2+3: the eq. 2 threshold bootstrap and the refine pass.
+    Consumes (donates) the crude-phase carry.  Returns (idx, dist,
+    passed_frac (nq,)).
+
+    The bootstrap formulation per path is preserved exactly: the dense
+    jnp path ranks candidates from the crude matrix
+    (``ThresholdStage.from_dense`` — quantized mode uses the
+    crude + exact-slow decomposition the kernels share), the pallas
+    path from the kernel's candidate list (``from_candidates``).
+    ``refine_cap`` (jnp only) swaps the dense refine for the static
+    survivor compaction: the refine_cap best crude survivors are
+    gathered and re-ranked by full LUT sum (always exact f32 — under
+    ``lut_dtype="int8"`` quantization only affects which points survive
+    and their selection order)."""
+    luts, crude, cand_vals, cand_idx = carry
+    codes, fast, sigma = env["codes"], env["fast"], env["sigma"]
+    pred = env["pred"] if has_filter else None
+    tstage = ThresholdStage(topk=topk, quantized=quantized,
+                            code_bits=code_bits)
+    rstage = RefineStage(backend=backend, topk=topk, block_q=block_q,
+                         block_n=block_n, interpret=interpret,
+                         code_bits=code_bits)
+    if backend == "pallas":
+        thr = tstage.from_candidates(luts, codes, cand_vals, cand_idx,
+                                     fast, sigma)
+        idx, dist, passed = rstage(codes, luts, crude, thr, fast)
+        return idx, dist, jnp.mean(passed.astype(jnp.float32), axis=1)
+    thr = tstage.from_dense(luts, codes, crude, fast, sigma)
+    if refine_cap is None:
+        idx, dist, passed = rstage(codes, luts, crude, thr, fast,
+                                   pred=pred)
+        return idx, dist, jnp.mean(passed.astype(jnp.float32), axis=1)
     # compact: best-crude survivors first, capped
+    passed = crude < thr[:, None]
     masked = jnp.where(passed, crude, jnp.inf)
     neg_s, surv = jax.lax.top_k(-masked, refine_cap)
     valid = jnp.isfinite(-neg_s)
     surv_codes = jnp.take(codes, surv, axis=0)           # (nq,cap,K)
-    if nibble:
-        surv_codes = _widen_codes(surv_codes, K, code_bits)
+    if code_bits == 4:
+        surv_codes = _widen_codes(surv_codes, env["C"].shape[0],
+                                  code_bits)
     full_surv = lut_sum(luts, surv_codes)
     ranked = jnp.where(valid, full_surv, jnp.inf)
     neg, pos = jax.lax.top_k(-ranked, topk)
@@ -256,52 +234,56 @@ def _two_step_block_compact(qs, codes, C, fast, sigma, topk: int,
     return idx, -neg, jnp.mean(passed.astype(jnp.float32), axis=1)
 
 
+def _two_step_block_jnp(qs, codes, C, fast, sigma, topk: int,
+                        quantized: bool = False, code_bits: int = 8,
+                        pred=None):
+    """Vectorized two-step over one query block: the sequential
+    composition of the crude and refine phases.  Returns
+    (idx (nq,topk), dist (nq,topk), passed_frac (nq,))."""
+    env = {"codes": codes, "C": C, "fast": fast, "sigma": sigma,
+           "pred": pred}
+    carry = _flat_crude_phase(qs, env, topk=topk, backend="jnp",
+                              quantized=quantized, code_bits=code_bits,
+                              has_filter=pred is not None)
+    return _flat_refine_phase(carry, env, topk=topk, backend="jnp",
+                              quantized=quantized, code_bits=code_bits,
+                              has_filter=pred is not None)
+
+
+def _two_step_block_compact(qs, codes, C, fast, sigma, topk: int,
+                            refine_cap: int, quantized: bool = False,
+                            code_bits: int = 8, pred=None):
+    """Two-step with the static survivor compaction — the same phase
+    pair with the capped refine tail (see ``_flat_refine_phase``)."""
+    env = {"codes": codes, "C": C, "fast": fast, "sigma": sigma,
+           "pred": pred}
+    carry = _flat_crude_phase(qs, env, topk=topk, backend="jnp",
+                              quantized=quantized, code_bits=code_bits,
+                              has_filter=pred is not None)
+    return _flat_refine_phase(carry, env, topk=topk, backend="jnp",
+                              quantized=quantized, code_bits=code_bits,
+                              refine_cap=refine_cap,
+                              has_filter=pred is not None)
+
+
 def _two_step_pallas(queries, codes, C, fast, sigma, topk: int,
                      block_q: int, block_n: int, interpret,
                      quantized: bool = False, code_bits: int = 8):
     """Fused-kernel two-step: phase-1 crude + candidate top-k in one
-    kernel, tiny candidate refinement in jnp, fused phase-2 kernel.
-    ``quantized`` feeds phase 1 int8 tables (dequantized in-kernel);
-    phase 2 keeps the exact f32 slow tables either way."""
-    from repro.kernels import ops
-    nibble = code_bits == 4
-    nq = queries.shape[0]
-    K, m = C.shape[0], C.shape[1]
-    luts = build_lut(queries, C)                         # (nq,K,m)
-    fast_f = fast.astype(luts.dtype)[None, :, None]
-    lut_slow = luts * (1.0 - fast_f)
-    lut_slow = (pad_luts_even(lut_slow) if nibble
-                else lut_slow).reshape(nq, -1)
-
-    if quantized:
-        q_flat, scale, offset = (
-            fastscan_kernel_operands(luts, fast) if nibble
-            else quantized_kernel_operands(luts, fast))
-        crude, cand_vals, cand_idx = ops.batched_crude_topk(
-            codes, q_flat, topk, block_q=block_q, block_n=block_n,
-            interpret=interpret, lut_scale=scale, lut_offset=offset,
-            code_bits=code_bits)
-    else:
-        lut_fast = luts * fast_f
-        lut_fast = (pad_luts_even(lut_fast) if nibble
-                    else lut_fast).reshape(nq, -1)
-        crude, cand_vals, cand_idx = ops.batched_crude_topk(
-            codes, lut_fast, topk, block_q=block_q, block_n=block_n,
-            interpret=interpret, code_bits=code_bits)
-    # threshold bootstrap on the (nq, topk) candidate set — tiny, jnp
-    cand_codes = jnp.take(codes, cand_idx, axis=0)       # (nq,topk,K)
-    if nibble:
-        cand_codes = _widen_codes(cand_codes, K, code_bits)
-    full_cand = cand_vals + lut_sum(luts, cand_codes, ~fast)
-    far = jnp.argmax(full_cand, axis=1)
-    t = jnp.take_along_axis(cand_vals, far[:, None], axis=1)[:, 0]
-    thr = t + sigma                                      # (nq,)
-
-    dist, idx = ops.batched_refine_topk(
-        codes, lut_slow, crude, thr, topk, block_q=block_q,
-        block_n=block_n, interpret=interpret, code_bits=code_bits)
-    passed_frac = jnp.mean((crude < thr[:, None]).astype(jnp.float32), axis=1)
-    return idx, dist, passed_frac
+    kernel, tiny candidate refinement in jnp, fused phase-2 kernel —
+    the same phase pair, pallas stages.  ``quantized`` feeds phase 1
+    int8 tables (dequantized in-kernel); phase 2 keeps the exact f32
+    slow tables either way."""
+    env = {"codes": codes, "C": C, "fast": fast, "sigma": sigma,
+           "pred": None}
+    carry = _flat_crude_phase(queries, env, topk=topk, backend="pallas",
+                              block_q=block_q, block_n=block_n,
+                              interpret=interpret, quantized=quantized,
+                              code_bits=code_bits)
+    return _flat_refine_phase(carry, env, topk=topk, backend="pallas",
+                              block_q=block_q, block_n=block_n,
+                              interpret=interpret, quantized=quantized,
+                              code_bits=code_bits)
 
 
 def two_step_search(queries, codes, C, structure, topk: int, *,
@@ -395,22 +377,43 @@ def two_step_search_compact(queries, codes, C, structure, topk: int,
                            refine_cap=refine_cap)
 
 
-def _two_step_crude_block_jnp(qs, codes, C, fast, sigma, topk: int,
-                              quantized: bool = False, code_bits: int = 8,
-                              pred=None):
-    """Crude-only ranking over one query block: the exact crude top-k
-    the full jnp path bootstraps eq. 2 candidates from
-    (``_eq2_passed``'s ``top_k(-crude, topk)``), with no refinement."""
-    luts = build_lut(qs, C)
-    ct = _crude_tables(luts, fast, quantized)
-    crude = (nibble_lut_sum(ct, codes, C.shape[0], fast)
-             if code_bits == 4 else lut_sum(ct, codes, fast))
-    if pred is not None:
-        crude = jnp.where(pred[None, :], crude, jnp.inf)
+def _flat_crude_only_phase(qs, env, *, topk: int, backend: str,
+                           block_q: int = 64, block_n: int = 512,
+                           interpret=None, quantized: bool = False,
+                           code_bits: int = 8, has_filter: bool = False):
+    """The degraded pipeline: a ``CrudeStage`` with the refine stage
+    dropped (the resilience ladder's crude rung).  jnp ranks the dense
+    crude matrix directly; pallas takes the fused kernel's candidate
+    list (``want_crude=False`` — no dense matrix at all).  Returns
+    (idx, dist, pf=0) like the full phase pair."""
+    stage = CrudeStage(backend=backend, topk=topk, block_q=block_q,
+                       block_n=block_n, interpret=interpret,
+                       quantized=quantized, code_bits=code_bits,
+                       want_crude=False)
+    luts = build_lut(qs, env["C"])
+    if backend == "pallas":
+        out = stage(env["codes"], luts, env["fast"])
+        return (out.cand_idx, out.cand_vals,
+                jnp.zeros(qs.shape[0], dtype=jnp.float32))
+    pred = env["pred"] if has_filter else None
+    crude = stage(env["codes"], luts, env["fast"], pred=pred).crude
     neg_c, cand = jax.lax.top_k(-crude, topk)
     if pred is not None:
         cand = mask_filtered_ids(cand, -neg_c)
     return cand, -neg_c, jnp.zeros(qs.shape[0], dtype=jnp.float32)
+
+
+def _two_step_crude_block_jnp(qs, codes, C, fast, sigma, topk: int,
+                              quantized: bool = False, code_bits: int = 8,
+                              pred=None):
+    """Crude-only ranking over one query block: the exact crude top-k
+    the full jnp path bootstraps eq. 2 candidates from, with no
+    refinement."""
+    env = {"codes": codes, "C": C, "fast": fast, "pred": pred}
+    return _flat_crude_only_phase(qs, env, topk=topk, backend="jnp",
+                                  quantized=quantized,
+                                  code_bits=code_bits,
+                                  has_filter=pred is not None)
 
 
 def _two_step_crude_pallas(qs, codes, C, fast, topk: int, block_q: int,
@@ -419,28 +422,12 @@ def _two_step_crude_pallas(qs, codes, C, fast, topk: int, block_q: int,
     """Crude-only ranking via the phase-1 kernel: ``batched_crude_topk``
     already emits the crude top-k (its candidate list); skip the dense
     crude matrix and phase 2 entirely."""
-    from repro.kernels import ops
-    nibble = code_bits == 4
-    nq = qs.shape[0]
-    K, m = C.shape[0], C.shape[1]
-    luts = build_lut(qs, C)
-    if quantized:
-        q_flat, scale, offset = (
-            fastscan_kernel_operands(luts, fast) if nibble
-            else quantized_kernel_operands(luts, fast))
-        _, cand_vals, cand_idx = ops.batched_crude_topk(
-            codes, q_flat, topk, block_q=block_q, block_n=block_n,
-            interpret=interpret, want_crude=False,
-            lut_scale=scale, lut_offset=offset, code_bits=code_bits)
-    else:
-        fast_f = fast.astype(luts.dtype)[None, :, None]
-        lut_fast = luts * fast_f
-        lut_fast = (pad_luts_even(lut_fast) if nibble
-                    else lut_fast).reshape(nq, -1)
-        _, cand_vals, cand_idx = ops.batched_crude_topk(
-            codes, lut_fast, topk, block_q=block_q, block_n=block_n,
-            interpret=interpret, want_crude=False, code_bits=code_bits)
-    return cand_idx, cand_vals, jnp.zeros(nq, dtype=jnp.float32)
+    env = {"codes": codes, "C": C, "fast": fast, "pred": None}
+    return _flat_crude_only_phase(qs, env, topk=topk, backend="pallas",
+                                  block_q=block_q, block_n=block_n,
+                                  interpret=interpret,
+                                  quantized=quantized,
+                                  code_bits=code_bits)
 
 
 def two_step_crude_search(queries, codes, C, structure, topk: int, *,
@@ -480,6 +467,60 @@ def two_step_crude_search(queries, codes, C, structure, topk: int, *,
     return SearchResult(idx, dist, kf, jnp.mean(pf))
 
 
+def two_step_phase_env(codes, C, structure, *, backend: str,
+                       code_bits: int, pred=None):
+    """The borrowed-operand environment the flat phase functions close
+    over nothing and read everything from: stored codes (packed into
+    the kernels, widened once for the jnp byte path — the same
+    ``codes_j`` rule as ``two_step_search``), codebooks, the ICQ
+    structure's fast mask and margin, and the optional filter
+    predicate."""
+    codes_j = (codes if (backend == "pallas" or code_bits == 4)
+               else codes.astype(jnp.int32))
+    return {"codes": codes_j, "C": C, "fast": structure.fast_mask,
+            "sigma": structure.sigma, "pred": pred}
+
+
+def two_step_phase_fns(*, topk: int, backend: str, block_q: int = 64,
+                       block_n: int = 512, interpret=None,
+                       quantized: bool = False, code_bits: int = 8,
+                       refine_cap: Optional[int] = None,
+                       crude_only: bool = False,
+                       has_filter: bool = False):
+    """The flat two-step engine as a ``(crude_fn, refine_fn)`` phase
+    pair over ``(qs | carry, env)`` — the contract
+    ``index/pipelined.py`` jits and overlaps.  ``crude_only`` drops the
+    refine stage (the degraded rung): refine_fn is None and crude_fn
+    returns final (idx, dist, pf) tiles directly."""
+    common = dict(topk=topk, backend=backend, block_q=block_q,
+                  block_n=block_n, interpret=interpret,
+                  quantized=quantized, code_bits=code_bits,
+                  has_filter=has_filter)
+    if crude_only:
+        return functools.partial(_flat_crude_only_phase, **common), None
+    crude = functools.partial(_flat_crude_phase, **common)
+    refine = functools.partial(_flat_refine_phase, refine_cap=refine_cap,
+                               **common)
+    return crude, refine
+
+
+def adc_phase_fns(*, topk: int, backend: str, block_q: int = 64,
+                  block_n: int = 512, interpret=None,
+                  quantized: bool = False, code_bits: int = 8,
+                  has_filter: bool = False):
+    """One-step ADC as a phase pair: the whole search is its crude
+    stage, so the refine slot is always None (the pipelined executor
+    still overlaps tile dispatch)."""
+    def crude_fn(qs, env):
+        ids, vals = _adc_block(qs, env, topk=topk, backend=backend,
+                               block_q=block_q, block_n=block_n,
+                               interpret=interpret, quantized=quantized,
+                               code_bits=code_bits,
+                               has_filter=has_filter)
+        return ids, vals, jnp.zeros(qs.shape[0], dtype=jnp.float32)
+    return crude_fn, None
+
+
 # -------------------------------------------------------------- indexes ----
 
 def _encode_new_rows(new_vectors, C, codes_dtype, *, icm_iters: int,
@@ -516,6 +557,8 @@ class FlatADC:
     query_chunk: Optional[int] = None
     lut_dtype: str = "f32"
     code_bits: int = 8
+    pipeline: str = "off"               # off | tiles | auto (DESIGN.md §13)
+    pipeline_tile: Optional[int] = None
 
     @classmethod
     def build(cls, codes, C, structure=None, **opts) -> "FlatADC":
@@ -523,8 +566,13 @@ class FlatADC:
 
     def search(self, queries, topk: Optional[int] = None, *,
                filter=None) -> SearchResult:
-        return adc_search(queries, self.codes, self.C,
-                          topk if topk is not None else self.topk,
+        k = topk if topk is not None else self.topk
+        if self.pipeline != "off":
+            from repro.index.pipelined import maybe_pipelined
+            res = maybe_pipelined(self, queries, k, filter=filter)
+            if res is not None:
+                return res
+        return adc_search(queries, self.codes, self.C, k,
                           backend=self.backend, block_q=self.block_q,
                           block_n=self.block_n, interpret=self.interpret,
                           query_chunk=self.query_chunk,
@@ -573,6 +621,8 @@ class TwoStep:
     refine_cap: Optional[int] = None
     lut_dtype: str = "f32"
     code_bits: int = 8
+    pipeline: str = "off"               # off | tiles | auto (DESIGN.md §13)
+    pipeline_tile: Optional[int] = None
 
     @classmethod
     def build(cls, codes, C, structure, **opts) -> "TwoStep":
@@ -580,8 +630,14 @@ class TwoStep:
 
     def search(self, queries, topk: Optional[int] = None, *,
                filter=None) -> SearchResult:
+        k = topk if topk is not None else self.topk
+        if self.pipeline != "off":
+            from repro.index.pipelined import maybe_pipelined
+            res = maybe_pipelined(self, queries, k, filter=filter)
+            if res is not None:
+                return res
         return two_step_search(queries, self.codes, self.C, self.structure,
-                               topk if topk is not None else self.topk,
+                               k,
                                backend=self.backend, block_q=self.block_q,
                                block_n=self.block_n, interpret=self.interpret,
                                query_chunk=self.query_chunk,
@@ -593,10 +649,18 @@ class TwoStep:
                      filter=None) -> SearchResult:
         """Crude-only floor (docs/robustness.md): the fast-subset crude
         ranking, bitwise-identical to the full path's internal eq. 2
-        bootstrap candidates on the same backend."""
+        bootstrap candidates on the same backend.  Under an active
+        pipeline this is the degraded pipeline — the refine stage is
+        dropped and crude tiles stream straight out."""
+        k = topk if topk is not None else self.topk
+        if self.pipeline != "off":
+            from repro.index.pipelined import maybe_pipelined
+            res = maybe_pipelined(self, queries, k, filter=filter,
+                                  crude_only=True)
+            if res is not None:
+                return res
         return two_step_crude_search(
-            queries, self.codes, self.C, self.structure,
-            topk if topk is not None else self.topk,
+            queries, self.codes, self.C, self.structure, k,
             backend=self.backend, block_q=self.block_q,
             block_n=self.block_n, interpret=self.interpret,
             query_chunk=self.query_chunk, lut_dtype=self.lut_dtype,

@@ -42,10 +42,13 @@ import numpy as np
 
 from repro.index.base import (SearchResult, _int_acc_dtype, build_lut,
                               chunked_over_queries, dequantize_acc,
-                              fastscan_kernel_operands, lut_sum,
-                              mask_filtered_ids, pad_luts_even,
-                              quantize_lut, quantized_kernel_operands,
+                              lut_sum, mask_filtered_ids, quantize_lut,
                               resolve_backend, resolve_lut_dtype)
+# The slab search paths are compositions of the stage objects
+# (DESIGN.md §13); stages lazily imports index modules inside method
+# bodies, so this top-level import is cycle-free.
+from repro.kernels.stages import (CrudeStage, RefineStage, ThresholdStage,
+                                  widen_codes as _widen_slab)
 
 
 class IVFIndex(NamedTuple):
@@ -204,38 +207,18 @@ def _slab_codes(cand_codes, k: int, code_bits: int):
     return cand_codes[:, :, k].astype(jnp.int32)
 
 
-def _widen_slab(cand_codes, K: int, code_bits: int):
-    """Widen a gathered candidate-slab to (nq, t, K) int32 codes (the
-    boundary where nibble-packed slabs unpack; 8-bit slabs just cast)."""
-    if code_bits == 4:
-        from repro.core.encode import unpack_nibbles
-        return unpack_nibbles(cand_codes, K)
-    return cand_codes.astype(jnp.int32)
-
-
 def _ivf_bootstrap_threshold(luts, crude, cand_codes, topk: int, sigma,
                              fast=None, code_bits: int = 8):
-    """Eq. 2 threshold over the candidate slab: bootstrap the neighbor
-    list from the crude top-k (slab may hold fewer than topk valid
-    candidates — invalid entries rank +inf and are excluded from the
-    far-element argmax).  Returns thr (nq,).
-
-    With ``fast`` given (the quantized-crude path) the candidates' full
-    distances are quantized-crude + exact-slow — the decomposition the
-    fused kernels use — so jnp and pallas bootstrap identical
-    thresholds under ``lut_dtype="int8"``."""
-    neg_c, cand = jax.lax.top_k(-crude, topk)            # (nq, topk)
-    cand_top = jnp.take_along_axis(
-        cand_codes, cand[:, :, None], axis=1)            # (nq, topk, K)
-    cand_top = _widen_slab(cand_top, luts.shape[1], code_bits)
-    if fast is None:
-        full_cand = lut_sum(luts, cand_top)
-    else:
-        full_cand = -neg_c + lut_sum(luts, cand_top, ~fast)
-    far = jnp.argmax(jnp.where(jnp.isfinite(-neg_c), full_cand, -jnp.inf),
-                     axis=1)
-    t = -jnp.take_along_axis(neg_c, far[:, None], axis=1)[:, 0]
-    return t + sigma
+    """Eq. 2 threshold over the candidate slab — kept as the historical
+    entry point; the arithmetic lives in
+    ``kernels.stages.ThresholdStage.from_dense_slab``.  With ``fast``
+    given (the quantized-crude path) the candidates' full distances are
+    quantized-crude + exact-slow — the decomposition the fused kernels
+    use — so jnp and pallas bootstrap identical thresholds under
+    ``lut_dtype="int8"``."""
+    stage = ThresholdStage(topk=topk, quantized=fast is not None,
+                           code_bits=code_bits)
+    return stage.from_dense_slab(luts, cand_codes, crude, fast, sigma)
 
 
 def _ivf_crude_scores(luts, cand_codes, valid, fast, *,
@@ -281,33 +264,73 @@ def _ivf_crude_scores(luts, cand_codes, valid, fast, *,
     return jnp.where(valid, crude, jnp.inf), slow
 
 
-def _ivf_block_jnp(qs, codes, C, fast, sigma, topk: int, centroids, lists,
-                   n_probe: int, refine_cap: Optional[int],
-                   list_codes=None, quantized: bool = False,
-                   code_bits: int = 8, pred=None):
-    """Batched IVF two-step over one query block.  Returns (ids
-    (nq,topk), dist (nq,topk), n_cand (nq,), n_pass (nq,))."""
-    luts = build_lut(qs, C)                              # (nq, K, m)
-    probes = coarse_probe(qs, centroids, n_probe)
-    cand_ids, valid, cand_codes = gather_candidates(probes, lists, codes,
-                                                    topk, list_codes)
+def _ivf_crude_phase(qs, env, *, topk: int, n_probe: int, backend: str,
+                     block_q: int = 4, block_n: int = 128, interpret=None,
+                     quantized: bool = False, code_bits: int = 8,
+                     refine_cap: Optional[int] = None,
+                     has_filter: bool = False):
+    """Crude half of the IVF two-step over one query tile: probe +
+    gather + ``CrudeStage.slab``.  Returns the inter-phase carry
+    ``(luts, crude, cand_vals, cand_pos, slow, cand_codes, safe,
+    valid)`` — unused slots are None per backend (jnp defers the crude
+    top-k to the bootstrap; pallas defers the slow sums to the fused
+    refine kernel).  The refine phase is the carry's last reader, so
+    the pipelined executor donates it (DESIGN.md §13)."""
+    luts = build_lut(qs, env["C"])                       # (nq, K, m)
+    probes = coarse_probe(qs, env["centroids"], n_probe)
+    cand_ids, valid, cand_codes = gather_candidates(
+        probes, env["lists"], env["codes"], topk, env["list_codes"])
     safe = jnp.where(valid, cand_ids, 0)
+    stage = CrudeStage(backend=backend, topk=topk, block_q=block_q,
+                       block_n=block_n, interpret=interpret,
+                       quantized=quantized, code_bits=code_bits)
+    if backend == "pallas":
+        out = stage.slab(cand_codes, cand_ids, valid, luts, env["fast"])
+        return (luts, out.crude, out.cand_vals, out.cand_idx, None,
+                cand_codes, safe, valid)
+    pred = env["pred"] if has_filter else None
     if pred is not None:
-        # filtered rows score +inf crude (below): they can't pass eq. 2,
-        # can't set the bootstrap threshold, and rank last
+        # filtered rows score +inf crude: they can't pass eq. 2, can't
+        # set the bootstrap threshold, and rank last
         valid = valid & pred[safe]
-    crude, slow = _ivf_crude_scores(luts, cand_codes, valid, fast,
-                                    quantized=quantized,
-                                    need_slow=refine_cap is None,
-                                    code_bits=code_bits)
-    thr = _ivf_bootstrap_threshold(luts, crude, cand_codes, topk, sigma,
-                                   fast if quantized else None,
-                                   code_bits=code_bits)
-    passed = crude < thr[:, None]                        # invalid -> inf -> F
+    out = stage.slab(cand_codes, cand_ids, valid, luts, env["fast"],
+                     need_slow=refine_cap is None)
+    return (luts, out.crude, None, None, out.slow, cand_codes, safe,
+            valid)
 
+
+def _ivf_refine_phase(carry, env, *, topk: int, backend: str,
+                      block_q: int = 4, block_n: int = 128, interpret=None,
+                      quantized: bool = False, code_bits: int = 8,
+                      refine_cap: Optional[int] = None,
+                      has_filter: bool = False):
+    """Threshold bootstrap + refine over the crude carry.  Returns (ids
+    (nq,topk), dist (nq,topk), n_cand (nq,), n_pass (nq,)).  The
+    optional jnp ``refine_cap`` compaction re-ranks only the ``cap``
+    best survivors by one full-table sum (the exact historical
+    arithmetic, inline — it is a carry consumer, not a stage)."""
+    luts, crude, cand_vals, cand_pos, slow, cand_codes, safe, valid = carry
+    fast, sigma = env["fast"], env["sigma"]
+    tstage = ThresholdStage(topk=topk, quantized=quantized,
+                            code_bits=code_bits)
+    rstage = RefineStage(backend=backend, topk=topk, block_q=block_q,
+                         block_n=block_n, interpret=interpret,
+                         code_bits=code_bits)
+    n_cand = jnp.sum(valid.astype(jnp.float32), axis=1)
+    if backend == "pallas":
+        thr = tstage.from_slab_candidates(luts, cand_codes, cand_vals,
+                                          cand_pos, fast, sigma)
+        ids, dist, passed = rstage.slab(cand_codes, luts, crude, thr,
+                                        fast, safe)
+        n_pass = jnp.sum(passed.astype(jnp.float32), axis=1)
+        return ids, dist, n_cand, n_pass
+    pred = env["pred"] if has_filter else None
+    thr = tstage.from_dense_slab(luts, cand_codes, crude,
+                                 fast if quantized else None, sigma)
+    passed = crude < thr[:, None]                        # invalid->inf->F
     if refine_cap is None:
-        ranked = jnp.where(passed, crude + slow, jnp.inf)
-        neg, pos = jax.lax.top_k(-ranked, topk)
+        ids, dist, _ = rstage.slab(cand_codes, luts, crude, thr, fast,
+                                   safe, slow=slow, pred=pred)
     else:
         # clamp into [topk, nc]: the slab is padded to >= topk columns
         cap = min(max(refine_cap, topk), crude.shape[1])
@@ -321,12 +344,29 @@ def _ivf_block_jnp(qs, codes, C, fast, sigma, topk: int, centroids, lists,
         ranked = jnp.where(alive, full_surv, jnp.inf)
         neg, cpos = jax.lax.top_k(-ranked, topk)
         pos = jnp.take_along_axis(surv, cpos, axis=1)
-    ids = jnp.take_along_axis(safe, pos, axis=1)
-    if pred is not None:
-        ids = mask_filtered_ids(ids, -neg)
-    n_cand = jnp.sum(valid.astype(jnp.float32), axis=1)
+        ids = jnp.take_along_axis(safe, pos, axis=1)
+        dist = -neg
+        if pred is not None:
+            ids = mask_filtered_ids(ids, dist)
     n_pass = jnp.sum(passed.astype(jnp.float32), axis=1)
-    return ids, -neg, n_cand, n_pass
+    return ids, dist, n_cand, n_pass
+
+
+def _ivf_block_jnp(qs, codes, C, fast, sigma, topk: int, centroids, lists,
+                   n_probe: int, refine_cap: Optional[int],
+                   list_codes=None, quantized: bool = False,
+                   code_bits: int = 8, pred=None):
+    """Batched IVF two-step over one query block — the sequential
+    composition of the crude and refine phases.  Returns (ids
+    (nq,topk), dist (nq,topk), n_cand (nq,), n_pass (nq,))."""
+    env = {"codes": codes, "C": C, "fast": fast, "sigma": sigma,
+           "centroids": centroids, "lists": lists,
+           "list_codes": list_codes, "pred": pred}
+    crude_fn, refine_fn = ivf_phase_fns(
+        topk=topk, n_probe=n_probe, backend="jnp", quantized=quantized,
+        code_bits=code_bits, refine_cap=refine_cap,
+        has_filter=pred is not None)
+    return refine_fn(crude_fn(qs, env), env)
 
 
 def _ivf_block_pallas(qs, codes, C, fast, sigma, topk: int, centroids,
@@ -339,55 +379,14 @@ def _ivf_block_pallas(qs, codes, C, fast, sigma, topk: int, centroids,
     merge); the tiny threshold bootstrap stays in jnp.  ``quantized``
     feeds phase 1 int8 tables (dequantized in-kernel); phase 2 keeps
     the exact f32 slow tables either way."""
-    from repro.kernels import ops
-    nq = qs.shape[0]
-    K, m = C.shape[0], C.shape[1]
-    luts = build_lut(qs, C)
-    probes = coarse_probe(qs, centroids, n_probe)
-    cand_ids, valid, cand_codes = gather_candidates(probes, lists, codes,
-                                                    topk, list_codes)
-    safe = jnp.where(valid, cand_ids, 0)
-    nibble = code_bits == 4
-    fast_f = fast.astype(luts.dtype)[None, :, None]
-    lut_slow = luts * (1.0 - fast_f)
-    lut_slow = (pad_luts_even(lut_slow) if nibble
-                else lut_slow).reshape(nq, -1)
-
-    if quantized:
-        q_flat, scale, offset = (fastscan_kernel_operands(luts, fast)
-                                 if nibble else
-                                 quantized_kernel_operands(luts, fast))
-        crude, cand_vals, cand_pos = ops.ivf_crude_topk(
-            cand_codes, cand_ids, q_flat, topk,
-            block_q=block_q, block_n=block_n, interpret=interpret,
-            lut_scale=scale, lut_offset=offset, code_bits=code_bits)
-    else:
-        lut_fast = luts * fast_f
-        lut_fast = (pad_luts_even(lut_fast) if nibble
-                    else lut_fast).reshape(nq, -1)
-        crude, cand_vals, cand_pos = ops.ivf_crude_topk(
-            cand_codes, cand_ids, lut_fast, topk, block_q=block_q,
-            block_n=block_n, interpret=interpret, code_bits=code_bits)
-    # threshold bootstrap on the (nq, topk) crude candidates — tiny, jnp
-    ok = jnp.isfinite(cand_vals)
-    pos_safe = jnp.where(ok, cand_pos, 0)
-    cand_top = jnp.take_along_axis(cand_codes, pos_safe[:, :, None], axis=1)
-    cand_top = _widen_slab(cand_top, K, code_bits)
-    full_cand = cand_vals + lut_sum(luts, cand_top, ~fast)
-    far = jnp.argmax(jnp.where(ok, full_cand, -jnp.inf), axis=1)
-    t = jnp.take_along_axis(cand_vals, far[:, None], axis=1)[:, 0]
-    thr = t + sigma
-
-    dist, pos = ops.ivf_refine_topk(
-        cand_codes, lut_slow, crude, thr, topk, block_q=block_q,
-        block_n=block_n, interpret=interpret, code_bits=code_bits)
-    # merged positions are always real slab columns (the slab is padded
-    # to >= topk columns); clip only guards the take_along_axis bounds
-    ids = jnp.take_along_axis(
-        safe, jnp.minimum(pos, safe.shape[1] - 1), axis=1)
-    n_cand = jnp.sum(valid.astype(jnp.float32), axis=1)
-    n_pass = jnp.sum((crude < thr[:, None]).astype(jnp.float32), axis=1)
-    return ids, dist, n_cand, n_pass
+    env = {"codes": codes, "C": C, "fast": fast, "sigma": sigma,
+           "centroids": centroids, "lists": lists,
+           "list_codes": list_codes, "pred": None}
+    crude_fn, refine_fn = ivf_phase_fns(
+        topk=topk, n_probe=n_probe, backend="pallas", block_q=block_q,
+        block_n=block_n, interpret=interpret, quantized=quantized,
+        code_bits=code_bits)
+    return refine_fn(crude_fn(qs, env), env)
 
 
 def ivf_ops_result(ids, dist, n_cand, n_pass, *, n: int, n_lists: int,
@@ -461,30 +460,56 @@ def ivf_two_step_search(queries, codes, C, structure, ivf: IVFIndex,
                           K=K, kf=kf)
 
 
-def _ivf_crude_block_jnp(qs, codes, C, fast, topk: int, centroids, lists,
-                         n_probe: int, list_codes=None,
-                         quantized: bool = False, code_bits: int = 8,
-                         pred=None):
-    """Crude-only IVF ranking over one query block: probe + gather +
-    the shared crude scoring + top-k, skipping eq. 2 and refinement.
-    The ranking is exactly the crude top-k the full jnp path bootstraps
-    its eq. 2 candidates from."""
-    luts = build_lut(qs, C)
-    probes = coarse_probe(qs, centroids, n_probe)
-    cand_ids, valid, cand_codes = gather_candidates(probes, lists, codes,
-                                                    topk, list_codes)
+def _ivf_crude_only_phase(qs, env, *, topk: int, n_probe: int,
+                          backend: str, block_q: int = 4,
+                          block_n: int = 128, interpret=None,
+                          quantized: bool = False, code_bits: int = 8,
+                          has_filter: bool = False):
+    """Single-phase crude-only IVF ranking (the degradation ladder's
+    floor): probe + gather + ``CrudeStage.slab`` + top-k, skipping
+    eq. 2 and refinement — structurally the full path with its refine
+    phase dropped, so the ranking is exactly the crude top-k the full
+    path bootstraps its eq. 2 candidates from (same backend)."""
+    luts = build_lut(qs, env["C"])
+    probes = coarse_probe(qs, env["centroids"], n_probe)
+    cand_ids, valid, cand_codes = gather_candidates(
+        probes, env["lists"], env["codes"], topk, env["list_codes"])
     safe = jnp.where(valid, cand_ids, 0)
+    stage = CrudeStage(backend=backend, topk=topk, block_q=block_q,
+                       block_n=block_n, interpret=interpret,
+                       quantized=quantized, code_bits=code_bits)
+    if backend == "pallas":
+        out = stage.slab(cand_codes, cand_ids, valid, luts, env["fast"])
+        pos_safe = jnp.where(jnp.isfinite(out.cand_vals), out.cand_idx, 0)
+        ids = jnp.take_along_axis(safe, pos_safe, axis=1)
+        n_cand = jnp.sum(valid.astype(jnp.float32), axis=1)
+        return ids, out.cand_vals, n_cand, jnp.zeros_like(n_cand)
+    pred = env["pred"] if has_filter else None
     if pred is not None:
         valid = valid & pred[safe]
-    crude, _ = _ivf_crude_scores(luts, cand_codes, valid, fast,
-                                 quantized=quantized, need_slow=False,
-                                 code_bits=code_bits)
-    neg_c, pos = jax.lax.top_k(-crude, topk)
+    out = stage.slab(cand_codes, cand_ids, valid, luts, env["fast"],
+                     need_slow=False)
+    neg_c, pos = jax.lax.top_k(-out.crude, topk)
     ids = jnp.take_along_axis(safe, pos, axis=1)
     if pred is not None:
         ids = mask_filtered_ids(ids, -neg_c)
     n_cand = jnp.sum(valid.astype(jnp.float32), axis=1)
     return ids, -neg_c, n_cand, jnp.zeros_like(n_cand)
+
+
+def _ivf_crude_block_jnp(qs, codes, C, fast, topk: int, centroids, lists,
+                         n_probe: int, list_codes=None,
+                         quantized: bool = False, code_bits: int = 8,
+                         pred=None):
+    """Crude-only IVF ranking over one query block (jnp)."""
+    env = {"codes": codes, "C": C, "fast": fast, "sigma": None,
+           "centroids": centroids, "lists": lists,
+           "list_codes": list_codes, "pred": pred}
+    crude_fn, _ = ivf_phase_fns(
+        topk=topk, n_probe=n_probe, backend="jnp", quantized=quantized,
+        code_bits=code_bits, crude_only=True,
+        has_filter=pred is not None)
+    return crude_fn(qs, env)
 
 
 def _ivf_crude_block_pallas(qs, codes, C, fast, topk: int, centroids,
@@ -495,34 +520,49 @@ def _ivf_crude_block_pallas(qs, codes, C, fast, topk: int, centroids,
     running top-k over the slab *is* the crude ranking; phase 2 is
     skipped.  ``code_bits=4`` streams the nibble-packed slab through the
     fast-scan variant."""
-    from repro.kernels import ops
-    nq = qs.shape[0]
-    nibble = code_bits == 4
-    luts = build_lut(qs, C)
-    probes = coarse_probe(qs, centroids, n_probe)
-    cand_ids, valid, cand_codes = gather_candidates(probes, lists, codes,
-                                                    topk, list_codes)
-    safe = jnp.where(valid, cand_ids, 0)
-    if quantized:
-        q_flat, scale, offset = (fastscan_kernel_operands(luts, fast)
-                                 if nibble else
-                                 quantized_kernel_operands(luts, fast))
-        _, cand_vals, cand_pos = ops.ivf_crude_topk(
-            cand_codes, cand_ids, q_flat, topk,
-            block_q=block_q, block_n=block_n, interpret=interpret,
-            lut_scale=scale, lut_offset=offset, code_bits=code_bits)
-    else:
-        fast_f = fast.astype(luts.dtype)[None, :, None]
-        lut_fast = luts * fast_f
-        lut_fast = (pad_luts_even(lut_fast) if nibble
-                    else lut_fast).reshape(nq, -1)
-        _, cand_vals, cand_pos = ops.ivf_crude_topk(
-            cand_codes, cand_ids, lut_fast, topk, block_q=block_q,
-            block_n=block_n, interpret=interpret, code_bits=code_bits)
-    pos_safe = jnp.where(jnp.isfinite(cand_vals), cand_pos, 0)
-    ids = jnp.take_along_axis(safe, pos_safe, axis=1)
-    n_cand = jnp.sum(valid.astype(jnp.float32), axis=1)
-    return ids, cand_vals, n_cand, jnp.zeros_like(n_cand)
+    env = {"codes": codes, "C": C, "fast": fast, "sigma": None,
+           "centroids": centroids, "lists": lists,
+           "list_codes": list_codes, "pred": None}
+    crude_fn, _ = ivf_phase_fns(
+        topk=topk, n_probe=n_probe, backend="pallas", block_q=block_q,
+        block_n=block_n, interpret=interpret, quantized=quantized,
+        code_bits=code_bits, crude_only=True)
+    return crude_fn(qs, env)
+
+
+# ------------------------------------------------------ phase factories ----
+
+def ivf_phase_env(codes, C, structure, ivf: IVFIndex, *, list_codes=None,
+                  pred=None):
+    """The borrowed-operand environment shared by every IVF phase — the
+    arrays a ``PipelinedSearch`` executor may alias across query tiles
+    (the phases only read them)."""
+    return {"codes": codes, "C": C, "fast": structure.fast_mask,
+            "sigma": structure.sigma, "centroids": ivf.centroids,
+            "lists": ivf.lists, "list_codes": list_codes, "pred": pred}
+
+
+def ivf_phase_fns(*, topk: int, n_probe: int, backend: str,
+                  block_q: int = 4, block_n: int = 128, interpret=None,
+                  quantized: bool = False, code_bits: int = 8,
+                  refine_cap: Optional[int] = None,
+                  crude_only: bool = False, has_filter: bool = False):
+    """The IVF search split at the crude/refine boundary: returns
+    ``(crude_fn, refine_fn)`` taking ``(qs|carry, env)`` — the phase
+    pair both the sequential blocks above and the pipelined executor
+    compose.  ``crude_only`` returns the single-phase floor as
+    ``(crude_fn, None)``."""
+    common = dict(topk=topk, backend=backend, block_q=block_q,
+                  block_n=block_n, interpret=interpret,
+                  quantized=quantized, code_bits=code_bits,
+                  has_filter=has_filter)
+    if crude_only:
+        return (functools.partial(_ivf_crude_only_phase, n_probe=n_probe,
+                                  **common), None)
+    return (functools.partial(_ivf_crude_phase, n_probe=n_probe,
+                              refine_cap=refine_cap, **common),
+            functools.partial(_ivf_refine_phase, refine_cap=refine_cap,
+                              **common))
 
 
 def ivf_crude_search(queries, codes, C, structure, ivf: IVFIndex,
@@ -594,6 +634,8 @@ class IVFTwoStep:
     lut_dtype: str = "f32"
     code_bits: int = 8
     list_codes: Optional[jnp.ndarray] = None     # (n_lists, max_len, K)
+    pipeline: str = "off"                        # "off" | "tiles" | "auto"
+    pipeline_tile: Optional[int] = None
 
     @classmethod
     def build(cls, codes, C, structure, *, emb_db, key=None,
@@ -609,9 +651,15 @@ class IVFTwoStep:
 
     def search(self, queries, topk: Optional[int] = None, *,
                filter=None) -> SearchResult:
+        k = topk if topk is not None else self.topk
+        if self.pipeline != "off":
+            from repro.index.pipelined import maybe_pipelined
+            res = maybe_pipelined(self, queries, k, filter=filter)
+            if res is not None:
+                return res
         return ivf_two_step_search(
             queries, self.codes, self.C, self.structure, self.ivf,
-            topk if topk is not None else self.topk, self.n_probe,
+            k, self.n_probe,
             backend=self.backend, block_q=self.block_q,
             block_n=self.block_n, interpret=self.interpret,
             query_chunk=self.query_chunk, refine_cap=self.refine_cap,
@@ -626,9 +674,15 @@ class IVFTwoStep:
         internal crude top-k on the same backend.  ``n_probe`` lets the
         ladder's "probes" rung reuse this entry with a reduced probe
         count."""
+        k = topk if topk is not None else self.topk
+        if self.pipeline != "off":
+            from repro.index.pipelined import maybe_pipelined
+            res = maybe_pipelined(self, queries, k, filter=filter,
+                                  crude_only=True, n_probe=n_probe)
+            if res is not None:
+                return res
         return ivf_crude_search(
-            queries, self.codes, self.C, self.structure, self.ivf,
-            topk if topk is not None else self.topk,
+            queries, self.codes, self.C, self.structure, self.ivf, k,
             n_probe if n_probe is not None else self.n_probe,
             backend=self.backend, block_q=self.block_q,
             block_n=self.block_n, interpret=self.interpret,

@@ -1,0 +1,297 @@
+"""PipelinedSearch: the overlapped crude/refine executor (DESIGN.md §13).
+
+The two-step engines are split at the crude/refine boundary into phase
+pairs (``flat.two_step_phase_fns`` / ``ivf.ivf_phase_fns``) over
+``(qs | carry, env)``.  This module schedules those phases over query
+tiles so the crude pass of tile t+1 overlaps the threshold + refine of
+tile t:
+
+    crude(0) | refine(0)   refine(1)   refine(2) ...
+             | crude(1)    crude(2)    crude(3)
+
+Both phases are jitted once per static configuration; the refine jit
+donates the inter-stage carry (``donate_argnums=(0,)``) — the refine
+phase is the carry's last reader (the stage contract in
+``kernels/stages.py``), so XLA recycles the dense (tile, n) crude
+buffer across tiles instead of allocating a fresh one per tile.  The
+borrowed index state (codes, codebooks, masks, inverted lists) is
+closed over by both jits as trace constants and aliased across every
+tile unchanged.
+
+The schedule relies only on dispatch-ahead: ``crude_jit(t+1)`` is
+dispatched *before* ``refine_jit(t)``'s result is consumed, so the two
+computations overlap wherever the runtime executes asynchronously (TPU
+always; CPU via the async dispatch queue).  Per-tile working sets are
+also much smaller than whole-batch ones — the (tile, n) crude slab of a
+refine-heavy point fits in cache where the (nq, n) one does not.
+
+Results are bitwise-identical to the *jitted* sequential engines (what
+``AnnEngine`` actually serves): every per-query row of every phase
+output depends only on that query's row (eq. 2 thresholds bootstrap
+from the query's own crude top-k), so tiling the query axis is
+structurally the same computation as ``base.chunked_over_queries``, and
+the aggregate accounting (pass-rate means, IVF candidate counts)
+reduces the identical vectors.  To make that identity *bitwise*, the
+phase jits mirror the engine's program structure exactly: index state
+(codes, codebooks, masks) is closed over as jit constants — exactly as
+``jax.jit(index.search)`` captures it — and only the per-call operands
+(the query tile, the filter predicate) are traced arguments.  Passing
+the index state as operands instead measurably changes XLA's lowering
+of the LUT build (constants fold differently than parameters) and
+drifts distances by ~1 ulp on some shapes.  The *eager* sequential
+path can likewise differ from any jitted program by reassociation
+ulps (eager dispatches one fused kernel per primitive); rankings
+agree, and tests/test_stages.py pins the jit-vs-jit comparison
+bitwise while holding the eager comparison to ids + 1-ulp distances.
+
+``maybe_pipelined`` is the single routing entry the index dataclasses
+call when their ``pipeline`` field is "tiles" or "auto": "tiles" always
+engages (even a single tile — serving's engine wrappers rely on the
+executor owning the jit boundary), "auto" declines batches of one tile
+or less (returning None, falling back to the sequential path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import warnings
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+# Donation is an aliasing hint: on TPU the refine phase recycles its
+# donated (tile, n) carry for same-shaped outputs/temporaries; CPU XLA
+# declines (the refine outputs are (tile, topk)) and warns once per
+# trace — expected and not actionable, so silence exactly that message.
+warnings.filterwarnings("ignore",
+                        message="Some donated buffers were not usable")
+
+from repro.index.base import SearchResult
+from repro.kernels.stages import pad_to
+
+PIPELINE_MODES = ("off", "tiles", "auto")
+_DEFAULT_TILE_JNP = 16
+
+
+def resolve_pipeline(value: str) -> str:
+    if value not in PIPELINE_MODES:
+        raise ValueError(f"unknown pipeline mode {value!r}; expected one "
+                         f"of {PIPELINE_MODES}")
+    return value
+
+
+def resolve_tile(pipeline_tile: Optional[int], backend: str,
+                 block_q: int) -> int:
+    """The query-tile size: explicit ``pipeline_tile`` wins; otherwise
+    one kernel query-block per tile on pallas (the kernel grid already
+    tiles queries at block_q) and a small cache-friendly default on
+    jnp."""
+    if pipeline_tile is not None:
+        tile = int(pipeline_tile)
+        if tile < 1:
+            raise ValueError(f"pipeline_tile must be a positive int, "
+                             f"got {pipeline_tile!r}")
+        return tile
+    return block_q if backend == "pallas" else _DEFAULT_TILE_JNP
+
+
+def _phase_fns(kind: str, crude_only: bool, topk: int, backend: str,
+               block_q: int, block_n: int, interpret, quantized: bool,
+               code_bits: int, refine_cap: Optional[int],
+               has_filter: bool, n_probe: Optional[int]):
+    """The raw (crude, refine) phase pair for one static engine
+    configuration (refine is None for the single-phase engines)."""
+    common = dict(topk=topk, backend=backend, block_q=block_q,
+                  block_n=block_n, interpret=interpret,
+                  quantized=quantized, code_bits=code_bits,
+                  has_filter=has_filter)
+    if kind == "ivf":
+        from repro.index.ivf import ivf_phase_fns
+        return ivf_phase_fns(n_probe=n_probe, refine_cap=refine_cap,
+                             crude_only=crude_only, **common)
+    if kind == "adc":
+        from repro.index.flat import adc_phase_fns
+        return adc_phase_fns(**common)
+    from repro.index.flat import two_step_phase_fns
+    return two_step_phase_fns(refine_cap=refine_cap,
+                              crude_only=crude_only, **common)
+
+
+def _bind_jits(crude_fn, refine_fn, env: dict, has_filter: bool):
+    """Close the phase fns over the borrowed index state and jit them.
+
+    The env arrays become jit *constants* — the same capture structure
+    as ``jax.jit(index.search)``, which is what keeps the pipelined
+    programs bitwise-equal to the jitted sequential engines (module
+    docstring).  Only the query tile / carry and (when filtering) the
+    predicate are traced operands; the refine jit donates the carry it
+    is the last reader of."""
+    if has_filter:
+        crude_jit = jax.jit(
+            lambda qs, pred: crude_fn(qs, dict(env, pred=pred)))
+        refine_jit = (None if refine_fn is None else jax.jit(
+            lambda carry, pred: refine_fn(carry, dict(env, pred=pred)),
+            donate_argnums=(0,)))
+    else:
+        crude_jit = jax.jit(lambda qs: crude_fn(qs, env))
+        refine_jit = (None if refine_fn is None else jax.jit(
+            lambda carry: refine_fn(carry, env), donate_argnums=(0,)))
+    return crude_jit, refine_jit
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelinedSearch:
+    """A bound pipelined-search plan: the jitted phase pair (index
+    state closed over), the tile size and the finalizer that folds
+    concatenated per-query outputs into a SearchResult.  ``pred`` (the
+    optional filter predicate) is the one per-call operand besides the
+    query tiles — pass it iff the plan was bound with a filter."""
+    crude_jit: Callable
+    refine_jit: Optional[Callable]
+    tile: int
+    finalize: Callable
+
+    def __call__(self, queries, pred=None) -> SearchResult:
+        args = () if pred is None else (pred,)
+        nq = queries.shape[0]
+        n_tiles = -(-nq // self.tile)
+        qp = pad_to(queries, n_tiles * self.tile)
+        tiles = [qp[t * self.tile:(t + 1) * self.tile]
+                 for t in range(n_tiles)]
+        outs = []
+        if self.refine_jit is None:
+            # single-phase pipelines (ADC / the degraded crude rung):
+            # nothing to overlap against, but tile dispatch still
+            # streams ahead of result consumption
+            for tq in tiles:
+                outs.append(self.crude_jit(tq, *args))
+        else:
+            carry = self.crude_jit(tiles[0], *args)
+            for t in range(n_tiles):
+                # dispatch crude(t+1) before touching refine(t): the
+                # async runtime overlaps the two, and refine donates
+                # the carry it is the last reader of
+                nxt = (self.crude_jit(tiles[t + 1], *args)
+                       if t + 1 < n_tiles else None)
+                outs.append(self.refine_jit(carry, *args))
+                carry = nxt
+        cat = tuple(jnp.concatenate(parts, axis=0)[:nq]
+                    for parts in zip(*outs))
+        return self.finalize(*cat)
+
+
+def _plan(index, topk: int, *, crude_only: bool, has_filter: bool,
+          n_probe: Optional[int]) -> PipelinedSearch:
+    """Bind an index's configuration to a PipelinedSearch plan."""
+    from repro.index import flat, ivf
+    from repro.index.base import resolve_backend, resolve_lut_dtype
+
+    be = resolve_backend(index.backend)
+    quantized = resolve_lut_dtype(index.lut_dtype) == "int8"
+    code_bits = flat._check_fastscan_geometry(index.code_bits,
+                                              index.C.shape[1])
+    K = index.C.shape[0]
+    tile = resolve_tile(index.pipeline_tile, be, index.block_q)
+    refine_cap = getattr(index, "refine_cap", None)
+    if be == "pallas" and refine_cap is not None:
+        raise ValueError("refine_cap compaction requires backend='jnp'"
+                         " (the fused kernels bound phase-2 work with"
+                         " the in-kernel top-k merge instead)")
+
+    if isinstance(index, ivf.IVFTwoStep):
+        np_ = n_probe if n_probe is not None else index.n_probe
+        n_lists = index.ivf.lists.shape[0]
+        n = index.codes.shape[0]
+        if not 1 <= np_ <= n_lists:
+            raise ValueError(f"n_probe={np_} outside [1, {n_lists}]")
+        kf = jnp.sum(index.structure.fast_mask.astype(jnp.float32))
+        env = ivf.ivf_phase_env(index.codes, index.C, index.structure,
+                                index.ivf, list_codes=index.list_codes)
+        cf, rf = _phase_fns("ivf", crude_only, topk, be, index.block_q,
+                            index.block_n, index.interpret, quantized,
+                            code_bits, refine_cap, has_filter, np_)
+        cj, rj = _bind_jits(cf, rf, env, has_filter)
+        finalize = functools.partial(ivf.ivf_ops_result, n=n,
+                                     n_lists=n_lists, K=K, kf=kf)
+        return PipelinedSearch(cj, rj, tile, finalize)
+
+    if isinstance(index, flat.FlatADC):
+        codes = (index.codes if (be == "pallas" or code_bits == 4)
+                 else index.codes.astype(jnp.int32))
+        env = {"codes": codes, "C": index.C, "pred": None}
+        cf, rf = _phase_fns("adc", True, topk, be, index.block_q,
+                            index.block_n, index.interpret, quantized,
+                            code_bits, None, has_filter, None)
+        cj, rj = _bind_jits(cf, rf, env, has_filter)
+
+        def finalize(idx, vals, _pf):
+            return SearchResult(idx, vals, jnp.asarray(float(K)),
+                                jnp.asarray(1.0))
+        return PipelinedSearch(cj, rj, tile, finalize)
+
+    # flat TwoStep
+    kf = jnp.sum(index.structure.fast_mask.astype(jnp.float32))
+    if refine_cap is not None:
+        refine_cap = min(max(refine_cap, topk), index.codes.shape[0])
+    env = flat.two_step_phase_env(index.codes, index.C, index.structure,
+                                  backend=be, code_bits=code_bits)
+    cf, rf = _phase_fns("two_step", crude_only, topk, be, index.block_q,
+                        index.block_n, index.interpret, quantized,
+                        code_bits, refine_cap, has_filter, None)
+    cj, rj = _bind_jits(cf, rf, env, has_filter)
+
+    if crude_only:
+        def finalize(idx, dist, pf):
+            return SearchResult(idx, dist, kf, jnp.mean(pf))
+    else:
+        def finalize(idx, dist, pf):
+            pass_rate = jnp.mean(pf)
+            avg_ops = kf + pass_rate * (K - kf)
+            return SearchResult(idx, dist, avg_ops, pass_rate)
+    return PipelinedSearch(cj, rj, tile, finalize)
+
+
+def plan_for(index, topk: int, *, crude_only: bool = False,
+             has_filter: bool = False,
+             n_probe: Optional[int] = None) -> PipelinedSearch:
+    """The per-index plan cache.  Plans close over the index's device
+    arrays (``_bind_jits``), so they are cached *on the instance* —
+    ``dataclasses.replace`` / ``Index.add`` return fresh objects and
+    therefore fresh plans, which keeps a cached closure from ever
+    serving stale state.  Repeated searches on one index reuse the
+    traced phase pair (jit's signature cache handles tile shapes)."""
+    key = (topk, crude_only, has_filter, n_probe)
+    cache = index.__dict__.get("_pipeline_plans")
+    if cache is None:
+        cache = {}
+        object.__setattr__(index, "_pipeline_plans", cache)
+    plan = cache.get(key)
+    if plan is None:
+        plan = _plan(index, topk, crude_only=crude_only,
+                     has_filter=has_filter, n_probe=n_probe)
+        cache[key] = plan
+    return plan
+
+
+def maybe_pipelined(index, queries, topk: int, *, filter=None,
+                    crude_only: bool = False,
+                    n_probe: Optional[int] = None
+                    ) -> Optional[SearchResult]:
+    """Route a search through the pipelined executor if the index's
+    ``pipeline`` mode engages; returns None to fall back to the
+    sequential path ("auto" with a batch of one tile or less)."""
+    from repro.index import flat
+    from repro.index.base import resolve_backend
+
+    mode = resolve_pipeline(index.pipeline)
+    if mode == "off":
+        return None
+    be = resolve_backend(index.backend)
+    tile = resolve_tile(index.pipeline_tile, be, index.block_q)
+    if mode == "auto" and queries.shape[0] <= tile:
+        return None
+    pred = flat._check_filter(filter, index.codes.shape[0], be)
+    plan = plan_for(index, topk, crude_only=crude_only,
+                    has_filter=pred is not None, n_probe=n_probe)
+    return plan(queries, pred)

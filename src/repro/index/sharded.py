@@ -17,7 +17,11 @@ threshold — reproduces the single-device ranking exactly.
 The shard_map bodies are jnp-only: the ``backend`` / ``interpret`` /
 tile options of the source index apply to its single-device engines and
 are intentionally not consulted here (fused-kernel sharded serving is a
-TPU bring-up item; the dispatch makes it a local change).
+TPU bring-up item; the dispatch makes it a local change).  Likewise
+``pipeline`` (DESIGN.md §13): the sharded clones always serve
+``pipeline="off"`` — the shard_map body is one fused SPMD program per
+batch, so there is no host-level crude/refine boundary to overlap;
+sharding a pipelined index yields a working non-pipelined clone.
 
 ``lut_dtype`` *is* honored: with "int8" each shard runs its crude pass
 on the quantized tables (DESIGN.md §8).  Calibration is query-global by
@@ -139,6 +143,9 @@ class _DeadShardMixin:
     means re-sharding the source index."""
 
     dead_shards: frozenset = frozenset()
+    # sharded clones never pipeline (module docstring): the engine
+    # wrappers probe this field to decide who owns the jit boundary
+    pipeline: str = "off"
 
     def mark_shard_dead(self, *shards: int):
         D = _data_size(self.mesh)

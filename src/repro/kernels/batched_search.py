@@ -79,55 +79,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.adc import flat_onehot
-
-_I32_MAX = jnp.iinfo(jnp.int32).max
-
-
-def _unpack_nibble_tile(packed):
-    """In-VMEM shift/mask unpack of a nibble-packed codes tile
-    (DESIGN.md §12): (..., Kp) int32 bytes -> (..., 2*Kp) int32 codes,
-    byte kp -> (low nibble, high nibble) = codebooks (2kp, 2kp+1).  The
-    sentinel column of odd K stays in place — its LUT column is all
-    zero (``index.base.pad_luts_even``), so it adds nothing to any
-    dot."""
-    lo = packed & 0xF
-    hi = (packed >> 4) & 0xF
-    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
-
-
-def _resolve_kernel_code_bits(code_bits: int, Kc: int, Km: int):
-    """Shared wrapper-side geometry: the stored code columns ``Kc``
-    widen to ``K = 2 * Kc`` codebook columns under the nibble format
-    (``code_bits=4``); the flattened LUT width ``Km`` must then be an
-    even-K multiple (sentinel codebook included)."""
-    if code_bits not in (8, 4):
-        raise ValueError(f"unknown code_bits {code_bits!r}; "
-                         f"expected one of (8, 4)")
-    K = 2 * Kc if code_bits == 4 else Kc
-    if Km % K:
-        raise ValueError(
-            f"lut_flat width {Km} is not a multiple of K={K}"
-            + (" (pad odd-K tables with index.base.pad_luts_even)"
-               if code_bits == 4 else ""))
-    return K, Km // K
-
-
-def _merge_topk(vals_ref, idx_ref, tile_vals, tile_idx, topk: int):
-    """Merge a (blk_q, blk_n) tile into the running (blk_q, topk) lists.
-
-    Two-key ascending sort on (distance, global index) == global
-    ``top_k(-dist)`` ordering with its lowest-index tie-break.
-    """
-    merged_v = jnp.concatenate([vals_ref[...], tile_vals], axis=1)
-    merged_i = jnp.concatenate([idx_ref[...], tile_idx], axis=1)
-    sv, si = jax.lax.sort((merged_v, merged_i), dimension=1, num_keys=2)
-    vals_ref[...] = sv[:, :topk]
-    idx_ref[...] = si[:, :topk]
-
-
-def _init_topk(vals_ref, idx_ref):
-    vals_ref[...] = jnp.full(vals_ref.shape, jnp.inf, jnp.float32)
-    idx_ref[...] = jnp.full(idx_ref.shape, _I32_MAX, jnp.int32)
+# The tile helpers shared by every fused kernel live in the stage
+# module (DESIGN.md §13) — one definition serves batched_search,
+# icm_encode, ops, and the stage objects.
+from repro.kernels.stages import (check_quantized_args as
+                                  _check_quantized_args,
+                                  init_topk as _init_topk,
+                                  merge_topk as _merge_topk,
+                                  pad_to as _pad_to,
+                                  resolve_kernel_code_bits as
+                                  _resolve_kernel_code_bits,
+                                  unpack_nibble_tile as
+                                  _unpack_nibble_tile)
 
 
 def _crude_topk_kernel(codes_ref, lut_ref, *refs,
@@ -197,30 +160,6 @@ def _refine_topk_kernel(codes_ref, lut_ref, crude_ref, thr_ref,
         _init_topk(vals_ref, idx_ref)
 
     _merge_topk(vals_ref, idx_ref, ranked, gidx, topk)
-
-
-def _pad_to(x, rows):
-    """The shared padding contract of every wrapper below: zero-pad the
-    *leading* axis of ``x`` up to ``rows`` (a whole number of grid
-    tiles).  Pad rows are real kernel inputs — each kernel masks the
-    pad columns/rows it produces to +inf (or carries validity ids) so
-    padding never reaches a returned value; callers always slice
-    outputs back to true sizes before returning."""
-    return x if x.shape[0] == rows else jnp.pad(
-        x, [(0, rows - x.shape[0])] + [(0, 0)] * (x.ndim - 1))
-
-
-def _check_quantized_args(lut_flat, lut_scale, lut_offset):
-    """int8 LUTs need the per-query affine columns; f32 forbids them."""
-    if lut_flat.dtype == jnp.int8:
-        if lut_scale is None or lut_offset is None:
-            raise ValueError("int8 lut_flat requires lut_scale and "
-                             "lut_offset (see index.base.quantize_lut)")
-        return True
-    if lut_scale is not None or lut_offset is not None:
-        raise ValueError("lut_scale/lut_offset are only valid with an "
-                         "int8 lut_flat")
-    return False
 
 
 @functools.partial(jax.jit,

@@ -44,6 +44,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.stages import pad_to
+
 
 def _onehot(idx, m: int, dtype):
     """(blk_n,) int32 -> (blk_n, m) one-hot; matmul-gather helper."""
@@ -92,9 +94,8 @@ def icm_encode_pallas(x, init_codes, C, *, iters: int = 3,
     n, d = x.shape
     K, m, _ = C.shape
     n_pad = pl.cdiv(n, block_n) * block_n
-    pad = [(0, n_pad - n), (0, 0)]
-    xp = jnp.pad(x.astype(jnp.float32), pad)
-    cp = jnp.pad(init_codes.astype(jnp.int32), pad)
+    xp = pad_to(x.astype(jnp.float32), n_pad)
+    cp = pad_to(init_codes.astype(jnp.int32), n_pad)
     sq = cb.codeword_sq_norms(C).astype(jnp.float32)
     out = pl.pallas_call(
         functools.partial(_icm_kernel, K=K, m=m, iters=iters),

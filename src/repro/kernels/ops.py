@@ -20,6 +20,13 @@ from repro.kernels.icm_encode import icm_encode_pallas
 from repro.kernels.two_step import two_step_pallas
 from repro.kernels.kmeans import kmeans_assign_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+# Shared tile helpers (DESIGN.md §13) re-exported at the ops surface so
+# kernel callers get one canonical definition of the padding/merge
+# contract instead of re-implementing it per wrapper.
+from repro.kernels.stages import (check_quantized_args, init_topk,  # noqa: F401
+                                  merge_topk, pad_to,
+                                  resolve_kernel_code_bits,
+                                  unpack_nibble_tile)
 
 
 def _default_interpret() -> bool:

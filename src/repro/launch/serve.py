@@ -111,12 +111,15 @@ def serve_ann(cfg, n: int, nq: int, *, batches: int = 3, shards: int = 1,
                               query_chunk=cfg.serve.query_chunk,
                               lut_dtype=cfg.serve.lut_dtype,
                               code_bits=cfg.index.code_bits,
+                              pipeline=cfg.serve.pipeline,
+                              pipeline_tile=cfg.serve.pipeline_tile,
                               key=jax.random.fold_in(key, 1))
     queries, _ = _serve_batches(
         engine, nq, d, batches,
         f"ann: index={cfg.index.kind} n={n} nq={nq} topk={cfg.serve.topk} "
         f"backend={cfg.serve.backend} lut={cfg.serve.lut_dtype} "
-        f"bits={cfg.index.code_bits} shards={shards}")
+        f"bits={cfg.index.code_bits} pipeline={cfg.serve.pipeline} "
+        f"shards={shards}")
 
     if n_add > 0:
         from repro.core import codebooks as cb
@@ -215,6 +218,15 @@ def main():
                     help="override index.code_bits (4 = nibble-packed "
                          "fast-scan codes, DESIGN.md §12; needs "
                          "codebook_size <= 16, e.g. --ann-m 16)")
+    ap.add_argument("--pipeline", default=None,
+                    choices=["off", "tiles", "auto"],
+                    help="override serve.pipeline (tiles = overlap the "
+                         "crude pass of one query tile with the refine "
+                         "of the previous, DESIGN.md §13)")
+    ap.add_argument("--pipeline-tile", type=int, default=None,
+                    help="override serve.pipeline_tile (queries per "
+                         "pipeline tile; default block_q on pallas, "
+                         "16 on jnp)")
     ap.add_argument("--ann-m", type=int, default=None,
                     help="override train.codebook_size (the synthetic "
                          "index's codewords per codebook)")
@@ -230,6 +242,8 @@ def main():
         "index.n_probe": args.ann_probe,
         "serve.lut_dtype": args.lut_dtype,
         "index.code_bits": args.code_bits,
+        "serve.pipeline": args.pipeline,
+        "serve.pipeline_tile": args.pipeline_tile,
         "train.codebook_size": args.ann_m,
     }.items() if v is not None}
 

@@ -1,0 +1,305 @@
+"""Stage protocol + overlapped crude/refine pipeline (DESIGN.md §13).
+
+Two parity layers:
+
+* **Composed stages == monolithic engines** — the ``(crude_fn,
+  refine_fn)`` phase pairs (``flat.two_step_phase_fns`` /
+  ``ivf.ivf_phase_fns``) composed by hand reproduce the fused search
+  entry points *bitwise*, over random geometries (non-divisible tiles,
+  odd-K nibble codes, ``K_fast`` at both edges), both backends, all
+  three index kinds, ``code_bits`` in {8, 4} and ``lut_dtype`` in
+  {f32, int8}.
+
+* **Pipelined == jitted sequential** — the tile executor
+  (``index/pipelined.py``) returns bitwise-identical ids + distances
+  to ``jax.jit(index.search)`` — the exact program ``AnnEngine``
+  serves.  The *eager* sequential path may differ from any jitted
+  program by reassociation ulps on some shapes (XLA folds closed-over
+  constants differently than eager dispatch), so the eager comparison
+  pins ids bitwise and distances to f32 tolerance; see the
+  ``index/pipelined.py`` module docstring.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codebooks as cb
+from repro.core import icq as icq_mod
+from repro.core.encode import pack_nibbles
+from repro.index import flat as flat_mod
+from repro.index import ivf as ivf_mod
+from repro.index import make_index, two_step_search
+from repro.index.pipelined import (PIPELINE_MODES, maybe_pipelined,
+                                   plan_for, resolve_pipeline,
+                                   resolve_tile)
+
+KINDS = ("flat", "two-step", "ivf")
+
+
+def _problem(key, n, nq, K=6, m=16, kf=3, d=16, sigma=0.6):
+    """Random packed problem (codebook_size <= 16 so the same codes
+    serve both code_bits layouts)."""
+    C = jax.random.normal(key, (K, m, d)) * 0.3
+    codes = jax.random.randint(jax.random.fold_in(key, 1), (n, K), 0,
+                               m).astype(jnp.uint8)
+    fast = jnp.zeros((K,), bool).at[:kf].set(True)
+    st = icq_mod.ICQStructure(xi=jnp.ones((d,), bool), fast_mask=fast,
+                              sigma=jnp.asarray(sigma))
+    q = jax.random.normal(jax.random.fold_in(key, 2), (nq, d))
+    return q, codes, C, st
+
+
+def _build(kind, codes, C, st, *, key, backend, code_bits=8,
+           lut_dtype="f32", **opts):
+    cds = pack_nibbles(codes, C.shape[0]) if code_bits == 4 else codes
+    kw = dict(topk=10, backend=backend, code_bits=code_bits,
+              lut_dtype=lut_dtype, **opts)
+    if backend == "pallas":
+        kw["interpret"] = True
+    if kind == "ivf":
+        kw.update(emb_db=cb.decode(C, codes), n_lists=16, n_probe=4,
+                  key=jax.random.fold_in(key, 7))
+    return make_index(kind, cds, C, st, **kw)
+
+
+def _bitwise(a, b):
+    return (bool(jnp.array_equal(a.indices, b.indices))
+            and bool(jnp.array_equal(a.distances, b.distances)))
+
+
+# ------------------------------- composed stages vs monolithic ----------
+
+@pytest.mark.parametrize("seed", range(6))
+def test_flat_phase_composition_matches_monolithic(key, seed):
+    """Property-style: crude→threshold→refine composed by hand from the
+    phase pair == ``two_step_search``, bitwise, over random geometry —
+    n not divisible by the block sizes, odd K (nibble sentinel), kf at
+    both edges, both code_bits, both lut_dtypes."""
+    rng = np.random.default_rng(seed)
+    K = int(rng.choice([3, 5, 6, 7]))
+    kf = int(rng.choice([1, K - 1]))
+    n = int(rng.integers(257, 900))
+    nq = int(rng.integers(3, 40))
+    code_bits = int(rng.choice([8, 4]))
+    lut_dtype = str(rng.choice(["f32", "int8"]))
+    k2 = jax.random.fold_in(key, seed)
+    q, codes, C, st = _problem(k2, n, nq, K=K, kf=kf)
+    cds = pack_nibbles(codes, K) if code_bits == 4 else codes
+
+    ref = two_step_search(q, cds, C, st, 9, backend="jnp",
+                          lut_dtype=lut_dtype, code_bits=code_bits)
+    quantized = lut_dtype == "int8"
+    env = flat_mod.two_step_phase_env(cds, C, st, backend="jnp",
+                                      code_bits=code_bits)
+    crude_fn, refine_fn = flat_mod.two_step_phase_fns(
+        topk=9, backend="jnp", quantized=quantized, code_bits=code_bits)
+    idx, dist, pf = refine_fn(crude_fn(q, env), env)
+    assert bool(jnp.array_equal(idx, ref.indices))
+    assert bool(jnp.array_equal(dist, ref.distances))
+    assert bool(jnp.array_equal(jnp.mean(pf), ref.pass_rate))
+
+
+@pytest.mark.parametrize("code_bits,lut_dtype",
+                         [(8, "f32"), (8, "int8"), (4, "int8")])
+def test_flat_phase_composition_pallas(key, code_bits, lut_dtype):
+    """Same composition contract through the fused kernels (interpret
+    mode): the phase pair wraps ``batched_crude_topk`` /
+    ``batched_refine_topk`` and must reproduce the monolithic pallas
+    path bitwise on non-divisible shapes."""
+    q, codes, C, st = _problem(jax.random.fold_in(key, 11), 700, 9, K=5,
+                               kf=2)
+    cds = pack_nibbles(codes, 5) if code_bits == 4 else codes
+    ref = two_step_search(q, cds, C, st, 9, backend="pallas",
+                          interpret=True, lut_dtype=lut_dtype,
+                          code_bits=code_bits)
+    env = flat_mod.two_step_phase_env(cds, C, st, backend="pallas",
+                                      code_bits=code_bits)
+    crude_fn, refine_fn = flat_mod.two_step_phase_fns(
+        topk=9, backend="pallas", interpret=True,
+        quantized=lut_dtype == "int8", code_bits=code_bits)
+    idx, dist, pf = refine_fn(crude_fn(q, env), env)
+    assert bool(jnp.array_equal(idx, ref.indices))
+    assert bool(jnp.array_equal(dist, ref.distances))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_ivf_phase_composition_matches_monolithic(key, backend):
+    q, codes, C, st = _problem(jax.random.fold_in(key, 13), 900, 11,
+                               K=6, kf=3)
+    ivf = ivf_mod.build_ivf(jax.random.fold_in(key, 7),
+                            cb.decode(C, codes), 16)
+    slab = ivf_mod.ivf_list_codes(ivf, codes)
+    kw = dict(interpret=True) if backend == "pallas" else {}
+    ref = ivf_mod.ivf_two_step_search(q, codes, C, st, ivf, 9, 4,
+                                      backend=backend, list_codes=slab,
+                                      **kw)
+    env = ivf_mod.ivf_phase_env(codes, C, st, ivf, list_codes=slab)
+    crude_fn, refine_fn = ivf_mod.ivf_phase_fns(
+        topk=9, n_probe=4, backend=backend, quantized=False, code_bits=8,
+        **kw)
+    idx, dist, _, _ = refine_fn(crude_fn(q, env), env)
+    assert bool(jnp.array_equal(idx, ref.indices))
+    assert bool(jnp.array_equal(dist, ref.distances))
+
+
+# ------------------------------- pipelined vs sequential ----------------
+
+@pytest.mark.parametrize("lut_dtype", ["f32", "int8"])
+@pytest.mark.parametrize("code_bits", [8, 4])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("kind", KINDS)
+def test_pipelined_bitwise_vs_jitted_sequential(key, kind, backend,
+                                                code_bits, lut_dtype):
+    """The full matrix: 3 kinds x {jnp, pallas} x code_bits {8, 4} x
+    lut_dtype {f32, int8}.  Pipelined search == ``jax.jit(seq.search)``
+    bitwise (ids + distances); eager sequential agrees on ids bitwise
+    and on distances to f32 tolerance."""
+    k2 = jax.random.fold_in(key, 17)
+    q, codes, C, st = _problem(k2, 2000, 70, K=6, kf=3)
+    mk = lambda **o: _build(kind, codes, C, st, key=k2, backend=backend,
+                            code_bits=code_bits, lut_dtype=lut_dtype, **o)
+    i0 = mk()
+    i1 = mk(pipeline="tiles", pipeline_tile=32)      # 70 = 2*32 + 6
+    seq = jax.jit(lambda qq: i0.search(qq, 10))
+    r_jit, r_pipe, r_eager = seq(q), i1.search(q, 10), i0.search(q, 10)
+    assert _bitwise(r_jit, r_pipe)
+    assert bool(jnp.array_equal(r_eager.indices, r_pipe.indices))
+    fin = jnp.isfinite(r_eager.distances)
+    assert bool(jnp.allclose(jnp.where(fin, r_eager.distances, 0.0),
+                             jnp.where(fin, r_pipe.distances, 0.0),
+                             rtol=1e-5, atol=1e-5))
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_pipelined_random_shapes(key, seed):
+    """Property-style executor shapes: random n/nq/tile (nq not a tile
+    multiple, tiles smaller and larger than nq), odd K nibble codes,
+    kf at the edges."""
+    rng = np.random.default_rng(100 + seed)
+    K = int(rng.choice([3, 5, 7]))
+    kf = int(rng.choice([1, K - 1]))
+    n = int(rng.integers(300, 1500))
+    nq = int(rng.integers(3, 97))
+    tile = int(rng.choice([5, 8, 17, 32]))
+    code_bits = int(rng.choice([8, 4]))
+    lut_dtype = str(rng.choice(["f32", "int8"]))
+    k2 = jax.random.fold_in(key, 1000 + seed)
+    q, codes, C, st = _problem(k2, n, nq, K=K, kf=kf)
+    i0 = _build("two-step", codes, C, st, key=k2, backend="jnp",
+                code_bits=code_bits, lut_dtype=lut_dtype)
+    i1 = dataclasses.replace(i0, pipeline="tiles", pipeline_tile=tile)
+    r0 = jax.jit(lambda qq: i0.search(qq, 7))(q)
+    assert _bitwise(r0, i1.search(q, 7))
+
+
+def test_pipelined_filter_and_refine_cap(key):
+    """The jnp-only extras thread through the executor: a metadata
+    filter predicate (traced operand, like the engine's jit) and the
+    refine_cap compacted path."""
+    k2 = jax.random.fold_in(key, 19)
+    q, codes, C, st = _problem(k2, 1200, 50)
+    pred = np.zeros(1200, bool)
+    pred[::3] = True
+    for kind in ("two-step", "ivf"):
+        i0 = _build(kind, codes, C, st, key=k2, backend="jnp")
+        i1 = dataclasses.replace(i0, pipeline="tiles", pipeline_tile=16)
+        r0 = jax.jit(lambda qq, f: i0.search(qq, 10, filter=f))(q, pred)
+        assert _bitwise(r0, i1.search(q, 10, filter=pred))
+    i0 = _build("two-step", codes, C, st, key=k2, backend="jnp",
+                refine_cap=64)
+    i1 = dataclasses.replace(i0, pipeline="tiles", pipeline_tile=16)
+    r0 = jax.jit(lambda qq: i0.search(qq, 10))(q)
+    assert _bitwise(r0, i1.search(q, 10))
+
+
+def test_pipelined_crude_rung_and_probe_override(key):
+    """The resilience ladder composes with the pipeline: the degraded
+    crude-only rung drops the refine stage (single-phase tile loop) and
+    the IVF per-call ``n_probe`` override gets its own plan."""
+    k2 = jax.random.fold_in(key, 23)
+    q, codes, C, st = _problem(k2, 1200, 50)
+    for kind in ("two-step", "ivf"):
+        i0 = _build(kind, codes, C, st, key=k2, backend="jnp")
+        i1 = dataclasses.replace(i0, pipeline="tiles", pipeline_tile=16)
+        r0 = jax.jit(lambda qq: i0.search_crude(qq, 10))(q)
+        assert _bitwise(r0, i1.search_crude(q, 10))
+    i0 = _build("ivf", codes, C, st, key=k2, backend="jnp")
+    i1 = dataclasses.replace(i0, pipeline="tiles", pipeline_tile=16)
+    r0 = jax.jit(lambda qq: i0.search_crude(qq, 10, n_probe=2))(q)
+    assert _bitwise(r0, i1.search_crude(q, 10, n_probe=2))
+
+
+def test_auto_mode_and_plan_cache(key):
+    """``auto`` declines single-tile batches (falls through to the
+    sequential path) and engages beyond one tile; plans are cached per
+    index instance and ``add`` starts a fresh instance with no stale
+    closures."""
+    k2 = jax.random.fold_in(key, 29)
+    q, codes, C, st = _problem(k2, 800, 40)
+    i1 = _build("two-step", codes, C, st, key=k2, backend="jnp",
+                pipeline="auto", pipeline_tile=32)
+    # nq <= tile: maybe_pipelined declines
+    assert maybe_pipelined(i1, q[:16], 10) is None
+    i0 = _build("two-step", codes, C, st, key=k2, backend="jnp")
+    r0 = jax.jit(lambda qq: i0.search(qq, 10))(q)
+    assert _bitwise(r0, i1.search(q, 10))
+    # the plan closed over this instance's buffers — cached on it
+    plans = i1.__dict__["_pipeline_plans"]
+    assert len(plans) == 1
+    i1.search(q, 10)
+    assert len(plans) == 1
+    assert plan_for(i1, 10) is next(iter(plans.values()))
+    # add() returns a fresh instance: no inherited plan cache, and the
+    # new plan sees the grown database
+    new_vecs = cb.decode(C, codes[:37])
+    i2 = i1.add(new_vecs)
+    assert "_pipeline_plans" not in i2.__dict__
+    i0b = i0.add(new_vecs)
+    r0b = jax.jit(lambda qq: i0b.search(qq, 10))(q)
+    assert _bitwise(r0b, i2.search(q, 10))
+
+
+def test_resolve_helpers_and_validation():
+    assert PIPELINE_MODES == ("off", "tiles", "auto")
+    for mode in PIPELINE_MODES:
+        assert resolve_pipeline(mode) == mode
+    with pytest.raises(ValueError):
+        resolve_pipeline("overlap")
+    assert resolve_tile(None, "jnp", 64) == 16
+    assert resolve_tile(None, "pallas", 64) == 64
+    assert resolve_tile(8, "jnp", 64) == 8
+    with pytest.raises(ValueError):
+        resolve_tile(0, "jnp", 64)
+
+
+def test_sharded_clone_serves_pipeline_off(key):
+    """Sharding a pipelined index yields a working non-pipelined clone
+    (the shard_map body is one fused SPMD program — no host-level stage
+    boundary to overlap)."""
+    k2 = jax.random.fold_in(key, 31)
+    q, codes, C, st = _problem(k2, 800, 40)
+    i1 = _build("two-step", codes, C, st, key=k2, backend="jnp",
+                pipeline="tiles", pipeline_tile=16)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = i1.shard(mesh)
+    assert sh.pipeline == "off"
+    r0 = jax.jit(lambda qq: i1.search(qq, 10))(q)
+    assert bool(jnp.array_equal(r0.indices, sh.search(q, 10).indices))
+
+
+def test_tune_grid_offers_pipeline():
+    """session.tune's coarse grid includes the pipeline candidate for
+    every index kind (a pure scheduling knob: one candidate at the
+    default operating point)."""
+    from repro.api import ICQConfig
+    from repro.api.session import ICQSession
+
+    for kind in ("flat", "two-step", "ivf"):
+        cfg = ICQConfig.from_dict({"schema_version": 1,
+                                   "index": {"kind": kind}})
+        sess = ICQSession.__new__(ICQSession)
+        sess.config = cfg
+        assert {"serve.pipeline": "tiles"} in sess._tune_grid()
