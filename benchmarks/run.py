@@ -24,6 +24,7 @@ reproducible from a checked-in config
     PYTHONPATH=src python -m benchmarks.run --only faults   # BENCH_faults.json
     PYTHONPATH=src python -m benchmarks.run --only pipeline # BENCH_pipeline.json
     PYTHONPATH=src python -m benchmarks.run --only pareto   # BENCH_pareto.json
+    PYTHONPATH=src python -m benchmarks.run --only serve    # BENCH_serve.json
 
 Every target accepts ``--seed N`` (default 0), threaded through its
 data generation — two same-seed runs report identical recall numbers.
@@ -40,7 +41,7 @@ import numpy as np
 
 from benchmarks import (beyond_ivf, fig1_synthetic_pq, fig2_synthetic_cq,
                         fig3_realworld_sq, fig4_code_length, fig5_pqn,
-                        fig6_unseen, sweep)
+                        fig6_unseen, serve_load, sweep)
 from benchmarks.common import header, host_copy
 
 
@@ -897,12 +898,15 @@ def config_overrides(cfg, target: str):
                          topk=s.topk,
                          **({"tile": s.pipeline_tile}
                             if s.pipeline_tile is not None else {})),
+        # serve sweeps the batch window itself; the config pins the
+        # geometry and the coalescing tile (ServeConfig.batch_tile)
+        "serve": dict(geom, topk=s.topk, tile=s.batch_tile),
     }
     return table.get(target)
 
 
 CONFIG_TARGETS = ("search", "ivf", "lutq", "fastscan", "encode", "train",
-                  "pipeline")
+                  "pipeline", "serve")
 
 FIGURES = {
     "fig1": fig1_synthetic_pq.run,
@@ -921,6 +925,7 @@ FIGURES = {
     "faults": faults_bench,
     "pipeline": pipeline_bench,
     "pareto": sweep.run,
+    "serve": serve_load.run,
 }
 
 

@@ -1,0 +1,173 @@
+"""Serving-loop latency under Poisson load (``--only serve`` →
+``BENCH_serve.json``; docs/serving.md, docs/benchmarks.md).
+
+Two tenants (a flat two-step index and an IVF index) behind one
+``repro.serve.ServingLoop``, driven by a seeded open-loop Poisson
+arrival stream across a sweep of coalescing batch windows.  Reported
+per (window, tenant): p50/p99 end-to-end latency, request/row
+throughput, mean coalescing wait and tile fill.  Three gates ride
+along:
+
+  - **bitwise**: every coalesced response is compared to a direct
+    ``engine.search`` on the same rows — ids AND distances must match
+    exactly (scheduling is never allowed to change math);
+  - **determinism**: the no-deadline sweep always serves the full
+    ladder level, so result content is seed-deterministic; the JSON
+    records one ``ids_sha256`` per window over all delivered ids in
+    workload order (tests/test_bench_determinism.py replays it);
+  - **degraded-not-broken**: a separate section serves the same tenants
+    under an injected ``FaultSpec`` delay with a tight ``deadline_ms``
+    budget — responses must degrade (``meta.degraded``), never error.
+
+Latency numbers are wall-clock on a cpu-share throttled container:
+like every BENCH target they track trends, not absolute service times,
+and are excluded from the determinism contract.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import time
+
+import jax
+import numpy as np
+
+
+def _ids_sha256(records) -> str:
+    h = hashlib.sha256()
+    for r in records:
+        h.update(np.ascontiguousarray(r["ids"]).tobytes())
+    return h.hexdigest()
+
+
+def run(full: bool = False, *, out_path: str = "BENCH_serve.json",
+        n: int = 20_000, d: int = 16, K: int = 8, m: int = 64,
+        num_fast: int = 2, topk: int = 10, n_lists: int = 64,
+        n_probe: int = 8, tile: int = 8, windows_ms=(0.5, 4.0),
+        rate_hz: float = 60.0, duration_s: float = 1.25,
+        pool_q: int = 64, closed_requests: int = 48, seed: int = 0):
+    """Serve two tenants under seeded Poisson traffic per batch-window
+    setting; write latency/throughput/coalescing rows + the bitwise and
+    degraded gates to ``out_path``."""
+    from repro.api import build_ann_engine
+    from repro.core import codebooks as cb
+    from repro.data.synthetic import make_synthetic_index
+    from repro.resilience import FaultInjector, FaultSpec, SearchBudget
+    from repro.serve import (ServingLoop, Tenant, make_workload,
+                             run_closed_loop, run_open_loop, summarize)
+
+    if full:
+        n, duration_s = max(n, 100_000), max(duration_s, 5.0)
+    key = jax.random.PRNGKey(seed)
+    codes, C, structure = make_synthetic_index(key, n, d=d, K=K, m=m,
+                                               num_fast=num_fast)
+    key2 = jax.random.fold_in(key, 1)
+    codes2, C2, structure2 = make_synthetic_index(key2, n, d=d, K=K, m=m,
+                                                  num_fast=num_fast)
+    emb_db2 = cb.decode(C2, codes2)
+
+    def build_tenants(fault_injector=None, budget=None):
+        flat = build_ann_engine(codes, C, structure, topk=topk,
+                                backend="jnp",
+                                fault_injector=fault_injector)
+        ivf = build_ann_engine(codes2, C2, structure2, topk=topk,
+                               backend="jnp", index="ivf", emb_db=emb_db2,
+                               n_lists=n_lists, n_probe=n_probe,
+                               key=jax.random.fold_in(key, 2),
+                               fault_injector=fault_injector)
+        return [Tenant(name="flat", engine=flat, budget=budget),
+                Tenant(name="ivf", engine=ivf, budget=budget)]
+
+    tenants = build_tenants()
+    rng_pool = np.random.default_rng(seed)
+    pools = {t.name: rng_pool.standard_normal((pool_q, d)).astype(np.float32)
+             for t in tenants}
+
+    rows, window_hashes, bitwise_ok = [], {}, True
+    for w in windows_ms:
+        # fresh same-seed workload per window: identical request stream,
+        # only the coalescing policy changes
+        workload = make_workload(pools, rate_hz, duration_s,
+                                 rng=np.random.default_rng(seed + 1))
+        with ServingLoop(tenants, window_ms=w, tile=tile) as loop:
+            for t in tenants:
+                loop.warm(t.name)
+            t0 = time.time()
+            records = run_open_loop(loop, workload)
+            wall_s = time.time() - t0
+            stats = dict(loop.stats)
+        window_hashes[str(w)] = _ids_sha256(records)
+        # bitwise gate: each delivered response vs a direct engine call
+        by_name = {t.name: t for t in tenants}
+        for spec, rec in zip(workload, records):
+            ref = by_name[spec.tenant].engine.search(spec.queries)
+            if not (np.array_equal(rec["ids"], np.asarray(ref.indices))
+                    and np.array_equal(rec["dists"],
+                                       np.asarray(ref.distances))):
+                bitwise_ok = False
+        for name in sorted(pools):
+            srec = [r for r in records if r["tenant"] == name]
+            s = summarize(srec, wall_s=wall_s)
+            rows.append(dict(window_ms=w, tenant=name, tile=tile, **{
+                k: (round(v, 3) if isinstance(v, float) else v)
+                for k, v in s.items()}))
+        agg = summarize(records, wall_s=wall_s)
+        rows.append(dict(window_ms=w, tenant="ALL", tile=tile,
+                         batches=stats["batches"],
+                         flush_full=stats["flush_full"],
+                         flush_window=stats["flush_window"], **{
+                             k: (round(v, 3) if isinstance(v, float) else v)
+                             for k, v in agg.items()}))
+
+    # closed-loop saturation row at the middle window
+    workload = make_workload(pools, rate_hz, duration_s,
+                             rng=np.random.default_rng(seed + 1))
+    with ServingLoop(tenants, window_ms=windows_ms[0], tile=tile) as loop:
+        t0 = time.time()
+        crec = run_closed_loop(loop, workload, concurrency=4)
+        cwall = time.time() - t0
+    closed = {k: (round(v, 3) if isinstance(v, float) else v)
+              for k, v in summarize(crec, wall_s=cwall).items()}
+
+    # degraded-not-broken: injected delay + tight deadline must produce
+    # meta.degraded responses, never exceptions
+    inj = FaultInjector(seed=seed, spec=FaultSpec(
+        p_delay=0.8, delay_ms=25.0, targets=("engine.search",)))
+    tight = SearchBudget(deadline_ms=2.0)
+    faulted = build_tenants(fault_injector=inj, budget=tight)
+    fwork = make_workload({t.name: pools[t.name] for t in faulted},
+                          rate_hz, min(duration_s, 1.0),
+                          rng=np.random.default_rng(seed + 2))
+    with inj.installed():
+        with ServingLoop(faulted, window_ms=windows_ms[0],
+                         tile=tile) as loop:
+            t0 = time.time()
+            frec = run_open_loop(loop, fwork)
+            fwall = time.time() - t0
+    fsum = summarize(frec, wall_s=fwall)
+
+    out = dict(seed=seed, n=n, d=d, topk=topk, tile=tile,
+               rate_hz=rate_hz, duration_s=duration_s,
+               tenants=sorted(pools), windows_ms=list(windows_ms),
+               rows=rows,
+               closed_loop=dict(window_ms=windows_ms[0],
+                                concurrency=4, **closed),
+               bitwise_coalesced_vs_direct=bitwise_ok,
+               ids_sha256_per_window=window_hashes,
+               degraded_under_faults=dict(
+                   deadline_ms=tight.deadline_ms,
+                   requests=fsum["requests"],
+                   degraded_rate=round(fsum["degraded_rate"], 3),
+                   p50_ms=round(fsum["p50_ms"], 3),
+                   errors=0))
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+    for r in rows:
+        print(f"serve,window={r['window_ms']},tenant={r['tenant']},"
+              f"req={r['requests']},p50={r['p50_ms']},p99={r['p99_ms']},"
+              f"qps={r['qps']},fill={r['mean_batch_fill']}", flush=True)
+    print(f"# serve bitwise={bitwise_ok} degraded_rate_under_faults="
+          f"{out['degraded_under_faults']['degraded_rate']} "
+          f"closed_qps={closed['qps']} -> {out_path}", flush=True)
+    assert bitwise_ok, "coalesced results diverged from direct search"
+    return out

@@ -23,6 +23,10 @@ over all of them:
     degraded search), ``ResilienceConfig`` (failover + verification
     knobs), and the deterministic ``FaultInjector`` harness
     (docs/robustness.md).
+  - **Traffic** — the async serving engine lives in ``repro.serve``
+    (docs/serving.md): ``ServingLoop`` coalesces arriving requests
+    into warm fixed-tile batches over one or more tenants' engines,
+    bitwise-identical to calling ``Searcher.search`` directly.
 
 Everything here re-exports from the submodules; ``from repro.api
 import *`` pulls exactly ``__all__``.

@@ -60,7 +60,7 @@ _POSITIVE_FLOATS = {"train.lr", "train.tau",
                     "resilience.backoff_max_ms"}
 _NONNEG_FLOATS = {"train.pi1", "train.pi2", "train.gamma_p",
                   "train.gamma_icq", "train.gamma_cq",
-                  "train.margin_scale"}
+                  "train.margin_scale", "serve.batch_window_ms"}
 # int fields where 0 is meaningful (exceptions to the positive-int rule)
 _NONNEG_INTS = {"resilience.max_retries"}
 
@@ -138,8 +138,10 @@ class IndexConfig:
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     """How the index answers query batches: result size, backend
-    dispatch, crude-pass LUT precision, and tiling/chunking knobs
-    (``None`` keeps each index class's own tile defaults)."""
+    dispatch, crude-pass LUT precision, tiling/chunking knobs
+    (``None`` keeps each index class's own tile defaults), and the
+    async serving loop's coalescing/tenancy knobs (``repro.serve``,
+    docs/serving.md — ignored by the offline batch paths)."""
     topk: int = 50
     backend: str = "auto"        # auto | jnp | pallas
     lut_dtype: str = "f32"       # f32 | int8 (DESIGN.md §8)
@@ -148,6 +150,10 @@ class ServeConfig:
     block_n: Optional[int] = None
     pipeline: str = "off"        # off | tiles | auto (DESIGN.md §13)
     pipeline_tile: Optional[int] = None   # queries per pipeline tile
+    batch_window_ms: float = 2.0 # serving loop: max coalescing wait
+    batch_tile: int = 32         # serving loop: rows per dispatched tile
+    max_queue: int = 4096        # serving loop: queued-row backpressure
+    tenant: Optional[str] = None # serving loop: this artifact's tenant name
 
 
 @dataclasses.dataclass(frozen=True)

@@ -33,6 +33,7 @@ import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.api.artifacts import ArtifactError, Artifacts
 from repro.api.config import (ConfigError, IndexConfig, ResilienceConfig,
@@ -80,11 +81,21 @@ class AnnEngine:
 
     def __init__(self, index, mesh=None, *,
                  resilience: Optional[ResilienceConfig] = None,
-                 fault_injector=None):
+                 fault_injector=None, query_tile: Optional[int] = None):
         self.index = index                   # the unsharded source index
         self.mesh = mesh
         self.resilience = resilience or ResilienceConfig()
         self.fault_injector = fault_injector
+        # canonical query-batch tile (rows).  None: each arrival shape
+        # compiles its own program (historical behavior).  Set: every
+        # search runs as ceil(nq/tile) zero-padded (tile, d) chunks of
+        # ONE compiled program — so results are bitwise-independent of
+        # how rows were batched (XLA reduction order varies with the
+        # compiled batch size, and last-ulp distance drift across
+        # shapes is real).  The serving loop pins this to its flush
+        # tile, which is what makes coalesced responses bitwise-equal
+        # to direct calls on the same engine (docs/serving.md).
+        self.query_tile = query_tile
         self._blacklist: set = set()         # backends failed over from
         self._ema: Dict[str, float] = {}     # level -> warm wall-ms EMA
         self._warmed: set = set()            # fn cache keys that compiled
@@ -272,6 +283,46 @@ class AnnEngine:
         jax.block_until_ready((r.indices, r.distances))
         return r
 
+    def _run_tiled(self, fn, queries, filter=None):
+        """Run one rung's fn over the batch.  Without ``query_tile``
+        this is a single call at the arrival shape; with it, the batch
+        runs as zero-padded (tile, d) chunks of one compiled program
+        and the pad rows are sliced off — per-row results are invariant
+        to position and neighbors within a fixed compiled shape, so
+        chunking never changes any row's answer (tests/test_serve.py
+        holds this bitwise)."""
+        tile = self.query_tile
+        nq = queries.shape[0]
+        if tile is None:
+            args = (queries,) if filter is None else (queries, filter)
+            return self._attempt(fn, *args)
+        tile = int(tile)
+        parts = []
+        for s in range(0, max(nq, 1), tile):
+            chunk = queries[s:s + tile]
+            pad = tile - chunk.shape[0]
+            if pad:
+                chunk = jnp.concatenate(
+                    [chunk, jnp.zeros((pad, chunk.shape[1]),
+                                      dtype=chunk.dtype)], axis=0)
+            args = (chunk,) if filter is None else (chunk, filter)
+            parts.append(self._attempt(fn, *args))
+        if len(parts) == 1:
+            r = parts[0]
+            ids, dists = r.indices[:nq], r.distances[:nq]
+        else:
+            r = parts[-1]
+            ids = jnp.concatenate([p.indices for p in parts], axis=0)[:nq]
+            dists = jnp.concatenate([p.distances for p in parts],
+                                    axis=0)[:nq]
+        # avg_ops/pass_rate are padded-batch diagnostics (mean over
+        # chunks); the bitwise contract covers ids + distances only
+        k = len(parts)
+        return r._replace(
+            indices=ids, distances=dists,
+            avg_ops=sum(p.avg_ops for p in parts) / k,
+            pass_rate=sum(p.pass_rate for p in parts) / k)
+
     def _serve_with_failover(self, level, topk, budget, queries,
                              filter=None):
         """One batch at one rung, with backend failover: a failure on
@@ -283,10 +334,9 @@ class AnnEngine:
                                base_ms=res.backoff_base_ms,
                                max_ms=res.backoff_max_ms)
         has_filter = filter is not None
-        args = (queries,) if filter is None else (queries, filter)
         key, fn = self._level_fn(level, topk, budget, has_filter)
         try:
-            return key, self._attempt(fn, *args)
+            return key, self._run_tiled(fn, queries, filter)
         except Exception:
             if res.pallas_failover and self._backend_eff() == "pallas":
                 # kernel path failed: fail the backend over, not the
@@ -297,7 +347,8 @@ class AnnEngine:
                 self._warmed.discard(key)
                 key, fn = self._level_fn(level, topk, budget, has_filter)
             return key, retry_with_backoff(
-                lambda: self._attempt(fn, *args), policy=policy)
+                lambda: self._run_tiled(fn, queries, filter),
+                policy=policy)
 
     def __call__(self, queries, budget: Optional[SearchBudget] = None):
         return self.search(queries, budget=budget)
@@ -348,6 +399,26 @@ class AnnEngine:
         if meta.degraded:
             self.stats["degraded"] += 1
         return result._replace(meta=meta)
+
+    def warm(self, nq: int, k: Optional[int] = None, *,
+             budget: Optional[SearchBudget] = None) -> "AnnEngine":
+        """Precompile the (nq, d) program one ``search(queries, k,
+        budget=...)`` call would run and mark it warm, so the first real
+        batch at that shape pays dispatch instead of trace+compile (and
+        its timing feeds the ladder's EMA instead of being discarded as
+        a cold call).  The serving loop warms its flush-tile shape this
+        way (``repro.serve.ServingLoop.warm``); warming an
+        already-compiled shape is a cheap no-op (jit's signature cache
+        hits)."""
+        budget = validate_budget(budget) if budget is not None \
+            else SearchBudget()
+        level = self._pick_level(budget)
+        key, fn = self._level_fn(level, k, budget)
+        d = int(self.index.C.shape[-1])
+        zeros = jnp.zeros((int(nq), d), dtype=jnp.float32)
+        self._run_tiled(fn, zeros)
+        self._warmed.add(key)
+        return self
 
     # ------------------------------------------------------------- shards --
     def mark_shard_dead(self, *shards: int) -> "AnnEngine":

@@ -34,6 +34,20 @@ N`` serves the index sharded over an N-way ``data`` mesh (run under
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python -m repro.launch.serve --ann \
         --ann-index ivf --ann-shards 4 --ann-n 20000
+
+``--serve-loop`` serves one or more saved artifact directories through
+the async coalescing loop (``repro.serve.ServingLoop``, docs/serving.md)
+under a short seeded Poisson workload instead of fixed query batches:
+each repeatable ``--tenant NAME=DIR`` loads one Artifacts dir as a
+tenant (a bare ``--load-artifacts DIR`` joins the loop as tenant
+``default``), duplicate names or paths fail up front with a one-line
+error, and ``--batch-window-ms`` / ``--batch-tile`` override every
+tenant's coalescing knobs.  Per-tenant p50/p99 latency, QPS, and tile
+fill are reported:
+
+    PYTHONPATH=src python -m repro.launch.serve --serve-loop \
+        --tenant prod=/tmp/ann_a --tenant canary=/tmp/ann_b \
+        --batch-window-ms 2 --batch-tile 16
 """
 from __future__ import annotations
 
@@ -172,6 +186,54 @@ def serve_loaded(path: str, nq: int, *, batches: int = 3, shards: int = 1,
                    f"ann-loaded: n={engine.n} nq={nq} shards={shards}")
 
 
+def serve_traffic(specs, *, rate_hz: float, duration_s: float,
+                  window_ms=None, tile=None, shards: int = 1,
+                  overrides=None, seed: int = 0, pool_q: int = 64):
+    """Serve tenant artifact dirs through the coalescing loop under a
+    seeded Poisson workload (``--serve-loop``; docs/serving.md).
+
+    Spec conflicts — duplicate tenant names, two specs resolving to the
+    same Artifacts directory — and artifact errors exit with a one-line
+    actionable message instead of a traceback (or a silent double
+    load)."""
+    from repro.api import ArtifactError
+    from repro.serve import (ServeError, ServingLoop, load_tenants,
+                             make_workload, run_open_loop, summarize)
+
+    try:
+        tenants = load_tenants(specs, mesh=_serve_mesh(shards),
+                               overrides=overrides or None)
+    except (ServeError, ArtifactError, FileNotFoundError, OSError) as e:
+        raise SystemExit(f"--serve-loop: {e}") from e
+    rng = np.random.default_rng(seed)
+    pools = {name: rng.standard_normal((pool_q, t.d)).astype(np.float32)
+             for name, t in sorted(tenants.items())}
+    workload = make_workload(pools, rate_hz, duration_s, rng=rng)
+    with ServingLoop(tenants, window_ms=window_ms, tile=tile) as loop:
+        for name in tenants:
+            loop.warm(name)
+        t0 = time.time()
+        records = run_open_loop(loop, workload)
+        wall_s = time.time() - t0
+        stats = dict(loop.stats)
+    for name in sorted(tenants):
+        s = summarize([r for r in records if r["tenant"] == name],
+                      wall_s=wall_s)
+        if not s["requests"]:
+            print(f"serve-loop[{name}]: no arrivals this run")
+            continue
+        print(f"serve-loop[{name}]: {s['requests']} req, "
+              f"p50 {s['p50_ms']:.2f} ms, p99 {s['p99_ms']:.2f} ms, "
+              f"{s['qps']:.1f} qps, fill {s['mean_batch_fill']:.2f}, "
+              f"queue {s['mean_queue_ms']:.2f} ms")
+    agg = summarize(records, wall_s=wall_s)
+    print(f"serve-loop: {agg['requests']} req total, "
+          f"{stats['batches']} flushes "
+          f"(full {stats['flush_full']} / window {stats['flush_window']}), "
+          f"p50 {agg['p50_ms']:.2f} ms, p99 {agg['p99_ms']:.2f} ms, "
+          f"{agg['qps']:.1f} qps, degraded {agg['degraded_rate']:.2f}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -233,6 +295,27 @@ def main():
     ap.add_argument("--ann-add", type=int, default=0,
                     help="after serving, grow the index by N vectors via "
                          "AnnEngine.add (incremental encode, DESIGN.md §9)")
+    ap.add_argument("--serve-loop", action="store_true",
+                    help="serve artifact tenants through the async "
+                         "coalescing loop under a seeded Poisson workload "
+                         "(repro.serve.ServingLoop, docs/serving.md)")
+    ap.add_argument("--tenant", action="append", default=[],
+                    metavar="NAME=DIR",
+                    help="load an Artifacts dir as a named tenant of the "
+                         "--serve-loop (repeatable); duplicate names or "
+                         "paths are rejected up front")
+    ap.add_argument("--batch-window-ms", type=float, default=None,
+                    help="--serve-loop: override every tenant's "
+                         "serve.batch_window_ms (max coalescing wait)")
+    ap.add_argument("--batch-tile", type=int, default=None,
+                    help="--serve-loop: override every tenant's "
+                         "serve.batch_tile (rows per dispatched tile)")
+    ap.add_argument("--serve-rate", type=float, default=50.0,
+                    help="--serve-loop: Poisson arrival rate (req/s)")
+    ap.add_argument("--serve-duration", type=float, default=1.0,
+                    help="--serve-loop: workload duration (s)")
+    ap.add_argument("--serve-seed", type=int, default=0,
+                    help="--serve-loop: seed for arrivals + query rows")
     args = ap.parse_args()
 
     overrides = {k: v for k, v in {
@@ -247,6 +330,28 @@ def main():
         "train.codebook_size": args.ann_m,
     }.items() if v is not None}
 
+    if args.serve_loop:
+        specs = list(args.tenant)
+        if args.load_artifacts:
+            # a bare --load-artifacts joins the loop as tenant
+            # "default"; parse_tenant_specs then catches a --tenant
+            # pointing at the same directory (or reusing the name)
+            # with a one-line error instead of double-loading it
+            specs = [f"default={args.load_artifacts}"] + specs
+        if not specs:
+            ap.error("--serve-loop needs at least one --tenant NAME=DIR "
+                     "(or --load-artifacts DIR)")
+        serve_traffic(specs, rate_hz=args.serve_rate,
+                      duration_s=args.serve_duration,
+                      window_ms=args.batch_window_ms,
+                      tile=args.batch_tile, shards=args.ann_shards,
+                      overrides=overrides, seed=args.serve_seed)
+        return
+    for flag, val in (("--tenant", args.tenant or None),
+                      ("--batch-window-ms", args.batch_window_ms),
+                      ("--batch-tile", args.batch_tile)):
+        if val is not None:
+            ap.error(f"{flag} requires --serve-loop")
     if args.load_artifacts:
         # flags that only make sense when *building* an index would be
         # silently ignored here — reject them instead

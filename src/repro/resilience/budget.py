@@ -60,6 +60,15 @@ class ResultMeta(NamedTuple):
     ``degraded`` is True iff the result is anything less than the full
     configured search over the full database: a ladder level above 0,
     or coverage < 1.0 (dead shards).
+
+    ``queue_ms`` / ``batch_fill`` stay ``None`` on the offline
+    ``AnnEngine`` paths; only the async serving loop
+    (``repro.serve.ServingLoop``, docs/serving.md) populates them —
+    time spent coalescing in the request queue before the batch was
+    dispatched, and the fraction of the dispatched tile occupied by
+    real (non-padding) query rows.  They ride through the degradation
+    ladder unchanged: the loop stamps them onto whatever meta the
+    ladder produced for the batch.
     """
     level: int = 0                       # ladder rung index
     level_name: str = "full"             # DEGRADE_LEVELS[level]
@@ -70,6 +79,8 @@ class ResultMeta(NamedTuple):
     deadline_exceeded: bool = False      # wall_ms > deadline_ms
     coverage: float = 1.0                # reachable fraction of the db
     backend: str = ""                    # engine backend that served it
+    queue_ms: Optional[float] = None     # serving loop: coalescing wait
+    batch_fill: Optional[float] = None   # serving loop: real rows / tile
 
 
 def validate_budget(budget: SearchBudget) -> SearchBudget:

@@ -1,0 +1,21 @@
+"""repro.serve — the async traffic serving engine (docs/serving.md,
+DESIGN.md §14): query coalescing over fixed compiled tile shapes,
+multi-tenant sessions behind one process, and a seeded Poisson load
+harness.  Scheduling never changes math: coalesced responses are
+bitwise-identical to direct ``Searcher``/``AnnEngine`` calls on the
+same rows."""
+from repro.serve.coalescer import (Coalescer, FlushBatch, FlushSlice,
+                                   PendingRequest, ServeError)
+from repro.serve.loadgen import (RequestSpec, make_workload,
+                                 poisson_arrivals, run_closed_loop,
+                                 run_open_loop, summarize)
+from repro.serve.loop import ServingLoop
+from repro.serve.tenants import (Tenant, load_tenants, parse_tenant_specs)
+
+__all__ = [
+    "Coalescer", "FlushBatch", "FlushSlice", "PendingRequest", "ServeError",
+    "RequestSpec", "make_workload", "poisson_arrivals", "run_closed_loop",
+    "run_open_loop", "summarize",
+    "ServingLoop",
+    "Tenant", "load_tenants", "parse_tenant_specs",
+]

@@ -40,6 +40,33 @@ def test_same_seed_sweep_runs_report_identical_recall(tmp_path):
     assert a["seed"] == b["seed"] == 3
 
 
+def test_same_seed_serve_runs_report_identical_rows(tmp_path):
+    """--only serve: the seed threads through the Poisson arrival
+    stream and every tenant's query pool, and the no-deadline sweep
+    always serves the full ladder level — so two same-seed runs deliver
+    identical result content (the per-window ids hashes) and identical
+    workload shapes.  Latency/QPS fields are wall-clock and excluded."""
+    from benchmarks import serve_load
+
+    def tiny(tag):
+        return serve_load.run(
+            out_path=str(tmp_path / f"serve_{tag}.json"), n=2000,
+            windows_ms=(0.5, 2.0), rate_hz=40.0, duration_s=0.4,
+            pool_q=16, seed=5)
+
+    a, b = tiny("a"), tiny("b")
+    assert a["ids_sha256_per_window"] == b["ids_sha256_per_window"]
+    # coalescing canonicalizes the compiled shape, so the content hash
+    # is also window-invariant (scheduling never changes math)
+    assert len(set(a["ids_sha256_per_window"].values())) == 1
+    shape_fields = ("window_ms", "tenant", "requests", "rows")
+    assert [{f: r[f] for f in shape_fields} for r in a["rows"]] \
+        == [{f: r[f] for f in shape_fields} for r in b["rows"]]
+    assert a["bitwise_coalesced_vs_direct"] \
+        and b["bitwise_coalesced_vs_direct"]
+    assert a["tenants"] == b["tenants"] == ["flat", "ivf"]
+
+
 def test_seed_threads_into_data_generation():
     # the seed actually reaches the workload: same seed is bitwise
     # reproducible, a different seed changes db, queries, and skew
